@@ -1,0 +1,145 @@
+//! Bring-your-own platform and DNN: MEDEA is not tied to HEEPtimize or to
+//! transformers. This example defines a two-PE wearable SoC (RISC-V host +
+//! a single NMC), persists it to JSON, and schedules a small CNN over it —
+//! exercising the conv2d path, the loader round-trip, and the deadline
+//! sweep on a platform with a different V-F table.
+//!
+//! ```sh
+//! cargo run --release --example custom_platform
+//! ```
+
+use medea::ir::builder::small_cnn;
+use medea::ir::{DataWidth, KernelType};
+use medea::manager::medea::Medea;
+use medea::platform::loader::{load_platform, save_platform};
+use medea::platform::{
+    DmaSpec, OpConstraint, OpConstraints, Pe, PeClass, PeId, PePower, Platform, VfPoint, VfTable,
+};
+use medea::profile::characterize;
+use medea::sim::replay::simulate;
+use medea::timing::cycle_model::CycleModel;
+use medea::util::units::{Bytes, Power, Time, Voltage};
+use std::collections::BTreeMap;
+
+fn wearable_soc() -> Platform {
+    let cpu_power = PePower {
+        p_stat_ref: Power::from_uw(60.0),
+        v_ref: Voltage(0.7),
+        leak_exp: 2.6,
+        c_eff: 22.0e-12,
+        e_fixed: 0.0,
+        activity: BTreeMap::new(),
+    };
+    let nmc_power = PePower {
+        p_stat_ref: Power::from_uw(420.0),
+        v_ref: Voltage(0.7),
+        leak_exp: 1.6,
+        c_eff: 10.0e-12,
+        e_fixed: 8.0e-12,
+        activity: BTreeMap::new(),
+    };
+    let base = PePower {
+        p_stat_ref: Power::from_uw(120.0),
+        v_ref: Voltage(0.7),
+        leak_exp: 2.0,
+        c_eff: 15.0e-12,
+        e_fixed: 0.0,
+        activity: BTreeMap::new(),
+    };
+
+    let mut constraints = OpConstraints::new();
+    constraints.allow_all(PeId(0));
+    for ty in [
+        KernelType::MatMul,
+        KernelType::Conv2d,
+        KernelType::Add,
+        KernelType::Norm,
+        KernelType::Scale,
+    ] {
+        constraints.allow(
+            PeId(1),
+            ty,
+            OpConstraint::with_max_dim(256).widths(&[DataWidth::Int8, DataWidth::Int16]),
+        );
+    }
+
+    Platform {
+        name: "wearable-soc".into(),
+        pes: vec![
+            Pe {
+                id: PeId(0),
+                name: "cpu".into(),
+                class: PeClass::RiscvCpu,
+                lm: None,
+                dma: None,
+                power: cpu_power,
+            },
+            Pe {
+                id: PeId(1),
+                name: "nmc".into(),
+                class: PeClass::Nmc,
+                lm: Some(Bytes::from_kib(32)),
+                dma: Some(DmaSpec {
+                    bytes_per_cycle: 1.3,
+                    setup_cycles: 100,
+                }),
+                power: nmc_power,
+            },
+        ],
+        // A two-point V-F table — a cheaper PMU than HEEPtimize's.
+        vf: VfTable::new(vec![VfPoint::new(0.55, 90.0), VfPoint::new(0.8, 400.0)]),
+        l2: Bytes::from_kib(64),
+        sleep_power: Power::from_uw(40.0),
+        constraints,
+        vf_switch_cycles: 180,
+        active_base: base,
+    }
+}
+
+fn main() {
+    // 1. Define + persist + reload the platform (the JSON is the artifact a
+    //    hardware team would ship with their characterization data).
+    let platform = wearable_soc();
+    platform.validate().expect("valid platform");
+    let path = std::env::temp_dir().join("wearable_soc.json");
+    save_platform(&platform, &path).unwrap();
+    let platform = load_platform(&path).unwrap();
+    println!("platform `{}` round-tripped via {path:?}", platform.name);
+
+    // 2. Characterize it (the stand-in for this SoC's own FPGA/ASIC data).
+    let model = CycleModel::heeptimize(); // same microarchitectural families
+    let profiles = characterize(&platform, &model);
+    println!(
+        "characterized: {} timing points, {} power entries",
+        profiles.timing_entry_count(),
+        profiles.power_entry_count()
+    );
+
+    // 3. A small CNN keyword-spotter-style workload (not a transformer).
+    let workload = small_cnn("kws-cnn", 16, 16, &[3, 8, 16, 32], 10, DataWidth::Int8);
+    println!(
+        "workload `{}`: {} kernels, {:.1} M ops",
+        workload.name,
+        workload.len(),
+        workload.total_ops() as f64 / 1e6
+    );
+
+    // 4. Schedule across deadlines and validate on the simulator.
+    let medea = Medea::new(&platform, &profiles, &model);
+    for ms in [20.0, 50.0, 250.0] {
+        match medea.schedule(&workload, Time::from_ms(ms)) {
+            Ok(s) => {
+                let r = simulate(&workload, &platform, &model, &s);
+                println!(
+                    "deadline {ms:>5.0} ms -> active {:>6.2} ms, energy {:>7.1} uJ, \
+                     nmc kernels: {}, sim deadline met: {}",
+                    s.active_time().as_ms(),
+                    s.active_energy().as_uj(),
+                    s.decisions.iter().filter(|d| d.pe == PeId(1)).count(),
+                    r.deadline_met,
+                );
+            }
+            Err(e) => println!("deadline {ms:>5.0} ms -> {e}"),
+        }
+    }
+}

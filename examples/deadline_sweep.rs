@@ -1,0 +1,71 @@
+//! Deadline sweep: how MEDEA trades energy for slack across the whole
+//! feasible deadline range (the paper's §5.1 study, densified), plus the
+//! per-feature savings at each point.
+//!
+//! ```sh
+//! cargo run --release --example deadline_sweep
+//! ```
+
+use medea::exp::ExpContext;
+use medea::manager::medea::MedeaFeatures;
+use medea::util::table::{fnum, Table};
+use medea::util::units::Time;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let medea = ctx.medea();
+
+    // Find the feasibility edge first.
+    let mut lo = 1.0;
+    let mut hi = 100.0;
+    while hi - lo > 0.5 {
+        let mid = 0.5 * (lo + hi);
+        if medea.schedule(&ctx.workload, Time::from_ms(mid)).is_ok() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    println!("feasibility edge: ~{hi:.1} ms (fastest possible schedule)\n");
+
+    let mut t = Table::new(&[
+        "Deadline (ms)",
+        "Active (ms)",
+        "E_active (uJ)",
+        "E_total (uJ)",
+        "KerDVFS save",
+        "AdapTile save",
+    ]);
+    let deadlines = [hi.ceil(), 50.0, 75.0, 100.0, 150.0, 200.0, 300.0, 500.0, 1000.0];
+    for &ms in deadlines.iter() {
+        let d = Time::from_ms(ms);
+        let Ok(full) = medea.schedule(&ctx.workload, d) else {
+            continue;
+        };
+        // Near the feasibility edge an ablated MEDEA may be infeasible —
+        // itself a finding (the features buy feasibility, not just energy).
+        let saving = |feats: MedeaFeatures| -> String {
+            match ctx.medea_with(feats).schedule(&ctx.workload, d) {
+                Ok(abl) => format!(
+                    "{:.1} %",
+                    (1.0 - full.total_energy(&ctx.platform).raw()
+                        / abl.total_energy(&ctx.platform).raw())
+                        * 100.0
+                ),
+                Err(_) => "infeasible".into(),
+            }
+        };
+        t.row(vec![
+            fnum(ms, 0),
+            fnum(full.active_time().as_ms(), 1),
+            fnum(full.active_energy().as_uj(), 0),
+            fnum(full.total_energy(&ctx.platform).as_uj(), 0),
+            saving(MedeaFeatures::without_kernel_dvfs()),
+            saving(MedeaFeatures::without_adaptive_tiling()),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!("note: E_total includes sleep energy over the full deadline window,");
+    println!("which is why very relaxed deadlines cost more total energy again");
+    println!("(the paper's §5.1 observation about idle power prominence).");
+}

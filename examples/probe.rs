@@ -1,0 +1,55 @@
+//! Scratch probe for calibration (not part of the public example set).
+use medea::config::estimator::{Estimator, TilingPolicy};
+use medea::ir::tsd::{tsd_core, TsdParams};
+use medea::platform::heeptimize::{heeptimize, CARUS, CGRA, CPU};
+use medea::profile::characterize;
+use medea::tiling::modes::TilingMode;
+use medea::tiling::plan::plan_kernel;
+use medea::timing::cycle_model::CycleModel;
+
+fn main() {
+    let platform = heeptimize();
+    let model = CycleModel::heeptimize();
+    let profiles = characterize(&platform, &model);
+    let est = Estimator::new(&platform, &profiles, &model);
+    let est_db = Estimator::new(&platform, &profiles, &model).with_policy(TilingPolicy::ForceDouble);
+    let w = tsd_core(&TsdParams::default());
+
+    let mut traffic = 0u64;
+    let mut compute = 0u64;
+    let mut total_ad = 0u64;
+    let mut total_db = 0u64;
+    let mut sb_count = 0;
+    for k in w.kernels() {
+        // best PE at min-V by energy among supported
+        let mut best: Option<(medea::platform::PeId, u64, TilingMode)> = None;
+        for pe in [CPU, CGRA, CARUS] {
+            if let Some((mode, cyc)) = est.best_mode(pe, k) {
+                if best.map(|(_, c, _)| cyc.raw() < c).unwrap_or(true) {
+                    best = Some((pe, cyc.raw(), mode));
+                }
+            }
+        }
+        let (pe, cyc, mode) = best.unwrap();
+        total_ad += cyc;
+        if mode == TilingMode::SingleBuffer && pe != CPU {
+            sb_count += 1;
+        }
+        if let Some((_, cyc_db)) = est_db.best_mode(pe, k) {
+            total_db += cyc_db.raw();
+        }
+        compute += est.processing_cycles(pe, k).map(|c| c.raw()).unwrap_or(0);
+        if pe != CPU {
+            let lm = platform.pe(pe).lm.unwrap();
+            let c = platform.constraints.get(pe, k.ty).unwrap();
+            if let Some(p) = plan_kernel(k, lm, c.max_dim) {
+                traffic += p.traffic_in.raw() + p.traffic_out.raw();
+            }
+        }
+    }
+    println!("total adaptive cycles (fastest-PE): {total_ad} ({:.1} ms @122MHz)", total_ad as f64 / 122e6 * 1e3);
+    println!("total forced-db cycles:             {total_db} (+{:.2} %)", (total_db as f64 / total_ad as f64 - 1.0) * 100.0);
+    println!("processing-only cycles:             {compute} ({:.1} % of total)", compute as f64 / total_ad as f64 * 100.0);
+    println!("accelerator traffic: {:.1} KB", traffic as f64 / 1024.0);
+    println!("sb-mode accelerator kernels: {sb_count}/{}", w.len());
+}

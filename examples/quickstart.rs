@@ -1,0 +1,67 @@
+//! Quickstart: characterize HEEPtimize, schedule the TSD workload under a
+//! 200 ms deadline, and validate the schedule on the event simulator.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use medea::exp::ExpContext;
+use medea::sim::replay::simulate;
+use medea::util::units::Time;
+
+fn main() {
+    // 1. Platform + characterization profiles + workload (the paper's §4
+    //    setup). `ExpContext::paper()` bundles:
+    //      * the HEEPtimize platform preset (CPU + CGRA + Carus NMC),
+    //      * the characterization campaign (timing S_c + power S_P),
+    //      * the TSD transformer core decomposed into 164 kernels.
+    let ctx = ExpContext::paper();
+    println!(
+        "platform `{}`: {} PEs, V-F {:?}, workload `{}` with {} kernels / {:.1} M ops",
+        ctx.platform.name,
+        ctx.platform.pes.len(),
+        ctx.platform
+            .vf
+            .points()
+            .iter()
+            .map(|p| p.label())
+            .collect::<Vec<_>>(),
+        ctx.workload.name,
+        ctx.workload.len(),
+        ctx.workload.total_ops() as f64 / 1e6,
+    );
+
+    // 2. Run MEDEA: minimize energy subject to the 200 ms deadline.
+    let deadline = Time::from_ms(200.0);
+    let schedule = ctx
+        .medea()
+        .schedule(&ctx.workload, deadline)
+        .expect("200 ms is feasible on HEEPtimize");
+    println!(
+        "\nMEDEA schedule: active {:.1} ms (deadline {:.0} ms), energy {:.0} uJ, optimal={}",
+        schedule.active_time().as_ms(),
+        deadline.as_ms(),
+        schedule.active_energy().as_uj(),
+        schedule.optimal,
+    );
+
+    // 3. Where did the kernels go?
+    println!("\nassignments (PE @ V-F -> kernel count):");
+    for ((pe, vf), n) in schedule.assignment_histogram() {
+        println!(
+            "  {:>6} @ {:>13} -> {n}",
+            ctx.platform.pe(pe).name,
+            ctx.platform.vf.get(vf).label()
+        );
+    }
+
+    // 4. Independent validation: replay on the discrete-event simulator.
+    let report = simulate(&ctx.workload, &ctx.platform, &ctx.model, &schedule);
+    println!(
+        "\nsimulator: active {:.1} ms, energy {:.0} uJ, {} events, deadline met: {}",
+        report.active_time.as_ms(),
+        report.active_energy.as_uj(),
+        report.events,
+        report.deadline_met,
+    );
+}

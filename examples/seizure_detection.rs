@@ -1,0 +1,101 @@
+//! End-to-end seizure-detection driver — the full three-layer system on a
+//! realistic workload:
+//!
+//!   synthetic EEG stream → Rust FFT frontend → MEDEA schedules the TSD
+//!   transformer for the deadline → the discrete-event simulator replays
+//!   the schedule (on-device time/energy, deadline check) → the PJRT
+//!   runtime executes the AOT-compiled TSD artifact for the functional
+//!   prediction → headline energy table vs the baselines.
+//!
+//! Requires artifacts: `make artifacts` first. Recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example seizure_detection
+//! ```
+
+use medea::baselines::coarse_grain_app_dvfs;
+use medea::coordinator::service::{Coordinator, Request};
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::runtime::artifacts::ArtifactManifest;
+use medea::sim::replay::simulate;
+use medea::util::table::{fnum, Table};
+use medea::util::units::Time;
+
+fn main() {
+    let artifact_dir = ArtifactManifest::default_dir();
+    if !artifact_dir.join("manifest.json").exists() {
+        eprintln!("artifacts not found in {artifact_dir:?}; run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let n_windows = 24usize;
+    let deadline = Time::from_ms(200.0);
+    println!(
+        "serving {n_windows} EEG windows (16 ch x 6 s) at a {:.0} ms deadline\n",
+        deadline.as_ms()
+    );
+
+    // --- the service loop -------------------------------------------------
+    let coord = Coordinator::start(&artifact_dir).expect("start coordinator");
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let mut correct = 0usize;
+    let mut truths = Vec::new();
+    for _ in 0..n_windows {
+        let window = gen.next_window();
+        let truth = window.seizure;
+        truths.push(truth);
+        let out = coord.infer(Request { window, deadline }).expect("inference");
+        let ok = out.prediction.seizure == truth;
+        correct += ok as usize;
+        println!(
+            "window {:>3}  truth={:<10}  pred={:<10}{}  on-device: {:>6.1} ms / {:>5.0} uJ (met={})  host {:?}",
+            out.window_index,
+            label(truth),
+            label(out.prediction.seizure),
+            if ok { "  " } else { " *" },
+            out.sim.active_time.as_ms(),
+            out.sim.total_energy().as_uj(),
+            out.sim.deadline_met,
+            out.host_latency,
+        );
+    }
+    let metrics = coord.shutdown();
+    println!("\n{}", metrics.summary());
+    println!(
+        "agreement with synthetic labels: {correct}/{n_windows} (untrained synthetic weights — \
+         functional-path validation, not a clinical claim)\n"
+    );
+
+    // --- the headline energy table ----------------------------------------
+    println!("headline: MEDEA vs CoarseGrain(AppDVFS) total energy per window");
+    let ctx = ExpContext::paper();
+    let mut t = Table::new(&["Deadline (ms)", "CoarseGrain (uJ)", "MEDEA (uJ)", "Saving"]);
+    for ms in ExpContext::DEADLINES_MS {
+        let d = Time::from_ms(ms);
+        let cg = coarse_grain_app_dvfs(&ctx.workload, &ctx.platform, &ctx.profiles, &ctx.model, d)
+            .unwrap();
+        let me = ctx.medea().schedule(&ctx.workload, d).unwrap();
+        let e_cg = simulate(&ctx.workload, &ctx.platform, &ctx.model, &cg)
+            .total_energy()
+            .as_uj();
+        let e_me = simulate(&ctx.workload, &ctx.platform, &ctx.model, &me)
+            .total_energy()
+            .as_uj();
+        t.row(vec![
+            fnum(ms, 0),
+            fnum(e_cg, 0),
+            fnum(e_me, 0),
+            format!("{:.1} %", (1.0 - e_me / e_cg) * 100.0),
+        ]);
+    }
+    println!("{}", t.to_text());
+}
+
+fn label(seizure: bool) -> &'static str {
+    if seizure {
+        "seizure"
+    } else {
+        "background"
+    }
+}

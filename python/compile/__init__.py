@@ -1,0 +1,4 @@
+"""Build-time compile path: JAX model + Pallas kernels -> HLO text artifacts.
+
+Never imported at runtime; the rust coordinator only consumes artifacts/.
+"""

@@ -1,0 +1,145 @@
+"""AOT compile path: lower the L2 model + L1 kernels to HLO *text*.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  * ``tsd_full.hlo.txt``      — whole model, weights baked in:
+                                 (channels, samples) f32 → (n_classes,) f32
+  * ``tsd_core.hlo.txt``      — transformer core: (patches, patch_dim) → logits
+  * ``k_<name>.hlo.txt``      — per-kernel executables (generic weights as
+                                 runtime inputs) for the rust coordinator's
+                                 kernel-level dispatch
+  * ``manifest.json``         — shapes/dtypes of every artifact
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import gelu_pwl, layernorm, taylor_softmax, tiled_matmul
+from .model import TsdConfig, init_weights, tsd_core_forward, tsd_forward
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_to_file(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+def build_artifacts(out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = TsdConfig()
+    w = init_weights(cfg, seed=seed)
+    manifest = {"seed": seed, "config": cfg.__dict__, "artifacts": []}
+
+    def emit(name, fn, arg_specs, outputs_doc):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        lower_to_file(fn, arg_specs, path)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in arg_specs],
+                "outputs": outputs_doc,
+            }
+        )
+        print(f"  wrote {path}")
+
+    # Full model (weights baked in via closure).
+    emit(
+        "tsd_full",
+        lambda eeg: (tsd_forward(cfg, w, eeg),),
+        [spec((cfg.channels, cfg.window_samples))],
+        [{"shape": [cfg.n_classes], "dtype": "float32"}],
+    )
+    # Transformer core (features in).
+    emit(
+        "tsd_core",
+        lambda feats: (tsd_core_forward(cfg, w, feats),),
+        [spec((cfg.patches, cfg.patch_dim))],
+        [{"shape": [cfg.n_classes], "dtype": "float32"}],
+    )
+
+    # Generic per-kernel executables for kernel-level dispatch from rust.
+    seq, dm, dh, dff = cfg.seq, cfg.d_model, cfg.d_head, cfg.d_ff
+    mm_shapes = {
+        "mm_qkv": (seq, dm, dh),
+        "mm_qk": (seq, dh, seq),
+        "mm_av": (seq, seq, dh),
+        "mm_proj": (seq, dm, dm),
+        "mm_ff1": (seq, dm, dff),
+        "mm_ff2": (seq, dff, dm),
+        "mm_embed": (cfg.patches, cfg.patch_dim, dm),
+        "mm_class": (1, dm, cfg.n_classes),
+    }
+    for name, (m, k, n) in mm_shapes.items():
+        emit(
+            f"k_{name}",
+            lambda a, b: (tiled_matmul(a, b),),
+            [spec((m, k)), spec((k, n))],
+            [{"shape": [m, n], "dtype": "float32"}],
+        )
+    emit(
+        "k_softmax",
+        lambda x: (taylor_softmax(x),),
+        [spec((seq, seq))],
+        [{"shape": [seq, seq], "dtype": "float32"}],
+    )
+    emit(
+        "k_gelu",
+        lambda x: (gelu_pwl(x),),
+        [spec((seq, dff))],
+        [{"shape": [seq, dff], "dtype": "float32"}],
+    )
+    emit(
+        "k_norm",
+        lambda x: (layernorm(x),),
+        [spec((seq, dm))],
+        [{"shape": [seq, dm], "dtype": "float32"}],
+    )
+    emit(
+        "k_add",
+        lambda a, b: (a + b,),
+        [spec((seq, dm)), spec((seq, dm))],
+        [{"shape": [seq, dm], "dtype": "float32"}],
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build_artifacts(args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

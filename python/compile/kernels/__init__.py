@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the TSD model.
+
+Every kernel is written with ``pl.pallas_call(..., interpret=True)`` so the
+lowered HLO contains plain ops executable by the CPU PJRT client (real-TPU
+Pallas lowers to Mosaic custom-calls the CPU plugin cannot run). BlockSpecs
+tile to a 64 KiB "VMEM-as-LM" budget, mirroring the HEEPtimize local-memory
+discipline the L3 tiling planner models.
+"""
+
+from .matmul import tiled_matmul
+from .softmax_taylor import taylor_softmax
+from .gelu_pwl import gelu_pwl
+from .layernorm import layernorm
+
+__all__ = ["tiled_matmul", "taylor_softmax", "gelu_pwl", "layernorm"]

@@ -1,0 +1,34 @@
+"""Piece-wise-linear GeLU Pallas kernel (L1).
+
+The paper's §4.3 modification: the erf gate becomes the 3-segment PWL gate
+``clip((1.702·x + 3)/6, 0, 1)``. Matches ``ref.gelu_pwl`` exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu_pwl_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    gate = jnp.clip((1.702 * x + 3.0) / 6.0, 0.0, 1.0)
+    o_ref[...] = x * gate
+
+
+@jax.jit
+def gelu_pwl(x):
+    """Element-wise PWL GeLU over a 2-D array, tiled by row blocks."""
+    rows, cols = x.shape
+    block_rows = rows
+    for candidate in (64, 32, 16, 8, 4, 2, 1):
+        if rows % candidate == 0 and candidate * cols * 4 * 2 <= 64 * 1024:
+            block_rows = candidate
+            break
+    return pl.pallas_call(
+        _gelu_pwl_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,37 @@
+"""Row-wise layer-norm Pallas kernel (L1, no affine parameters).
+
+Matches ``ref.layernorm`` exactly (same eps, same op order). Whole rows per
+block — the reduction axis is never split, as in the L3 row-wise tiling
+model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) / jnp.sqrt(var + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x, eps: float = 1e-5):
+    rows, cols = x.shape
+    block_rows = rows
+    for candidate in (64, 32, 16, 8, 4, 2, 1):
+        if rows % candidate == 0 and candidate * cols * 4 * 2 <= 64 * 1024:
+            block_rows = candidate
+            break
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

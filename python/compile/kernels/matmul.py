@@ -1,0 +1,66 @@
+"""Tiled matmul Pallas kernel (L1).
+
+The grid iterates (m, n) tiles with the full K dimension resident per tile —
+the same strip/panel schedule the L3 tile planner models for the
+HEEPtimize accelerators. Tile sizes are chosen so one tile's working set
+(A-strip + B-panel + f32 accumulator) fits a 64 KiB "VMEM-as-LM" budget.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): on a real TPU
+this BlockSpec expresses the HBM→VMEM schedule and the MXU consumes the
+tiles; under ``interpret=True`` it lowers to plain HLO the CPU PJRT client
+can execute, which is the correctness path used here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``preferred``."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def tiled_matmul(a, b, tm: int = 32, tn: int = 128):
+    """C = A @ B with (tm × tn) output tiles, full-K panels.
+
+    Shapes need not divide the tile sizes: inputs are zero-padded to the
+    tile grid and the result is sliced back (zero rows/cols contribute
+    nothing to the contraction).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+
+    tm_eff = min(tm, m)
+    tn_eff = min(tn, n)
+    pad_m = (-m) % tm_eff
+    pad_n = (-n) % tn_eff
+    a_p = jnp.pad(a, ((0, pad_m), (0, 0))) if pad_m else a
+    b_p = jnp.pad(b, ((0, 0), (0, pad_n))) if pad_n else b
+    mp, np_ = m + pad_m, n + pad_n
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // tm_eff, np_ // tn_eff),
+        in_specs=[
+            pl.BlockSpec((tm_eff, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn_eff), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm_eff, tn_eff), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These implement the *same approximations* as the paper's modified TSD model
+(§4.3): Taylor-expansion softmax, piece-wise-linear GeLU, magnitude-only FFT
+frontend — so the Pallas kernels must match them exactly (same formula, same
+dtype), not merely approximate float softmax/GeLU.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """C = A @ B in float32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def taylor_softmax(x):
+    """Row-wise 3-coefficient Taylor softmax (ConSmax-style, §4.3).
+
+    exp(z) is replaced by its 2nd-order Taylor polynomial around 0,
+    t(z) = 1 + z + z²/2, evaluated on max-shifted rows (z ≤ 0 so t(z) ∈
+    (0, 1]; the polynomial of a negative argument stays positive since
+    1 + z + z²/2 = ((z+1)² + 1)/2 > 0), then row-normalized.
+    """
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    t = 1.0 + z + 0.5 * z * z
+    return t / jnp.sum(t, axis=-1, keepdims=True)
+
+
+def gelu_pwl(x):
+    """Piece-wise-linear GeLU (§4.3): x · hardgate(x).
+
+    The erf gate is replaced by the PWL hard gate
+    g(x) = clip((1.702·x + 3) / 6, 0, 1), a ULP-friendly 3-segment
+    approximation (g ≡ 0 below ≈ −1.763, linear in between, 1 above ≈ 1.763).
+    """
+    gate = jnp.clip((1.702 * x + 3.0) / 6.0, 0.0, 1.0)
+    return x * gate
+
+
+def layernorm(x, eps=1e-5):
+    """Row-wise layer norm without affine parameters."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps)
+
+
+def fft_mag(x, n_bins=None):
+    """Magnitude of the rFFT over the last axis (no log — the paper's
+    modification replaces log-amplitude with plain magnitude)."""
+    mag = jnp.abs(jnp.fft.rfft(x, axis=-1))
+    if n_bins is not None:
+        mag = mag[..., :n_bins]
+    return mag

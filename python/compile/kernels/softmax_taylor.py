@@ -1,0 +1,43 @@
+"""Row-wise Taylor-expansion softmax Pallas kernel (L1).
+
+Implements the paper's §4.3 modification: exp replaced by its 3-coefficient
+Taylor polynomial ``t(z) = 1 + z + z²/2`` on max-shifted rows, then
+row-normalized. Matches ``ref.taylor_softmax`` bit-for-bit in f32 (same
+operations, same order).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _taylor_softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    t = 1.0 + z + 0.5 * z * z
+    o_ref[...] = t / jnp.sum(t, axis=-1, keepdims=True)
+
+
+@jax.jit
+def taylor_softmax(x):
+    """Row-wise Taylor softmax over the last axis of a 2-D array.
+
+    Rows are processed in row-blocks; each block holds whole rows (the
+    reduction axis is never split), mirroring the L3 planner's row-wise
+    tiling constraint for `norm`/`softmax` kernels.
+    """
+    rows, cols = x.shape
+    # Whole rows per block; pick a row-block that divides `rows`.
+    block_rows = rows
+    for candidate in (64, 32, 16, 8, 4, 2, 1):
+        if rows % candidate == 0 and candidate * cols * 4 <= 64 * 1024:
+            block_rows = candidate
+            break
+    return pl.pallas_call(
+        _taylor_softmax_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

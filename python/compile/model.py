@@ -1,0 +1,181 @@
+"""Layer-2: the TSD (Transformer for Seizure Detection) model in JAX.
+
+Mirrors the kernel decomposition of the paper's Fig 4 (and the Rust IR in
+``rust/src/ir/tsd.rs``): FFT-magnitude frontend → patch embedding + class
+token → 4 transformer encoder blocks (per-head MHSA with Taylor softmax,
+PWL-GeLU FFN) → classifier head. All linear algebra goes through the L1
+Pallas kernels so they lower into the same HLO module at AOT time.
+
+Weights are generated deterministically from a seed (the TUSZ-trained
+weights are not reproducible here — see DESIGN.md substitution ledger);
+numerical correctness is established against the pure-jnp reference, not
+against clinical accuracy.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gelu_pwl, layernorm, taylor_softmax, tiled_matmul
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class TsdConfig:
+    """Mirrors ``TsdParams`` in the Rust IR (rust/src/ir/tsd.rs)."""
+
+    channels: int = 16
+    n_fft: int = 256
+    segments_per_channel: int = 6
+    patch_dim: int = 80
+    d_model: int = 128
+    blocks: int = 4
+    heads: int = 4
+    d_ff: int = 256
+    n_classes: int = 2
+
+    @property
+    def patches(self) -> int:
+        return self.channels * self.segments_per_channel  # 96
+
+    @property
+    def seq(self) -> int:
+        return self.patches + 1  # + class token
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.heads
+
+    @property
+    def window_samples(self) -> int:
+        return self.segments_per_channel * self.n_fft  # per channel
+
+
+@dataclass
+class TsdWeights:
+    """All model parameters as a flat dict of jnp arrays."""
+
+    tensors: dict = field(default_factory=dict)
+
+    def __getitem__(self, k):
+        return self.tensors[k]
+
+
+def init_weights(cfg: TsdConfig, seed: int = 0) -> TsdWeights:
+    """Deterministic synthetic weights, scaled for stable activations."""
+    key = jax.random.PRNGKey(seed)
+    t = {}
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    def dense(name, fan_in, fan_out):
+        t[name] = jax.random.normal(nxt(), (fan_in, fan_out), jnp.float32) / jnp.sqrt(
+            float(fan_in)
+        )
+
+    dense("embed", cfg.patch_dim, cfg.d_model)
+    t["class_token"] = jax.random.normal(nxt(), (1, cfg.d_model), jnp.float32) * 0.02
+    for b in range(cfg.blocks):
+        for h in range(cfg.heads):
+            dense(f"b{b}.h{h}.wq", cfg.d_model, cfg.d_head)
+            dense(f"b{b}.h{h}.wk", cfg.d_model, cfg.d_head)
+            dense(f"b{b}.h{h}.wv", cfg.d_model, cfg.d_head)
+        dense(f"b{b}.proj", cfg.d_model, cfg.d_model)
+        dense(f"b{b}.ff1", cfg.d_model, cfg.d_ff)
+        dense(f"b{b}.ff2", cfg.d_ff, cfg.d_model)
+    dense("classifier", cfg.d_model, cfg.n_classes)
+    return TsdWeights(t)
+
+
+def frontend(cfg: TsdConfig, eeg):
+    """FFT-magnitude frontend (§4.3: no log).
+
+    ``eeg``: (channels, segments·n_fft) → (patches, patch_dim) features.
+    Stays in plain jnp: the rFFT is a host-CPU kernel in Λ_op, not a Pallas
+    target.
+    """
+    segs = eeg.reshape(cfg.channels * cfg.segments_per_channel, cfg.n_fft)
+    mag = ref.fft_mag(segs, n_bins=cfg.patch_dim)
+    # Normalize per patch to keep the synthetic-weight transformer in range.
+    mag = mag / (jnp.max(mag, axis=-1, keepdims=True) + 1e-6)
+    return mag
+
+
+def encoder_block(cfg: TsdConfig, w: TsdWeights, b: int, x):
+    """One encoder block, decomposed per Fig 4 (per-head chains)."""
+    seq = cfg.seq
+    scale = 1.0 / jnp.sqrt(float(cfg.d_head))
+
+    h_in = layernorm(x)  # N
+    heads = []
+    for h in range(cfg.heads):
+        q = tiled_matmul(h_in, w[f"b{b}.h{h}.wq"])  # MM
+        k = tiled_matmul(h_in, w[f"b{b}.h{h}.wk"])  # MM
+        v = tiled_matmul(h_in, w[f"b{b}.h{h}.wv"])  # MM
+        kt = k.T  # T
+        s = tiled_matmul(q, kt)  # MM (QK^T)
+        s = s * scale  # S
+        a = taylor_softmax(s)  # SM
+        heads.append(tiled_matmul(a, v))  # MM (AV)
+    concat = jnp.concatenate(heads, axis=-1)
+    proj = tiled_matmul(concat, w[f"b{b}.proj"])  # MM
+    x = x + proj  # A
+
+    f_in = layernorm(x)  # N
+    f1 = tiled_matmul(f_in, w[f"b{b}.ff1"])  # MM
+    g = gelu_pwl(f1)  # G
+    f2 = tiled_matmul(g, w[f"b{b}.ff2"])  # MM
+    x = x + f2  # A
+    assert x.shape == (seq, cfg.d_model)
+    return x
+
+
+def tsd_forward(cfg: TsdConfig, w: TsdWeights, eeg):
+    """Full model: EEG window (channels, samples) → class logits."""
+    feats = frontend(cfg, eeg)  # (patches, patch_dim)
+    x = tiled_matmul(feats, w["embed"])  # MM (patch embedding)
+    x = jnp.concatenate([w["class_token"], x], axis=0)  # CC
+    for b in range(cfg.blocks):
+        x = encoder_block(cfg, w, b, x)
+    cls = layernorm(x[:1, :])  # final N on the class token
+    logits = tiled_matmul(cls, w["classifier"])  # MM
+    return logits[0]
+
+
+def tsd_core_forward(cfg: TsdConfig, w: TsdWeights, feats):
+    """Transformer core only (features in): the §4.3 comparative workload."""
+    x = tiled_matmul(feats, w["embed"])
+    x = jnp.concatenate([w["class_token"], x], axis=0)
+    for b in range(cfg.blocks):
+        x = encoder_block(cfg, w, b, x)
+    cls = layernorm(x[:1, :])
+    return tiled_matmul(cls, w["classifier"])[0]
+
+
+# ---- pure-jnp reference twin (oracle for the whole model) -----------------
+
+
+def tsd_forward_ref(cfg: TsdConfig, w: TsdWeights, eeg):
+    """Same model built only from ref.py ops — the L2 correctness oracle."""
+    feats = frontend(cfg, eeg)
+    x = ref.matmul(feats, w["embed"])
+    x = jnp.concatenate([w["class_token"], x], axis=0)
+    scale = 1.0 / jnp.sqrt(float(cfg.d_head))
+    for b in range(cfg.blocks):
+        h_in = ref.layernorm(x)
+        heads = []
+        for h in range(cfg.heads):
+            q = ref.matmul(h_in, w[f"b{b}.h{h}.wq"])
+            k = ref.matmul(h_in, w[f"b{b}.h{h}.wk"])
+            v = ref.matmul(h_in, w[f"b{b}.h{h}.wv"])
+            s = ref.matmul(q, k.T) * scale
+            heads.append(ref.matmul(ref.taylor_softmax(s), v))
+        x = x + ref.matmul(jnp.concatenate(heads, axis=-1), w[f"b{b}.proj"])
+        f_in = ref.layernorm(x)
+        x = x + ref.matmul(ref.gelu_pwl(ref.matmul(f_in, w[f"b{b}.ff1"])), w[f"b{b}.ff2"])
+    cls = ref.layernorm(x[:1, :])
+    return ref.matmul(cls, w["classifier"])[0]

@@ -1,0 +1,57 @@
+"""AOT lowering contract: HLO text emission must stay compatible with the
+rust loader (HloModule text, return_tuple semantics, stable shapes)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import spec, to_hlo_text
+from compile.kernels import taylor_softmax, tiled_matmul
+
+
+def lower(fn, *specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_hlo_text_header_and_tuple_root():
+    text = lower(lambda a, b: (tiled_matmul(a, b),), spec((8, 16)), spec((16, 4)))
+    # The rust side requires parseable HLO text…
+    assert text.startswith("HloModule")
+    # …and a tuple root (aot.py lowers with return_tuple=True).
+    assert "ROOT" in text
+    root_line = next(l for l in text.splitlines() if "ROOT" in l and "tuple" in l)
+    assert "(f32[8,4]" in root_line.replace(" ", "") or "f32[8,4]" in root_line
+
+
+def test_hlo_contains_no_custom_calls():
+    # interpret=True Pallas must lower to plain HLO ops: a Mosaic
+    # custom-call would be unloadable by the CPU PJRT client.
+    for fn, specs in [
+        (lambda a, b: (tiled_matmul(a, b),), (spec((8, 16)), spec((16, 4)))),
+        (lambda x: (taylor_softmax(x),), (spec((9, 7)),)),
+    ]:
+        text = lower(fn, *specs)
+        assert "custom-call" not in text, "Mosaic custom-call leaked into HLO"
+
+
+def test_lowering_is_deterministic():
+    a = lower(lambda x: (taylor_softmax(x),), spec((9, 7)))
+    b = lower(lambda x: (taylor_softmax(x),), spec((9, 7)))
+    assert a == b
+
+
+def test_shape_mismatch_rejected_at_lowering():
+    with pytest.raises(Exception):
+        lower(lambda a, b: (tiled_matmul(a, b),), spec((8, 16)), spec((15, 4)))
+
+
+def test_f32_only_artifacts():
+    # The rust runtime reads f32 literals; guard the contract.
+    text = lower(lambda a, b: (tiled_matmul(a, b),), spec((4, 4)), spec((4, 4)))
+    assert "f64" not in text
+
+
+def test_spec_helper():
+    s = spec((3, 5))
+    assert s.shape == (3, 5)
+    assert s.dtype == jnp.float32

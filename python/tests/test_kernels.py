@@ -1,0 +1,153 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes; values come from seeded jax PRNG per example.
+This is the core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gelu_pwl, layernorm, taylor_softmax, tiled_matmul
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape, scale=3.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---- tiled matmul ---------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 130),
+    k=st.integers(1, 96),
+    n=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, m, k)
+    b = rand(seed + 1, k, n)
+    got = tiled_matmul(a, b)
+    want = ref.matmul(a, b)
+    # Accumulation-order differences across tiles: tolerance scaled to f32.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (97, 128, 32),   # TSD per-head QKV projection
+        (97, 32, 97),    # QK^T
+        (97, 97, 32),    # AV
+        (97, 128, 128),  # output projection
+        (97, 128, 256),  # FF1 (the kernel that must tile in 64 KiB)
+        (97, 256, 128),  # FF2
+        (96, 80, 128),   # patch embedding
+        (1, 128, 2),     # classifier head
+    ],
+)
+def test_matmul_tsd_shapes(m, k, n):
+    a = rand(m * 1000 + n, m, k)
+    b = rand(k * 7 + 1, k, n)
+    np.testing.assert_allclose(tiled_matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("tm,tn", [(8, 16), (32, 128), (97, 97), (128, 256)])
+def test_matmul_tile_size_invariance(tm, tn):
+    """Any legal tile size must give the same numbers."""
+    a = rand(11, 97, 64)
+    b = rand(12, 64, 96)
+    base = tiled_matmul(a, b)
+    np.testing.assert_allclose(tiled_matmul(a, b, tm=tm, tn=tn), base, rtol=1e-5, atol=1e-4)
+
+
+# ---- Taylor softmax -------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 128), cols=st.integers(2, 130), seed=st.integers(0, 2**31 - 1))
+def test_taylor_softmax_matches_ref(rows, cols, seed):
+    x = rand(seed, rows, cols, scale=5.0)
+    got = taylor_softmax(x)
+    want = ref.taylor_softmax(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_taylor_softmax_is_a_distribution():
+    x = rand(3, 97, 97, scale=8.0)
+    y = np.asarray(taylor_softmax(x))
+    assert (y > 0).all(), "Taylor polynomial of shifted rows must stay positive"
+    np.testing.assert_allclose(y.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_taylor_softmax_close_to_true_softmax_for_small_logits():
+    # For |z| small the Taylor gate approximates exp well.
+    x = 0.3 * rand(4, 16, 16, scale=1.0)
+    approx = np.asarray(taylor_softmax(x))
+    true = np.asarray(jax.nn.softmax(x, axis=-1))
+    # 2nd-order Taylor of exp on [-2, 0]-ish shifted logits: a few percent.
+    assert np.abs(approx - true).max() < 0.06
+
+
+# ---- PWL GeLU -------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 128), cols=st.integers(1, 260), seed=st.integers(0, 2**31 - 1))
+def test_gelu_pwl_matches_ref(rows, cols, seed):
+    x = rand(seed, rows, cols, scale=4.0)
+    np.testing.assert_allclose(gelu_pwl(x), ref.gelu_pwl(x), rtol=1e-6, atol=1e-6)
+
+
+def test_gelu_pwl_segments():
+    x = jnp.array([[-10.0, -1.7630, 0.0, 1.7630, 10.0]])
+    y = np.asarray(gelu_pwl(x))[0]
+    assert y[0] == 0.0  # dead segment
+    assert abs(y[2]) < 1e-7  # x·g(0) = 0
+    np.testing.assert_allclose(y[4], 10.0, rtol=1e-6)  # identity segment
+
+
+def test_gelu_pwl_tracks_true_gelu():
+    x = jnp.linspace(-4.0, 4.0, 201).reshape(1, -1)
+    approx = np.asarray(gelu_pwl(x))[0]
+    true = np.asarray(jax.nn.gelu(x, approximate=False))[0]
+    assert np.abs(approx - true).max() < 0.3  # ULP-grade approximation
+
+
+# ---- layer norm -----------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 128), cols=st.integers(2, 200), seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(rows, cols, seed):
+    x = rand(seed, rows, cols, scale=6.0)
+    np.testing.assert_allclose(layernorm(x), ref.layernorm(x), rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_statistics():
+    x = rand(9, 64, 128, scale=10.0)
+    y = np.asarray(layernorm(x))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-3)
+
+
+# ---- fft frontend oracle sanity ------------------------------------------
+
+
+def test_fft_mag_basic():
+    # A pure tone must put its energy in the right bin.
+    n = 256
+    t = np.arange(n) / n
+    x = jnp.asarray(np.sin(2 * np.pi * 8 * t), dtype=jnp.float32).reshape(1, -1)
+    mag = np.asarray(ref.fft_mag(x))
+    assert mag[0].argmax() == 8
+    # Truncation keeps the leading bins.
+    mag80 = np.asarray(ref.fft_mag(x, n_bins=80))
+    assert mag80.shape == (1, 80)
+    np.testing.assert_allclose(mag80[0], mag[0][:80], rtol=1e-6)

@@ -1,0 +1,122 @@
+"""L2 correctness: the Pallas-kernel model vs its pure-jnp twin, shapes,
+determinism, and the AOT manifest contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    TsdConfig,
+    encoder_block,
+    frontend,
+    init_weights,
+    tsd_core_forward,
+    tsd_forward,
+    tsd_forward_ref,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return TsdConfig()
+
+
+@pytest.fixture(scope="module")
+def weights(cfg):
+    return init_weights(cfg, seed=0)
+
+
+@pytest.fixture(scope="module")
+def eeg(cfg):
+    key = jax.random.PRNGKey(42)
+    return 50e-6 * jax.random.normal(key, (cfg.channels, cfg.window_samples), jnp.float32)
+
+
+def test_config_mirrors_rust_ir(cfg):
+    # Must match TsdParams::default() in rust/src/ir/tsd.rs.
+    assert cfg.patches == 96
+    assert cfg.seq == 97
+    assert cfg.d_model == 128
+    assert cfg.heads == 4
+    assert cfg.d_head == 32
+    assert cfg.d_ff == 256
+    assert cfg.blocks == 4
+    assert cfg.n_classes == 2
+
+
+def test_frontend_shape_and_range(cfg, eeg):
+    feats = frontend(cfg, eeg)
+    assert feats.shape == (cfg.patches, cfg.patch_dim)
+    f = np.asarray(feats)
+    assert np.isfinite(f).all()
+    assert f.max() <= 1.0 + 1e-6 and f.min() >= 0.0
+
+
+def test_encoder_block_shape(cfg, weights):
+    x = jax.random.normal(jax.random.PRNGKey(1), (cfg.seq, cfg.d_model), jnp.float32)
+    y = encoder_block(cfg, weights, 0, x)
+    assert y.shape == (cfg.seq, cfg.d_model)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_full_model_matches_ref_twin(cfg, weights, eeg):
+    """The core L2 signal: Pallas-kernel model ≡ pure-jnp model."""
+    got = np.asarray(tsd_forward(cfg, weights, eeg))
+    want = np.asarray(tsd_forward_ref(cfg, weights, eeg))
+    assert got.shape == (cfg.n_classes,)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_forward_is_deterministic(cfg, weights, eeg):
+    a = np.asarray(tsd_forward(cfg, weights, eeg))
+    b = np.asarray(tsd_forward(cfg, weights, eeg))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_weights_deterministic_per_seed(cfg):
+    a = init_weights(cfg, seed=7)
+    b = init_weights(cfg, seed=7)
+    c = init_weights(cfg, seed=8)
+    np.testing.assert_array_equal(np.asarray(a["embed"]), np.asarray(b["embed"]))
+    assert np.abs(np.asarray(a["embed"]) - np.asarray(c["embed"])).max() > 1e-3
+
+
+def test_core_forward_consumes_features(cfg, weights, eeg):
+    feats = frontend(cfg, eeg)
+    logits = tsd_core_forward(cfg, weights, feats)
+    full = tsd_forward(cfg, weights, eeg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full), rtol=1e-5, atol=1e-6)
+
+
+def test_weight_inventory_matches_fig4(cfg, weights):
+    names = set(weights.tensors)
+    expected = {"embed", "class_token", "classifier"}
+    for b in range(cfg.blocks):
+        expected |= {f"b{b}.proj", f"b{b}.ff1", f"b{b}.ff2"}
+        for h in range(cfg.heads):
+            expected |= {f"b{b}.h{h}.wq", f"b{b}.h{h}.wk", f"b{b}.h{h}.wv"}
+    assert names == expected
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_contract():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"tsd_full", "tsd_core", "k_softmax", "k_norm", "k_gelu"} <= names
+    for a in manifest["artifacts"]:
+        path = os.path.join(ARTIFACTS, a["file"])
+        assert os.path.exists(path), a["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{a['file']} is not HLO text"
+        assert len(a["inputs"]) >= 1

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig 5 (MEDEA vs the four baselines × three deadlines)
+//! and time each scheduler end-to-end (enumeration + solve + extraction).
+//!
+//! `cargo bench --bench fig5_baselines` (set MEDEA_BENCH_FAST=1 to trim).
+
+use medea::baselines::{
+    coarse_grain_app_dvfs, cpu_max_vf, static_accel_app_dvfs, static_accel_max_vf,
+};
+use medea::exp::{fig5, ExpContext};
+use medea::util::bench::Bencher;
+use medea::util::units::Time;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+    let d = Time::from_ms(200.0);
+
+    let (w, p, pr, m) = (&ctx.workload, &ctx.platform, &ctx.profiles, &ctx.model);
+    b.bench("scheduler/cpu-maxvf@200ms", || {
+        cpu_max_vf(w, p, pr, m, d).unwrap()
+    });
+    b.bench("scheduler/staticaccel-maxvf@200ms", || {
+        static_accel_max_vf(w, p, pr, m, d).unwrap()
+    });
+    b.bench("scheduler/staticaccel-appdvfs@200ms", || {
+        static_accel_app_dvfs(w, p, pr, m, d).unwrap()
+    });
+    b.bench("scheduler/coarsegrain-appdvfs@200ms", || {
+        coarse_grain_app_dvfs(w, p, pr, m, d).unwrap()
+    });
+    b.bench("scheduler/medea-dp@200ms", || {
+        ctx.medea().schedule(w, d).unwrap()
+    });
+
+    println!("\n{}", fig5::run(&ctx).to_text());
+    b.finish("fig5_baselines");
+}

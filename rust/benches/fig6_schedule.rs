@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig 6 (per-kernel decision snapshot + assignment
+//! histogram) and time schedule generation across the three deadlines.
+
+use medea::exp::{fig6, ExpContext};
+use medea::util::bench::Bencher;
+use medea::util::units::Time;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+    for ms in ExpContext::DEADLINES_MS {
+        b.bench(&format!("medea/schedule@{ms:.0}ms"), || {
+            ctx.medea()
+                .schedule(&ctx.workload, Time::from_ms(ms))
+                .unwrap()
+        });
+    }
+    println!("\n{}", fig6::run(&ctx, 2, 12).to_text());
+    println!("{}", fig6::histogram(&ctx).to_text());
+    b.finish("fig6_schedule");
+}

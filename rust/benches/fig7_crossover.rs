@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig 7 (CGRA/Carus ratio vs V-F) and time the
+//! estimator over the matmul subset (the `G_T`/`G_P` hot path).
+
+use medea::config::estimator::Estimator;
+use medea::exp::{fig7, ExpContext};
+use medea::ir::tsd::{tsd_matmul_subset, TsdParams};
+use medea::platform::heeptimize::{CARUS, CGRA};
+use medea::util::bench::Bencher;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+    let subset = tsd_matmul_subset(&TsdParams::default());
+    let est = Estimator::new(&ctx.platform, &ctx.profiles, &ctx.model);
+
+    b.bench("estimator/matmul-subset-both-accels", || {
+        let mut acc = 0.0f64;
+        for k in subset.kernels() {
+            for pe in [CGRA, CARUS] {
+                let (mode, _) = est.best_mode(pe, k).unwrap();
+                for vf in 0..ctx.platform.vf.len() {
+                    acc += est.energy(pe, k, vf, mode).unwrap().raw();
+                }
+            }
+        }
+        acc
+    });
+    b.bench("fig7/full-table", || fig7::rows(&ctx).len());
+
+    println!("\n{}", fig7::run(&ctx).to_text());
+    b.finish("fig7_crossover");
+}

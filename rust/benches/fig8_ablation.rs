@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig 8 + Table 6 (feature ablations) and time the
+//! ablated managers (each solves its own MCKP variant).
+
+use medea::exp::{fig8, ExpContext};
+use medea::manager::medea::MedeaFeatures;
+use medea::util::bench::Bencher;
+use medea::util::units::Time;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+    let d = Time::from_ms(200.0);
+    b.bench("ablation/full@200ms", || {
+        ctx.medea_with(MedeaFeatures::default())
+            .schedule(&ctx.workload, d)
+            .unwrap()
+    });
+    b.bench("ablation/wo-kerdvfs@200ms", || {
+        ctx.medea_with(MedeaFeatures::without_kernel_dvfs())
+            .schedule(&ctx.workload, d)
+            .unwrap()
+    });
+    b.bench("ablation/wo-kersched@200ms", || {
+        ctx.medea_with(MedeaFeatures::without_kernel_sched())
+            .schedule(&ctx.workload, d)
+            .unwrap()
+    });
+    b.bench("ablation/wo-adaptile@200ms", || {
+        ctx.medea_with(MedeaFeatures::without_adaptive_tiling())
+            .schedule(&ctx.workload, d)
+            .unwrap()
+    });
+
+    println!("\n{}", fig8::table6(&ctx).to_text());
+    println!("{}", fig8::run(&ctx).to_text());
+    b.finish("fig8_ablation");
+}

@@ -1,0 +1,75 @@
+//! Bench: MCKP solver performance comparison (the optimization hot path) on
+//! both the real MEDEA instance and synthetic instances of growing size.
+
+use medea::config::{ConfigSpace, Estimator};
+use medea::exp::ExpContext;
+use medea::solver::{
+    random_instance, BranchBound, DpSolver, GreedySolver, Instance, Item, LagrangeSolver,
+    McKpSolver,
+};
+use medea::util::bench::Bencher;
+use medea::util::rng::Rng;
+
+fn medea_instance(ctx: &ExpContext, deadline_s: f64) -> Instance {
+    let est = Estimator::new(&ctx.platform, &ctx.profiles, &ctx.model);
+    let space = ConfigSpace::enumerate(&ctx.workload, &est);
+    Instance {
+        groups: space
+            .per_kernel
+            .iter()
+            .map(|cs| {
+                cs.iter()
+                    .map(|c| Item {
+                        time: c.time.raw(),
+                        energy: c.energy.raw(),
+                    })
+                    .collect()
+            })
+            .collect(),
+        deadline: deadline_s,
+    }
+}
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+
+    let inst = medea_instance(&ctx, 0.200);
+    println!(
+        "MEDEA instance: {} groups, {} items total",
+        inst.groups.len(),
+        inst.groups.iter().map(|g| g.len()).sum::<usize>()
+    );
+    b.bench("mckp/dp/tsd@200ms", || {
+        DpSolver::default().solve(&inst).unwrap().total_energy
+    });
+    b.bench("mckp/bb/tsd@200ms", || {
+        BranchBound::default().solve(&inst).unwrap().total_energy
+    });
+    b.bench("mckp/lagrange/tsd@200ms", || {
+        LagrangeSolver::default().solve(&inst).unwrap().total_energy
+    });
+    b.bench("mckp/greedy/tsd@200ms", || {
+        GreedySolver.solve(&inst).unwrap().total_energy
+    });
+
+    // Scaling study on synthetic instances.
+    for groups in [100usize, 400, 1600] {
+        let mut rng = Rng::new(groups as u64);
+        let synth = random_instance(&mut rng, groups, 12);
+        b.bench(&format!("mckp/dp/synthetic-{groups}g"), || {
+            DpSolver::default().solve(&synth).map(|s| s.total_energy)
+        });
+        b.bench(&format!("mckp/greedy/synthetic-{groups}g"), || {
+            GreedySolver.solve(&synth).map(|s| s.total_energy)
+        });
+    }
+
+    // Enumeration (config-space build) cost.
+    b.bench("config-space/enumerate-tsd", || {
+        let est = Estimator::new(&ctx.platform, &ctx.profiles, &ctx.model);
+        ConfigSpace::enumerate(&ctx.workload, &est).total_configs()
+    });
+
+    b.finish("solver_perf");
+}

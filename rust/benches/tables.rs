@@ -1,0 +1,31 @@
+//! Bench: regenerate Tables 2–5 and time the characterization campaign +
+//! the simulator (the substrate hot paths behind every table).
+
+use medea::exp::{tables, ExpContext};
+use medea::profile::characterize;
+use medea::sim::replay::simulate;
+use medea::util::bench::Bencher;
+use medea::util::units::Time;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+
+    b.bench("characterize/heeptimize-full-campaign", || {
+        characterize(&ctx.platform, &ctx.model).timing_entry_count()
+    });
+
+    let schedule = ctx
+        .medea()
+        .schedule(&ctx.workload, Time::from_ms(200.0))
+        .unwrap();
+    b.bench("sim/replay-tsd-core@200ms", || {
+        simulate(&ctx.workload, &ctx.platform, &ctx.model, &schedule).events
+    });
+
+    println!("\n{}", tables::table2(&ctx).to_text());
+    println!("{}", tables::table3(&ctx).to_text());
+    println!("{}", tables::table4(&ctx).to_text());
+    println!("{}", tables::table5(&ctx).to_text());
+    b.finish("tables");
+}

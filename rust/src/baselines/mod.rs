@@ -1,0 +1,23 @@
+//! The §4.4 comparison baselines.
+//!
+//! All baselines use double-buffer tiling throughout (§4.4: "we consistently
+//! applied tiling using the double buffering strategy across all evaluated
+//! methods" — for the baselines; MEDEA itself adapts). In increasing
+//! sophistication:
+//!
+//! * [`cpu_max_vf`] — everything on the host CPU at maximum V-F.
+//! * [`static_accel_max_vf`] — the single most energy-efficient accelerator
+//!   for the workload at max V-F, unsupported kernels offloaded to the CPU.
+//! * [`static_accel_app_dvfs`] — same assignment, plus one application-level
+//!   V-F: the lowest meeting the deadline.
+//! * [`coarse_grain_app_dvfs`] — per-§4.4-group energy-aware PE selection
+//!   plus one application-level V-F.
+//!
+//! Baselines may *miss* the deadline (the CPU does at 50 ms in the paper);
+//! they still return their schedule so Fig 5 can plot the violation.
+
+pub mod schedulers;
+
+pub use schedulers::{
+    coarse_grain_app_dvfs, cpu_max_vf, static_accel_app_dvfs, static_accel_max_vf, BaselineError,
+};

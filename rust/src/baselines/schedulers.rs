@@ -1,0 +1,357 @@
+//! Baseline scheduler implementations.
+
+use crate::config::estimator::{Estimator, TilingPolicy};
+use crate::ir::Workload;
+use crate::manager::schedule::{Decision, Schedule};
+use crate::platform::{PeId, Platform};
+use crate::profile::Profiles;
+use crate::timing::cycle_model::CycleModel;
+use crate::util::units::{Energy, Time};
+
+/// Baseline failure modes.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum BaselineError {
+    #[error("kernel `{0}` cannot execute anywhere")]
+    NoConfig(String),
+    #[error("workload has no coarse groups covering all kernels")]
+    NoGroups,
+}
+
+fn forced_db_estimator<'a>(
+    platform: &'a Platform,
+    profiles: &'a Profiles,
+    model: &'a CycleModel,
+) -> Estimator<'a> {
+    Estimator::new(platform, profiles, model).with_policy(TilingPolicy::ForceDouble)
+}
+
+/// Schedule every kernel on `pe` at `vf_idx`, offloading kernels the PE
+/// cannot run to the CPU (at the same V-F).
+fn fixed_assignment(
+    workload: &Workload,
+    est: &Estimator,
+    pe: PeId,
+    vf_idx: usize,
+) -> Result<Vec<Decision>, BaselineError> {
+    let cpu = est.platform.cpu().id;
+    workload
+        .kernels()
+        .iter()
+        .enumerate()
+        .map(|(i, kernel)| {
+            let (use_pe, mode) = match est.best_mode(pe, kernel) {
+                Some((mode, _)) => (pe, mode),
+                None => {
+                    let (mode, _) = est
+                        .best_mode(cpu, kernel)
+                        .ok_or_else(|| BaselineError::NoConfig(kernel.name.clone()))?;
+                    (cpu, mode)
+                }
+            };
+            let time = est
+                .time(use_pe, kernel, vf_idx, mode)
+                .ok_or_else(|| BaselineError::NoConfig(kernel.name.clone()))?;
+            let energy = est.power(use_pe, kernel, vf_idx) * time;
+            Ok(Decision {
+                kernel: i,
+                pe: use_pe,
+                vf_idx,
+                mode,
+                time,
+                energy,
+            })
+        })
+        .collect()
+}
+
+fn to_schedule(
+    name: &str,
+    workload: &Workload,
+    deadline: Time,
+    decisions: Vec<Decision>,
+) -> Schedule {
+    Schedule {
+        scheduler: name.to_string(),
+        workload: workload.name.clone(),
+        deadline,
+        decisions,
+        optimal: false,
+    }
+}
+
+/// **CPU (MaxVF)**: homogeneous execution on the host CPU at max V-F.
+pub fn cpu_max_vf(
+    workload: &Workload,
+    platform: &Platform,
+    profiles: &Profiles,
+    model: &CycleModel,
+    deadline: Time,
+) -> Result<Schedule, BaselineError> {
+    let est = forced_db_estimator(platform, profiles, model);
+    let vf_max = platform.vf.len() - 1;
+    let decisions = fixed_assignment(workload, &est, platform.cpu().id, vf_max)?;
+    Ok(to_schedule("cpu-maxvf", workload, deadline, decisions))
+}
+
+/// Pick the single accelerator minimizing total workload energy at max V-F
+/// (with CPU offload for unsupported kernels) — the "a-priori most
+/// energy-efficient accelerator" of §4.4.
+fn best_static_accelerator(
+    workload: &Workload,
+    est: &Estimator,
+) -> Result<PeId, BaselineError> {
+    let vf_max = est.platform.vf.len() - 1;
+    let mut best: Option<(PeId, Energy)> = None;
+    for acc in est.platform.accelerators() {
+        let decisions = fixed_assignment(workload, est, acc.id, vf_max)?;
+        let e: Energy = decisions.iter().map(|d| d.energy).sum();
+        if best.map(|(_, be)| e < be).unwrap_or(true) {
+            best = Some((acc.id, e));
+        }
+    }
+    best.map(|(pe, _)| pe)
+        .ok_or_else(|| BaselineError::NoConfig("no accelerator on platform".into()))
+}
+
+/// **StaticAccel (MaxVF)**: the statically chosen accelerator at max V-F.
+pub fn static_accel_max_vf(
+    workload: &Workload,
+    platform: &Platform,
+    profiles: &Profiles,
+    model: &CycleModel,
+    deadline: Time,
+) -> Result<Schedule, BaselineError> {
+    let est = forced_db_estimator(platform, profiles, model);
+    let acc = best_static_accelerator(workload, &est)?;
+    let decisions = fixed_assignment(workload, &est, acc, platform.vf.len() - 1)?;
+    Ok(to_schedule("staticaccel-maxvf", workload, deadline, decisions))
+}
+
+/// **StaticAccel (AppDVFS)**: the statically chosen accelerator with one
+/// application-level V-F — the lowest meeting the deadline (falls back to
+/// max V-F when none does).
+pub fn static_accel_app_dvfs(
+    workload: &Workload,
+    platform: &Platform,
+    profiles: &Profiles,
+    model: &CycleModel,
+    deadline: Time,
+) -> Result<Schedule, BaselineError> {
+    let est = forced_db_estimator(platform, profiles, model);
+    let acc = best_static_accelerator(workload, &est)?;
+    let mut last = None;
+    for vf_idx in 0..platform.vf.len() {
+        let decisions = fixed_assignment(workload, &est, acc, vf_idx)?;
+        let total: Time = decisions.iter().map(|d| d.time).sum();
+        last = Some(decisions);
+        if total.raw() <= deadline.raw() {
+            break;
+        }
+    }
+    Ok(to_schedule(
+        "staticaccel-appdvfs",
+        workload,
+        deadline,
+        last.unwrap(),
+    ))
+}
+
+/// **CoarseGrain (AppDVFS)**: for each §4.4 group pick the most
+/// energy-efficient PE (at the candidate V-F), apply one application-level
+/// V-F — the lowest meeting the deadline.
+pub fn coarse_grain_app_dvfs(
+    workload: &Workload,
+    platform: &Platform,
+    profiles: &Profiles,
+    model: &CycleModel,
+    deadline: Time,
+) -> Result<Schedule, BaselineError> {
+    if !workload.groups_cover_all() {
+        return Err(BaselineError::NoGroups);
+    }
+    let est = forced_db_estimator(platform, profiles, model);
+    let cpu = platform.cpu().id;
+
+    let mut last: Option<Vec<Decision>> = None;
+    for vf_idx in 0..platform.vf.len() {
+        let mut decisions: Vec<Decision> = Vec::with_capacity(workload.len());
+        for group in workload.groups() {
+            // Evaluate each candidate PE for the whole group at this V-F.
+            let mut best: Option<(Energy, Vec<Decision>)> = None;
+            for pe in platform.pe_ids() {
+                let mut ds = Vec::new();
+                let mut e_total = Energy::ZERO;
+                let mut ok = true;
+                for ki in group.range.clone() {
+                    let kernel = &workload.kernels()[ki];
+                    let (use_pe, mode) = match est.best_mode(pe, kernel) {
+                        Some((mode, _)) => (pe, mode),
+                        None => match est.best_mode(cpu, kernel) {
+                            Some((mode, _)) => (cpu, mode),
+                            None => {
+                                ok = false;
+                                break;
+                            }
+                        },
+                    };
+                    let Some(time) = est.time(use_pe, kernel, vf_idx, mode) else {
+                        ok = false;
+                        break;
+                    };
+                    let energy = est.power(use_pe, kernel, vf_idx) * time;
+                    e_total += energy;
+                    ds.push(Decision {
+                        kernel: ki,
+                        pe: use_pe,
+                        vf_idx,
+                        mode,
+                        time,
+                        energy,
+                    });
+                }
+                if ok && best.as_ref().map(|(be, _)| e_total < *be).unwrap_or(true) {
+                    best = Some((e_total, ds));
+                }
+            }
+            let (_, ds) = best.ok_or_else(|| BaselineError::NoConfig(group.name.clone()))?;
+            decisions.extend(ds);
+        }
+        decisions.sort_by_key(|d| d.kernel);
+        let total: Time = decisions.iter().map(|d| d.time).sum();
+        last = Some(decisions);
+        if total.raw() <= deadline.raw() {
+            break;
+        }
+    }
+    Ok(to_schedule(
+        "coarsegrain-appdvfs",
+        workload,
+        deadline,
+        last.unwrap(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tsd::{tsd_core, TsdParams};
+    use crate::manager::medea::Medea;
+    use crate::platform::heeptimize::{heeptimize, CPU};
+    use crate::profile::characterize;
+
+    struct Ctx {
+        platform: Platform,
+        profiles: Profiles,
+        model: CycleModel,
+        workload: Workload,
+    }
+
+    fn ctx() -> Ctx {
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        Ctx {
+            workload: tsd_core(&TsdParams::default()),
+            platform,
+            profiles,
+            model,
+        }
+    }
+
+    #[test]
+    fn cpu_baseline_is_all_cpu_and_misses_tight_deadline() {
+        let c = ctx();
+        let s = cpu_max_vf(
+            &c.workload,
+            &c.platform,
+            &c.profiles,
+            &c.model,
+            Time::from_ms(50.0),
+        )
+        .unwrap();
+        assert!(s.decisions.iter().all(|d| d.pe == CPU));
+        // Paper §5.1: the CPU cannot meet the 50 ms deadline.
+        assert!(!s.meets_deadline(), "active {}", s.active_time().as_ms());
+        s.validate(&c.workload, &c.platform).unwrap();
+    }
+
+    #[test]
+    fn static_accel_uses_one_accelerator_plus_cpu() {
+        let c = ctx();
+        let s = static_accel_max_vf(
+            &c.workload,
+            &c.platform,
+            &c.profiles,
+            &c.model,
+            Time::from_ms(200.0),
+        )
+        .unwrap();
+        let accel_pes: std::collections::BTreeSet<_> = s
+            .decisions
+            .iter()
+            .map(|d| d.pe)
+            .filter(|&p| p != CPU)
+            .collect();
+        assert_eq!(accel_pes.len(), 1, "must use exactly one accelerator");
+        assert!(s.meets_deadline());
+    }
+
+    #[test]
+    fn app_dvfs_lowers_energy_vs_maxvf() {
+        let c = ctx();
+        let d = Time::from_ms(200.0);
+        let max =
+            static_accel_max_vf(&c.workload, &c.platform, &c.profiles, &c.model, d).unwrap();
+        let dvfs =
+            static_accel_app_dvfs(&c.workload, &c.platform, &c.profiles, &c.model, d).unwrap();
+        assert!(dvfs.meets_deadline());
+        assert!(
+            dvfs.active_energy().raw() < max.active_energy().raw(),
+            "AppDVFS {} !< MaxVF {}",
+            dvfs.active_energy().as_uj(),
+            max.active_energy().as_uj()
+        );
+        // One V-F throughout.
+        let vf0 = dvfs.decisions[0].vf_idx;
+        assert!(dvfs.decisions.iter().all(|d| d.vf_idx == vf0));
+    }
+
+    #[test]
+    fn paper_energy_ordering_holds() {
+        // Fig 5 ordering at 200 ms: CPU > StaticAccel(MaxVF) >
+        // StaticAccel(AppDVFS) > CoarseGrain(AppDVFS) > MEDEA.
+        let c = ctx();
+        let d = Time::from_ms(200.0);
+        let e = |s: &Schedule| s.total_energy(&c.platform).as_uj();
+        let cpu = cpu_max_vf(&c.workload, &c.platform, &c.profiles, &c.model, d).unwrap();
+        let sa = static_accel_max_vf(&c.workload, &c.platform, &c.profiles, &c.model, d).unwrap();
+        let sad =
+            static_accel_app_dvfs(&c.workload, &c.platform, &c.profiles, &c.model, d).unwrap();
+        let cg =
+            coarse_grain_app_dvfs(&c.workload, &c.platform, &c.profiles, &c.model, d).unwrap();
+        let medea = Medea::new(&c.platform, &c.profiles, &c.model)
+            .schedule(&c.workload, d)
+            .unwrap();
+        assert!(e(&cpu) > e(&sa), "cpu {} !> sa {}", e(&cpu), e(&sa));
+        assert!(e(&sa) > e(&sad), "sa {} !> sad {}", e(&sa), e(&sad));
+        assert!(e(&sad) > e(&cg), "sad {} !> cg {}", e(&sad), e(&cg));
+        assert!(e(&cg) > e(&medea), "cg {} !> medea {}", e(&cg), e(&medea));
+    }
+
+    #[test]
+    fn coarse_grain_meets_deadlines() {
+        let c = ctx();
+        for ms in [50.0, 200.0, 1000.0] {
+            let s = coarse_grain_app_dvfs(
+                &c.workload,
+                &c.platform,
+                &c.profiles,
+                &c.model,
+                Time::from_ms(ms),
+            )
+            .unwrap();
+            assert!(s.meets_deadline(), "{ms} ms: active {}", s.active_time().as_ms());
+            s.validate(&c.workload, &c.platform).unwrap();
+        }
+    }
+}

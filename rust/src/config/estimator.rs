@@ -1,0 +1,210 @@
+//! The timing (`G_T`) and power (`G_P`) estimators of §3.3.
+//!
+//! `G_T(k, p, v, c)`: total cycle count (profiled/extrapolated processing
+//! cycles + tiling-dependent data movement + overheads) divided by the
+//! frequency of the chosen voltage level. `G_P(k, p, v)`: characterized
+//! power, assumed independent of the kernel's operational size.
+
+use crate::ir::Kernel;
+use crate::platform::{PeId, Platform};
+use crate::profile::Profiles;
+use crate::timing::cycle_model::CycleModel;
+use crate::tiling::modes::{mode_cycles_with, TilingMode};
+use crate::util::units::{Cycles, Energy, Power, Time};
+
+/// How the tiling mode is chosen per (kernel, PE) — [`TilingPolicy::Adaptive`]
+/// is MEDEA's memory-aware adaptive tiling; [`TilingPolicy::ForceDouble`]
+/// pins `t_db` (the §5.3.3 ablation and the §4.4 baseline convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TilingPolicy {
+    #[default]
+    Adaptive,
+    ForceDouble,
+}
+
+/// Bundles platform + profiles + overhead constants into the §3.3 models.
+pub struct Estimator<'a> {
+    pub platform: &'a Platform,
+    pub profiles: &'a Profiles,
+    /// Overhead constants (launch / per-tile); processing cycles always come
+    /// from the profiles, mirroring the paper's measured-profile flow.
+    pub model: &'a CycleModel,
+    pub policy: TilingPolicy,
+}
+
+impl<'a> Estimator<'a> {
+    pub fn new(platform: &'a Platform, profiles: &'a Profiles, model: &'a CycleModel) -> Self {
+        Estimator {
+            platform,
+            profiles,
+            model,
+            policy: TilingPolicy::Adaptive,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: TilingPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Profiled/extrapolated processing-only cycles of `kernel` on `pe`.
+    pub fn processing_cycles(&self, pe: PeId, kernel: &Kernel) -> Option<Cycles> {
+        self.profiles
+            .processing_cycles(pe, kernel.ty, kernel.dw, kernel.shape.ops())
+    }
+
+    /// Total execution cycles of `kernel` on `pe` under tiling mode `mode`.
+    pub fn total_cycles(&self, pe: PeId, kernel: &Kernel, mode: TilingMode) -> Option<Cycles> {
+        let pe_ref = self.platform.pe(pe);
+        let compute = self.processing_cycles(pe, kernel)?;
+        mode_cycles_with(
+            self.platform,
+            pe_ref,
+            kernel,
+            compute,
+            self.model.launch(pe_ref.class),
+            self.model.per_tile(pe_ref.class),
+            mode,
+        )
+    }
+
+    /// `G_T`: wall-clock execution time at V-F index `vf_idx`.
+    pub fn time(&self, pe: PeId, kernel: &Kernel, vf_idx: usize, mode: TilingMode) -> Option<Time> {
+        let cycles = self.total_cycles(pe, kernel, mode)?;
+        let vf = self.platform.vf.get(vf_idx);
+        Some(cycles.at(vf.f))
+    }
+
+    /// `G_P`: characterized power for `(pe, kernel type)` at `vf_idx`.
+    pub fn power(&self, pe: PeId, kernel: &Kernel, vf_idx: usize) -> Power {
+        self.profiles.power_or_model(
+            self.platform,
+            pe,
+            kernel.ty,
+            vf_idx,
+            self.platform.vf.get(vf_idx),
+        )
+    }
+
+    /// Active energy `E_a(ω) = G_P(ω) · G_T(ω)` (Eq. 9).
+    pub fn energy(
+        &self,
+        pe: PeId,
+        kernel: &Kernel,
+        vf_idx: usize,
+        mode: TilingMode,
+    ) -> Option<Energy> {
+        let t = self.time(pe, kernel, vf_idx, mode)?;
+        Some(self.power(pe, kernel, vf_idx) * t)
+    }
+
+    /// The tiling mode for `(kernel, pe)` under the estimator's policy.
+    /// Adaptive: the cycle-minimal mode — the §3.3 pre-selection step (mode
+    /// choice is V-F independent since cycle counts are; frequency only
+    /// scales time). ForceDouble: `t_db`, falling back to `t_sb` only when
+    /// the kernel cannot be tiled into half the LM at all (feasibility
+    /// guard, noted in DESIGN.md).
+    pub fn best_mode(&self, pe: PeId, kernel: &Kernel) -> Option<(TilingMode, Cycles)> {
+        let sb = self.total_cycles(pe, kernel, TilingMode::SingleBuffer);
+        let db = self.total_cycles(pe, kernel, TilingMode::DoubleBuffer);
+        match self.policy {
+            TilingPolicy::Adaptive => match (sb, db) {
+                (Some(s), Some(d)) if d < s => Some((TilingMode::DoubleBuffer, d)),
+                (Some(s), _) => Some((TilingMode::SingleBuffer, s)),
+                (None, Some(d)) => Some((TilingMode::DoubleBuffer, d)),
+                (None, None) => None,
+            },
+            TilingPolicy::ForceDouble => match (db, sb) {
+                (Some(d), _) => Some((TilingMode::DoubleBuffer, d)),
+                (None, Some(s)) => Some((TilingMode::SingleBuffer, s)),
+                (None, None) => None,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataWidth::*, KernelType, Shape};
+    use crate::platform::heeptimize::{heeptimize, CARUS, CGRA, CPU};
+    use crate::profile::characterize;
+
+    fn mm(m: u64, k: u64, n: u64) -> Kernel {
+        Kernel::new("mm", KernelType::MatMul, Shape::MatMul { m, k, n }, Int8)
+    }
+
+    #[test]
+    fn estimator_end_to_end() {
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        let est = Estimator::new(&platform, &profiles, &model);
+
+        let k = mm(97, 128, 256);
+        // Accelerators must beat the CPU in time at equal V-F.
+        let t_cpu = est.time(CPU, &k, 3, TilingMode::SingleBuffer).unwrap();
+        let (mode, _) = est.best_mode(CARUS, &k).unwrap();
+        let t_carus = est.time(CARUS, &k, 3, mode).unwrap();
+        assert!(t_carus.raw() < t_cpu.raw() / 4.0);
+
+        // Time shrinks and power grows with V-F; energy is not monotone.
+        let t_lo = est.time(CARUS, &k, 0, mode).unwrap();
+        let t_hi = est.time(CARUS, &k, 3, mode).unwrap();
+        assert!(t_hi < t_lo);
+        assert!(est.power(CARUS, &k, 3) > est.power(CARUS, &k, 0));
+    }
+
+    #[test]
+    fn energy_minimum_at_lowest_vf_for_accel() {
+        // With P ≈ c·V²f dominating, energy per kernel falls with voltage,
+        // so the per-kernel energy-optimal V-F is the lowest — the reason
+        // relaxed deadlines collapse to 0.5 V (paper Fig 6).
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        let est = Estimator::new(&platform, &profiles, &model);
+        let k = mm(97, 128, 32);
+        for pe in [CGRA, CARUS] {
+            let (mode, _) = est.best_mode(pe, &k).unwrap();
+            let e0 = est.energy(pe, &k, 0, mode).unwrap();
+            let e3 = est.energy(pe, &k, 3, mode).unwrap();
+            assert!(e0 < e3, "pe={pe}: {e0} !< {e3}");
+        }
+    }
+
+    #[test]
+    fn fig7_crossover_exists() {
+        // CGRA more energy-efficient than Carus at 0.5 V, Carus better at
+        // 0.9 V, for a representative TSD matmul — the paper's Fig 7.
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        let est = Estimator::new(&platform, &profiles, &model);
+        let k = mm(97, 128, 32);
+        let e = |pe: crate::platform::PeId, vf: usize| {
+            let (mode, _) = est.best_mode(pe, &k).unwrap();
+            est.energy(pe, &k, vf, mode).unwrap()
+        };
+        let lo_ratio = e(CGRA, 0) / e(CARUS, 0);
+        let hi_ratio = e(CGRA, 3) / e(CARUS, 3);
+        assert!(lo_ratio < 1.0, "CGRA must win at 0.5V: ratio {lo_ratio:.3}");
+        assert!(hi_ratio > 1.0, "Carus must win at 0.9V: ratio {hi_ratio:.3}");
+    }
+
+    #[test]
+    fn unsupported_configs_are_none() {
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        let est = Estimator::new(&platform, &profiles, &model);
+        let sm = Kernel::new(
+            "sm",
+            KernelType::Softmax,
+            Shape::Rowwise { rows: 97, cols: 97 },
+            Int16,
+        );
+        assert!(est.best_mode(CGRA, &sm).is_none());
+        assert!(est.best_mode(CPU, &sm).is_some());
+    }
+}

@@ -1,0 +1,13 @@
+//! Per-kernel execution-configuration space `Ω_i` (§3.3).
+//!
+//! A configuration `ω_ij = (p_ij, v_ij, c_ij)` fixes the PE, the V-F point,
+//! and the (pre-selected, cycle-minimal) tiling mode for kernel `k_i`.
+//! [`estimator`] implements the timing model `G_T` (profiled cycles +
+//! extrapolation + tiling/DMA composition) and power model `G_P`;
+//! [`space`] enumerates all valid configurations per kernel.
+
+pub mod estimator;
+pub mod space;
+
+pub use estimator::Estimator;
+pub use space::{Config, ConfigSpace};

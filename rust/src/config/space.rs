@@ -1,0 +1,182 @@
+//! Enumeration of the valid configuration sets `Ω_i` for every kernel.
+
+use super::estimator::Estimator;
+use crate::ir::Workload;
+use crate::platform::PeId;
+use crate::tiling::modes::TilingMode;
+use crate::util::units::{Energy, Time};
+
+/// One valid execution configuration `ω_ij` with its estimated time/energy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Config {
+    pub pe: PeId,
+    pub vf_idx: usize,
+    pub mode: TilingMode,
+    /// `T_a(ω)` (Eq. 8).
+    pub time: Time,
+    /// `E_a(ω)` (Eq. 9).
+    pub energy: Energy,
+}
+
+/// The per-kernel configuration sets for a workload.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigSpace {
+    /// `per_kernel[i]` = `Ω_i`, sorted by ascending time.
+    pub per_kernel: Vec<Vec<Config>>,
+}
+
+impl ConfigSpace {
+    /// Enumerate `Ω_i` for every kernel: all (PE, V-F) pairs the platform
+    /// supports, with the cycle-minimal tiling mode pre-selected per pair
+    /// (§3.3 dimensionality reduction). Panics if some kernel has no valid
+    /// configuration (a platform that cannot run the workload at all).
+    pub fn enumerate(workload: &Workload, est: &Estimator) -> ConfigSpace {
+        let platform = est.platform;
+        let per_kernel = workload
+            .kernels()
+            .iter()
+            .map(|kernel| {
+                let mut configs = Vec::new();
+                for pe in platform.pe_ids() {
+                    // Tiling mode choice is V-F independent (cycle counts
+                    // are); pre-select once per PE.
+                    let Some((mode, _cycles)) = est.best_mode(pe, kernel) else {
+                        continue;
+                    };
+                    for vf_idx in 0..platform.vf.len() {
+                        let Some(time) = est.time(pe, kernel, vf_idx, mode) else {
+                            continue;
+                        };
+                        let energy = est.power(pe, kernel, vf_idx) * time;
+                        configs.push(Config {
+                            pe,
+                            vf_idx,
+                            mode,
+                            time,
+                            energy,
+                        });
+                    }
+                }
+                assert!(
+                    !configs.is_empty(),
+                    "kernel `{}` has no valid configuration on platform `{}`",
+                    kernel.name,
+                    platform.name
+                );
+                configs.sort_by(|a, b| a.time.raw().partial_cmp(&b.time.raw()).unwrap());
+                configs
+            })
+            .collect();
+        ConfigSpace { per_kernel }
+    }
+
+    pub fn n_kernels(&self) -> usize {
+        self.per_kernel.len()
+    }
+
+    pub fn total_configs(&self) -> usize {
+        self.per_kernel.iter().map(|c| c.len()).sum()
+    }
+
+    /// Fastest achievable total time (lower bound on the deadline below
+    /// which no schedule exists).
+    pub fn min_total_time(&self) -> Time {
+        self.per_kernel
+            .iter()
+            .map(|cs| {
+                cs.iter()
+                    .map(|c| c.time)
+                    .fold(Time(f64::INFINITY), Time::min)
+            })
+            .sum()
+    }
+
+    /// Total time/energy of the per-kernel energy-greedy choice (the
+    /// unconstrained energy optimum; feasible only for relaxed deadlines).
+    pub fn min_energy_choice(&self) -> (Time, Energy) {
+        let mut t = Time::ZERO;
+        let mut e = Energy::ZERO;
+        for cs in &self.per_kernel {
+            let best = cs
+                .iter()
+                .min_by(|a, b| a.energy.raw().partial_cmp(&b.energy.raw()).unwrap())
+                .unwrap();
+            t += best.time;
+            e += best.energy;
+        }
+        (t, e)
+    }
+
+    /// Remove configurations dominated within their kernel (≥ time and
+    /// ≥ energy than another). Solvers only ever pick Pareto points, so this
+    /// is a pure speedup; returns the number removed.
+    pub fn prune_dominated(&mut self) -> usize {
+        let mut removed = 0;
+        for cs in &mut self.per_kernel {
+            // cs sorted by time ascending; sweep keeping strictly
+            // decreasing energy.
+            let mut kept: Vec<Config> = Vec::with_capacity(cs.len());
+            for c in cs.iter() {
+                if kept.iter().any(|k| k.energy.raw() <= c.energy.raw()) {
+                    removed += 1;
+                } else {
+                    kept.push(*c);
+                }
+            }
+            *cs = kept;
+        }
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tsd::{tsd_core, TsdParams};
+    use crate::platform::heeptimize::heeptimize;
+    use crate::profile::characterize;
+    use crate::timing::cycle_model::CycleModel;
+
+    fn space() -> ConfigSpace {
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        let est = Estimator::new(&platform, &profiles, &model);
+        ConfigSpace::enumerate(&tsd_core(&TsdParams::default()), &est)
+    }
+
+    #[test]
+    fn every_kernel_has_configs() {
+        let s = space();
+        assert_eq!(s.n_kernels(), 164);
+        for (i, cs) in s.per_kernel.iter().enumerate() {
+            assert!(!cs.is_empty(), "kernel {i}");
+            // CPU-only kernels: exactly 4 V-F configs; 3-PE kernels: 12.
+            assert!(cs.len() == 4 || cs.len() == 12, "kernel {i}: {}", cs.len());
+            // Sorted by time.
+            for w in cs.windows(2) {
+                assert!(w[0].time.raw() <= w[1].time.raw());
+            }
+        }
+    }
+
+    #[test]
+    fn min_time_below_min_energy_time() {
+        let s = space();
+        let (t_e, _) = s.min_energy_choice();
+        assert!(s.min_total_time().raw() <= t_e.raw());
+        assert!(s.min_total_time().raw() > 0.0);
+    }
+
+    #[test]
+    fn pruning_keeps_extremes() {
+        let mut s = space();
+        let (_, e_min_before) = s.min_energy_choice();
+        let t_min_before = s.min_total_time();
+        let removed = s.prune_dominated();
+        assert!(removed > 0);
+        let (_, e_min_after) = s.min_energy_choice();
+        assert!((e_min_after.raw() - e_min_before.raw()).abs() < 1e-15);
+        assert!((s.min_total_time().raw() - t_min_before.raw()).abs() < 1e-15);
+    }
+}

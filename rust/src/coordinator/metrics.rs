@@ -1,0 +1,77 @@
+//! Service metrics: counters + host-side latency distribution.
+
+use crate::util::stats::{percentile, Running};
+use std::time::Duration;
+
+/// Aggregated service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub seizures_detected: u64,
+    pub deadline_misses: u64,
+    /// Simulated on-device energy across all served windows (J).
+    pub sim_energy_j: f64,
+    /// Simulated on-device active time across all served windows (s).
+    pub sim_active_s: f64,
+    host_latency: Running,
+    latencies: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn record(&mut self, seizure: bool, deadline_met: bool, energy_j: f64, active_s: f64, host: Duration) {
+        self.requests += 1;
+        if seizure {
+            self.seizures_detected += 1;
+        }
+        if !deadline_met {
+            self.deadline_misses += 1;
+        }
+        self.sim_energy_j += energy_j;
+        self.sim_active_s += active_s;
+        self.host_latency.push(host.as_secs_f64());
+        self.latencies.push(host.as_secs_f64());
+    }
+
+    pub fn host_latency_mean(&self) -> Duration {
+        Duration::from_secs_f64(self.host_latency.mean().max(0.0))
+    }
+
+    pub fn host_latency_p95(&self) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64(percentile(&self.latencies, 95.0))
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} seizures={} misses={} sim_energy={:.1} uJ sim_active={:.1} ms host_mean={:?} host_p95={:?}",
+            self.requests,
+            self.seizures_detected,
+            self.deadline_misses,
+            self.sim_energy_j * 1e6,
+            self.sim_active_s * 1e3,
+            self.host_latency_mean(),
+            self.host_latency_p95(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        m.record(true, true, 500e-6, 0.05, Duration::from_millis(2));
+        m.record(false, false, 400e-6, 0.20, Duration::from_millis(4));
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.seizures_detected, 1);
+        assert_eq!(m.deadline_misses, 1);
+        assert!((m.sim_energy_j - 900e-6).abs() < 1e-12);
+        assert!(m.host_latency_mean() >= Duration::from_millis(2));
+        let s = m.summary();
+        assert!(s.contains("requests=2"));
+    }
+}

@@ -1,0 +1,14 @@
+//! The inference coordinator: a threaded request loop gluing the MEDEA
+//! schedule, the platform simulator (time/energy accounting) and the PJRT
+//! runtime (functional prediction).
+//!
+//! Rust owns the event loop and process lifetime; Python existed only at
+//! `make artifacts` time. One worker thread owns the PJRT runtime; clients
+//! submit EEG windows over a channel and receive predictions plus the
+//! simulated on-device cost of the schedule that would have produced them.
+
+pub mod metrics;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use service::{Coordinator, InferenceOutcome, Request};

@@ -1,0 +1,214 @@
+//! Radix-2 FFT + magnitude frontend in Rust.
+//!
+//! Mirrors `python/compile/model.py::frontend` exactly (same segmentation,
+//! same magnitude, same per-patch max-normalization) so the coordinator can
+//! stage features for the `tsd_core` artifact without Python; also used to
+//! cross-check the `tsd_full` artifact's in-graph frontend.
+
+use std::f64::consts::PI;
+
+/// An iterative radix-2 decimation-in-time FFT (power-of-two sizes) with a
+/// precomputed twiddle table.
+pub struct Fft {
+    n: usize,
+    twiddle_re: Vec<f64>,
+    twiddle_im: Vec<f64>,
+}
+
+impl Fft {
+    pub fn new(n: usize) -> Fft {
+        assert!(n.is_power_of_two() && n >= 2, "FFT size must be a power of two");
+        let half = n / 2;
+        let mut twiddle_re = Vec::with_capacity(half);
+        let mut twiddle_im = Vec::with_capacity(half);
+        for k in 0..half {
+            let ang = -2.0 * PI * k as f64 / n as f64;
+            twiddle_re.push(ang.cos());
+            twiddle_im.push(ang.sin());
+        }
+        Fft {
+            n,
+            twiddle_re,
+            twiddle_im,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// In-place complex FFT over `(re, im)`.
+    pub fn forward(&self, re: &mut [f64], im: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        // Bit-reversal permutation.
+        let bits = n.trailing_zeros();
+        for i in 0..n {
+            let j = i.reverse_bits() >> (usize::BITS - bits);
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // Butterflies.
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let w_re = self.twiddle_re[k * step];
+                    let w_im = self.twiddle_im[k * step];
+                    let a = start + k;
+                    let b = a + half;
+                    let t_re = re[b] * w_re - im[b] * w_im;
+                    let t_im = re[b] * w_im + im[b] * w_re;
+                    re[b] = re[a] - t_re;
+                    im[b] = im[a] - t_im;
+                    re[a] += t_re;
+                    im[a] += t_im;
+                }
+            }
+            len *= 2;
+        }
+    }
+
+    /// Magnitudes of the first `bins` rFFT bins of a real signal.
+    pub fn magnitude(&self, signal: &[f32], bins: usize) -> Vec<f32> {
+        assert_eq!(signal.len(), self.n);
+        assert!(bins <= self.n / 2 + 1);
+        let mut re: Vec<f64> = signal.iter().map(|&v| v as f64).collect();
+        let mut im = vec![0.0; self.n];
+        self.forward(&mut re, &mut im);
+        (0..bins)
+            .map(|k| ((re[k] * re[k] + im[k] * im[k]).sqrt()) as f32)
+            .collect()
+    }
+}
+
+/// Magnitude spectrum (first `bins` bins) of each `n_fft`-sample segment.
+pub fn fft_magnitude(signal: &[f32], n_fft: usize, bins: usize) -> Vec<Vec<f32>> {
+    let fft = Fft::new(n_fft);
+    signal
+        .chunks_exact(n_fft)
+        .map(|seg| fft.magnitude(seg, bins))
+        .collect()
+}
+
+/// The full frontend: (channels × samples) EEG window → (patches ×
+/// patch_dim) features, max-normalized per patch. Mirrors
+/// `model.py::frontend`.
+pub fn window_features(
+    data: &[Vec<f32>],
+    n_fft: usize,
+    patch_dim: usize,
+) -> Vec<Vec<f32>> {
+    let fft = Fft::new(n_fft);
+    let mut feats = Vec::new();
+    for chan in data {
+        for seg in chan.chunks_exact(n_fft) {
+            let mut mag = fft.magnitude(seg, patch_dim);
+            let max = mag.iter().fold(0f32, |a, &b| a.max(b)) + 1e-6;
+            for v in &mut mag {
+                *v /= max;
+            }
+            feats.push(mag);
+        }
+    }
+    feats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_tone_lands_in_its_bin() {
+        let n = 256;
+        let signal: Vec<f32> = (0..n)
+            .map(|i| (2.0 * PI * 8.0 * i as f64 / n as f64).sin() as f32)
+            .collect();
+        let fft = Fft::new(n);
+        let mag = fft.magnitude(&signal, n / 2);
+        let peak = mag
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, 8);
+        // Parseval-ish: tone magnitude ≈ n/2.
+        assert!((mag[8] - n as f32 / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn dc_component() {
+        let fft = Fft::new(64);
+        let signal = vec![2.0f32; 64];
+        let mag = fft.magnitude(&signal, 4);
+        assert!((mag[0] - 128.0).abs() < 1e-3);
+        assert!(mag[1] < 1e-3);
+    }
+
+    #[test]
+    fn fft_linearity() {
+        let fft = Fft::new(128);
+        let a: Vec<f32> = (0..128).map(|i| (i as f32 * 0.1).sin()).collect();
+        let b: Vec<f32> = (0..128).map(|i| (i as f32 * 0.37).cos()).collect();
+        let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        // |FFT(a+b)| ≤ |FFT(a)| + |FFT(b)| with equality only in-phase;
+        // verify via complex parts instead: FFT(a+b) = FFT(a) + FFT(b).
+        let run = |s: &[f32]| {
+            let mut re: Vec<f64> = s.iter().map(|&v| v as f64).collect();
+            let mut im = vec![0.0; s.len()];
+            fft.forward(&mut re, &mut im);
+            (re, im)
+        };
+        let (ra, ia) = run(&a);
+        let (rb, ib) = run(&b);
+        let (rs, is_) = run(&sum);
+        // The sum is formed in f32, so linearity holds to f32 rounding.
+        for k in 0..128 {
+            assert!((rs[k] - (ra[k] + rb[k])).abs() < 1e-3);
+            assert!((is_[k] - (ia[k] + ib[k])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn round_trip_against_naive_dft() {
+        let n = 64;
+        let signal: Vec<f32> = (0..n).map(|i| ((i * i) % 17) as f32 / 17.0 - 0.5).collect();
+        let fft = Fft::new(n);
+        let mag = fft.magnitude(&signal, n / 2);
+        // Naive DFT.
+        for k in 0..n / 2 {
+            let (mut re, mut im) = (0.0f64, 0.0f64);
+            for (i, &v) in signal.iter().enumerate() {
+                let ang = -2.0 * PI * (k * i) as f64 / n as f64;
+                re += v as f64 * ang.cos();
+                im += v as f64 * ang.sin();
+            }
+            let want = (re * re + im * im).sqrt() as f32;
+            assert!((mag[k] - want).abs() < 1e-4, "bin {k}: {} vs {want}", mag[k]);
+        }
+    }
+
+    #[test]
+    fn window_features_shape_and_normalization() {
+        let data = vec![vec![0.5f32; 1536]; 16];
+        let feats = window_features(&data, 256, 80);
+        assert_eq!(feats.len(), 96);
+        assert_eq!(feats[0].len(), 80);
+        for p in &feats {
+            let max = p.iter().fold(0f32, |a, &b| a.max(b));
+            assert!(max <= 1.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        Fft::new(100);
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic EEG generation + the Rust-side FFT-magnitude frontend.
+//!
+//! The TUSZ corpus is gated, so end-to-end validation uses synthetic EEG
+//! (DESIGN.md substitution ledger): 1/f-shaped background activity with
+//! superimposed 3 Hz spike-wave bursts during seizure episodes — the
+//! textbook electrographic signature the TSD case study detects.
+
+pub mod frontend;
+pub mod synth;
+
+pub use frontend::{fft_magnitude, window_features, Fft};
+pub use synth::{EegGenerator, EegWindow, SynthConfig};

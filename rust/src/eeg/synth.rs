@@ -1,0 +1,178 @@
+//! Synthetic multichannel EEG with labeled seizure episodes.
+
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub channels: usize,
+    /// Samples per channel per window (matches `TsdConfig.window_samples`).
+    pub window_samples: usize,
+    /// Sampling rate in Hz.
+    pub fs: f64,
+    /// Background amplitude (arbitrary units; EEG is µV-scale).
+    pub background_amp: f64,
+    /// Spike-wave amplitude multiplier during seizures.
+    pub seizure_amp: f64,
+    /// Probability that a generated window contains a seizure.
+    pub seizure_prob: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            channels: 16,
+            window_samples: 1536,
+            fs: 256.0,
+            background_amp: 1.0,
+            seizure_amp: 3.5,
+            seizure_prob: 0.3,
+        }
+    }
+}
+
+/// One labeled EEG window: `data[channel][sample]`.
+#[derive(Debug, Clone)]
+pub struct EegWindow {
+    pub data: Vec<Vec<f32>>,
+    pub seizure: bool,
+    pub index: usize,
+}
+
+impl EegWindow {
+    /// Flatten to (channels × samples) row-major f32 (the PJRT input layout).
+    pub fn flat(&self) -> Vec<f32> {
+        self.data.iter().flatten().copied().collect()
+    }
+}
+
+/// Deterministic (seeded) EEG stream generator.
+pub struct EegGenerator {
+    cfg: SynthConfig,
+    rng: Rng,
+    next_index: usize,
+    /// Pink-noise filter state per channel (leaky integrators).
+    pink_state: Vec<[f64; 3]>,
+}
+
+impl EegGenerator {
+    pub fn new(cfg: SynthConfig, seed: u64) -> EegGenerator {
+        let channels = cfg.channels;
+        EegGenerator {
+            cfg,
+            rng: Rng::new(seed),
+            next_index: 0,
+            pink_state: vec![[0.0; 3]; channels],
+        }
+    }
+
+    /// Approximate pink (1/f) noise via three leaky integrators.
+    fn pink(&mut self, ch: usize) -> f64 {
+        let white = self.rng.gaussian();
+        let s = &mut self.pink_state[ch];
+        s[0] = 0.997 * s[0] + 0.029 * white;
+        s[1] = 0.985 * s[1] + 0.032 * white;
+        s[2] = 0.950 * s[2] + 0.048 * white;
+        s[0] + s[1] + s[2] + 0.05 * white
+    }
+
+    /// Generate the next window (seizure label drawn per `seizure_prob`).
+    pub fn next_window(&mut self) -> EegWindow {
+        let seizure = self.rng.f64() < self.cfg.seizure_prob;
+        self.window_with_label(seizure)
+    }
+
+    /// Generate a window with a forced label (tests / demos).
+    pub fn window_with_label(&mut self, seizure: bool) -> EegWindow {
+        let n = self.cfg.window_samples;
+        let fs = self.cfg.fs;
+        let mut data = Vec::with_capacity(self.cfg.channels);
+        // Seizures are generalized here: all channels show spike-wave, with
+        // per-channel phase jitter.
+        let spike_f = 3.0; // Hz, classic absence-seizure spike-wave
+        for ch in 0..self.cfg.channels {
+            let phase = self.rng.range_f64(0.0, 0.4);
+            let mut chan = Vec::with_capacity(n);
+            for i in 0..n {
+                let t = i as f64 / fs;
+                let mut v = self.cfg.background_amp * self.pink(ch);
+                // Posterior-dominant alpha-ish rhythm in the background.
+                v += 0.3 * self.cfg.background_amp * (2.0 * std::f64::consts::PI * 10.0 * t).sin();
+                if seizure {
+                    // Spike-wave: sharp transient + slow wave each cycle.
+                    let cyc = ((t + phase) * spike_f).fract();
+                    let spike = if cyc < 0.12 { (1.0 - cyc / 0.12) * 2.2 } else { 0.0 };
+                    let wave = (2.0 * std::f64::consts::PI * spike_f * (t + phase)).sin();
+                    v += self.cfg.seizure_amp * self.cfg.background_amp * (spike + 0.8 * wave);
+                }
+                chan.push(v as f32);
+            }
+            data.push(chan);
+        }
+        let w = EegWindow {
+            data,
+            seizure,
+            index: self.next_index,
+        };
+        self.next_index += 1;
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut g1 = EegGenerator::new(SynthConfig::default(), 7);
+        let mut g2 = EegGenerator::new(SynthConfig::default(), 7);
+        let w1 = g1.next_window();
+        let w2 = g2.next_window();
+        assert_eq!(w1.data.len(), 16);
+        assert_eq!(w1.data[0].len(), 1536);
+        assert_eq!(w1.flat(), w2.flat());
+        assert_eq!(w1.flat().len(), 16 * 1536);
+    }
+
+    #[test]
+    fn seizure_windows_have_more_low_freq_power() {
+        let mut g = EegGenerator::new(SynthConfig::default(), 3);
+        let bg = g.window_with_label(false);
+        let sz = g.window_with_label(true);
+        let power = |w: &EegWindow| -> f64 {
+            w.data[0].iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / w.data[0].len() as f64
+        };
+        assert!(
+            power(&sz) > 3.0 * power(&bg),
+            "seizure {} vs background {}",
+            power(&sz),
+            power(&bg)
+        );
+    }
+
+    #[test]
+    fn label_rate_tracks_probability() {
+        let mut g = EegGenerator::new(
+            SynthConfig {
+                seizure_prob: 0.5,
+                ..Default::default()
+            },
+            11,
+        );
+        let seizures = (0..200).filter(|_| g.next_window().seizure).count();
+        assert!((60..140).contains(&seizures), "{seizures}");
+    }
+
+    #[test]
+    fn signal_is_finite_and_bounded() {
+        let mut g = EegGenerator::new(SynthConfig::default(), 5);
+        let w = g.window_with_label(true);
+        for ch in &w.data {
+            for &v in ch {
+                assert!(v.is_finite());
+                assert!(v.abs() < 100.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Shared experiment context: platform + characterization + workload.
+
+use crate::ir::tsd::{tsd_core, TsdParams};
+use crate::ir::Workload;
+use crate::manager::medea::{Medea, MedeaFeatures, SolverKind};
+use crate::platform::Platform;
+use crate::profile::{characterize, Profiles};
+use crate::timing::cycle_model::CycleModel;
+
+/// Everything the experiment drivers need, built once.
+pub struct ExpContext {
+    pub platform: Platform,
+    pub model: CycleModel,
+    pub profiles: Profiles,
+    pub workload: Workload,
+    pub solver: SolverKind,
+}
+
+impl ExpContext {
+    /// HEEPtimize + TSD core, the paper's §4 setup.
+    pub fn paper() -> ExpContext {
+        let platform = crate::platform::heeptimize::heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        ExpContext {
+            workload: tsd_core(&TsdParams::default()),
+            platform,
+            model,
+            profiles,
+            solver: SolverKind::Dp,
+        }
+    }
+
+    /// A MEDEA manager over this context.
+    pub fn medea(&self) -> Medea<'_> {
+        Medea::new(&self.platform, &self.profiles, &self.model).with_solver(self.solver)
+    }
+
+    /// A MEDEA manager with specific feature switches.
+    pub fn medea_with(&self, features: MedeaFeatures) -> Medea<'_> {
+        self.medea().with_features(features)
+    }
+
+    /// Schedule with the deployment margin (3 %): the estimator's
+    /// LM-residency chaining is optimistic, so schedules destined for the
+    /// event-level simulator target 97 % of the deadline (the label on the
+    /// returned schedule stays the full deadline). This mirrors the margin
+    /// a real deployment folds into its profiling data.
+    pub fn schedule_margined(
+        &self,
+        features: MedeaFeatures,
+        deadline: crate::util::units::Time,
+    ) -> Result<crate::manager::Schedule, crate::manager::medea::ScheduleError> {
+        let mut s = self
+            .medea_with(features)
+            .schedule(&self.workload, deadline * Self::SIM_MARGIN)?;
+        s.deadline = deadline;
+        Ok(s)
+    }
+
+    /// Deadline fraction targeted when a schedule will be replayed on the
+    /// simulator.
+    pub const SIM_MARGIN: f64 = 0.97;
+
+    /// The paper's three evaluation deadlines (ms).
+    pub const DEADLINES_MS: [f64; 3] = [50.0, 200.0, 1000.0];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_builds() {
+        let ctx = ExpContext::paper();
+        assert_eq!(ctx.workload.len(), 164);
+        assert_eq!(ctx.platform.pes.len(), 3);
+        assert!(ctx.profiles.timing_entry_count() > 0);
+    }
+}

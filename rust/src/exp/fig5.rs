@@ -1,0 +1,128 @@
+//! Fig 5: total energy and active time of one window — MEDEA vs the four
+//! baselines across the three timing constraints.
+
+use super::context::ExpContext;
+use crate::baselines::{
+    coarse_grain_app_dvfs, cpu_max_vf, static_accel_app_dvfs, static_accel_max_vf,
+};
+use crate::manager::schedule::Schedule;
+use crate::sim::replay::simulate;
+use crate::util::table::{fnum, fpct, Table};
+use crate::util::units::Time;
+
+/// One Fig 5 bar: scheduler × deadline.
+pub struct Fig5Row {
+    pub scheduler: String,
+    pub deadline_ms: f64,
+    pub total_energy_uj: f64,
+    pub active_time_ms: f64,
+    pub meets_deadline: bool,
+}
+
+/// All schedulers for one deadline.
+pub fn schedules_for(ctx: &ExpContext, deadline: Time) -> Vec<Schedule> {
+    let w = &ctx.workload;
+    let (p, pr, m) = (&ctx.platform, &ctx.profiles, &ctx.model);
+    vec![
+        cpu_max_vf(w, p, pr, m, deadline).expect("cpu baseline"),
+        static_accel_max_vf(w, p, pr, m, deadline).expect("static accel"),
+        static_accel_app_dvfs(w, p, pr, m, deadline).expect("static accel dvfs"),
+        coarse_grain_app_dvfs(w, p, pr, m, deadline).expect("coarse grain"),
+        ctx.schedule_margined(Default::default(), deadline)
+            .expect("medea"),
+    ]
+}
+
+/// Compute all Fig 5 rows (simulator-accounted).
+pub fn rows(ctx: &ExpContext) -> Vec<Fig5Row> {
+    let mut out = Vec::new();
+    for ms in ExpContext::DEADLINES_MS {
+        for s in schedules_for(ctx, Time::from_ms(ms)) {
+            let r = simulate(&ctx.workload, &ctx.platform, &ctx.model, &s);
+            out.push(Fig5Row {
+                scheduler: s.scheduler.clone(),
+                deadline_ms: ms,
+                total_energy_uj: r.total_energy().as_uj(),
+                active_time_ms: r.active_time.as_ms(),
+                meets_deadline: r.deadline_met,
+            });
+        }
+    }
+    out
+}
+
+/// Render the figure data as a table, including MEDEA's saving vs each
+/// baseline.
+pub fn run(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&[
+        "Deadline (ms)",
+        "Scheduler",
+        "Total Energy (uJ)",
+        "Active Time (ms)",
+        "Meets Deadline",
+        "MEDEA Saving",
+    ])
+    .with_title("Fig 5 — total energy / active time per inference window")
+    .label_first();
+
+    let all = rows(ctx);
+    for ms in ExpContext::DEADLINES_MS {
+        let group: Vec<&Fig5Row> = all.iter().filter(|r| r.deadline_ms == ms).collect();
+        let medea_e = group
+            .iter()
+            .find(|r| r.scheduler == "medea")
+            .expect("medea row")
+            .total_energy_uj;
+        for r in group {
+            let saving = if r.scheduler == "medea" {
+                "-".to_string()
+            } else {
+                fpct((1.0 - medea_e / r.total_energy_uj) * 100.0)
+            };
+            t.row(vec![
+                fnum(ms, 0),
+                r.scheduler.clone(),
+                fnum(r.total_energy_uj, 0),
+                fnum(r.active_time_ms, 1),
+                if r.meets_deadline { "yes" } else { "NO" }.into(),
+                saving,
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_reproduces_paper_shape() {
+        let ctx = ExpContext::paper();
+        let all = rows(&ctx);
+        assert_eq!(all.len(), 15);
+
+        // CPU misses the 50 ms deadline (paper §5.1).
+        let cpu50 = all
+            .iter()
+            .find(|r| r.scheduler == "cpu-maxvf" && r.deadline_ms == 50.0)
+            .unwrap();
+        assert!(!cpu50.meets_deadline);
+
+        // MEDEA meets every deadline and wins every comparison.
+        for ms in ExpContext::DEADLINES_MS {
+            let group: Vec<&Fig5Row> = all.iter().filter(|r| r.deadline_ms == ms).collect();
+            let medea = group.iter().find(|r| r.scheduler == "medea").unwrap();
+            assert!(medea.meets_deadline, "medea misses {ms} ms");
+            for r in &group {
+                if r.scheduler != "medea" {
+                    assert!(
+                        medea.total_energy_uj < r.total_energy_uj,
+                        "{} beats medea at {ms} ms",
+                        r.scheduler
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig 6: snapshot of MEDEA's per-kernel (PE, V-F) decisions for a
+//! subsequence of the TSD workload under the three deadlines, plus the
+//! assignment histograms that show PE re-assignment across deadlines.
+
+use super::context::ExpContext;
+use crate::util::table::{fnum, Table};
+use crate::util::units::Time;
+
+/// Render the decision snapshot for kernels `[start, start+len)`.
+pub fn run(ctx: &ExpContext, start: usize, len: usize) -> Table {
+    let mut headers: Vec<String> = vec!["Kernel".into()];
+    for ms in ExpContext::DEADLINES_MS {
+        headers.push(format!("@{ms:.0}ms PE"));
+        headers.push(format!("@{ms:.0}ms V-F"));
+        headers.push(format!("@{ms:.0}ms tile"));
+    }
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&header_refs)
+        .with_title("Fig 6 — MEDEA per-kernel decisions vs deadline (snapshot)")
+        .label_first();
+
+    let medea = ctx.medea();
+    let schedules: Vec<_> = ExpContext::DEADLINES_MS
+        .iter()
+        .map(|&ms| medea.schedule(&ctx.workload, Time::from_ms(ms)).unwrap())
+        .collect();
+
+    let end = (start + len).min(ctx.workload.len());
+    for i in start..end {
+        let mut row = vec![ctx.workload.kernels()[i].name.clone()];
+        for s in &schedules {
+            let d = &s.decisions[i];
+            row.push(ctx.platform.pe(d.pe).name.clone());
+            row.push(ctx.platform.vf.get(d.vf_idx).label());
+            row.push(d.mode.name().into());
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// The per-deadline (PE, V-F) assignment histogram (the aggregate view of
+/// Fig 6: how kernels migrate between PEs/V-F levels as deadlines tighten).
+pub fn histogram(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&["Deadline (ms)", "PE", "V-F", "Kernels"])
+        .with_title("Fig 6 (aggregate) — kernel count per (PE, V-F) assignment")
+        .label_first();
+    let medea = ctx.medea();
+    for ms in ExpContext::DEADLINES_MS {
+        let s = medea.schedule(&ctx.workload, Time::from_ms(ms)).unwrap();
+        for ((pe, vf), n) in s.assignment_histogram() {
+            t.row(vec![
+                fnum(ms, 0),
+                ctx.platform.pe(pe).name.clone(),
+                ctx.platform.vf.get(vf).label(),
+                n.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::heeptimize::{CARUS, CGRA};
+    use crate::util::units::Time;
+
+    #[test]
+    fn snapshot_renders() {
+        let ctx = ExpContext::paper();
+        let t = run(&ctx, 2, 10);
+        assert_eq!(t.num_rows(), 10);
+        let text = t.to_text();
+        assert!(text.contains("enc0"));
+    }
+
+    #[test]
+    fn vf_tightens_with_deadline_and_pe_reassignment_occurs() {
+        // The two headline behaviours of Fig 6: (1) tighter deadlines use
+        // higher V-F; (2) the PE choice itself changes with the deadline
+        // (the Fig 7 crossover in action).
+        let ctx = ExpContext::paper();
+        let medea = ctx.medea();
+        let s50 = medea.schedule(&ctx.workload, Time::from_ms(50.0)).unwrap();
+        let s1000 = medea.schedule(&ctx.workload, Time::from_ms(1000.0)).unwrap();
+
+        let avg_vf = |s: &crate::manager::Schedule| {
+            s.decisions.iter().map(|d| d.vf_idx as f64).sum::<f64>() / s.decisions.len() as f64
+        };
+        assert!(avg_vf(&s50) > avg_vf(&s1000));
+
+        // Count matmuls on each accelerator at both deadlines.
+        let counts = |s: &crate::manager::Schedule, pe| {
+            s.decisions
+                .iter()
+                .filter(|d| {
+                    d.pe == pe && ctx.workload.kernels()[d.kernel].ty == crate::ir::KernelType::MatMul
+                })
+                .count()
+        };
+        // Relaxed deadline (0.5 V): CGRA is the energy-efficient matmul
+        // engine; tight deadline shifts matmuls toward Carus (cheaper at
+        // high V-F) — the dynamic re-assignment the paper highlights.
+        assert!(
+            counts(&s1000, CGRA) > counts(&s1000, CARUS),
+            "at 0.5 V the CGRA must carry the matmuls"
+        );
+        assert!(
+            counts(&s50, CARUS) > counts(&s1000, CARUS),
+            "tightening the deadline must migrate matmuls toward Carus"
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig 7: CGRA/Carus ratios (energy, power, time) for the TSD matmul
+//! subset across the V-F range — the efficiency crossover that forces
+//! joint PE + V-F optimization.
+
+use super::context::ExpContext;
+use crate::config::estimator::Estimator;
+use crate::ir::tsd::{tsd_matmul_subset, TsdParams};
+use crate::platform::heeptimize::{CARUS, CGRA};
+use crate::util::table::{fnum, Table};
+
+/// Ratios per V-F point.
+pub struct Fig7Row {
+    pub vf_label: String,
+    pub energy_ratio: f64,
+    pub power_ratio: f64,
+    pub time_ratio: f64,
+}
+
+pub fn rows(ctx: &ExpContext) -> Vec<Fig7Row> {
+    let subset = tsd_matmul_subset(&TsdParams::default());
+    let est = Estimator::new(&ctx.platform, &ctx.profiles, &ctx.model);
+    let mut out = Vec::new();
+    for vf_idx in 0..ctx.platform.vf.len() {
+        let mut e = [0.0f64; 2];
+        let mut t = [0.0f64; 2];
+        let mut p = [0.0f64; 2];
+        for (i, pe) in [CGRA, CARUS].into_iter().enumerate() {
+            for k in subset.kernels() {
+                let (mode, _) = est.best_mode(pe, k).expect("matmul runs on both");
+                let time = est.time(pe, k, vf_idx, mode).unwrap();
+                let power = est.power(pe, k, vf_idx);
+                t[i] += time.raw();
+                e[i] += (power * time).raw();
+            }
+            p[i] = e[i] / t[i]; // average power over the subset
+        }
+        out.push(Fig7Row {
+            vf_label: ctx.platform.vf.get(vf_idx).label(),
+            energy_ratio: e[0] / e[1],
+            power_ratio: p[0] / p[1],
+            time_ratio: t[0] / t[1],
+        });
+    }
+    out
+}
+
+pub fn run(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&[
+        "V-F point",
+        "Energy (CGRA/Carus)",
+        "Power (CGRA/Carus)",
+        "Time (CGRA/Carus)",
+    ])
+    .with_title("Fig 7 — TSD matmul subset: CGRA/Carus metric ratios vs V-F")
+    .label_first();
+    for r in rows(ctx) {
+        t.row(vec![
+            r.vf_label,
+            fnum(r.energy_ratio, 3),
+            fnum(r.power_ratio, 3),
+            fnum(r.time_ratio, 3),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossover_shape_matches_paper() {
+        let ctx = ExpContext::paper();
+        let rs = rows(&ctx);
+        assert_eq!(rs.len(), 4);
+
+        // Power ratio decreases significantly at lower V-F (paper Fig 7).
+        assert!(
+            rs[0].power_ratio < 0.8 * rs[3].power_ratio,
+            "power ratio must fall at low V: {} vs {}",
+            rs[0].power_ratio,
+            rs[3].power_ratio
+        );
+        // Time ratio is essentially constant (same cycle counts, same f).
+        let tmin = rs.iter().map(|r| r.time_ratio).fold(f64::INFINITY, f64::min);
+        let tmax = rs.iter().map(|r| r.time_ratio).fold(0.0, f64::max);
+        assert!((tmax - tmin) / tmax < 0.05, "time ratio drifts: {tmin}..{tmax}");
+        // Efficiency crossover: CGRA wins at 0.5 V, Carus at 0.9 V.
+        assert!(rs[0].energy_ratio < 1.0, "CGRA must win at 0.5 V");
+        assert!(rs[3].energy_ratio > 1.0, "Carus must win at 0.9 V");
+    }
+}

@@ -1,0 +1,92 @@
+//! Fig 8 + Table 6: feature-ablation study — energy with one core MEDEA
+//! feature disabled at a time, and the percentage saving the feature
+//! contributes.
+
+use super::context::ExpContext;
+use crate::manager::medea::MedeaFeatures;
+use crate::util::table::{fnum, fpct, Table};
+use crate::util::units::Time;
+
+/// The ablation setups of §5.3.
+pub const SETUPS: [(&str, fn() -> MedeaFeatures); 3] = [
+    ("w/o KerDVFS", MedeaFeatures::without_kernel_dvfs),
+    ("w/o AdapTile", MedeaFeatures::without_adaptive_tiling),
+    ("w/o KerSched", MedeaFeatures::without_kernel_sched),
+];
+
+/// Total energy (µJ) per (setup × deadline), full MEDEA first — Table 6.
+pub fn table6(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&["Sched. Setup", "50 ms", "200 ms", "1000 ms"])
+        .with_title("Table 6 — total energy (uJ) for the MEDEA feature analysis")
+        .label_first();
+
+    let energy = |features: MedeaFeatures, ms: f64| -> f64 {
+        ctx.medea_with(features)
+            .schedule(&ctx.workload, Time::from_ms(ms))
+            .expect("feasible")
+            .total_energy(&ctx.platform)
+            .as_uj()
+    };
+
+    let mut row = vec!["Full MEDEA".to_string()];
+    for ms in ExpContext::DEADLINES_MS {
+        row.push(fnum(energy(MedeaFeatures::default(), ms), 0));
+    }
+    t.row(row);
+    for (name, features) in SETUPS {
+        let mut row = vec![name.to_string()];
+        for ms in ExpContext::DEADLINES_MS {
+            row.push(fnum(energy(features(), ms), 0));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Percentage savings per feature — Fig 8:
+/// `(E_w/oFeat − E_full) / E_w/oFeat × 100`.
+pub fn run(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&["Feature", "50 ms", "200 ms", "1000 ms"])
+        .with_title("Fig 8 — energy saving from each MEDEA feature")
+        .label_first();
+
+    let energy = |features: MedeaFeatures, ms: f64| -> f64 {
+        ctx.medea_with(features)
+            .schedule(&ctx.workload, Time::from_ms(ms))
+            .expect("feasible")
+            .total_energy(&ctx.platform)
+            .raw()
+    };
+
+    for (name, features) in SETUPS {
+        let mut row = vec![name.replace("w/o ", "").to_string()];
+        for ms in ExpContext::DEADLINES_MS {
+            let full = energy(MedeaFeatures::default(), ms);
+            let without = energy(features(), ms);
+            row.push(fpct((without - full) / without * 100.0));
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_and_fig8_render_consistently() {
+        let ctx = ExpContext::paper();
+        let t6 = table6(&ctx);
+        assert_eq!(t6.num_rows(), 4);
+        let f8 = run(&ctx);
+        assert_eq!(f8.num_rows(), 3);
+        // Parse fig8 csv: all savings within [-1, 50] %.
+        for line in f8.to_csv().lines().skip(1) {
+            for cell in line.split(',').skip(1) {
+                let v: f64 = cell.trim_end_matches(" %").parse().unwrap();
+                assert!((-1.0..50.0).contains(&v), "{line}");
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation.
+//!
+//! | driver | paper artifact |
+//! |---|---|
+//! | [`tables::table2`] | Table 2 — max frequency vs voltage |
+//! | [`tables::table3`] | Table 3 — post-synthesis area breakdown |
+//! | [`tables::table4`] | Table 4 — CPU-cycle reduction from TSD modifications |
+//! | [`tables::table5`] | Table 5 — MEDEA end-to-end time/energy breakdown |
+//! | [`fig5::run`]      | Fig 5 — energy/time, MEDEA vs baselines × deadlines |
+//! | [`fig6::run`]      | Fig 6 — per-kernel (PE, V-F) schedule snapshot |
+//! | [`fig7::run`]      | Fig 7 — CGRA/Carus ratios vs V-F (crossover) |
+//! | [`fig8::run`]      | Fig 8 + Table 6 — feature-ablation energy savings |
+//!
+//! Each driver returns [`crate::util::table::Table`]s so the CLI, benches
+//! and EXPERIMENTS.md generation share one code path.
+
+pub mod context;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod sensitivity;
+pub mod tables;
+
+pub use context::ExpContext;

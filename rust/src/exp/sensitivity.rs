@@ -1,0 +1,219 @@
+//! Sensitivity study: how robust are the reproduced conclusions to the
+//! calibrated substrate constants? DESIGN.md names three modeling choices
+//! whose values were calibrated rather than measured: the system DMA
+//! bandwidth, the NMC's voltage-independent array energy (`e_fixed`, the
+//! Fig 7 crossover driver), and the solver backend. This driver sweeps
+//! each and reports the headline metrics, showing which conclusions are
+//! structural and which are calibration-dependent.
+
+use super::context::ExpContext;
+use crate::baselines::coarse_grain_app_dvfs;
+use crate::ir::tsd::{tsd_core, TsdParams};
+use crate::manager::medea::{Medea, MedeaFeatures, SolverKind};
+use crate::platform::heeptimize::{heeptimize, CARUS, CGRA};
+use crate::profile::characterize;
+use crate::timing::cycle_model::CycleModel;
+use crate::util::table::{fnum, Table};
+use crate::util::units::Time;
+
+/// Headline metrics for one platform variant.
+struct Headline {
+    medea_vs_cg_200ms_pct: f64,
+    kerdvfs_200ms_pct: f64,
+    adaptile_200ms_pct: f64,
+    crossover_voltage: Option<f64>,
+}
+
+fn headline(platform: &crate::platform::Platform, model: &CycleModel) -> Headline {
+    let profiles = characterize(platform, model);
+    let workload = tsd_core(&TsdParams::default());
+    let d = Time::from_ms(200.0);
+    let medea = Medea::new(platform, &profiles, model);
+
+    let full = medea.schedule(&workload, d).unwrap();
+    let cg = coarse_grain_app_dvfs(&workload, platform, &profiles, model, d).unwrap();
+    let medea_vs_cg = (1.0
+        - full.total_energy(platform).raw() / cg.total_energy(platform).raw())
+        * 100.0;
+
+    let ablate = |feats: MedeaFeatures| -> f64 {
+        let abl = Medea::new(platform, &profiles, model)
+            .with_features(feats)
+            .schedule(&workload, d)
+            .unwrap();
+        (1.0 - full.total_energy(platform).raw() / abl.total_energy(platform).raw()) * 100.0
+    };
+
+    // Crossover: lowest voltage at which Carus beats the CGRA on the
+    // matmul subset (None = no crossover in the V-F range).
+    let est = crate::config::Estimator::new(platform, &profiles, model);
+    let subset = crate::ir::tsd::tsd_matmul_subset(&TsdParams::default());
+    let mut crossover = None;
+    for vf_idx in 0..platform.vf.len() {
+        let energy = |pe| -> f64 {
+            subset
+                .kernels()
+                .iter()
+                .map(|k| {
+                    let (mode, _) = est.best_mode(pe, k).unwrap();
+                    est.energy(pe, k, vf_idx, mode).unwrap().raw()
+                })
+                .sum()
+        };
+        if energy(CARUS) < energy(CGRA) {
+            crossover = Some(platform.vf.get(vf_idx).v.raw());
+            break;
+        }
+    }
+
+    Headline {
+        medea_vs_cg_200ms_pct: medea_vs_cg,
+        kerdvfs_200ms_pct: ablate(MedeaFeatures::without_kernel_dvfs()),
+        adaptile_200ms_pct: ablate(MedeaFeatures::without_adaptive_tiling()),
+        crossover_voltage: crossover,
+    }
+}
+
+/// Sweep the system DMA bandwidth (both accelerators).
+pub fn dma_sweep(_ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&[
+        "DMA (B/cycle)",
+        "MEDEA vs CG @200ms",
+        "KerDVFS @200ms",
+        "AdapTile @200ms",
+    ])
+    .with_title("Sensitivity — system DMA bandwidth (calibrated value: 1.3 B/cycle)");
+    let model = CycleModel::heeptimize();
+    for bw in [0.8, 1.3, 2.6, 4.0] {
+        let mut p = heeptimize();
+        for pe in [CGRA, CARUS] {
+            p.pes[pe.0].dma.as_mut().unwrap().bytes_per_cycle = bw;
+        }
+        let h = headline(&p, &model);
+        t.row(vec![
+            fnum(bw, 1),
+            format!("{:.1} %", h.medea_vs_cg_200ms_pct),
+            format!("{:.1} %", h.kerdvfs_200ms_pct),
+            format!("{:.1} %", h.adaptile_200ms_pct),
+        ]);
+    }
+    t
+}
+
+/// Sweep the NMC array energy `e_fixed` (the crossover driver).
+pub fn efixed_sweep(_ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&[
+        "Carus e_fixed (pJ/cyc)",
+        "Crossover (Carus wins from)",
+        "MEDEA vs CG @200ms",
+    ])
+    .with_title("Sensitivity — NMC array energy (calibrated value: 12 pJ/cycle)");
+    let model = CycleModel::heeptimize();
+    for pj in [0.0, 6.0, 12.0, 18.0] {
+        let mut p = heeptimize();
+        p.pes[CARUS.0].power.e_fixed = pj * 1e-12;
+        let h = headline(&p, &model);
+        t.row(vec![
+            fnum(pj, 0),
+            match h.crossover_voltage {
+                Some(v) => format!("{v:.2} V"),
+                None => "never".into(),
+            },
+            format!("{:.1} %", h.medea_vs_cg_200ms_pct),
+        ]);
+    }
+    t
+}
+
+/// Compare solver backends on the full pipeline (schedule quality + the
+/// §3.3 optimality claim).
+pub fn solver_sweep(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&["Solver", "E_active @200ms (uJ)", "vs DP", "Optimal?"])
+        .with_title("Sensitivity — MCKP solver backend")
+        .label_first();
+    let d = Time::from_ms(200.0);
+    let dp_energy = ctx
+        .medea()
+        .schedule(&ctx.workload, d)
+        .unwrap()
+        .active_energy()
+        .as_uj();
+    for (name, kind) in [
+        ("dp", SolverKind::Dp),
+        ("bb", SolverKind::Bb),
+        ("lagrange", SolverKind::Lagrange),
+        ("greedy", SolverKind::Greedy),
+    ] {
+        let s = ctx
+            .medea()
+            .with_solver(kind)
+            .schedule(&ctx.workload, d)
+            .unwrap();
+        let e = s.active_energy().as_uj();
+        t.row(vec![
+            name.into(),
+            fnum(e, 1),
+            format!("{:+.2} %", (e / dp_energy - 1.0) * 100.0),
+            if s.optimal { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conclusions_robust_across_dma_sweep() {
+        // MEDEA must beat CoarseGrain at 200 ms for every swept bandwidth
+        // (the headline conclusion is structural, not calibration luck).
+        let ctx = ExpContext::paper();
+        let t = dma_sweep(&ctx);
+        assert_eq!(t.num_rows(), 4);
+        for line in t.to_csv().lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            let saving: f64 = cells[1].trim_end_matches(" %").parse().unwrap();
+            assert!(saving > 5.0, "MEDEA advantage collapsed: {line}");
+        }
+    }
+
+    #[test]
+    fn crossover_depends_on_efixed() {
+        // Removing the NMC array-energy term must move (or remove) the
+        // crossover — demonstrating it is the modeled driver.
+        let ctx = ExpContext::paper();
+        let t = efixed_sweep(&ctx);
+        let csv = t.to_csv();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        // At the calibrated 12 pJ the crossover exists.
+        assert!(rows[2].contains("V"), "calibrated row lost its crossover: {}", rows[2]);
+        // Crossover voltage is monotonically pushed up (or out) as e_fixed
+        // grows; at 0 pJ Carus dominates from a lower voltage than at 18 pJ.
+        let volts = |row: &str| -> f64 {
+            let c = row.split(',').nth(1).unwrap();
+            if c == "never" {
+                f64::INFINITY
+            } else {
+                c.trim_end_matches(" V").parse().unwrap()
+            }
+        };
+        assert!(volts(rows[0]) <= volts(rows[3]));
+    }
+
+    #[test]
+    fn solver_backends_close_to_dp() {
+        let ctx = ExpContext::paper();
+        let t = solver_sweep(&ctx);
+        for line in t.to_csv().lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            let delta: f64 = cells[2].trim_end_matches(" %").parse().unwrap();
+            // dp/bb are (gap-)exact, greedy is the LP truncation; the
+            // Lagrangian heuristic's duality gap is real on this plateau
+            // instance (its role is the certified lower bound) — allow it
+            // a wider band and document it in the table.
+            let band = if cells[0] == "lagrange" { 25.0 } else { 5.0 };
+            assert!(delta.abs() < band, "{line}");
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Tables 2–5 of the paper.
+
+use super::context::ExpContext;
+use crate::ir::{KernelType, Shape};
+use crate::platform::heeptimize::AREA_BREAKDOWN;
+use crate::platform::PeClass;
+use crate::sim::replay::simulate;
+use crate::util::table::{fnum, Table};
+use crate::util::units::Time;
+
+/// Table 2: maximum operating frequency per voltage.
+pub fn table2(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&["Voltage (V)", "Max Freq. (MHz)"])
+        .with_title("Table 2 — HEEPtimize maximum operating frequency vs voltage");
+    for p in ctx.platform.vf.points() {
+        t.row(vec![fnum(p.v.raw(), 2), fnum(p.f.as_mhz(), 0)]);
+    }
+    t
+}
+
+/// Table 3: post-synthesis area breakdown (carried verbatim — reporting
+/// constants, not a measurement this reproduction can re-derive).
+pub fn table3(_ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&["Component", "Area (mm^2)"])
+        .with_title("Table 3 — post-synthesis area breakdown (GF 22 nm FDX, SSG)")
+        .label_first();
+    let mut total = 0.0;
+    for (name, area) in AREA_BREAKDOWN {
+        t.row(vec![name.to_string(), fnum(area, 3)]);
+        total += area;
+    }
+    t.row(vec!["Total Area".into(), format!("~{}", fnum(total, 3))]);
+    t
+}
+
+/// Table 4: CPU cycles, original vs ULP-modified TSD kernels.
+pub fn table4(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&[
+        "Operation",
+        "Original Cycles (M)",
+        "Modified Cycles (M)",
+        "Reduction",
+    ])
+    .with_title("Table 4 — CPU cycle reduction from the TSD model modifications")
+    .label_first();
+
+    // Whole-model shapes for the three modified operations.
+    let p = crate::ir::tsd::TsdParams::default();
+    let entries: [(&str, KernelType, Shape, u64); 3] = [
+        (
+            "Log-Amplitude FFT -> FFT magnitude",
+            KernelType::FftMag,
+            Shape::Fft { n_fft: p.n_fft, batch: p.patches },
+            1,
+        ),
+        (
+            "Softmax -> 3-coeff Taylor",
+            KernelType::Softmax,
+            Shape::Rowwise { rows: p.patches + 1, cols: p.patches + 1 },
+            (p.blocks * p.heads) as u64,
+        ),
+        (
+            "GeLU -> piecewise linear",
+            KernelType::Gelu,
+            Shape::Elementwise { n: (p.patches + 1) * p.d_ff, arity: 1 },
+            p.blocks,
+        ),
+    ];
+    for (name, ty, shape, count) in entries {
+        let orig = ctx.model.original_cpu_cycles(ty, shape).raw() * count;
+        let dw = match ty {
+            KernelType::FftMag => crate::ir::DataWidth::Float32,
+            KernelType::Softmax => crate::ir::DataWidth::Int16,
+            _ => crate::ir::DataWidth::Int8,
+        };
+        let modi = ctx
+            .model
+            .cycles_for_ops(PeClass::RiscvCpu, ty, dw, shape.ops())
+            .unwrap()
+            .raw()
+            * count;
+        t.row(vec![
+            name.to_string(),
+            fnum(orig as f64 / 1e6, 2),
+            fnum(modi as f64 / 1e6, 2),
+            format!("{:.0}x", orig as f64 / modi as f64),
+        ]);
+    }
+    t
+}
+
+/// Table 5: MEDEA end-to-end time/energy breakdown across deadlines,
+/// accounted by the discrete-event simulator.
+pub fn table5(ctx: &ExpContext) -> Table {
+    let mut t = Table::new(&[
+        "Deadline (ms)",
+        "Active Time (ms)",
+        "Sleep Time (ms)",
+        "Active Energy (uJ)",
+        "Sleep Energy (uJ)",
+    ])
+    .with_title(format!(
+        "Table 5 — end-to-end breakdown for the TSD workload (P_slp = {:.0} uW)",
+        ctx.platform.sleep_power.as_uw()
+    ));
+    for ms in ExpContext::DEADLINES_MS {
+        let s = ctx
+            .schedule_margined(Default::default(), Time::from_ms(ms))
+            .expect("paper deadlines are feasible");
+        let r = simulate(&ctx.workload, &ctx.platform, &ctx.model, &s);
+        t.row(vec![
+            fnum(ms, 0),
+            fnum(r.active_time.as_ms(), 1),
+            fnum(r.sleep_time.as_ms(), 1),
+            fnum(r.active_energy.as_uj(), 0),
+            fnum(r.sleep_energy.as_uj(), 0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        let ctx = ExpContext::paper();
+        assert_eq!(table2(&ctx).num_rows(), 4);
+        assert_eq!(table3(&ctx).num_rows(), 8);
+        assert_eq!(table4(&ctx).num_rows(), 3);
+        let t5 = table5(&ctx);
+        assert_eq!(t5.num_rows(), 3);
+        let text = t5.to_text();
+        assert!(text.contains("129 uW"));
+    }
+
+    #[test]
+    fn table4_shows_large_reductions() {
+        let ctx = ExpContext::paper();
+        let csv = table4(&ctx).to_csv();
+        // Every row must show a >10x reduction.
+        for line in csv.lines().skip(1) {
+            let factor: f64 = line
+                .rsplit(',')
+                .next()
+                .unwrap()
+                .trim_end_matches('x')
+                .parse()
+                .unwrap();
+            assert!(factor > 10.0, "{line}");
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Builders that lower higher-level DNN descriptions to kernel workloads.
+//!
+//! The paper (§3.1.1) notes "helper utilities are provided to aid in
+//! generating `W` from higher-level descriptions (e.g., DNN model layers)".
+//! These are those utilities: a ViT-style transformer encoder decomposition
+//! (matching the paper's Fig 4 kernel granularity) and a small CNN builder
+//! used by tests and the custom-platform example.
+
+use super::kernel::{DataWidth, Kernel, KernelType, Shape};
+use super::workload::Workload;
+
+/// Transformer dimensioning for [`encoder_block`].
+#[derive(Debug, Clone, Copy)]
+pub struct TransformerDims {
+    /// Token count (sequence length including any class token).
+    pub seq: u64,
+    /// Model (embedding) width.
+    pub d_model: u64,
+    /// Attention head count; `d_model % heads == 0`.
+    pub heads: u64,
+    /// FFN hidden width.
+    pub d_ff: u64,
+    /// Data width of accelerated linear algebra.
+    pub dw: DataWidth,
+    /// Data width of row-wise ops (norm/softmax run at higher precision).
+    pub dw_row: DataWidth,
+}
+
+impl TransformerDims {
+    pub fn d_head(&self) -> u64 {
+        self.d_model / self.heads
+    }
+}
+
+/// Append one transformer encoder block, decomposed into kernels exactly as
+/// the paper's Fig 4 (N, per-head MM/T/S/SM chains, projection+residual, FFN)
+/// and grouped per §4.4 (norm / each MHA head / FFN / residual groups).
+pub fn encoder_block(w: &mut Workload, prefix: &str, d: TransformerDims) {
+    assert_eq!(d.d_model % d.heads, 0, "d_model must divide into heads");
+    let dh = d.d_head();
+
+    // Pre-attention layer norm.
+    w.push_group(
+        format!("{prefix}.norm1"),
+        vec![Kernel::new(
+            format!("{prefix}.norm1"),
+            KernelType::Norm,
+            Shape::Rowwise {
+                rows: d.seq,
+                cols: d.d_model,
+            },
+            d.dw_row,
+        )],
+    );
+
+    // Each attention head is its own coarse group.
+    for h in 0..d.heads {
+        let p = format!("{prefix}.h{h}");
+        w.push_group(
+            p.clone(),
+            vec![
+                Kernel::new(
+                    format!("{p}.mm_q"),
+                    KernelType::MatMul,
+                    Shape::MatMul {
+                        m: d.seq,
+                        k: d.d_model,
+                        n: dh,
+                    },
+                    d.dw,
+                ),
+                Kernel::new(
+                    format!("{p}.mm_k"),
+                    KernelType::MatMul,
+                    Shape::MatMul {
+                        m: d.seq,
+                        k: d.d_model,
+                        n: dh,
+                    },
+                    d.dw,
+                ),
+                Kernel::new(
+                    format!("{p}.mm_v"),
+                    KernelType::MatMul,
+                    Shape::MatMul {
+                        m: d.seq,
+                        k: d.d_model,
+                        n: dh,
+                    },
+                    d.dw,
+                ),
+                Kernel::new(
+                    format!("{p}.t_k"),
+                    KernelType::Transpose,
+                    Shape::Transpose {
+                        rows: d.seq,
+                        cols: dh,
+                    },
+                    d.dw,
+                ),
+                Kernel::new(
+                    format!("{p}.mm_qk"),
+                    KernelType::MatMul,
+                    Shape::MatMul {
+                        m: d.seq,
+                        k: dh,
+                        n: d.seq,
+                    },
+                    d.dw,
+                ),
+                Kernel::new(
+                    format!("{p}.scale"),
+                    KernelType::Scale,
+                    Shape::Elementwise {
+                        n: d.seq * d.seq,
+                        arity: 1,
+                    },
+                    d.dw,
+                ),
+                Kernel::new(
+                    format!("{p}.softmax"),
+                    KernelType::Softmax,
+                    Shape::Rowwise {
+                        rows: d.seq,
+                        cols: d.seq,
+                    },
+                    d.dw_row,
+                ),
+                Kernel::new(
+                    format!("{p}.mm_av"),
+                    KernelType::MatMul,
+                    Shape::MatMul {
+                        m: d.seq,
+                        k: d.seq,
+                        n: dh,
+                    },
+                    d.dw,
+                ),
+            ],
+        );
+    }
+
+    // Output projection + first residual add.
+    w.push_group(
+        format!("{prefix}.residual1"),
+        vec![
+            Kernel::new(
+                format!("{prefix}.mm_proj"),
+                KernelType::MatMul,
+                Shape::MatMul {
+                    m: d.seq,
+                    k: d.d_model,
+                    n: d.d_model,
+                },
+                d.dw,
+            ),
+            Kernel::new(
+                format!("{prefix}.add1"),
+                KernelType::Add,
+                Shape::Elementwise {
+                    n: d.seq * d.d_model,
+                    arity: 2,
+                },
+                d.dw,
+            ),
+        ],
+    );
+
+    // Pre-FFN layer norm.
+    w.push_group(
+        format!("{prefix}.norm2"),
+        vec![Kernel::new(
+            format!("{prefix}.norm2"),
+            KernelType::Norm,
+            Shape::Rowwise {
+                rows: d.seq,
+                cols: d.d_model,
+            },
+            d.dw_row,
+        )],
+    );
+
+    // FFN: MM -> GeLU -> MM.
+    w.push_group(
+        format!("{prefix}.ffn"),
+        vec![
+            Kernel::new(
+                format!("{prefix}.mm_ff1"),
+                KernelType::MatMul,
+                Shape::MatMul {
+                    m: d.seq,
+                    k: d.d_model,
+                    n: d.d_ff,
+                },
+                d.dw,
+            ),
+            Kernel::new(
+                format!("{prefix}.gelu"),
+                KernelType::Gelu,
+                Shape::Elementwise {
+                    n: d.seq * d.d_ff,
+                    arity: 1,
+                },
+                d.dw,
+            ),
+            Kernel::new(
+                format!("{prefix}.mm_ff2"),
+                KernelType::MatMul,
+                Shape::MatMul {
+                    m: d.seq,
+                    k: d.d_ff,
+                    n: d.d_model,
+                },
+                d.dw,
+            ),
+        ],
+    );
+
+    // Second residual add.
+    w.push_group(
+        format!("{prefix}.residual2"),
+        vec![Kernel::new(
+            format!("{prefix}.add2"),
+            KernelType::Add,
+            Shape::Elementwise {
+                n: d.seq * d.d_model,
+                arity: 2,
+            },
+            d.dw,
+        )],
+    );
+}
+
+/// Append an input-embedding group: patch projection matmul + class-token
+/// concatenation (the ViT front of Fig 4). `patches` tokens of `patch_dim`
+/// features projected to `d_model`.
+pub fn patch_embedding(
+    w: &mut Workload,
+    prefix: &str,
+    patches: u64,
+    patch_dim: u64,
+    d_model: u64,
+    dw: DataWidth,
+) {
+    w.push_group(
+        format!("{prefix}.embed"),
+        vec![
+            Kernel::new(
+                format!("{prefix}.mm_embed"),
+                KernelType::MatMul,
+                Shape::MatMul {
+                    m: patches,
+                    k: patch_dim,
+                    n: d_model,
+                },
+                dw,
+            ),
+            Kernel::new(
+                format!("{prefix}.class_concat"),
+                KernelType::ClassConcat,
+                Shape::Concat {
+                    rows: patches,
+                    cols: d_model,
+                },
+                dw,
+            ),
+        ],
+    );
+}
+
+/// Append the classifier head: final norm + projection to `n_classes`.
+pub fn classifier(w: &mut Workload, prefix: &str, d_model: u64, n_classes: u64, d: TransformerDims) {
+    w.push_group(
+        format!("{prefix}.classifier"),
+        vec![
+            Kernel::new(
+                format!("{prefix}.norm_final"),
+                KernelType::Norm,
+                Shape::Rowwise {
+                    rows: 1,
+                    cols: d_model,
+                },
+                d.dw_row,
+            ),
+            Kernel::new(
+                format!("{prefix}.mm_class"),
+                KernelType::MatMul,
+                Shape::MatMul {
+                    m: 1,
+                    k: d_model,
+                    n: n_classes,
+                },
+                d.dw,
+            ),
+        ],
+    );
+}
+
+/// A small CNN (conv/norm/gelu stacks + classifier) used by tests and the
+/// `custom_platform` example to show MEDEA is not transformer-specific.
+pub fn small_cnn(name: &str, h: u64, w_: u64, c: &[u64], n_classes: u64, dw: DataWidth) -> Workload {
+    assert!(c.len() >= 2, "need at least input+one conv channel count");
+    let mut w = Workload::new(name);
+    for (i, win) in c.windows(2).enumerate() {
+        let (cin, cout) = (win[0], win[1]);
+        w.push_group(
+            format!("conv{i}"),
+            vec![
+                Kernel::new(
+                    format!("conv{i}.conv"),
+                    KernelType::Conv2d,
+                    Shape::Conv2d {
+                        h,
+                        w: w_,
+                        c_in: cin,
+                        c_out: cout,
+                        kh: 3,
+                        kw: 3,
+                    },
+                    dw,
+                ),
+                Kernel::new(
+                    format!("conv{i}.norm"),
+                    KernelType::Norm,
+                    Shape::Rowwise {
+                        rows: h * w_,
+                        cols: cout,
+                    },
+                    DataWidth::Int16,
+                ),
+                Kernel::new(
+                    format!("conv{i}.gelu"),
+                    KernelType::Gelu,
+                    Shape::Elementwise {
+                        n: h * w_ * cout,
+                        arity: 1,
+                    },
+                    dw,
+                ),
+            ],
+        );
+    }
+    let c_last = *c.last().unwrap();
+    w.push_group(
+        "classifier",
+        vec![Kernel::new(
+            "mm_class",
+            KernelType::MatMul,
+            Shape::MatMul {
+                m: 1,
+                k: h * w_ * c_last,
+                n: n_classes,
+            },
+            dw,
+        )],
+    );
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> TransformerDims {
+        TransformerDims {
+            seq: 97,
+            d_model: 128,
+            heads: 4,
+            d_ff: 256,
+            dw: DataWidth::Int8,
+            dw_row: DataWidth::Int16,
+        }
+    }
+
+    #[test]
+    fn encoder_block_kernel_count() {
+        let mut w = Workload::new("t");
+        encoder_block(&mut w, "enc0", dims());
+        // 1 norm + 4 heads × 8 + (proj+add) + norm + 3 ffn + add = 40
+        assert_eq!(w.len(), 1 + 4 * 8 + 2 + 1 + 3 + 1);
+        assert!(w.groups_cover_all());
+        // groups: norm1, 4 heads, residual1, norm2, ffn, residual2
+        assert_eq!(w.groups().len(), 1 + 4 + 1 + 1 + 1 + 1);
+    }
+
+    #[test]
+    fn encoder_block_shapes_are_consistent() {
+        let mut w = Workload::new("t");
+        encoder_block(&mut w, "enc0", dims());
+        for k in w.kernels() {
+            assert!(k.shape_matches_type(), "{k}");
+        }
+        // Per-head QK^T matmul is seq×dh×seq.
+        let qk = w
+            .kernels()
+            .iter()
+            .find(|k| k.name == "enc0.h0.mm_qk")
+            .unwrap();
+        assert_eq!(
+            qk.shape,
+            Shape::MatMul {
+                m: 97,
+                k: 32,
+                n: 97
+            }
+        );
+    }
+
+    #[test]
+    fn embedding_and_classifier() {
+        let mut w = Workload::new("t");
+        patch_embedding(&mut w, "in", 96, 80, 128, DataWidth::Int8);
+        classifier(&mut w, "out", 128, 2, dims());
+        assert_eq!(w.len(), 4);
+        assert!(w.groups_cover_all());
+    }
+
+    #[test]
+    fn cnn_builder() {
+        let w = small_cnn("cnn", 16, 16, &[3, 8, 16], 10, DataWidth::Int8);
+        assert_eq!(w.len(), 2 * 3 + 1);
+        assert!(w.groups_cover_all());
+        assert!(w.total_ops() > 0);
+    }
+}

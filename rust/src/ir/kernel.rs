@@ -1,0 +1,390 @@
+//! The kernel tuple `(τ, s, δ)`: type, operational size, data width.
+
+use crate::util::units::Bytes;
+use std::fmt;
+
+/// Kernel (operator) type `τ ∈ T_ops`.
+///
+/// Matches the decomposition used by the paper's TSD case study (Fig 4):
+/// MatMul, Conv2d, Add, Norm, Softmax (Taylor-approximated), GeLU (PWL),
+/// Transpose, Scale, ClassConcat, and the FFT-magnitude frontend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelType {
+    MatMul,
+    Conv2d,
+    Add,
+    Norm,
+    Softmax,
+    Gelu,
+    Transpose,
+    Scale,
+    ClassConcat,
+    FftMag,
+}
+
+impl KernelType {
+    pub const ALL: [KernelType; 10] = [
+        KernelType::MatMul,
+        KernelType::Conv2d,
+        KernelType::Add,
+        KernelType::Norm,
+        KernelType::Softmax,
+        KernelType::Gelu,
+        KernelType::Transpose,
+        KernelType::Scale,
+        KernelType::ClassConcat,
+        KernelType::FftMag,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelType::MatMul => "matmul",
+            KernelType::Conv2d => "conv2d",
+            KernelType::Add => "add",
+            KernelType::Norm => "norm",
+            KernelType::Softmax => "softmax",
+            KernelType::Gelu => "gelu",
+            KernelType::Transpose => "transpose",
+            KernelType::Scale => "scale",
+            KernelType::ClassConcat => "class_concat",
+            KernelType::FftMag => "fft_mag",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<KernelType> {
+        KernelType::ALL.into_iter().find(|t| t.name() == name)
+    }
+}
+
+impl fmt::Display for KernelType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Data width `δ` of a kernel's operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DataWidth {
+    Int8,
+    Int16,
+    Int32,
+    Float32,
+}
+
+impl DataWidth {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DataWidth::Int8 => 1,
+            DataWidth::Int16 => 2,
+            DataWidth::Int32 | DataWidth::Float32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DataWidth::Int8 => "int8",
+            DataWidth::Int16 => "int16",
+            DataWidth::Int32 => "int32",
+            DataWidth::Float32 => "float32",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<DataWidth> {
+        match name {
+            "int8" => Some(DataWidth::Int8),
+            "int16" => Some(DataWidth::Int16),
+            "int32" => Some(DataWidth::Int32),
+            "float32" => Some(DataWidth::Float32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DataWidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Operational size `s` of a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// `C[m,n] = A[m,k] · B[k,n]`
+    MatMul { m: u64, k: u64, n: u64 },
+    /// 2-D convolution over an `h×w×c_in` input producing `c_out` maps with a
+    /// `kh×kw` filter and unit stride ("same" padding assumed for sizing).
+    Conv2d {
+        h: u64,
+        w: u64,
+        c_in: u64,
+        c_out: u64,
+        kh: u64,
+        kw: u64,
+    },
+    /// Element-wise over `n` elements, `arity` input operands (1 for
+    /// activation/scale, 2 for add).
+    Elementwise { n: u64, arity: u64 },
+    /// Row-wise reduction+map (layer norm, softmax) over a `rows×cols` matrix.
+    Rowwise { rows: u64, cols: u64 },
+    /// Matrix transpose `rows×cols → cols×rows`.
+    Transpose { rows: u64, cols: u64 },
+    /// `batch` independent FFTs of `n_fft` points each, magnitude output.
+    Fft { n_fft: u64, batch: u64 },
+    /// Concatenate a class token row onto a `rows×cols` matrix.
+    Concat { rows: u64, cols: u64 },
+}
+
+impl Shape {
+    /// "Useful work" operation count: MACs for matmul/conv, element ops
+    /// otherwise. This is the quantity cycle models scale with.
+    pub fn ops(self) -> u64 {
+        match self {
+            Shape::MatMul { m, k, n } => m * k * n,
+            Shape::Conv2d {
+                h,
+                w,
+                c_in,
+                c_out,
+                kh,
+                kw,
+            } => h * w * c_in * c_out * kh * kw,
+            Shape::Elementwise { n, .. } => n,
+            // reduction + normalization passes
+            Shape::Rowwise { rows, cols } => 3 * rows * cols,
+            Shape::Transpose { rows, cols } => rows * cols,
+            Shape::Fft { n_fft, batch } => {
+                // radix-2 butterfly count ~ (n/2)·log2(n) complex MACs
+                let log2 = 64 - n_fft.leading_zeros() as u64 - 1;
+                batch * (n_fft / 2) * log2.max(1)
+            }
+            Shape::Concat { rows, cols } => rows * cols,
+        }
+    }
+
+    /// Total bytes of input operands at data width `dw`.
+    pub fn input_bytes(self, dw: DataWidth) -> Bytes {
+        let b = dw.bytes();
+        Bytes(match self {
+            Shape::MatMul { m, k, n } => (m * k + k * n) * b,
+            Shape::Conv2d {
+                h,
+                w,
+                c_in,
+                c_out,
+                kh,
+                kw,
+            } => (h * w * c_in + kh * kw * c_in * c_out) * b,
+            Shape::Elementwise { n, arity } => n * arity * b,
+            Shape::Rowwise { rows, cols } => rows * cols * b,
+            Shape::Transpose { rows, cols } => rows * cols * b,
+            Shape::Fft { n_fft, batch } => n_fft * batch * b,
+            Shape::Concat { rows, cols } => (rows * cols + cols) * b,
+        })
+    }
+
+    /// Total bytes of output at data width `dw`.
+    pub fn output_bytes(self, dw: DataWidth) -> Bytes {
+        let b = dw.bytes();
+        Bytes(match self {
+            Shape::MatMul { m, n, .. } => m * n * b,
+            Shape::Conv2d { h, w, c_out, .. } => h * w * c_out * b,
+            Shape::Elementwise { n, .. } => n * b,
+            Shape::Rowwise { rows, cols } => rows * cols * b,
+            Shape::Transpose { rows, cols } => rows * cols * b,
+            Shape::Fft { n_fft, batch } => (n_fft / 2) * batch * b,
+            Shape::Concat { rows, cols } => (rows + 1) * cols * b,
+        })
+    }
+
+    /// Total operand footprint (inputs + output).
+    pub fn total_bytes(self, dw: DataWidth) -> Bytes {
+        self.input_bytes(dw) + self.output_bytes(dw)
+    }
+
+    /// Bytes of the *activation* input operand — the tensor produced by the
+    /// preceding kernel in a sequential DNN (A for matmul, the feature map
+    /// for conv, the first operand for element-wise ops). When a kernel runs
+    /// untiled in single-buffer mode, this operand can stay resident in the
+    /// PE's LM from the previous kernel and skip the L2→LM transfer.
+    pub fn activation_bytes(self, dw: DataWidth) -> Bytes {
+        let b = dw.bytes();
+        Bytes(match self {
+            Shape::MatMul { m, k, .. } => m * k * b,
+            Shape::Conv2d { h, w, c_in, .. } => h * w * c_in * b,
+            Shape::Elementwise { n, .. } => n * b,
+            Shape::Rowwise { rows, cols } => rows * cols * b,
+            Shape::Transpose { rows, cols } => rows * cols * b,
+            Shape::Fft { n_fft, batch } => n_fft * batch * b,
+            Shape::Concat { rows, cols } => rows * cols * b,
+        })
+    }
+
+    /// The largest single dimension (used by `Λ_op` dimension constraints).
+    pub fn max_dim(self) -> u64 {
+        match self {
+            Shape::MatMul { m, k, n } => m.max(k).max(n),
+            Shape::Conv2d { h, w, c_in, c_out, .. } => h.max(w).max(c_in).max(c_out),
+            Shape::Elementwise { n, .. } => n,
+            Shape::Rowwise { rows, cols } => rows.max(cols),
+            Shape::Transpose { rows, cols } => rows.max(cols),
+            Shape::Fft { n_fft, .. } => n_fft,
+            Shape::Concat { rows, cols } => rows.max(cols),
+        }
+    }
+
+    /// The dimension actually bounded by a `Λ_op` `max_dim` constraint: the
+    /// *indivisible* addressing unit the PE must handle at once. Streaming
+    /// lengths that the PE (or tiler) chunks internally — element-wise
+    /// vectors, row counts, FFT batches — are not bounded; a matmul's
+    /// largest dimension and a row reduction's width are.
+    pub fn constrained_dim(self) -> u64 {
+        match self {
+            Shape::MatMul { m, k, n } => m.max(k).max(n),
+            Shape::Conv2d { c_in, c_out, kh, kw, .. } => (kh * kw * c_in).max(c_out),
+            Shape::Elementwise { .. } => 0,
+            Shape::Rowwise { cols, .. } => cols,
+            Shape::Transpose { cols, .. } => cols,
+            Shape::Fft { n_fft, .. } => n_fft,
+            Shape::Concat { cols, .. } => cols,
+        }
+    }
+}
+
+/// One computational kernel `k_i = (τ_i, s_i, δ_i)` plus bookkeeping.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Kernel {
+    /// Position-independent display name, e.g. `enc0.h1.mm_qk`.
+    pub name: String,
+    pub ty: KernelType,
+    pub shape: Shape,
+    pub dw: DataWidth,
+}
+
+impl Kernel {
+    pub fn new(name: impl Into<String>, ty: KernelType, shape: Shape, dw: DataWidth) -> Kernel {
+        let k = Kernel {
+            name: name.into(),
+            ty,
+            shape,
+            dw,
+        };
+        debug_assert!(k.shape_matches_type(), "shape/type mismatch in {k:?}");
+        k
+    }
+
+    /// Sanity: the shape variant must be meaningful for the kernel type.
+    pub fn shape_matches_type(&self) -> bool {
+        matches!(
+            (self.ty, self.shape),
+            (KernelType::MatMul, Shape::MatMul { .. })
+                | (KernelType::Conv2d, Shape::Conv2d { .. })
+                | (KernelType::Add, Shape::Elementwise { arity: 2, .. })
+                | (KernelType::Scale, Shape::Elementwise { arity: 1, .. })
+                | (KernelType::Gelu, Shape::Elementwise { arity: 1, .. })
+                | (KernelType::Norm, Shape::Rowwise { .. })
+                | (KernelType::Softmax, Shape::Rowwise { .. })
+                | (KernelType::Transpose, Shape::Transpose { .. })
+                | (KernelType::ClassConcat, Shape::Concat { .. })
+                | (KernelType::FftMag, Shape::Fft { .. })
+        )
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.shape.ops()
+    }
+
+    pub fn total_bytes(&self) -> Bytes {
+        self.shape.total_bytes(self.dw)
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}/{}]", self.name, self.ty, self.dw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_ops_and_bytes() {
+        let s = Shape::MatMul { m: 97, k: 128, n: 128 };
+        assert_eq!(s.ops(), 97 * 128 * 128);
+        assert_eq!(s.input_bytes(DataWidth::Int8).raw(), 97 * 128 + 128 * 128);
+        assert_eq!(s.output_bytes(DataWidth::Int8).raw(), 97 * 128);
+        assert_eq!(
+            s.total_bytes(DataWidth::Int16).raw(),
+            2 * (97 * 128 + 128 * 128 + 97 * 128)
+        );
+    }
+
+    #[test]
+    fn fft_ops_scale_nlogn() {
+        let s = Shape::Fft { n_fft: 256, batch: 4 };
+        assert_eq!(s.ops(), 4 * 128 * 8);
+    }
+
+    #[test]
+    fn elementwise_arity() {
+        let add = Shape::Elementwise { n: 100, arity: 2 };
+        assert_eq!(add.input_bytes(DataWidth::Int8).raw(), 200);
+        assert_eq!(add.output_bytes(DataWidth::Int8).raw(), 100);
+    }
+
+    #[test]
+    fn kernel_type_round_trip() {
+        for ty in KernelType::ALL {
+            assert_eq!(KernelType::from_name(ty.name()), Some(ty));
+        }
+        assert_eq!(KernelType::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn data_width_round_trip() {
+        for dw in [
+            DataWidth::Int8,
+            DataWidth::Int16,
+            DataWidth::Int32,
+            DataWidth::Float32,
+        ] {
+            assert_eq!(DataWidth::from_name(dw.name()), Some(dw));
+        }
+    }
+
+    #[test]
+    fn shape_type_validation() {
+        let good = Kernel::new(
+            "mm",
+            KernelType::MatMul,
+            Shape::MatMul { m: 1, k: 1, n: 1 },
+            DataWidth::Int8,
+        );
+        assert!(good.shape_matches_type());
+        let bad = Kernel {
+            name: "bad".into(),
+            ty: KernelType::Softmax,
+            shape: Shape::MatMul { m: 1, k: 1, n: 1 },
+            dw: DataWidth::Int8,
+        };
+        assert!(!bad.shape_matches_type());
+    }
+
+    #[test]
+    fn max_dim() {
+        assert_eq!(Shape::MatMul { m: 4, k: 512, n: 8 }.max_dim(), 512);
+        assert_eq!(Shape::Transpose { rows: 3, cols: 9 }.max_dim(), 9);
+    }
+
+    #[test]
+    fn display() {
+        let k = Kernel::new(
+            "enc0.mm_q",
+            KernelType::MatMul,
+            Shape::MatMul { m: 97, k: 128, n: 128 },
+            DataWidth::Int8,
+        );
+        assert_eq!(k.to_string(), "enc0.mm_q[matmul/int8]");
+    }
+}

@@ -1,0 +1,13 @@
+//! Kernel-level workload representation (§3.1.1 of the paper).
+//!
+//! A workload `W = {k_1, …, k_N}` is an ordered list of computational
+//! kernels; each kernel is a `(τ_i, s_i, δ_i)` tuple of type, operational
+//! size, and data width. This kernel granularity is the unit MEDEA schedules.
+
+pub mod builder;
+pub mod kernel;
+pub mod tsd;
+pub mod workload;
+
+pub use kernel::{DataWidth, Kernel, KernelType, Shape};
+pub use workload::{Group, Workload};

@@ -1,0 +1,178 @@
+//! The TSD (Transformer for Seizure Detection) case-study workload (§4.3).
+//!
+//! A ViT-style model over EEG windows: FFT-magnitude frontend (the paper's
+//! ULP modification replacing log-amplitude), patch embedding, four
+//! transformer encoder blocks (MHSA + FFN), and a classifier head. The
+//! decomposition into kernels follows the paper's Fig 4; the ULP
+//! modifications (Taylor softmax, PWL GeLU, FFT magnitude) appear both here
+//! (as kernel types whose cycle models reflect the cheap approximations —
+//! Table 4) and in the JAX model (`python/compile/model.py`).
+
+use super::builder::{classifier, encoder_block, patch_embedding, TransformerDims};
+use super::kernel::{DataWidth, Kernel, KernelType, Shape};
+use super::workload::Workload;
+
+/// TSD model hyper-parameters.
+///
+/// Defaults are sized so the transformer core lands in the paper's cycle
+/// envelope (meets 50 ms only with acceleration; CPU-only misses it — §5.1).
+#[derive(Debug, Clone, Copy)]
+pub struct TsdParams {
+    /// EEG channels in the input window.
+    pub channels: u64,
+    /// FFT length per channel segment.
+    pub n_fft: u64,
+    /// Number of FFT segments (patches) per window.
+    pub patches: u64,
+    /// Feature dimension of each patch fed to the embedding.
+    pub patch_dim: u64,
+    /// Embedding width.
+    pub d_model: u64,
+    /// Encoder block count.
+    pub blocks: u64,
+    /// Attention heads.
+    pub heads: u64,
+    /// FFN hidden width.
+    pub d_ff: u64,
+    /// Output classes (seizure / background).
+    pub n_classes: u64,
+    /// Linear-algebra data width.
+    pub dw: DataWidth,
+    /// Row-wise (norm/softmax) data width.
+    pub dw_row: DataWidth,
+}
+
+impl Default for TsdParams {
+    fn default() -> Self {
+        TsdParams {
+            channels: 20,
+            n_fft: 256,
+            patches: 96,
+            patch_dim: 80,
+            d_model: 128,
+            blocks: 4,
+            heads: 4,
+            d_ff: 256,
+            n_classes: 2,
+            dw: DataWidth::Int8,
+            dw_row: DataWidth::Int16,
+        }
+    }
+}
+
+impl TsdParams {
+    pub fn dims(&self) -> TransformerDims {
+        TransformerDims {
+            seq: self.patches + 1, // + class token
+            d_model: self.d_model,
+            heads: self.heads,
+            d_ff: self.d_ff,
+            dw: self.dw,
+            dw_row: self.dw_row,
+        }
+    }
+}
+
+/// The full TSD workload: FFT frontend + embedding + encoder stack +
+/// classifier.
+pub fn tsd_full(p: &TsdParams) -> Workload {
+    let mut w = Workload::new("tsd-full");
+    // Frontend: per-channel FFT magnitudes (CPU-only in Λ_op; the paper's
+    // modification drops the log). Float32: runs on the RISC-V host.
+    w.push_group(
+        "frontend",
+        vec![Kernel::new(
+            "frontend.fft_mag",
+            KernelType::FftMag,
+            Shape::Fft {
+                n_fft: p.n_fft,
+                batch: p.channels * p.patches / p.channels.max(1),
+            },
+            DataWidth::Float32,
+        )],
+    );
+    patch_embedding(&mut w, "in", p.patches, p.patch_dim, p.d_model, p.dw);
+    let dims = p.dims();
+    for b in 0..p.blocks {
+        encoder_block(&mut w, &format!("enc{b}"), dims);
+    }
+    classifier(&mut w, "out", p.d_model, p.n_classes, dims);
+    debug_assert!(w.groups_cover_all());
+    w
+}
+
+/// The transformer core only (what the paper uses "for most comparative
+/// analyses" — §4.3): embedding + encoders + classifier, no FFT frontend.
+pub fn tsd_core(p: &TsdParams) -> Workload {
+    let mut w = Workload::new("tsd-core");
+    patch_embedding(&mut w, "in", p.patches, p.patch_dim, p.d_model, p.dw);
+    let dims = p.dims();
+    for b in 0..p.blocks {
+        encoder_block(&mut w, &format!("enc{b}"), dims);
+    }
+    classifier(&mut w, "out", p.d_model, p.n_classes, dims);
+    debug_assert!(w.groups_cover_all());
+    w
+}
+
+/// The matmul subset of the TSD core that is executable on *both*
+/// accelerators — used by the Fig 7 crossover study.
+pub fn tsd_matmul_subset(p: &TsdParams) -> Workload {
+    tsd_core(p).filter("tsd-matmul-subset", |k| k.ty == KernelType::MatMul)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_has_frontend_core_does_not() {
+        let p = TsdParams::default();
+        let full = tsd_full(&p);
+        let core = tsd_core(&p);
+        assert!(full.kernels().iter().any(|k| k.ty == KernelType::FftMag));
+        assert!(!core.kernels().iter().any(|k| k.ty == KernelType::FftMag));
+        assert_eq!(full.len(), core.len() + 1);
+    }
+
+    #[test]
+    fn core_kernel_count() {
+        let p = TsdParams::default();
+        let core = tsd_core(&p);
+        // embed(2) + 4 blocks × 40 + classifier(2)
+        assert_eq!(core.len(), 2 + 4 * 40 + 2);
+        assert!(core.groups_cover_all());
+    }
+
+    #[test]
+    fn matmul_subset_is_all_matmul() {
+        let p = TsdParams::default();
+        let sub = tsd_matmul_subset(&p);
+        assert!(!sub.is_empty());
+        assert!(sub.kernels().iter().all(|k| k.ty == KernelType::MatMul));
+        // 4 blocks × (4 heads × 5 mm + proj + 2 ffn) + embed + class head
+        assert_eq!(sub.len(), 4 * (4 * 5 + 1 + 2) + 1 + 1);
+    }
+
+    #[test]
+    fn workload_scale_sanity() {
+        // The core must be dominated by matmul MACs, in the tens of millions:
+        // large enough that CPU-only misses 50 ms, small enough that the
+        // accelerators make it at low voltage within 1000 ms (§5 envelope).
+        let p = TsdParams::default();
+        let core = tsd_core(&p);
+        let total = core.total_ops();
+        assert!(total > 20_000_000, "total ops {total}");
+        assert!(total < 200_000_000, "total ops {total}");
+    }
+
+    #[test]
+    fn json_round_trip_of_tsd() {
+        let p = TsdParams::default();
+        let core = tsd_core(&p);
+        let j = core.to_json().to_pretty();
+        let back = Workload::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.len(), core.len());
+        assert_eq!(back.groups().len(), core.groups().len());
+    }
+}

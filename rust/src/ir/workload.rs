@@ -1,0 +1,389 @@
+//! The ordered workload `W` and its coarse-grain group structure.
+
+use super::kernel::{DataWidth, Kernel, KernelType, Shape};
+use crate::util::json::{Json, JsonObj};
+use crate::util::units::Bytes;
+use std::ops::Range;
+
+/// A contiguous range of kernels treated as one scheduling unit by
+/// coarse-grained baselines (§4.4: embedding / per-encoder norm, MHA head,
+/// FFN, residual / classifier).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    pub name: String,
+    pub range: Range<usize>,
+}
+
+/// An ordered list of kernels plus the coarse group partition.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub name: String,
+    kernels: Vec<Kernel>,
+    groups: Vec<Group>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>) -> Workload {
+        Workload {
+            name: name.into(),
+            kernels: Vec::new(),
+            groups: Vec::new(),
+        }
+    }
+
+    /// Append one kernel (it joins no group until `close_group`).
+    pub fn push(&mut self, kernel: Kernel) {
+        self.kernels.push(kernel);
+    }
+
+    /// Append kernels and record them as one coarse group.
+    pub fn push_group(&mut self, name: impl Into<String>, kernels: Vec<Kernel>) {
+        let start = self.kernels.len();
+        self.kernels.extend(kernels);
+        self.groups.push(Group {
+            name: name.into(),
+            range: start..self.kernels.len(),
+        });
+    }
+
+    pub fn kernels(&self) -> &[Kernel] {
+        &self.kernels
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    pub fn groups(&self) -> &[Group] {
+        &self.groups
+    }
+
+    /// True when every kernel belongs to exactly one group, in order.
+    pub fn groups_cover_all(&self) -> bool {
+        let mut next = 0;
+        for g in &self.groups {
+            if g.range.start != next {
+                return false;
+            }
+            next = g.range.end;
+        }
+        next == self.kernels.len()
+    }
+
+    /// Total "useful ops" across the workload.
+    pub fn total_ops(&self) -> u64 {
+        self.kernels.iter().map(|k| k.ops()).sum()
+    }
+
+    /// Total operand traffic footprint.
+    pub fn total_bytes(&self) -> Bytes {
+        self.kernels.iter().map(|k| k.total_bytes()).sum()
+    }
+
+    /// Histogram of kernel types (for reporting).
+    pub fn type_histogram(&self) -> Vec<(KernelType, usize)> {
+        let mut hist: Vec<(KernelType, usize)> = Vec::new();
+        for ty in KernelType::ALL {
+            let n = self.kernels.iter().filter(|k| k.ty == ty).count();
+            if n > 0 {
+                hist.push((ty, n));
+            }
+        }
+        hist
+    }
+
+    /// Restrict the workload to a kernel subrange (used by Fig 6/7 subsets).
+    pub fn slice(&self, range: Range<usize>) -> Workload {
+        let kernels = self.kernels[range.clone()].to_vec();
+        let groups = self
+            .groups
+            .iter()
+            .filter(|g| g.range.start >= range.start && g.range.end <= range.end)
+            .map(|g| Group {
+                name: g.name.clone(),
+                range: g.range.start - range.start..g.range.end - range.start,
+            })
+            .collect();
+        Workload {
+            name: format!("{}[{}..{}]", self.name, range.start, range.end),
+            kernels,
+            groups,
+        }
+    }
+
+    /// Keep only kernels satisfying `pred` (groups are dropped: a filtered
+    /// workload is no longer contiguous).
+    pub fn filter(&self, name: &str, pred: impl Fn(&Kernel) -> bool) -> Workload {
+        Workload {
+            name: name.to_string(),
+            kernels: self.kernels.iter().filter(|k| pred(k)).cloned().collect(),
+            groups: Vec::new(),
+        }
+    }
+
+    // ---- JSON round-trip ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("name", self.name.clone());
+        let kernels: Vec<Json> = self.kernels.iter().map(kernel_to_json).collect();
+        o.insert("kernels", Json::Arr(kernels));
+        let groups: Vec<Json> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let mut go = JsonObj::new();
+                go.insert("name", g.name.clone());
+                go.insert("start", g.range.start);
+                go.insert("end", g.range.end);
+                Json::Obj(go)
+            })
+            .collect();
+        o.insert("groups", Json::Arr(groups));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Workload, String> {
+        let name = v.req("name")?.as_str().ok_or("name not a string")?.to_string();
+        let mut w = Workload::new(name);
+        for kv in v.req("kernels")?.as_arr().ok_or("kernels not an array")? {
+            w.push(kernel_from_json(kv)?);
+        }
+        if let Some(gs) = v.get("groups").and_then(|g| g.as_arr()) {
+            for gv in gs {
+                let gname = gv.req("name")?.as_str().ok_or("group name")?.to_string();
+                let start = gv.req("start")?.as_usize().ok_or("group start")?;
+                let end = gv.req("end")?.as_usize().ok_or("group end")?;
+                if end > w.kernels.len() || start > end {
+                    return Err(format!("group `{gname}` range {start}..{end} out of bounds"));
+                }
+                w.groups.push(Group {
+                    name: gname,
+                    range: start..end,
+                });
+            }
+        }
+        Ok(w)
+    }
+}
+
+fn kernel_to_json(k: &Kernel) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("name", k.name.clone());
+    o.insert("type", k.ty.name());
+    o.insert("dw", k.dw.name());
+    let mut s = JsonObj::new();
+    match k.shape {
+        Shape::MatMul { m, k: kk, n } => {
+            s.insert("kind", "matmul");
+            s.insert("m", m);
+            s.insert("k", kk);
+            s.insert("n", n);
+        }
+        Shape::Conv2d {
+            h,
+            w,
+            c_in,
+            c_out,
+            kh,
+            kw,
+        } => {
+            s.insert("kind", "conv2d");
+            s.insert("h", h);
+            s.insert("w", w);
+            s.insert("c_in", c_in);
+            s.insert("c_out", c_out);
+            s.insert("kh", kh);
+            s.insert("kw", kw);
+        }
+        Shape::Elementwise { n, arity } => {
+            s.insert("kind", "elementwise");
+            s.insert("n", n);
+            s.insert("arity", arity);
+        }
+        Shape::Rowwise { rows, cols } => {
+            s.insert("kind", "rowwise");
+            s.insert("rows", rows);
+            s.insert("cols", cols);
+        }
+        Shape::Transpose { rows, cols } => {
+            s.insert("kind", "transpose");
+            s.insert("rows", rows);
+            s.insert("cols", cols);
+        }
+        Shape::Fft { n_fft, batch } => {
+            s.insert("kind", "fft");
+            s.insert("n_fft", n_fft);
+            s.insert("batch", batch);
+        }
+        Shape::Concat { rows, cols } => {
+            s.insert("kind", "concat");
+            s.insert("rows", rows);
+            s.insert("cols", cols);
+        }
+    }
+    o.insert("shape", Json::Obj(s));
+    Json::Obj(o)
+}
+
+fn kernel_from_json(v: &Json) -> Result<Kernel, String> {
+    let name = v.req("name")?.as_str().ok_or("kernel name")?.to_string();
+    let ty = KernelType::from_name(v.req("type")?.as_str().ok_or("kernel type")?)
+        .ok_or("unknown kernel type")?;
+    let dw = DataWidth::from_name(v.req("dw")?.as_str().ok_or("kernel dw")?)
+        .ok_or("unknown data width")?;
+    let sv = v.req("shape")?;
+    let dim = |key: &str| -> Result<u64, String> {
+        sv.req(key)?.as_u64().ok_or_else(|| format!("shape.{key}"))
+    };
+    let shape = match sv.req("kind")?.as_str().ok_or("shape.kind")? {
+        "matmul" => Shape::MatMul {
+            m: dim("m")?,
+            k: dim("k")?,
+            n: dim("n")?,
+        },
+        "conv2d" => Shape::Conv2d {
+            h: dim("h")?,
+            w: dim("w")?,
+            c_in: dim("c_in")?,
+            c_out: dim("c_out")?,
+            kh: dim("kh")?,
+            kw: dim("kw")?,
+        },
+        "elementwise" => Shape::Elementwise {
+            n: dim("n")?,
+            arity: dim("arity")?,
+        },
+        "rowwise" => Shape::Rowwise {
+            rows: dim("rows")?,
+            cols: dim("cols")?,
+        },
+        "transpose" => Shape::Transpose {
+            rows: dim("rows")?,
+            cols: dim("cols")?,
+        },
+        "fft" => Shape::Fft {
+            n_fft: dim("n_fft")?,
+            batch: dim("batch")?,
+        },
+        "concat" => Shape::Concat {
+            rows: dim("rows")?,
+            cols: dim("cols")?,
+        },
+        other => return Err(format!("unknown shape kind `{other}`")),
+    };
+    let k = Kernel {
+        name,
+        ty,
+        shape,
+        dw,
+    };
+    if !k.shape_matches_type() {
+        return Err(format!("shape kind does not match kernel type for `{}`", k.name));
+    }
+    Ok(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm(name: &str, m: u64, k: u64, n: u64) -> Kernel {
+        Kernel::new(name, KernelType::MatMul, Shape::MatMul { m, k, n }, DataWidth::Int8)
+    }
+
+    #[test]
+    fn groups_cover_detection() {
+        let mut w = Workload::new("t");
+        w.push_group("g0", vec![mm("a", 2, 2, 2), mm("b", 2, 2, 2)]);
+        w.push_group("g1", vec![mm("c", 2, 2, 2)]);
+        assert!(w.groups_cover_all());
+        w.push(mm("loose", 2, 2, 2));
+        assert!(!w.groups_cover_all());
+    }
+
+    #[test]
+    fn totals() {
+        let mut w = Workload::new("t");
+        w.push(mm("a", 4, 4, 4));
+        w.push(mm("b", 2, 2, 2));
+        assert_eq!(w.total_ops(), 64 + 8);
+        assert_eq!(w.total_bytes().raw(), (16 + 16 + 16) + (4 + 4 + 4));
+    }
+
+    #[test]
+    fn slice_remaps_groups() {
+        let mut w = Workload::new("t");
+        w.push_group("g0", vec![mm("a", 2, 2, 2)]);
+        w.push_group("g1", vec![mm("b", 2, 2, 2), mm("c", 2, 2, 2)]);
+        let s = w.slice(1..3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.groups().len(), 1);
+        assert_eq!(s.groups()[0].range, 0..2);
+    }
+
+    #[test]
+    fn filter_by_type() {
+        let mut w = Workload::new("t");
+        w.push(mm("a", 2, 2, 2));
+        w.push(Kernel::new(
+            "sm",
+            KernelType::Softmax,
+            Shape::Rowwise { rows: 4, cols: 4 },
+            DataWidth::Int16,
+        ));
+        let only_mm = w.filter("mm-only", |k| k.ty == KernelType::MatMul);
+        assert_eq!(only_mm.len(), 1);
+        assert_eq!(only_mm.kernels()[0].name, "a");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut w = Workload::new("rt");
+        w.push_group(
+            "g0",
+            vec![
+                mm("a", 97, 128, 128),
+                Kernel::new(
+                    "sm",
+                    KernelType::Softmax,
+                    Shape::Rowwise { rows: 97, cols: 97 },
+                    DataWidth::Int16,
+                ),
+                Kernel::new(
+                    "fft",
+                    KernelType::FftMag,
+                    Shape::Fft { n_fft: 256, batch: 20 },
+                    DataWidth::Float32,
+                ),
+            ],
+        );
+        let j = w.to_json();
+        let parsed = Workload::from_json(&crate::util::json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed.kernels()[0], w.kernels()[0]);
+        assert_eq!(parsed.kernels()[2], w.kernels()[2]);
+        assert_eq!(parsed.groups(), w.groups());
+    }
+
+    #[test]
+    fn json_rejects_mismatched_shape() {
+        let text = r#"{"name":"x","kernels":[{"name":"k","type":"softmax","dw":"int8",
+            "shape":{"kind":"matmul","m":1,"k":1,"n":1}}],"groups":[]}"#;
+        let v = crate::util::json::parse(text).unwrap();
+        assert!(Workload::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn type_histogram_counts() {
+        let mut w = Workload::new("t");
+        w.push(mm("a", 2, 2, 2));
+        w.push(mm("b", 2, 2, 2));
+        let hist = w.type_histogram();
+        assert_eq!(hist, vec![(KernelType::MatMul, 2)]);
+    }
+}

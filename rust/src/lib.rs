@@ -1,0 +1,70 @@
+//! # MEDEA — Manager for Energy-efficient DNNs on hEterogeneous ULP Architectures
+//!
+//! A reproduction of *"MEDEA: A Design-Time Multi-Objective Manager for
+//! Energy-Efficient DNN Inference on Heterogeneous Ultra-Low Power Platforms"*
+//! (Taji et al., 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library is organized bottom-up:
+//!
+//! * [`util`] — zero-dependency substrates (JSON codec, CLI parser, typed
+//!   units, statistics, deterministic RNG, table formatting).
+//! * [`ir`] — the kernel-level workload representation `W = {k_1..k_N}` with
+//!   each kernel a `(τ, s, δ)` tuple, plus builders (transformer blocks, the
+//!   TSD seizure-detection model of the paper's case study).
+//! * [`platform`] — heterogeneous ULP platform descriptions: processing
+//!   elements `P`, V-F operating points `S_vf`, local-memory capacities
+//!   `C_LM`, kernel-PE operational constraints `Λ_op`; includes the
+//!   HEEPtimize preset (RISC-V CPU + OpenEdgeCGRA + Carus NMC, GF 22 nm FDX
+//!   characterization anchors from the paper).
+//! * [`timing`] / [`power`] — the characterization models standing in for the
+//!   paper's FPGA prototype (cycle counts) and ASIC power flow (PrimePower):
+//!   per-PE analytical cycle models and `P_stat + C_eff·V²·f` power models.
+//! * [`tiling`] — memory-aware adaptive tiling: footprint computation, tile
+//!   planning under `C_LM` and `Λ_op`, single- vs double-buffer execution
+//!   cycle estimation.
+//! * [`profile`] — the characterization harness that produces the timing
+//!   (`S_c`) and power (`S_P`) profiles MEDEA consumes, and their JSON
+//!   round-trip.
+//! * [`config`] — enumeration of the per-kernel configuration space `Ω_i`
+//!   (PE × V-F, with the cycle-minimal tiling mode pre-selected).
+//! * [`solver`] — Multiple-Choice Knapsack solvers: exact discretized-time DP,
+//!   exact branch-and-bound, Lagrangian relaxation, and a dominance-filtered
+//!   greedy heuristic.
+//! * [`manager`] — the MEDEA manager itself (§3.3 of the paper) with feature
+//!   switches for the §5.3 ablations, and the schedule type it emits.
+//! * [`baselines`] — the four comparison schedulers of §4.4.
+//! * [`sim`] — a tile-granular discrete-event simulator that *replays* a
+//!   schedule on the platform model, independently accounting time and energy
+//!   (DMA/compute overlap, V-F switches, sleep).
+//! * [`eeg`] — synthetic EEG generation and the FFT-magnitude frontend.
+//! * [`runtime`] — the PJRT path: loads AOT-compiled HLO artifacts (produced
+//!   by `python/compile/aot.py`) and executes them from Rust.
+//! * [`coordinator`] — a threaded inference service gluing schedule + sim +
+//!   runtime behind a request loop.
+//! * [`exp`] / [`report`] — drivers that regenerate every table and figure of
+//!   the paper's evaluation, and their formatting helpers.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod eeg;
+pub mod exp;
+pub mod ir;
+pub mod manager;
+pub mod platform;
+pub mod power;
+pub mod profile;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod tiling;
+pub mod timing;
+pub mod util;
+
+pub use ir::{Kernel, KernelType, Workload};
+pub use manager::{Medea, MedeaFeatures, Schedule};
+pub use platform::{Platform, PeId, VfPoint};
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,386 @@
+//! `medea` — the command-line entry point.
+//!
+//! Subcommands regenerate every table/figure of the paper, run schedules,
+//! characterize platforms, and serve the end-to-end inference demo.
+
+use medea::baselines;
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::{self, ExpContext};
+use medea::manager::medea::{Medea, MedeaFeatures, SolverKind};
+use medea::platform::loader::{load_platform, save_platform};
+use medea::report::{emit, Format};
+use medea::runtime::artifacts::ArtifactManifest;
+use medea::sim::replay::simulate;
+use medea::util::cli::{App, Args, CmdSpec, Parsed};
+use medea::util::units::Time;
+use std::path::{Path, PathBuf};
+
+fn app() -> App {
+    App::new("medea", "MEDEA: design-time multi-objective manager for energy-efficient DNN inference on heterogeneous ULP platforms")
+        .command(
+            CmdSpec::new("schedule", "Generate a MEDEA schedule for the TSD workload")
+                .opt_default("deadline-ms", "Application deadline in ms", "200")
+                .opt_default("solver", "MCKP solver: dp|bb|lagrange|greedy", "dp")
+                .opt("features", "Ablation: full|no-kerdvfs|no-kersched|no-adaptile")
+                .opt("save", "Write the schedule JSON to this path")
+                .flag("simulate", "Replay the schedule on the event simulator")
+                .flag("verbose", "Print every per-kernel decision"),
+        )
+        .command(
+            CmdSpec::new("baselines", "Run the four §4.4 baseline schedulers")
+                .opt_default("deadline-ms", "Application deadline in ms", "200"),
+        )
+        .command(CmdSpec::new("platform", "Show platform tables (Table 2/3) or export the preset")
+            .flag("table2", "Print Table 2 (V-F points)")
+            .flag("table3", "Print Table 3 (area breakdown)")
+            .opt("export", "Write the HEEPtimize platform JSON to this path")
+            .opt("load", "Validate + summarize a platform JSON"))
+        .command(
+            CmdSpec::new("tables", "Reproduce paper tables")
+                .flag("table2", "V-F points")
+                .flag("table3", "Area breakdown")
+                .flag("table4", "TSD modification cycle reductions")
+                .flag("table5", "MEDEA end-to-end breakdown")
+                .flag("table6", "Feature-ablation energies")
+                .opt("out-dir", "Persist CSV/MD copies under this directory"),
+        )
+        .command(
+            CmdSpec::new("fig5", "Reproduce Fig 5 (MEDEA vs baselines)")
+                .opt("out-dir", "Persist CSV/MD copies under this directory"),
+        )
+        .command(
+            CmdSpec::new("fig6", "Reproduce Fig 6 (decision snapshot)")
+                .opt_default("start", "First kernel index", "2")
+                .opt_default("len", "Number of kernels", "12")
+                .flag("histogram", "Print the aggregate (PE, V-F) histogram")
+                .opt("out-dir", "Persist CSV/MD copies under this directory"),
+        )
+        .command(
+            CmdSpec::new("fig7", "Reproduce Fig 7 (CGRA/Carus crossover)")
+                .opt("out-dir", "Persist CSV/MD copies under this directory"),
+        )
+        .command(
+            CmdSpec::new("fig8", "Reproduce Fig 8 + Table 6 (feature ablations)")
+                .opt("out-dir", "Persist CSV/MD copies under this directory"),
+        )
+        .command(
+            CmdSpec::new("all", "Reproduce every table and figure")
+                .opt_default("out-dir", "Persist CSV/MD copies under this directory", "results"),
+        )
+        .command(
+            CmdSpec::new("sensitivity", "Sweep calibrated substrate constants (DMA bandwidth, NMC array energy, solver backend)")
+                .opt("out-dir", "Persist CSV/MD copies under this directory"),
+        )
+        .command(
+            CmdSpec::new("serve", "End-to-end demo: synthetic EEG -> MEDEA schedule -> sim -> PJRT inference")
+                .opt_default("windows", "Number of EEG windows", "10")
+                .opt_default("deadline-ms", "Per-window deadline in ms", "200")
+                .opt_default("seed", "EEG generator seed", "42")
+                .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)"),
+        )
+}
+
+fn main() {
+    logger_init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    match app.parse(&argv) {
+        Ok(Parsed::Help(h)) => println!("{h}"),
+        Ok(Parsed::Command(name, args)) => {
+            if let Err(e) = dispatch(&name, &args) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn logger_init() {
+    struct Stderr;
+    impl log::Log for Stderr {
+        fn enabled(&self, _: &log::Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &log::Record) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: Stderr = Stderr;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(match std::env::var("MEDEA_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Warn,
+    });
+}
+
+fn out_dir(args: &Args) -> Option<PathBuf> {
+    args.get("out-dir").map(PathBuf::from)
+}
+
+fn dispatch(name: &str, args: &Args) -> Result<(), String> {
+    match name {
+        "schedule" => cmd_schedule(args),
+        "baselines" => cmd_baselines(args),
+        "platform" => cmd_platform(args),
+        "tables" => cmd_tables(args),
+        "fig5" => {
+            let ctx = ExpContext::paper();
+            emit(&exp::fig5::run(&ctx), "fig5", Format::Text, out_dir(args).as_deref());
+            Ok(())
+        }
+        "fig6" => {
+            let ctx = ExpContext::paper();
+            let start = args.req_parse::<usize>("start").map_err(|e| e.to_string())?;
+            let len = args.req_parse::<usize>("len").map_err(|e| e.to_string())?;
+            emit(
+                &exp::fig6::run(&ctx, start, len),
+                "fig6",
+                Format::Text,
+                out_dir(args).as_deref(),
+            );
+            if args.flag("histogram") {
+                emit(
+                    &exp::fig6::histogram(&ctx),
+                    "fig6_histogram",
+                    Format::Text,
+                    out_dir(args).as_deref(),
+                );
+            }
+            Ok(())
+        }
+        "fig7" => {
+            let ctx = ExpContext::paper();
+            emit(&exp::fig7::run(&ctx), "fig7", Format::Text, out_dir(args).as_deref());
+            Ok(())
+        }
+        "fig8" => {
+            let ctx = ExpContext::paper();
+            emit(&exp::fig8::table6(&ctx), "table6", Format::Text, out_dir(args).as_deref());
+            emit(&exp::fig8::run(&ctx), "fig8", Format::Text, out_dir(args).as_deref());
+            Ok(())
+        }
+        "sensitivity" => {
+            let ctx = ExpContext::paper();
+            emit(&exp::sensitivity::dma_sweep(&ctx), "sens_dma", Format::Text, out_dir(args).as_deref());
+            emit(&exp::sensitivity::efixed_sweep(&ctx), "sens_efixed", Format::Text, out_dir(args).as_deref());
+            emit(&exp::sensitivity::solver_sweep(&ctx), "sens_solver", Format::Text, out_dir(args).as_deref());
+            Ok(())
+        }
+        "all" => cmd_all(args),
+        "serve" => cmd_serve(args),
+        other => Err(format!("unhandled command {other}")),
+    }
+}
+
+fn parse_features(args: &Args) -> Result<MedeaFeatures, String> {
+    Ok(match args.get("features") {
+        None | Some("full") => MedeaFeatures::default(),
+        Some("no-kerdvfs") => MedeaFeatures::without_kernel_dvfs(),
+        Some("no-kersched") => MedeaFeatures::without_kernel_sched(),
+        Some("no-adaptile") => MedeaFeatures::without_adaptive_tiling(),
+        Some(other) => return Err(format!("unknown feature set `{other}`")),
+    })
+}
+
+fn cmd_schedule(args: &Args) -> Result<(), String> {
+    let ctx = ExpContext::paper();
+    let deadline = Time::from_ms(args.req_parse::<f64>("deadline-ms").map_err(|e| e.to_string())?);
+    let solver = SolverKind::from_name(args.get("solver").unwrap_or("dp"))
+        .ok_or("unknown solver (dp|bb|lagrange|greedy)")?;
+    let medea = Medea::new(&ctx.platform, &ctx.profiles, &ctx.model)
+        .with_features(parse_features(args)?)
+        .with_solver(solver);
+    let schedule = medea
+        .schedule(&ctx.workload, deadline)
+        .map_err(|e| e.to_string())?;
+
+    println!(
+        "scheduler={} deadline={:.0} ms active={:.2} ms energy={:.0} uJ (E_t={:.0} uJ) switches={} optimal={}",
+        schedule.scheduler,
+        deadline.as_ms(),
+        schedule.active_time().as_ms(),
+        schedule.active_energy().as_uj(),
+        schedule.total_energy(&ctx.platform).as_uj(),
+        schedule.vf_switch_count(),
+        schedule.optimal,
+    );
+    if args.flag("verbose") {
+        for d in &schedule.decisions {
+            println!(
+                "  {:>3} {:<22} {:>6} {:>14} {:>3} {:>9.1} us {:>8.3} uJ",
+                d.kernel,
+                ctx.workload.kernels()[d.kernel].name,
+                ctx.platform.pe(d.pe).name,
+                ctx.platform.vf.get(d.vf_idx).label(),
+                d.mode.name(),
+                d.time.as_us(),
+                d.energy.as_uj(),
+            );
+        }
+    }
+    if args.flag("simulate") {
+        let r = simulate(&ctx.workload, &ctx.platform, &ctx.model, &schedule);
+        println!(
+            "sim: active={:.2} ms energy={:.0} uJ (E_t={:.0} uJ) events={} dma={:.2} ms pe_busy=[{}] deadline_met={}",
+            r.active_time.as_ms(),
+            r.active_energy.as_uj(),
+            r.total_energy().as_uj(),
+            r.events,
+            r.dma_time.as_ms(),
+            r.pe_busy
+                .iter()
+                .map(|t| format!("{:.1}ms", t.as_ms()))
+                .collect::<Vec<_>>()
+                .join(", "),
+            r.deadline_met,
+        );
+    }
+    if let Some(path) = args.get("save") {
+        schedule.save(Path::new(path))?;
+        println!("schedule written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_baselines(args: &Args) -> Result<(), String> {
+    let ctx = ExpContext::paper();
+    let deadline = Time::from_ms(args.req_parse::<f64>("deadline-ms").map_err(|e| e.to_string())?);
+    let (w, p, pr, m) = (&ctx.workload, &ctx.platform, &ctx.profiles, &ctx.model);
+    let schedules = vec![
+        baselines::cpu_max_vf(w, p, pr, m, deadline).map_err(|e| e.to_string())?,
+        baselines::static_accel_max_vf(w, p, pr, m, deadline).map_err(|e| e.to_string())?,
+        baselines::static_accel_app_dvfs(w, p, pr, m, deadline).map_err(|e| e.to_string())?,
+        baselines::coarse_grain_app_dvfs(w, p, pr, m, deadline).map_err(|e| e.to_string())?,
+    ];
+    for s in schedules {
+        let r = simulate(w, p, m, &s);
+        println!(
+            "{:<22} active={:>7.2} ms  E_t={:>7.0} uJ  meets={}",
+            s.scheduler,
+            r.active_time.as_ms(),
+            r.total_energy().as_uj(),
+            r.deadline_met
+        );
+    }
+    Ok(())
+}
+
+fn cmd_platform(args: &Args) -> Result<(), String> {
+    let ctx = ExpContext::paper();
+    let mut did_something = false;
+    if args.flag("table2") {
+        println!("{}", exp::tables::table2(&ctx).to_text());
+        did_something = true;
+    }
+    if args.flag("table3") {
+        println!("{}", exp::tables::table3(&ctx).to_text());
+        did_something = true;
+    }
+    if let Some(path) = args.get("export") {
+        save_platform(&ctx.platform, Path::new(path))?;
+        println!("platform written to {path}");
+        did_something = true;
+    }
+    if let Some(path) = args.get("load") {
+        let p = load_platform(Path::new(path))?;
+        println!(
+            "loaded `{}`: {} PEs, {} V-F points, L2 {}, sleep {:.0} uW",
+            p.name,
+            p.pes.len(),
+            p.vf.len(),
+            p.l2,
+            p.sleep_power.as_uw()
+        );
+        did_something = true;
+    }
+    if !did_something {
+        println!("{}", exp::tables::table2(&ctx).to_text());
+        println!("{}", exp::tables::table3(&ctx).to_text());
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<(), String> {
+    let ctx = ExpContext::paper();
+    let dir = out_dir(args);
+    let all = !(args.flag("table2")
+        || args.flag("table3")
+        || args.flag("table4")
+        || args.flag("table5")
+        || args.flag("table6"));
+    if all || args.flag("table2") {
+        emit(&exp::tables::table2(&ctx), "table2", Format::Text, dir.as_deref());
+    }
+    if all || args.flag("table3") {
+        emit(&exp::tables::table3(&ctx), "table3", Format::Text, dir.as_deref());
+    }
+    if all || args.flag("table4") {
+        emit(&exp::tables::table4(&ctx), "table4", Format::Text, dir.as_deref());
+    }
+    if all || args.flag("table5") {
+        emit(&exp::tables::table5(&ctx), "table5", Format::Text, dir.as_deref());
+    }
+    if all || args.flag("table6") {
+        emit(&exp::fig8::table6(&ctx), "table6", Format::Text, dir.as_deref());
+    }
+    Ok(())
+}
+
+fn cmd_all(args: &Args) -> Result<(), String> {
+    let ctx = ExpContext::paper();
+    let dir = out_dir(args);
+    let d = dir.as_deref();
+    emit(&exp::tables::table2(&ctx), "table2", Format::Text, d);
+    emit(&exp::tables::table3(&ctx), "table3", Format::Text, d);
+    emit(&exp::tables::table4(&ctx), "table4", Format::Text, d);
+    emit(&exp::tables::table5(&ctx), "table5", Format::Text, d);
+    emit(&exp::fig5::run(&ctx), "fig5", Format::Text, d);
+    emit(&exp::fig6::run(&ctx, 2, 12), "fig6", Format::Text, d);
+    emit(&exp::fig6::histogram(&ctx), "fig6_histogram", Format::Text, d);
+    emit(&exp::fig7::run(&ctx), "fig7", Format::Text, d);
+    emit(&exp::fig8::table6(&ctx), "table6", Format::Text, d);
+    emit(&exp::fig8::run(&ctx), "fig8", Format::Text, d);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use medea::coordinator::service::{Coordinator, Request};
+    let windows: usize = args.req_parse("windows").map_err(|e| e.to_string())?;
+    let deadline = Time::from_ms(args.req_parse::<f64>("deadline-ms").map_err(|e| e.to_string())?);
+    let seed: u64 = args.req_parse("seed").map_err(|e| e.to_string())?;
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ArtifactManifest::default_dir);
+
+    let coord = Coordinator::start(&dir).map_err(|e| e.to_string())?;
+    let mut gen = EegGenerator::new(SynthConfig::default(), seed);
+    for _ in 0..windows {
+        let window = gen.next_window();
+        let truth = window.seizure;
+        let out = coord
+            .infer(Request { window, deadline })
+            .map_err(|e| e.to_string())?;
+        println!(
+            "window {:>3}: pred={:<10} truth={:<10} logits=[{:+.3} {:+.3}] sim: {:.1} ms / {:.0} uJ (met={}) host={:?}",
+            out.window_index,
+            if out.prediction.seizure { "seizure" } else { "background" },
+            if truth { "seizure" } else { "background" },
+            out.prediction.logits[0],
+            out.prediction.logits[1],
+            out.sim.active_time.as_ms(),
+            out.sim.total_energy().as_uj(),
+            out.sim.deadline_met,
+            out.host_latency,
+        );
+    }
+    let metrics = coord.shutdown();
+    println!("---\n{}", metrics.summary());
+    Ok(())
+}

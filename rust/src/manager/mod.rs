@@ -1,0 +1,7 @@
+//! The MEDEA manager (§3.3): timing-constrained energy-minimal scheduling.
+
+pub mod medea;
+pub mod schedule;
+
+pub use medea::{Medea, MedeaFeatures};
+pub use schedule::{Decision, Schedule};

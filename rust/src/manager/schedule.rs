@@ -1,0 +1,252 @@
+//! The schedule `A = {ω_1*, …, ω_N*}` emitted by a scheduler.
+
+use crate::ir::Workload;
+use crate::platform::{PeId, Platform};
+use crate::tiling::modes::TilingMode;
+use crate::util::json::{parse, Json, JsonObj};
+use crate::util::units::{Energy, Time};
+
+/// One per-kernel decision `ω_i* = (p*, v*, c*)` with its estimates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// Kernel index in the workload.
+    pub kernel: usize,
+    pub pe: PeId,
+    pub vf_idx: usize,
+    pub mode: TilingMode,
+    /// Estimated `T_a(ω*)`.
+    pub time: Time,
+    /// Estimated `E_a(ω*)`.
+    pub energy: Energy,
+}
+
+/// A complete schedule for a workload under a deadline.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Producing scheduler ("medea", "cpu-maxvf", …).
+    pub scheduler: String,
+    pub workload: String,
+    pub deadline: Time,
+    pub decisions: Vec<Decision>,
+    /// Whether the producing solver certified optimality (always false for
+    /// baselines).
+    pub optimal: bool,
+}
+
+impl Schedule {
+    /// Estimated total active time `T_{t,a}`.
+    pub fn active_time(&self) -> Time {
+        self.decisions.iter().map(|d| d.time).sum()
+    }
+
+    /// Estimated total active energy `E_{t,a}`.
+    pub fn active_energy(&self) -> Energy {
+        self.decisions.iter().map(|d| d.energy).sum()
+    }
+
+    /// Estimated sleep time within the deadline window.
+    pub fn sleep_time(&self) -> Time {
+        Time((self.deadline - self.active_time()).raw().max(0.0))
+    }
+
+    /// Estimated total energy `E_t = E_{t,a} + P_slp·max(0, T_d − T_{t,a})`
+    /// (Eq. 7).
+    pub fn total_energy(&self, platform: &Platform) -> Energy {
+        self.active_energy() + platform.sleep_power * self.sleep_time()
+    }
+
+    pub fn meets_deadline(&self) -> bool {
+        self.active_time().raw() <= self.deadline.raw() * (1.0 + 1e-9)
+    }
+
+    /// Number of V-F transitions along the kernel sequence (the sim charges
+    /// each one `vf_switch_cycles`).
+    pub fn vf_switch_count(&self) -> usize {
+        self.decisions
+            .windows(2)
+            .filter(|w| w[0].vf_idx != w[1].vf_idx)
+            .count()
+    }
+
+    /// Distinct (pe, vf) histogram — used by the Fig 6 snapshot.
+    pub fn assignment_histogram(&self) -> Vec<((PeId, usize), usize)> {
+        let mut hist: Vec<((PeId, usize), usize)> = Vec::new();
+        for d in &self.decisions {
+            match hist.iter_mut().find(|(k, _)| *k == (d.pe, d.vf_idx)) {
+                Some((_, n)) => *n += 1,
+                None => hist.push(((d.pe, d.vf_idx), 1)),
+            }
+        }
+        hist.sort_by_key(|((pe, vf), _)| (pe.0, *vf));
+        hist
+    }
+
+    /// Structural validation against the workload/platform: one decision per
+    /// kernel, in order, referencing valid PEs/V-F indices, and every
+    /// decision's (PE, type, width) is allowed by `Λ_op`.
+    pub fn validate(&self, workload: &Workload, platform: &Platform) -> Result<(), String> {
+        if self.decisions.len() != workload.len() {
+            return Err(format!(
+                "schedule has {} decisions for {} kernels",
+                self.decisions.len(),
+                workload.len()
+            ));
+        }
+        for (i, d) in self.decisions.iter().enumerate() {
+            if d.kernel != i {
+                return Err(format!("decision {i} refers to kernel {}", d.kernel));
+            }
+            if d.pe.0 >= platform.pes.len() {
+                return Err(format!("decision {i}: invalid pe {}", d.pe));
+            }
+            if d.vf_idx >= platform.vf.len() {
+                return Err(format!("decision {i}: invalid vf index {}", d.vf_idx));
+            }
+            let k = &workload.kernels()[i];
+            if !platform.constraints.supports(d.pe, k.ty, k.dw) {
+                return Err(format!(
+                    "decision {i}: kernel `{}` not executable on {}",
+                    k.name, d.pe
+                ));
+            }
+            if d.time.raw() < 0.0 || d.energy.raw() < 0.0 {
+                return Err(format!("decision {i}: negative estimate"));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("scheduler", self.scheduler.clone());
+        o.insert("workload", self.workload.clone());
+        o.insert("deadline_ms", self.deadline.as_ms());
+        o.insert("optimal", self.optimal);
+        o.insert("active_time_ms", self.active_time().as_ms());
+        o.insert("active_energy_uj", self.active_energy().as_uj());
+        let ds: Vec<Json> = self
+            .decisions
+            .iter()
+            .map(|d| {
+                let mut dj = JsonObj::new();
+                dj.insert("kernel", d.kernel);
+                dj.insert("pe", d.pe.0);
+                dj.insert("vf", d.vf_idx);
+                dj.insert("mode", d.mode.name());
+                dj.insert("time_us", d.time.as_us());
+                dj.insert("energy_uj", d.energy.as_uj());
+                Json::Obj(dj)
+            })
+            .collect();
+        o.insert("decisions", Json::Arr(ds));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Schedule, String> {
+        let mut decisions = Vec::new();
+        for dv in v.req("decisions")?.as_arr().ok_or("decisions")? {
+            decisions.push(Decision {
+                kernel: dv.req("kernel")?.as_usize().ok_or("kernel")?,
+                pe: PeId(dv.req("pe")?.as_usize().ok_or("pe")?),
+                vf_idx: dv.req("vf")?.as_usize().ok_or("vf")?,
+                mode: TilingMode::from_name(dv.req("mode")?.as_str().ok_or("mode")?)
+                    .ok_or("mode")?,
+                time: Time::from_us(dv.req("time_us")?.as_f64().ok_or("time_us")?),
+                energy: Energy::from_uj(dv.req("energy_uj")?.as_f64().ok_or("energy_uj")?),
+            });
+        }
+        Ok(Schedule {
+            scheduler: v.req("scheduler")?.as_str().ok_or("scheduler")?.to_string(),
+            workload: v.req("workload")?.as_str().ok_or("workload")?.to_string(),
+            deadline: Time::from_ms(v.req("deadline_ms")?.as_f64().ok_or("deadline_ms")?),
+            decisions,
+            optimal: v.req("optimal")?.as_bool().ok_or("optimal")?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty()).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Schedule, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Schedule::from_json(&parse(&text).map_err(|e| e.to_string())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Schedule {
+        Schedule {
+            scheduler: "test".into(),
+            workload: "w".into(),
+            deadline: Time::from_ms(200.0),
+            decisions: vec![
+                Decision {
+                    kernel: 0,
+                    pe: PeId(1),
+                    vf_idx: 0,
+                    mode: TilingMode::DoubleBuffer,
+                    time: Time::from_ms(60.0),
+                    energy: Energy::from_uj(100.0),
+                },
+                Decision {
+                    kernel: 1,
+                    pe: PeId(0),
+                    vf_idx: 2,
+                    mode: TilingMode::SingleBuffer,
+                    time: Time::from_ms(40.0),
+                    energy: Energy::from_uj(50.0),
+                },
+            ],
+            optimal: true,
+        }
+    }
+
+    #[test]
+    fn totals_and_sleep() {
+        let s = sample();
+        assert!((s.active_time().as_ms() - 100.0).abs() < 1e-9);
+        assert!((s.active_energy().as_uj() - 150.0).abs() < 1e-9);
+        assert!((s.sleep_time().as_ms() - 100.0).abs() < 1e-9);
+        assert!(s.meets_deadline());
+        assert_eq!(s.vf_switch_count(), 1);
+    }
+
+    #[test]
+    fn total_energy_includes_sleep() {
+        let s = sample();
+        let p = crate::platform::heeptimize::heeptimize();
+        let e = s.total_energy(&p);
+        // 150 µJ + 129 µW × 100 ms = 150 + 12.9 µJ
+        assert!((e.as_uj() - 162.9).abs() < 0.01);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let s = sample();
+        let j = s.to_json().to_pretty();
+        let back = Schedule::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back.decisions.len(), s.decisions.len());
+        for (a, b) in back.decisions.iter().zip(&s.decisions) {
+            assert_eq!((a.kernel, a.pe, a.vf_idx, a.mode), (b.kernel, b.pe, b.vf_idx, b.mode));
+            assert!((a.time.raw() - b.time.raw()).abs() < 1e-12);
+            assert!((a.energy.raw() - b.energy.raw()).abs() < 1e-15);
+        }
+        assert_eq!(back.scheduler, s.scheduler);
+        assert!((back.deadline.raw() - s.deadline.raw()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assignment_histogram_counts() {
+        let s = sample();
+        let hist = s.assignment_histogram();
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[0], ((PeId(0), 2), 1));
+        assert_eq!(hist[1], ((PeId(1), 0), 1));
+    }
+}

@@ -1,0 +1,150 @@
+//! Kernel-PE operational constraints `Λ_op` (Eq. 5).
+//!
+//! Each PE may (a) not support a kernel type at all, (b) restrict operand
+//! data widths, or (c) bound the largest dimension it can address (e.g.
+//! Carus vector length, CGRA column addressing). MEDEA consults these when
+//! enumerating valid configurations and when tiling.
+
+use crate::ir::{DataWidth, KernelType};
+use crate::platform::pe::PeId;
+use std::collections::BTreeMap;
+
+/// Constraint `λ_{p_j, τ_i}` for one (PE, kernel-type) pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpConstraint {
+    /// Largest single dimension the PE can address for this kernel type
+    /// (None: unbounded — only LM capacity limits the tile).
+    pub max_dim: Option<u64>,
+    /// Supported operand data widths (empty means all widths).
+    pub widths: Vec<DataWidth>,
+}
+
+impl OpConstraint {
+    pub fn unbounded() -> OpConstraint {
+        OpConstraint {
+            max_dim: None,
+            widths: Vec::new(),
+        }
+    }
+
+    pub fn with_max_dim(max_dim: u64) -> OpConstraint {
+        OpConstraint {
+            max_dim: Some(max_dim),
+            widths: Vec::new(),
+        }
+    }
+
+    pub fn widths(mut self, widths: &[DataWidth]) -> OpConstraint {
+        self.widths = widths.to_vec();
+        self
+    }
+
+    pub fn allows_width(&self, dw: DataWidth) -> bool {
+        self.widths.is_empty() || self.widths.contains(&dw)
+    }
+}
+
+/// The full constraint set `Λ_op`: `(p_j, τ_i) → λ`.
+///
+/// A missing entry means *the PE does not support the kernel type* — support
+/// must be declared explicitly, mirroring how accelerator kernel libraries
+/// enumerate what they implement.
+#[derive(Debug, Clone, Default)]
+pub struct OpConstraints {
+    map: BTreeMap<(usize, KernelType), OpConstraint>,
+}
+
+impl OpConstraints {
+    pub fn new() -> OpConstraints {
+        OpConstraints::default()
+    }
+
+    pub fn allow(&mut self, pe: PeId, ty: KernelType, c: OpConstraint) {
+        self.map.insert((pe.0, ty), c);
+    }
+
+    /// Allow every kernel type on `pe` (used for the host CPU).
+    pub fn allow_all(&mut self, pe: PeId) {
+        for ty in KernelType::ALL {
+            self.allow(pe, ty, OpConstraint::unbounded());
+        }
+    }
+
+    /// The constraint for `(pe, ty)`; None means unsupported.
+    pub fn get(&self, pe: PeId, ty: KernelType) -> Option<&OpConstraint> {
+        self.map.get(&(pe.0, ty))
+    }
+
+    /// Is `(pe, ty, dw)` executable at all (ignoring size/tiling)?
+    pub fn supports(&self, pe: PeId, ty: KernelType, dw: DataWidth) -> bool {
+        self.get(pe, ty).is_some_and(|c| c.allows_width(dw))
+    }
+
+    /// Kernel types supported on `pe`.
+    pub fn supported_types(&self, pe: PeId) -> Vec<KernelType> {
+        KernelType::ALL
+            .into_iter()
+            .filter(|ty| self.map.contains_key(&(pe.0, *ty)))
+            .collect()
+    }
+
+    pub fn validate(&self, n_pes: usize) -> Result<(), String> {
+        for ((pe, ty), c) in &self.map {
+            if *pe >= n_pes {
+                return Err(format!("constraint for nonexistent pe{pe} / {ty}"));
+            }
+            if let Some(0) = c.max_dim {
+                return Err(format!("zero max_dim for pe{pe} / {ty}"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (PeId, KernelType, &OpConstraint)> {
+        self.map.iter().map(|((pe, ty), c)| (PeId(*pe), *ty, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_entry_means_unsupported() {
+        let mut c = OpConstraints::new();
+        c.allow(PeId(1), KernelType::MatMul, OpConstraint::with_max_dim(256));
+        assert!(c.supports(PeId(1), KernelType::MatMul, DataWidth::Int8));
+        assert!(!c.supports(PeId(1), KernelType::Softmax, DataWidth::Int8));
+        assert!(!c.supports(PeId(0), KernelType::MatMul, DataWidth::Int8));
+    }
+
+    #[test]
+    fn width_restrictions() {
+        let mut c = OpConstraints::new();
+        c.allow(
+            PeId(0),
+            KernelType::MatMul,
+            OpConstraint::unbounded().widths(&[DataWidth::Int8, DataWidth::Int16]),
+        );
+        assert!(c.supports(PeId(0), KernelType::MatMul, DataWidth::Int8));
+        assert!(!c.supports(PeId(0), KernelType::MatMul, DataWidth::Float32));
+    }
+
+    #[test]
+    fn allow_all_covers_everything() {
+        let mut c = OpConstraints::new();
+        c.allow_all(PeId(0));
+        for ty in KernelType::ALL {
+            assert!(c.supports(PeId(0), ty, DataWidth::Float32));
+        }
+        assert_eq!(c.supported_types(PeId(0)).len(), KernelType::ALL.len());
+    }
+
+    #[test]
+    fn validation() {
+        let mut c = OpConstraints::new();
+        c.allow(PeId(5), KernelType::Add, OpConstraint::unbounded());
+        assert!(c.validate(3).is_err());
+        assert!(c.validate(6).is_ok());
+    }
+}

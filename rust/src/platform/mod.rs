@@ -1,0 +1,106 @@
+//! Heterogeneous ULP platform descriptions (§3.1.2).
+//!
+//! A [`Platform`] bundles the PE set `P`, the V-F operating points `S_vf`,
+//! the memory hierarchy (`C_LM`, shared L2), the kernel-PE operational
+//! constraints `Λ_op`, and the physical power description used by the
+//! characterization stand-ins. [`heeptimize`] provides the paper's
+//! evaluation platform as a preset.
+
+pub mod constraints;
+pub mod heeptimize;
+pub mod loader;
+pub mod pe;
+pub mod vf;
+
+pub use constraints::{OpConstraint, OpConstraints};
+pub use pe::{DmaSpec, Pe, PeClass, PeId, PePower};
+pub use vf::{VfPoint, VfTable};
+
+use crate::util::units::{Bytes, Power};
+
+/// A complete heterogeneous ULP platform description.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub pes: Vec<Pe>,
+    pub vf: VfTable,
+    /// Shared L2 capacity (intermediate tier between flash and PE LMs).
+    pub l2: Bytes,
+    /// Global idle/deep-sleep power `P_slp`.
+    pub sleep_power: Power,
+    /// Kernel-PE operational constraints `Λ_op`.
+    pub constraints: OpConstraints,
+    /// Cycles a PE stalls when the platform switches V-F (regulator settle),
+    /// charged at the *new* operating point by the timing model.
+    pub vf_switch_cycles: u64,
+    /// Whole-SoC "active base" power (bus fabric, L2, DMA engines, host
+    /// standby) drawn whenever the platform is awake, on top of the running
+    /// PE's own power. Characterized kernel power profiles `S_P` include it,
+    /// matching the paper's system-level post-synthesis measurements.
+    pub active_base: PePower,
+}
+
+impl Platform {
+    pub fn pe(&self, id: PeId) -> &Pe {
+        &self.pes[id.0]
+    }
+
+    pub fn pe_by_name(&self, name: &str) -> Option<&Pe> {
+        self.pes.iter().find(|p| p.name == name)
+    }
+
+    pub fn pe_ids(&self) -> impl Iterator<Item = PeId> + '_ {
+        (0..self.pes.len()).map(PeId)
+    }
+
+    /// The CPU PE (exactly one per platform by convention).
+    pub fn cpu(&self) -> &Pe {
+        self.pes
+            .iter()
+            .find(|p| p.class == PeClass::RiscvCpu)
+            .expect("platform has no CPU")
+    }
+
+    /// Accelerator PEs (non-CPU).
+    pub fn accelerators(&self) -> impl Iterator<Item = &Pe> {
+        self.pes.iter().filter(|p| p.class != PeClass::RiscvCpu)
+    }
+
+    /// Structural validation: ids are dense, exactly one CPU, V-F table
+    /// non-empty and monotone, constraints reference valid PEs.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, pe) in self.pes.iter().enumerate() {
+            if pe.id.0 != i {
+                return Err(format!("pe `{}` id {} != index {i}", pe.name, pe.id.0));
+            }
+        }
+        let cpus = self
+            .pes
+            .iter()
+            .filter(|p| p.class == PeClass::RiscvCpu)
+            .count();
+        if cpus != 1 {
+            return Err(format!("expected exactly 1 CPU, found {cpus}"));
+        }
+        self.vf.validate()?;
+        self.constraints.validate(self.pes.len())?;
+        if self.sleep_power.raw() < 0.0 {
+            return Err("negative sleep power".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::heeptimize::heeptimize;
+
+    #[test]
+    fn preset_validates() {
+        let p = heeptimize();
+        p.validate().unwrap();
+        assert_eq!(p.pes.len(), 3);
+        assert_eq!(p.accelerators().count(), 2);
+        assert_eq!(p.cpu().name, "cpu");
+    }
+}

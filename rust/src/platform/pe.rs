@@ -1,0 +1,184 @@
+//! Processing elements and their physical (power, DMA, memory) description.
+
+use crate::ir::KernelType;
+use crate::util::units::{Bytes, Freq, Power, Voltage};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Index of a PE within its platform (dense, equals position in `pes`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PeId(pub usize);
+
+impl fmt::Display for PeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pe{}", self.0)
+    }
+}
+
+/// Microarchitectural family of a PE — the timing and power models key off
+/// this (plus per-PE constants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PeClass {
+    /// In-order RV32IMC host core (CV32E40P-like).
+    RiscvCpu,
+    /// 4×4 coarse-grained reconfigurable array (OpenEdgeCGRA-like).
+    Cgra,
+    /// Near-memory-computing vector unit over an SRAM VRF (Carus-like).
+    Nmc,
+}
+
+impl PeClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            PeClass::RiscvCpu => "riscv-cpu",
+            PeClass::Cgra => "cgra",
+            PeClass::Nmc => "nmc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PeClass> {
+        match s {
+            "riscv-cpu" => Some(PeClass::RiscvCpu),
+            "cgra" => Some(PeClass::Cgra),
+            "nmc" => Some(PeClass::Nmc),
+            _ => None,
+        }
+    }
+}
+
+/// DMA path between the shared L2 and this PE's local memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmaSpec {
+    /// Aggregate transfer width, bytes per cycle (ports × port width).
+    pub bytes_per_cycle: f64,
+    /// Fixed per-transfer programming/arbitration cost in cycles.
+    pub setup_cycles: u64,
+}
+
+/// Physical power description of one PE, used by the ASIC-flow stand-in.
+///
+/// `P(v, f) = P_stat(v) + a_τ · (C_eff · v² + e_fixed) · f` with
+/// `P_stat(v) = p_stat_ref · (v / v_ref)^leak_exp` — leakage grows
+/// super-linearly with supply voltage (DIBL); switching power follows the
+/// classic `C·V²·f` law scaled by a per-kernel-type activity factor `a_τ`,
+/// plus an optional voltage-independent per-cycle energy `e_fixed` (used to
+/// model SRAM-array access energy on internally biased rails, the key to the
+/// NMC's flat power/voltage profile — paper Fig 7).
+#[derive(Debug, Clone)]
+pub struct PePower {
+    /// Static (leakage) power at `v_ref`.
+    pub p_stat_ref: Power,
+    /// Reference voltage for `p_stat_ref`.
+    pub v_ref: Voltage,
+    /// Leakage voltage exponent (logic ≈ 2.5–3, SRAM-dominant ≈ 2).
+    pub leak_exp: f64,
+    /// Effective switching capacitance in farads (per-cycle energy = C·V²).
+    pub c_eff: f64,
+    /// Voltage-independent per-cycle energy in joules (0 for pure logic).
+    pub e_fixed: f64,
+    /// Per-kernel-type activity factor (defaults to 1.0).
+    pub activity: BTreeMap<KernelType, f64>,
+}
+
+impl PePower {
+    /// Static power at voltage `v`.
+    pub fn p_stat(&self, v: Voltage) -> Power {
+        Power(self.p_stat_ref.raw() * (v.raw() / self.v_ref.raw()).powf(self.leak_exp))
+    }
+
+    /// Dynamic power for kernel type `ty` at `(v, f)`.
+    pub fn p_dyn(&self, ty: KernelType, v: Voltage, f: Freq) -> Power {
+        let a = self.activity.get(&ty).copied().unwrap_or(1.0);
+        Power(a * (self.c_eff * v.raw() * v.raw() + self.e_fixed) * f.raw())
+    }
+
+    /// Total active power for kernel type `ty` at `(v, f)`.
+    pub fn p_total(&self, ty: KernelType, v: Voltage, f: Freq) -> Power {
+        self.p_stat(v) + self.p_dyn(ty, v, f)
+    }
+}
+
+/// One processing element.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    pub id: PeId,
+    pub name: String,
+    pub class: PeClass,
+    /// Private local memory capacity `C_LM` (None: operates out of L2
+    /// directly, like the host CPU).
+    pub lm: Option<Bytes>,
+    /// DMA path L2 ↔ LM (None when `lm` is None).
+    pub dma: Option<DmaSpec>,
+    /// Physical power description.
+    pub power: PePower,
+}
+
+impl Pe {
+    /// Local-memory capacity; PEs without an LM report the shared L2 size
+    /// passed by the caller.
+    pub fn lm_capacity(&self, l2: Bytes) -> Bytes {
+        self.lm.unwrap_or(l2)
+    }
+
+    pub fn has_lm(&self) -> bool {
+        self.lm.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn power() -> PePower {
+        PePower {
+            p_stat_ref: Power::from_uw(100.0),
+            v_ref: Voltage(0.8),
+            leak_exp: 3.0,
+            c_eff: 20e-12,
+            e_fixed: 0.0,
+            activity: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn e_fixed_adds_flat_per_cycle_energy() {
+        let mut p = power();
+        p.e_fixed = 4e-12;
+        let pd = p.p_dyn(KernelType::MatMul, Voltage(0.5), Freq::from_mhz(100.0));
+        // (20e-12·0.25 + 4e-12) · 100e6 = 0.9 mW
+        assert!((pd.as_mw() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_power_scales_with_voltage() {
+        let p = power();
+        let at_ref = p.p_stat(Voltage(0.8));
+        assert!((at_ref.as_uw() - 100.0).abs() < 1e-9);
+        let at_half = p.p_stat(Voltage(0.4));
+        assert!((at_half.as_uw() - 100.0 * 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dynamic_power_cv2f() {
+        let p = power();
+        let pd = p.p_dyn(KernelType::MatMul, Voltage(0.5), Freq::from_mhz(100.0));
+        // 20e-12 * 0.25 * 100e6 = 0.5 mW
+        assert!((pd.as_mw() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activity_factor_applies() {
+        let mut p = power();
+        p.activity.insert(KernelType::Add, 0.5);
+        let mm = p.p_dyn(KernelType::MatMul, Voltage(0.8), Freq::from_mhz(100.0));
+        let add = p.p_dyn(KernelType::Add, Voltage(0.8), Freq::from_mhz(100.0));
+        assert!((add.raw() / mm.raw() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pe_class_round_trip() {
+        for c in [PeClass::RiscvCpu, PeClass::Cgra, PeClass::Nmc] {
+            assert_eq!(PeClass::from_name(c.name()), Some(c));
+        }
+    }
+}

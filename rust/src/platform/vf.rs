@@ -1,0 +1,139 @@
+//! Voltage-frequency operating points `S_vf` (Eq. 3).
+//!
+//! Consistent with the paper (and [33]), the platform always runs at the
+//! maximum supported frequency for each voltage: `f_l = F_max(v_l)`.
+
+use crate::util::units::{Freq, Voltage};
+
+/// One `(v_l, f_l)` operating point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VfPoint {
+    pub v: Voltage,
+    pub f: Freq,
+}
+
+impl VfPoint {
+    pub fn new(volts: f64, mhz: f64) -> VfPoint {
+        VfPoint {
+            v: Voltage(volts),
+            f: Freq::from_mhz(mhz),
+        }
+    }
+
+    /// Label like `0.65V@347MHz`.
+    pub fn label(&self) -> String {
+        format!("{:.2}V@{:.0}MHz", self.v.raw(), self.f.as_mhz())
+    }
+}
+
+/// The ordered set of operating points (ascending voltage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VfTable {
+    points: Vec<VfPoint>,
+}
+
+impl VfTable {
+    pub fn new(points: Vec<VfPoint>) -> VfTable {
+        let t = VfTable { points };
+        t.validate().expect("invalid V-F table");
+        t
+    }
+
+    pub fn points(&self) -> &[VfPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Index of a point (by exact voltage match).
+    pub fn index_of(&self, v: Voltage) -> Option<usize> {
+        self.points.iter().position(|p| p.v == v)
+    }
+
+    pub fn get(&self, idx: usize) -> VfPoint {
+        self.points[idx]
+    }
+
+    /// Lowest operating point (minimum voltage).
+    pub fn min(&self) -> VfPoint {
+        self.points[0]
+    }
+
+    /// Highest operating point (maximum voltage/frequency).
+    pub fn max(&self) -> VfPoint {
+        *self.points.last().unwrap()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.points.is_empty() {
+            return Err("empty V-F table".into());
+        }
+        for w in self.points.windows(2) {
+            if w[1].v.raw() <= w[0].v.raw() {
+                return Err(format!(
+                    "V-F table voltages not strictly increasing: {} then {}",
+                    w[0].label(),
+                    w[1].label()
+                ));
+            }
+            if w[1].f.raw() <= w[0].f.raw() {
+                return Err(format!(
+                    "V-F table frequencies not strictly increasing: {} then {}",
+                    w[0].label(),
+                    w[1].label()
+                ));
+            }
+        }
+        for p in &self.points {
+            if p.v.raw() <= 0.0 || p.f.raw() <= 0.0 {
+                return Err(format!("non-positive V-F point {}", p.label()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table2() -> VfTable {
+        VfTable::new(vec![
+            VfPoint::new(0.50, 122.0),
+            VfPoint::new(0.65, 347.0),
+            VfPoint::new(0.80, 578.0),
+            VfPoint::new(0.90, 690.0),
+        ])
+    }
+
+    #[test]
+    fn accessors() {
+        let t = table2();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.min().label(), "0.50V@122MHz");
+        assert_eq!(t.max().label(), "0.90V@690MHz");
+        assert_eq!(t.index_of(Voltage(0.65)), Some(1));
+        assert_eq!(t.index_of(Voltage(0.7)), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid V-F table")]
+    fn rejects_non_monotone() {
+        VfTable::new(vec![VfPoint::new(0.8, 578.0), VfPoint::new(0.5, 122.0)]);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(VfTable {
+            points: vec![]
+        }
+        .validate()
+        .is_err());
+    }
+}

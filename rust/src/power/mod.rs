@@ -1,0 +1,16 @@
+//! Power characterization stand-in (§3.1.3 `S_P` and §4.1.2 ASIC flow).
+//!
+//! The paper derives per-kernel power from post-synthesis simulation with
+//! per-voltage standard-cell libraries (PrimePower). Here, the platform's
+//! physical power description ([`crate::platform::pe::PePower`]) plays that
+//! role: characterized power for a kernel type on a PE at a voltage level is
+//!
+//! `P(p_j, τ_i, v_l) = P_base(v_l, f_l) + P_pe(p_j, τ_i, v_l, f_l)`
+//!
+//! i.e. whole-SoC power while that kernel runs (bus/L2/DMA base + the active
+//! PE), which is what a board-level measurement sees. As in the paper, power
+//! is assumed independent of the kernel's operational size `s_i`.
+
+pub mod model;
+
+pub use model::{decompose, kernel_power, PowerBreakdown};

@@ -1,0 +1,110 @@
+//! The `S_P` power model.
+
+use crate::ir::KernelType;
+use crate::platform::{PeId, Platform, VfPoint};
+use crate::util::units::{Freq, Power};
+
+/// Characterized whole-SoC active power while `ty` runs on `pe` at `vf`.
+pub fn kernel_power(platform: &Platform, pe: PeId, ty: KernelType, vf: VfPoint) -> Power {
+    let base = platform.active_base.p_total(ty, vf.v, vf.f);
+    let pe_power = platform.pe(pe).power.p_total(ty, vf.v, vf.f);
+    base + pe_power
+}
+
+/// Static/dynamic decomposition of a characterized power entry, mirroring
+/// the paper's two-frequency measurement technique (§3.1.3): static power is
+/// the `f → 0` limit at fixed voltage, dynamic is reported at `f_base`.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdown {
+    pub p_stat: Power,
+    pub p_dyn_base: Power,
+    pub f_base: Freq,
+}
+
+/// Decompose `S_P(pe, ty, v)` into static + dynamic-at-`f_base`.
+pub fn decompose(
+    platform: &Platform,
+    pe: PeId,
+    ty: KernelType,
+    vf: VfPoint,
+    f_base: Freq,
+) -> PowerBreakdown {
+    let p = platform.pe(pe);
+    let p_stat = platform.active_base.p_stat(vf.v) + p.power.p_stat(vf.v);
+    let p_dyn_base =
+        platform.active_base.p_dyn(ty, vf.v, f_base) + p.power.p_dyn(ty, vf.v, f_base);
+    PowerBreakdown {
+        p_stat,
+        p_dyn_base,
+        f_base,
+    }
+}
+
+impl PowerBreakdown {
+    /// Reconstruct total power at operating frequency `f` (dynamic power is
+    /// proportional to frequency at fixed voltage).
+    pub fn at(&self, f: Freq) -> Power {
+        self.p_stat + self.p_dyn_base * (f.raw() / self.f_base.raw())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::heeptimize::{heeptimize, CARUS, CGRA, CPU};
+
+    #[test]
+    fn decomposition_reconstructs_total() {
+        let p = heeptimize();
+        for pe in [CPU, CGRA, CARUS] {
+            for &vf in p.vf.points() {
+                let total = kernel_power(&p, pe, KernelType::MatMul, vf);
+                let bd = decompose(&p, pe, KernelType::MatMul, vf, Freq::from_mhz(100.0));
+                let rebuilt = bd.at(vf.f);
+                assert!(
+                    (total.raw() - rebuilt.raw()).abs() / total.raw() < 1e-12,
+                    "pe={pe} vf={}",
+                    vf.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn power_monotone_in_vf() {
+        let p = heeptimize();
+        for pe in [CPU, CGRA, CARUS] {
+            let mut last = Power::ZERO;
+            for &vf in p.vf.points() {
+                let pw = kernel_power(&p, pe, KernelType::MatMul, vf);
+                assert!(pw > last, "power must rise with V-F");
+                last = pw;
+            }
+        }
+    }
+
+    #[test]
+    fn active_power_scale_is_ulp() {
+        // Whole-SoC active power at the extremes must stay in the paper's
+        // envelope: ~1–2 mW at 0.5 V, ~15–25 mW at 0.9 V (Table 5 implies
+        // ≈1.65 mW avg at 0.5 V and ≈19 mW at the 50 ms/0.9 V corner).
+        let p = heeptimize();
+        let lo = kernel_power(&p, CGRA, KernelType::MatMul, p.vf.min());
+        let hi = kernel_power(&p, CARUS, KernelType::MatMul, p.vf.max());
+        assert!(
+            (0.8..2.5).contains(&lo.as_mw()),
+            "low-corner power {lo} out of ULP envelope"
+        );
+        assert!(
+            (10.0..40.0).contains(&hi.as_mw()),
+            "high-corner power {hi} out of ULP envelope"
+        );
+    }
+
+    #[test]
+    fn sleep_far_below_active() {
+        let p = heeptimize();
+        let min_active = kernel_power(&p, CPU, KernelType::Add, p.vf.min());
+        assert!(p.sleep_power.raw() < min_active.raw() / 5.0);
+    }
+}

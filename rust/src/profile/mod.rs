@@ -1,0 +1,14 @@
+//! Platform characterization profiles (§3.1.3): timing `S_c` + power `S_P`.
+//!
+//! [`harness`] plays the role of the paper's FPGA measurement campaign: it
+//! "executes" a grid of representative kernel sizes per (PE, kernel type,
+//! width) against the analytical cycle model and records exact cycle counts.
+//! [`tables`] stores the resulting profiles, fits extrapolators for
+//! non-profiled sizes (§3.3), and round-trips to JSON so characterized
+//! platforms can be shipped without the harness.
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::characterize;
+pub use tables::Profiles;

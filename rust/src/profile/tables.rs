@@ -1,0 +1,227 @@
+//! Profile storage, extrapolation and JSON round-trip.
+
+use crate::ir::{DataWidth, KernelType};
+use crate::platform::{PeId, Platform, VfPoint};
+use crate::power::kernel_power;
+use crate::timing::extrapolate::{Extrapolator, ProfilePoint};
+use crate::util::json::{parse, Json, JsonObj};
+use crate::util::units::{Cycles, Power};
+use std::collections::BTreeMap;
+
+type TimingKey = (usize, KernelType, DataWidth);
+
+/// Characterized platform profiles: per-(PE, type, width) processing-cycle
+/// tables with least-squares extrapolation, and per-(PE, type, V-F) power.
+#[derive(Debug, Clone, Default)]
+pub struct Profiles {
+    timing_points: BTreeMap<TimingKey, Vec<ProfilePoint>>,
+    fits: BTreeMap<TimingKey, Extrapolator>,
+    /// (pe, type, vf index) → characterized power.
+    power: BTreeMap<(usize, KernelType, usize), Power>,
+}
+
+impl Profiles {
+    pub fn new() -> Profiles {
+        Profiles::default()
+    }
+
+    /// Record one timing measurement (harness-side).
+    pub fn record_timing(
+        &mut self,
+        pe: PeId,
+        ty: KernelType,
+        dw: DataWidth,
+        ops: u64,
+        cycles: Cycles,
+    ) {
+        self.timing_points
+            .entry((pe.0, ty, dw))
+            .or_default()
+            .push(ProfilePoint {
+                ops,
+                cycles: cycles.raw(),
+            });
+        self.fits.remove(&(pe.0, ty, dw)); // invalidate fit
+    }
+
+    /// Record one power measurement (harness-side).
+    pub fn record_power(&mut self, pe: PeId, ty: KernelType, vf_idx: usize, p: Power) {
+        self.power.insert((pe.0, ty, vf_idx), p);
+    }
+
+    /// Fit all extrapolators (idempotent).
+    pub fn finalize(&mut self) {
+        for (key, pts) in &self.timing_points {
+            self.fits
+                .entry(*key)
+                .or_insert_with(|| Extrapolator::fit(pts));
+        }
+    }
+
+    /// Profiled/extrapolated processing-only cycles, `None` if the
+    /// combination was never profiled (⇒ not executable).
+    pub fn processing_cycles(
+        &self,
+        pe: PeId,
+        ty: KernelType,
+        dw: DataWidth,
+        ops: u64,
+    ) -> Option<Cycles> {
+        self.fits.get(&(pe.0, ty, dw)).map(|e| e.cycles(ops))
+    }
+
+    /// Characterized power for `(pe, ty)` at V-F index `vf_idx`.
+    pub fn power(&self, pe: PeId, ty: KernelType, vf_idx: usize) -> Option<Power> {
+        self.power.get(&(pe.0, ty, vf_idx)).copied()
+    }
+
+    /// Power via the platform model, for combos not measured (used as a
+    /// fallback and in tests).
+    pub fn power_or_model(
+        &self,
+        platform: &Platform,
+        pe: PeId,
+        ty: KernelType,
+        vf_idx: usize,
+        vf: VfPoint,
+    ) -> Power {
+        self.power(pe, ty, vf_idx)
+            .unwrap_or_else(|| kernel_power(platform, pe, ty, vf))
+    }
+
+    pub fn timing_entry_count(&self) -> usize {
+        self.timing_points.values().map(|v| v.len()).sum()
+    }
+
+    pub fn power_entry_count(&self) -> usize {
+        self.power.len()
+    }
+
+    /// Keys that have timing profiles (used to enumerate executable combos).
+    pub fn timing_keys(&self) -> impl Iterator<Item = (PeId, KernelType, DataWidth)> + '_ {
+        self.timing_points
+            .keys()
+            .map(|(pe, ty, dw)| (PeId(*pe), *ty, *dw))
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        let timing: Vec<Json> = self
+            .timing_points
+            .iter()
+            .map(|((pe, ty, dw), pts)| {
+                let mut e = JsonObj::new();
+                e.insert("pe", *pe);
+                e.insert("type", ty.name());
+                e.insert("dw", dw.name());
+                let points: Vec<Json> = pts
+                    .iter()
+                    .map(|p| {
+                        let mut pj = JsonObj::new();
+                        pj.insert("ops", p.ops);
+                        pj.insert("cycles", p.cycles);
+                        Json::Obj(pj)
+                    })
+                    .collect();
+                e.insert("points", Json::Arr(points));
+                Json::Obj(e)
+            })
+            .collect();
+        o.insert("timing", Json::Arr(timing));
+        let power: Vec<Json> = self
+            .power
+            .iter()
+            .map(|((pe, ty, vf), p)| {
+                let mut e = JsonObj::new();
+                e.insert("pe", *pe);
+                e.insert("type", ty.name());
+                e.insert("vf", *vf);
+                e.insert("power_uw", p.as_uw());
+                Json::Obj(e)
+            })
+            .collect();
+        o.insert("power", Json::Arr(power));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Profiles, String> {
+        let mut p = Profiles::new();
+        for e in v.req("timing")?.as_arr().ok_or("timing")? {
+            let pe = PeId(e.req("pe")?.as_usize().ok_or("pe")?);
+            let ty = KernelType::from_name(e.req("type")?.as_str().ok_or("type")?)
+                .ok_or("unknown type")?;
+            let dw =
+                DataWidth::from_name(e.req("dw")?.as_str().ok_or("dw")?).ok_or("unknown dw")?;
+            for pt in e.req("points")?.as_arr().ok_or("points")? {
+                p.record_timing(
+                    pe,
+                    ty,
+                    dw,
+                    pt.req("ops")?.as_u64().ok_or("ops")?,
+                    Cycles(pt.req("cycles")?.as_u64().ok_or("cycles")?),
+                );
+            }
+        }
+        for e in v.req("power")?.as_arr().ok_or("power")? {
+            p.record_power(
+                PeId(e.req("pe")?.as_usize().ok_or("pe")?),
+                KernelType::from_name(e.req("type")?.as_str().ok_or("type")?)
+                    .ok_or("unknown type")?,
+                e.req("vf")?.as_usize().ok_or("vf")?,
+                Power::from_uw(e.req("power_uw")?.as_f64().ok_or("power_uw")?),
+            );
+        }
+        p.finalize();
+        Ok(p)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty()).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Profiles, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Profiles::from_json(&parse(&text).map_err(|e| e.to_string())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_fit_query() {
+        let mut p = Profiles::new();
+        let pe = PeId(1);
+        p.record_timing(pe, KernelType::MatMul, DataWidth::Int8, 1000, Cycles(300));
+        p.record_timing(pe, KernelType::MatMul, DataWidth::Int8, 2000, Cycles(600));
+        p.finalize();
+        assert_eq!(
+            p.processing_cycles(pe, KernelType::MatMul, DataWidth::Int8, 4000),
+            Some(Cycles(1200))
+        );
+        assert!(p
+            .processing_cycles(pe, KernelType::Softmax, DataWidth::Int8, 10)
+            .is_none());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut p = Profiles::new();
+        p.record_timing(PeId(0), KernelType::Add, DataWidth::Int16, 500, Cycles(1300));
+        p.record_timing(PeId(0), KernelType::Add, DataWidth::Int16, 1000, Cycles(2600));
+        p.record_power(PeId(0), KernelType::Add, 2, Power::from_uw(4200.0));
+        p.finalize();
+        let j = p.to_json().to_pretty();
+        let back = Profiles::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back.timing_entry_count(), 2);
+        assert_eq!(back.power_entry_count(), 1);
+        assert_eq!(
+            back.processing_cycles(PeId(0), KernelType::Add, DataWidth::Int16, 2000),
+            Some(Cycles(5200))
+        );
+        assert!((back.power(PeId(0), KernelType::Add, 2).unwrap().as_uw() - 4200.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,73 @@
+//! Output helpers for experiment drivers: render a table to the terminal
+//! and optionally persist CSV/markdown under `results/`.
+
+use crate::util::table::Table;
+use std::path::Path;
+
+/// Output format selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Markdown,
+    Csv,
+}
+
+impl Format {
+    pub fn from_name(s: &str) -> Option<Format> {
+        match s {
+            "text" => Some(Format::Text),
+            "md" | "markdown" => Some(Format::Markdown),
+            "csv" => Some(Format::Csv),
+            _ => None,
+        }
+    }
+}
+
+/// Render `table` in `format`.
+pub fn render(table: &Table, format: Format) -> String {
+    match format {
+        Format::Text => table.to_text(),
+        Format::Markdown => table.to_markdown(),
+        Format::Csv => table.to_csv(),
+    }
+}
+
+/// Print to stdout and, when `out_dir` is set, persist as
+/// `<out_dir>/<name>.csv` + `.md`.
+pub fn emit(table: &Table, name: &str, format: Format, out_dir: Option<&Path>) {
+    println!("{}", render(table, format));
+    if let Some(dir) = out_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("warning: cannot create {dir:?}: {e}");
+            return;
+        }
+        for (ext, fmt) in [("csv", Format::Csv), ("md", Format::Markdown)] {
+            let path = dir.join(format!("{name}.{ext}"));
+            if let Err(e) = std::fs::write(&path, render(table, fmt)) {
+                eprintln!("warning: cannot write {path:?}: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_round_trip() {
+        assert_eq!(Format::from_name("csv"), Some(Format::Csv));
+        assert_eq!(Format::from_name("md"), Some(Format::Markdown));
+        assert_eq!(Format::from_name("nope"), None);
+    }
+
+    #[test]
+    fn emit_writes_files() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join("medea_report_test");
+        emit(&t, "t1", Format::Text, Some(&dir));
+        assert!(dir.join("t1.csv").exists());
+        assert!(dir.join("t1.md").exists());
+    }
+}

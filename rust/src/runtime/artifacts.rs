@@ -1,0 +1,121 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Tensor signature (shape + dtype; only f32 artifacts are emitted today).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {path:?}: {e} (run `make artifacts`)"))?;
+        let v = parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(dir, &v)
+    }
+
+    fn from_json(dir: &Path, v: &Json) -> Result<ArtifactManifest, String> {
+        let seed = v.req("seed")?.as_u64().ok_or("seed")?;
+        let mut artifacts = Vec::new();
+        for av in v.req("artifacts")?.as_arr().ok_or("artifacts")? {
+            let sig = |key: &str| -> Result<Vec<TensorSig>, String> {
+                av.req(key)?
+                    .as_arr()
+                    .ok_or(key)?
+                    .iter()
+                    .map(|t| {
+                        let shape = t
+                            .req("shape")?
+                            .as_arr()
+                            .ok_or("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or("dim".to_string()))
+                            .collect::<Result<Vec<_>, _>>()?;
+                        Ok(TensorSig { shape })
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactMeta {
+                name: av.req("name")?.as_str().ok_or("name")?.to_string(),
+                file: dir.join(av.req("file")?.as_str().ok_or("file")?),
+                inputs: sig("inputs")?,
+                outputs: sig("outputs")?,
+            });
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            seed,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Default artifacts directory: `$MEDEA_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MEDEA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> bool {
+        ArtifactManifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_manifest_when_built() {
+        if !manifest_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&ArtifactManifest::default_dir()).unwrap();
+        assert!(m.get("tsd_full").is_some());
+        assert!(m.get("tsd_core").is_some());
+        assert!(m.get("k_softmax").is_some());
+        let full = m.get("tsd_full").unwrap();
+        assert_eq!(full.inputs.len(), 1);
+        assert_eq!(full.inputs[0].shape, vec![16, 1536]);
+        assert_eq!(full.outputs[0].shape, vec![2]);
+        assert!(full.file.exists());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,208 @@
+//! The PJRT client wrapper: compile-once executable cache + typed execute.
+
+use super::artifacts::{ArtifactManifest, ArtifactMeta};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A loaded PJRT runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest =
+            ArtifactManifest::load(artifact_dir).map_err(|e| anyhow!("manifest: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", meta.file))?,
+            )
+            .with_context(|| format!("parse HLO text {:?}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact `{name}`"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute the named artifact on f32 inputs; shapes are validated
+    /// against the manifest. Returns the flattened f32 outputs.
+    pub fn run_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        validate_inputs(&meta, inputs)?;
+
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (sig, data) in meta.inputs.iter().zip(inputs) {
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .context("reshape input literal")?,
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute `{name}`"))?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: the result is a tuple.
+        let elems = result.to_tuple().context("untuple result")?;
+        if elems.len() != meta.outputs.len() {
+            bail!(
+                "artifact `{name}` returned {} outputs, manifest says {}",
+                elems.len(),
+                meta.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(elems.len());
+        for (lit, sig) in elems.iter().zip(&meta.outputs) {
+            let v = lit.to_vec::<f32>().context("output to_vec")?;
+            if v.len() != sig.elements() {
+                bail!(
+                    "artifact `{name}` output has {} elements, expected {}",
+                    v.len(),
+                    sig.elements()
+                );
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn validate_inputs(meta: &ArtifactMeta, inputs: &[&[f32]]) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "artifact `{}` takes {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (sig, data)) in meta.inputs.iter().zip(inputs).enumerate() {
+        if data.len() != sig.elements() {
+            bail!(
+                "artifact `{}` input {i} needs {} elements ({:?}), got {}",
+                meta.name,
+                sig.elements(),
+                sig.shape,
+                data.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactManifest;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn kernel_artifact_computes_correct_matmul() {
+        let Some(mut rt) = runtime() else { return };
+        // k_mm_class: (1,128) @ (128,2).
+        let a: Vec<f32> = (0..128).map(|i| (i % 7) as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..256).map(|i| ((i % 5) as f32 - 2.0) * 0.05).collect();
+        let out = rt.run_f32("k_mm_class", &[&a, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 2);
+        // CPU reference.
+        let mut want = [0f32; 2];
+        for j in 0..2 {
+            for k in 0..128 {
+                want[j] += a[k] * b[k * 2 + j];
+            }
+        }
+        for j in 0..2 {
+            assert!(
+                (out[0][j] - want[j]).abs() < 1e-4,
+                "out {} vs want {}",
+                out[0][j],
+                want[j]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_artifact_outputs_distribution() {
+        let Some(mut rt) = runtime() else { return };
+        let x: Vec<f32> = (0..97 * 97).map(|i| ((i % 13) as f32 - 6.0) * 0.3).collect();
+        let out = rt.run_f32("k_softmax", &[&x]).unwrap();
+        let rows = 97;
+        for r in 0..rows {
+            let row_sum: f32 = out[0][r * 97..(r + 1) * 97].iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-4, "row {r} sums to {row_sum}");
+            assert!(out[0][r * 97..(r + 1) * 97].iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilations() {
+        let Some(mut rt) = runtime() else { return };
+        let x: Vec<f32> = vec![0.5; 97 * 128];
+        rt.run_f32("k_norm", &[&x]).unwrap();
+        rt.run_f32("k_norm", &[&x]).unwrap();
+        assert_eq!(rt.cached_executables(), 1);
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let Some(mut rt) = runtime() else { return };
+        let too_short: Vec<f32> = vec![0.0; 10];
+        assert!(rt.run_f32("k_norm", &[&too_short]).is_err());
+        assert!(rt.run_f32("bogus_artifact", &[&too_short]).is_err());
+        let x: Vec<f32> = vec![0.0; 97 * 128];
+        assert!(rt.run_f32("k_add", &[&x]).is_err()); // needs 2 inputs
+    }
+}

@@ -1,0 +1,130 @@
+//! TSD inference over the PJRT artifacts.
+//!
+//! Two functional paths, cross-checked in tests:
+//! * **full**: the `tsd_full` executable (in-graph FFT frontend).
+//! * **staged**: the Rust FFT frontend ([`crate::eeg::frontend`]) feeding
+//!   the `tsd_core` executable — the path the coordinator uses, since the
+//!   platform schedule also treats the frontend as a separate (CPU) kernel.
+
+use super::client::Runtime;
+use crate::eeg::frontend::window_features;
+use crate::eeg::synth::EegWindow;
+use anyhow::Result;
+
+/// Class labels of the TSD head.
+pub const CLASSES: [&str; 2] = ["background", "seizure"];
+
+/// Inference outcome.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub logits: Vec<f32>,
+    pub class_idx: usize,
+    pub seizure: bool,
+}
+
+fn to_prediction(logits: Vec<f32>) -> Prediction {
+    let class_idx = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Prediction {
+        seizure: class_idx == 1,
+        class_idx,
+        logits,
+    }
+}
+
+/// TSD inference façade over a [`Runtime`].
+pub struct TsdInference {
+    pub n_fft: usize,
+    pub patch_dim: usize,
+}
+
+impl Default for TsdInference {
+    fn default() -> Self {
+        TsdInference {
+            n_fft: 256,
+            patch_dim: 80,
+        }
+    }
+}
+
+impl TsdInference {
+    /// Full-model path: raw window → logits.
+    pub fn infer_full(&self, rt: &mut Runtime, window: &EegWindow) -> Result<Prediction> {
+        let flat = window.flat();
+        let out = rt.run_f32("tsd_full", &[&flat])?;
+        Ok(to_prediction(out.into_iter().next().unwrap()))
+    }
+
+    /// Staged path: Rust frontend → `tsd_core` executable.
+    pub fn infer_staged(&self, rt: &mut Runtime, window: &EegWindow) -> Result<Prediction> {
+        let feats = window_features(&window.data, self.n_fft, self.patch_dim);
+        let flat: Vec<f32> = feats.into_iter().flatten().collect();
+        let out = rt.run_f32("tsd_core", &[&flat])?;
+        Ok(to_prediction(out.into_iter().next().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eeg::synth::{EegGenerator, SynthConfig};
+    use crate::runtime::artifacts::ArtifactManifest;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = ArtifactManifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn full_and_staged_paths_agree() {
+        let Some(mut rt) = runtime() else { return };
+        let infer = TsdInference::default();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+        for _ in 0..3 {
+            let w = gen.next_window();
+            let full = infer.infer_full(&mut rt, &w).unwrap();
+            let staged = infer.infer_staged(&mut rt, &w).unwrap();
+            assert_eq!(full.logits.len(), 2);
+            for (a, b) in full.logits.iter().zip(&staged.logits) {
+                assert!(
+                    (a - b).abs() < 2e-3,
+                    "frontend paths diverge: {:?} vs {:?}",
+                    full.logits,
+                    staged.logits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predictions_are_deterministic() {
+        let Some(mut rt) = runtime() else { return };
+        let infer = TsdInference::default();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 1);
+        let w = gen.next_window();
+        let a = infer.infer_full(&mut rt, &w).unwrap();
+        let b = infer.infer_full(&mut rt, &w).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.class_idx, b.class_idx);
+    }
+
+    #[test]
+    fn logits_are_finite() {
+        let Some(mut rt) = runtime() else { return };
+        let infer = TsdInference::default();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 9);
+        for label in [false, true] {
+            let w = gen.window_with_label(label);
+            let p = infer.infer_full(&mut rt, &w).unwrap();
+            assert!(p.logits.iter().all(|v| v.is_finite()), "{:?}", p.logits);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! Python runs only at `make artifacts` time; this module is the entire
+//! request-path compute stack: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once and cached per artifact.
+
+pub mod artifacts;
+pub mod client;
+pub mod infer;
+
+pub use artifacts::{ArtifactManifest, ArtifactMeta};
+pub use client::Runtime;
+pub use infer::TsdInference;

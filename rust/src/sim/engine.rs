@@ -1,0 +1,279 @@
+//! A small discrete-event engine: jobs with dependencies competing for
+//! exclusive resources, executed in earliest-start order.
+//!
+//! Semantics: a job becomes *ready* when all dependencies finished; a ready
+//! job starts as soon as its resource is free (FIFO per resource, by
+//! insertion order among ready jobs). Time is `f64` seconds.
+
+use std::collections::BinaryHeap;
+
+/// Job identifier (index into the engine's job list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobId(pub usize);
+
+/// Resource identifier (exclusive, one job at a time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Resource(pub usize);
+
+#[derive(Debug, Clone)]
+struct Job {
+    resource: Resource,
+    duration: f64,
+    deps: Vec<JobId>,
+    unfinished_deps: usize,
+    /// Earliest time the job may start (max of dep finish times).
+    ready_at: f64,
+    start: f64,
+    finish: f64,
+    done: bool,
+}
+
+/// Min-heap entry: (time, sequence) so simultaneous events pop FIFO.
+#[derive(PartialEq)]
+struct HeapEntry {
+    time: f64,
+    seq: usize,
+    job: usize,
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for min-heap; tie-break on sequence for determinism.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event-driven executor.
+#[derive(Default)]
+pub struct Engine {
+    jobs: Vec<Job>,
+    n_resources: usize,
+    events_processed: usize,
+}
+
+impl Engine {
+    pub fn new(n_resources: usize) -> Engine {
+        Engine {
+            jobs: Vec::new(),
+            n_resources,
+            events_processed: 0,
+        }
+    }
+
+    /// Add a job; returns its id. Dependencies must already exist.
+    pub fn add_job(&mut self, resource: Resource, duration: f64, deps: &[JobId]) -> JobId {
+        assert!(resource.0 < self.n_resources, "unknown resource");
+        assert!(duration >= 0.0, "negative duration");
+        for d in deps {
+            assert!(d.0 < self.jobs.len(), "dependency on future job");
+        }
+        self.jobs.push(Job {
+            resource,
+            duration,
+            deps: deps.to_vec(),
+            unfinished_deps: deps.len(),
+            ready_at: 0.0,
+            start: 0.0,
+            finish: 0.0,
+            done: false,
+        });
+        JobId(self.jobs.len() - 1)
+    }
+
+    /// Run all jobs to completion; returns the makespan.
+    pub fn run(&mut self) -> f64 {
+        let n = self.jobs.len();
+        // Ready queues per resource (FIFO by job index).
+        let mut ready: Vec<std::collections::VecDeque<usize>> =
+            vec![Default::default(); self.n_resources];
+        let mut free_at: Vec<f64> = vec![0.0; self.n_resources];
+        let mut busy: Vec<Option<usize>> = vec![None; self.n_resources];
+        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+        let mut seq = 0usize;
+        let mut remaining = n;
+        let mut makespan = 0.0f64;
+
+        for (i, j) in self.jobs.iter().enumerate() {
+            if j.unfinished_deps == 0 {
+                ready[j.resource.0].push_back(i);
+            }
+        }
+        // Try to start jobs on every resource at t=0.
+        let mut now = 0.0f64;
+        loop {
+            // Start any startable jobs.
+            for r in 0..self.n_resources {
+                if busy[r].is_none() {
+                    // Find first ready job whose ready_at ≤ max(now, free_at).
+                    if let Some(&cand) = ready[r].front() {
+                        let start = now.max(free_at[r]).max(self.jobs[cand].ready_at);
+                        if start <= now + 1e-18 {
+                            ready[r].pop_front();
+                            let job = &mut self.jobs[cand];
+                            job.start = now;
+                            job.finish = now + job.duration;
+                            busy[r] = Some(cand);
+                            heap.push(HeapEntry {
+                                time: job.finish,
+                                seq,
+                                job: cand,
+                            });
+                            seq += 1;
+                        } else {
+                            // Job not ready yet; schedule a wake-up.
+                            heap.push(HeapEntry {
+                                time: start,
+                                seq,
+                                job: usize::MAX, // wake-up marker
+                            });
+                            seq += 1;
+                        }
+                    }
+                }
+            }
+            if remaining == 0 {
+                break;
+            }
+            let Some(entry) = heap.pop() else {
+                panic!("deadlock: {remaining} jobs cannot run (dependency cycle?)");
+            };
+            self.events_processed += 1;
+            now = now.max(entry.time);
+            if entry.job == usize::MAX {
+                continue; // wake-up only
+            }
+            // Completion event.
+            let job_idx = entry.job;
+            let resource = self.jobs[job_idx].resource.0;
+            self.jobs[job_idx].done = true;
+            makespan = makespan.max(self.jobs[job_idx].finish);
+            busy[resource] = None;
+            free_at[resource] = self.jobs[job_idx].finish;
+            remaining -= 1;
+            // Release dependents.
+            let finish = self.jobs[job_idx].finish;
+            for i in 0..n {
+                if !self.jobs[i].done && self.jobs[i].deps.contains(&JobId(job_idx)) {
+                    let dj = &mut self.jobs[i];
+                    dj.unfinished_deps -= 1;
+                    dj.ready_at = dj.ready_at.max(finish);
+                    if dj.unfinished_deps == 0 {
+                        ready[dj.resource.0].push_back(i);
+                    }
+                }
+            }
+        }
+        makespan
+    }
+
+    pub fn job_window(&self, id: JobId) -> (f64, f64) {
+        let j = &self.jobs[id.0];
+        (j.start, j.finish)
+    }
+
+    pub fn events_processed(&self) -> usize {
+        self.events_processed
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DMA: Resource = Resource(0);
+    const PE: Resource = Resource(1);
+
+    #[test]
+    fn sequential_chain() {
+        let mut e = Engine::new(2);
+        let a = e.add_job(DMA, 1.0, &[]);
+        let b = e.add_job(PE, 2.0, &[a]);
+        let c = e.add_job(DMA, 0.5, &[b]);
+        let makespan = e.run();
+        assert!((makespan - 3.5).abs() < 1e-12);
+        assert_eq!(e.job_window(c).0, 3.0);
+    }
+
+    #[test]
+    fn double_buffer_overlap() {
+        // Two tiles: dma1, compute1 ∥ dma2, compute2 — classic pipeline.
+        let mut e = Engine::new(2);
+        let d1 = e.add_job(DMA, 1.0, &[]);
+        let c1 = e.add_job(PE, 3.0, &[d1]);
+        let d2 = e.add_job(DMA, 1.0, &[d1]); // prefetch after d1 frees the channel
+        let c2 = e.add_job(PE, 3.0, &[d2, c1]);
+        let makespan = e.run();
+        // d1: 0-1, c1: 1-4, d2: 1-2 (overlapped), c2: 4-7.
+        assert!((makespan - 7.0).abs() < 1e-12);
+        assert_eq!(e.job_window(d2), (1.0, 2.0));
+    }
+
+    #[test]
+    fn resource_serialization() {
+        // Two independent jobs on one resource run back-to-back.
+        let mut e = Engine::new(1);
+        let a = e.add_job(Resource(0), 2.0, &[]);
+        let b = e.add_job(Resource(0), 2.0, &[]);
+        let makespan = e.run();
+        assert!((makespan - 4.0).abs() < 1e-12);
+        let (s_a, _) = e.job_window(a);
+        let (s_b, _) = e.job_window(b);
+        assert!(s_a < s_b, "FIFO order");
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn cycle_detection_via_deadlock() {
+        // Engine can't express forward deps; simulate deadlock with a dep
+        // on a job that never finishes is impossible by construction, so
+        // fabricate: job depends on itself via unfinished_deps hack is not
+        // constructible — instead verify the panic path with an impossible
+        // dependency by adding a job whose dep list includes itself.
+        let mut e = Engine::new(1);
+        // add_job asserts deps exist; a self-dep (same index) passes the
+        // bound check only if we add it as the next index — craft:
+        let a = e.add_job(Resource(0), 1.0, &[]);
+        // Manually corrupt to create a never-ready job.
+        e.jobs[a.0].unfinished_deps = 1;
+        e.run();
+    }
+
+    #[test]
+    fn zero_duration_jobs() {
+        let mut e = Engine::new(1);
+        let a = e.add_job(Resource(0), 0.0, &[]);
+        let b = e.add_job(Resource(0), 0.0, &[a]);
+        let makespan = e.run();
+        assert_eq!(makespan, 0.0);
+        let _ = b;
+    }
+
+    #[test]
+    fn deterministic_tie_breaking() {
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            let mut e = Engine::new(2);
+            let mut prev: Option<JobId> = None;
+            for i in 0..20 {
+                let r = Resource(i % 2);
+                let deps: Vec<JobId> = prev.into_iter().collect();
+                prev = Some(e.add_job(r, 0.5, &deps));
+            }
+            times.push(e.run());
+        }
+        assert!(times.windows(2).all(|w| w[0] == w[1]));
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event replay simulator.
+//!
+//! Independently validates schedules: where the estimator (`G_T`) uses
+//! closed-form pipeline formulas, the simulator executes the tile-level
+//! job graph (DMA-in → compute → DMA-out per tile, with the mode's overlap
+//! rules, V-F switch stalls, NMC bank contention, and *actual* LM-residency
+//! tracking for single-buffer chaining) on an event queue with two
+//! resources (the system DMA channel and the target PE). The gap between
+//! estimated and simulated time/energy is itself a reported metric
+//! (EXPERIMENTS.md).
+
+pub mod engine;
+pub mod replay;
+
+pub use engine::{Engine, JobId, Resource};
+pub use replay::{simulate, SimReport};

@@ -1,0 +1,176 @@
+//! Dominance-filtered incremental-efficiency greedy for MCKP.
+//!
+//! Classic construction: start every group at its fastest item (the only
+//! guaranteed-feasible base), then repeatedly apply the single upgrade step
+//! with the best energy-saved-per-extra-time ratio that still fits the
+//! remaining slack. With LP-convex upgrade lists this is the integral
+//! truncation of the LP optimum — typically within a fraction of a percent
+//! of optimal on MEDEA instances, and what [`super::bb`] uses for bounds.
+
+use super::{Instance, Item, McKpSolver, Solution};
+
+pub struct GreedySolver;
+
+/// A potential upgrade step inside one group's convex frontier.
+#[derive(Debug, Clone, Copy)]
+struct Step {
+    group: usize,
+    to_item: usize,
+    d_time: f64,
+    ratio: f64, // energy saved per extra second (≥ 0)
+}
+
+/// Build each group's convex (lower-hull) frontier over (time, energy),
+/// returning per-group hull item indices sorted by increasing time.
+pub(crate) fn convex_frontiers(inst: &Instance) -> Vec<Vec<usize>> {
+    inst.groups
+        .iter()
+        .map(|g| {
+            let mut idx: Vec<usize> = (0..g.len()).collect();
+            idx.sort_by(|&a, &b| {
+                g[a].time
+                    .partial_cmp(&g[b].time)
+                    .unwrap()
+                    .then(g[a].energy.partial_cmp(&g[b].energy).unwrap())
+            });
+            // Pareto filter (strictly decreasing energy with time).
+            let mut pareto: Vec<usize> = Vec::new();
+            let mut best_e = f64::INFINITY;
+            for i in idx {
+                if g[i].energy < best_e {
+                    best_e = g[i].energy;
+                    pareto.push(i);
+                }
+            }
+            // Lower convex hull over (time, energy).
+            let mut hull: Vec<usize> = Vec::new();
+            for &i in &pareto {
+                while hull.len() >= 2 {
+                    let a = g[hull[hull.len() - 2]];
+                    let b = g[hull[hull.len() - 1]];
+                    let c = g[i];
+                    // slope(a→b) must be steeper (more saving/time) than
+                    // slope(b→c); otherwise b is not on the hull.
+                    let s_ab = (b.energy - a.energy) / (b.time - a.time);
+                    let s_bc = (c.energy - b.energy) / (c.time - b.time);
+                    if s_ab >= s_bc {
+                        hull.pop();
+                    } else {
+                        break;
+                    }
+                }
+                hull.push(i);
+            }
+            hull
+        })
+        .collect()
+}
+
+impl GreedySolver {
+    /// Shared with the LP bound: returns (solution, per-group hull position).
+    pub(crate) fn solve_with_state(inst: &Instance) -> Option<(Solution, Vec<Vec<usize>>, Vec<usize>)> {
+        if inst.min_time() > inst.deadline {
+            return None;
+        }
+        let hulls = convex_frontiers(inst);
+        // Start at the fastest hull item per group.
+        let mut pos: Vec<usize> = vec![0; inst.groups.len()];
+        let mut time: f64 = inst
+            .groups
+            .iter()
+            .zip(&hulls)
+            .map(|(g, h)| g[h[0]].time)
+            .sum();
+
+        // All candidate steps, best ratio first.
+        let mut steps: Vec<Step> = Vec::new();
+        for (gi, h) in hulls.iter().enumerate() {
+            for w in 0..h.len().saturating_sub(1) {
+                let a: Item = inst.groups[gi][h[w]];
+                let b: Item = inst.groups[gi][h[w + 1]];
+                let d_time = b.time - a.time;
+                let d_energy = b.energy - a.energy;
+                if d_time <= 0.0 || d_energy >= 0.0 {
+                    continue;
+                }
+                steps.push(Step {
+                    group: gi,
+                    to_item: w + 1,
+                    d_time,
+                    ratio: -d_energy / d_time,
+                });
+            }
+        }
+        steps.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+
+        // Apply steps in ratio order; hull convexity guarantees in-group
+        // steps appear in position order among applicable ones.
+        for s in &steps {
+            if pos[s.group] + 1 != s.to_item {
+                continue; // an earlier (steeper) step in this group was skipped
+            }
+            if time + s.d_time <= inst.deadline {
+                pos[s.group] = s.to_item;
+                time += s.d_time;
+            }
+        }
+
+        let picks: Vec<usize> = pos.iter().zip(&hulls).map(|(&p, h)| h[p]).collect();
+        Some((Solution::evaluate(picks, inst, false), hulls, pos))
+    }
+}
+
+impl McKpSolver for GreedySolver {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn solve(&self, inst: &Instance) -> Option<Solution> {
+        Self::solve_with_state(inst).map(|(s, _, _)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{random_instance, DpSolver};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hull_drops_non_convex_points() {
+        let inst = Instance {
+            groups: vec![vec![
+                Item { time: 1.0, energy: 10.0 },
+                Item { time: 2.0, energy: 9.5 }, // shallow then steep: off-hull
+                Item { time: 3.0, energy: 2.0 },
+            ]],
+            deadline: 10.0,
+        };
+        let hulls = convex_frontiers(&inst);
+        assert_eq!(hulls[0], vec![0, 2]);
+    }
+
+    #[test]
+    fn feasible_and_close_to_optimal() {
+        let mut rng = Rng::new(7);
+        let mut worst_gap: f64 = 0.0;
+        for _ in 0..40 {
+            let inst = random_instance(&mut rng, 12, 6);
+            let g = GreedySolver.solve(&inst).unwrap();
+            assert!(g.total_time <= inst.deadline + 1e-9);
+            let opt = DpSolver::with_resolution(50_000).solve(&inst).unwrap();
+            let gap = (g.total_energy - opt.total_energy) / opt.total_energy;
+            worst_gap = worst_gap.max(gap);
+        }
+        assert!(worst_gap < 0.08, "greedy gap too large: {worst_gap:.4}");
+    }
+
+    #[test]
+    fn infeasible_none() {
+        let inst = Instance {
+            groups: vec![vec![Item { time: 5.0, energy: 1.0 }]],
+            deadline: 1.0,
+        };
+        assert!(GreedySolver.solve(&inst).is_none());
+    }
+}

@@ -1,0 +1,165 @@
+//! Lagrangian relaxation for MCKP.
+//!
+//! Dualize the deadline: `L(λ) = Σ_i min_j (e_ij + λ·t_ij) − λ·T_d`.
+//! For each λ the inner minimization decomposes per group; `L(λ)` is a lower
+//! bound on the optimal energy for every λ ≥ 0. Bisection finds the λ where
+//! the relaxed choice's total time crosses the deadline; the feasible side's
+//! choice is returned as the (near-optimal) schedule, the maximal `L(λ)` as
+//! the certified bound.
+
+use super::{Instance, McKpSolver, Solution};
+
+pub struct LagrangeSolver {
+    pub iterations: usize,
+}
+
+impl Default for LagrangeSolver {
+    fn default() -> Self {
+        LagrangeSolver { iterations: 60 }
+    }
+}
+
+impl LagrangeSolver {
+    /// Per-group argmin of `e + λ·t`.
+    fn relaxed_picks(inst: &Instance, lambda: f64) -> (Vec<usize>, f64, f64) {
+        let mut picks = Vec::with_capacity(inst.groups.len());
+        let mut time = 0.0;
+        let mut energy = 0.0;
+        for g in &inst.groups {
+            let (j, item) = g
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    (a.energy + lambda * a.time)
+                        .partial_cmp(&(b.energy + lambda * b.time))
+                        .unwrap()
+                })
+                .unwrap();
+            picks.push(j);
+            time += item.time;
+            energy += item.energy;
+        }
+        (picks, time, energy)
+    }
+
+    /// Certified lower bound on the optimal energy (max over probed λ).
+    pub fn lower_bound(&self, inst: &Instance) -> Option<f64> {
+        self.solve_full(inst).map(|(_, lb)| lb)
+    }
+
+    fn solve_full(&self, inst: &Instance) -> Option<(Solution, f64)> {
+        if inst.min_time() > inst.deadline {
+            return None;
+        }
+        // λ = 0: unconstrained energy optimum.
+        let (picks0, t0, e0) = Self::relaxed_picks(inst, 0.0);
+        if t0 <= inst.deadline {
+            let sol = Solution::evaluate(picks0, inst, true);
+            return Some((sol, e0));
+        }
+
+        // Find an upper λ that makes the relaxed choice feasible.
+        let mut lo = 0.0f64;
+        let mut hi = 1.0f64;
+        let mut best_feasible: Option<Solution> = None;
+        let mut best_bound = f64::NEG_INFINITY;
+        for _ in 0..64 {
+            let (picks, t, e) = Self::relaxed_picks(inst, hi);
+            best_bound = best_bound.max(e + hi * (t - inst.deadline));
+            if t <= inst.deadline {
+                best_feasible = Some(Solution::evaluate(picks, inst, false));
+                break;
+            }
+            hi *= 4.0;
+        }
+        best_feasible.as_ref()?;
+
+        // Bisect λ between infeasible (lo) and feasible (hi).
+        for _ in 0..self.iterations {
+            let mid = 0.5 * (lo + hi);
+            let (picks, t, e) = Self::relaxed_picks(inst, mid);
+            best_bound = best_bound.max(e + mid * (t - inst.deadline));
+            if t <= inst.deadline {
+                let sol = Solution::evaluate(picks, inst, false);
+                if best_feasible
+                    .as_ref()
+                    .map(|b| sol.total_energy < b.total_energy)
+                    .unwrap_or(true)
+                {
+                    best_feasible = Some(sol);
+                }
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        best_feasible.map(|s| (s, best_bound))
+    }
+}
+
+impl McKpSolver for LagrangeSolver {
+    fn name(&self) -> &'static str {
+        "lagrange"
+    }
+
+    fn solve(&self, inst: &Instance) -> Option<Solution> {
+        self.solve_full(inst).map(|(s, _)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{random_instance, DpSolver, McKpSolver};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bound_sandwiches_optimum() {
+        let mut rng = Rng::new(99);
+        for case in 0..25 {
+            let inst = random_instance(&mut rng, 10, 5);
+            let solver = LagrangeSolver::default();
+            let Some((sol, bound)) = solver.solve_full(&inst) else {
+                continue;
+            };
+            let opt = DpSolver::with_resolution(50_000).solve(&inst).unwrap();
+            assert!(sol.total_time <= inst.deadline + 1e-9, "case {case}");
+            // bound ≤ optimal ≤ heuristic
+            assert!(
+                bound <= opt.total_energy + 1e-9,
+                "case {case}: bound {bound} > opt {}",
+                opt.total_energy
+            );
+            assert!(
+                sol.total_energy >= opt.total_energy - opt.total_energy * 1e-3,
+                "case {case}"
+            );
+            // Duality gap should be modest on these instances.
+            assert!(
+                sol.total_energy - bound <= 0.15 * opt.total_energy.abs() + 1e-9,
+                "case {case}: gap {} vs opt {}",
+                sol.total_energy - bound,
+                opt.total_energy
+            );
+        }
+    }
+
+    #[test]
+    fn unconstrained_is_exact() {
+        let mut rng = Rng::new(5);
+        let mut inst = random_instance(&mut rng, 8, 4);
+        inst.deadline = 1e9;
+        let sol = LagrangeSolver::default().solve(&inst).unwrap();
+        assert!(sol.optimal);
+        let opt = DpSolver::default().solve(&inst).unwrap();
+        assert!((sol.total_energy - opt.total_energy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_none() {
+        let mut rng = Rng::new(6);
+        let mut inst = random_instance(&mut rng, 8, 4);
+        inst.deadline = inst.min_time() * 0.5;
+        assert!(LagrangeSolver::default().solve(&inst).is_none());
+    }
+}

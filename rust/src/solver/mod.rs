@@ -1,0 +1,202 @@
+//! Multiple-Choice Knapsack Problem solvers (§3.3).
+//!
+//! MEDEA's optimization — pick one configuration per kernel minimizing total
+//! energy subject to `Σ time ≤ T_d` — is an MCKP with kernel = item group,
+//! energy = value (minimized), time = weight, deadline = capacity. The paper
+//! solves it with an off-the-shelf ILP solver (PuLP); this crate implements
+//! the solvers directly:
+//!
+//! * [`dp`] — exact dynamic program over discretized time (the default).
+//! * [`bb`] — exact branch-and-bound on continuous time with the MCKP
+//!   LP-relaxation bound.
+//! * [`lagrange`] — Lagrangian relaxation (bisection on λ): a fast feasible
+//!   heuristic plus a certified lower bound.
+//! * [`greedy`] — the classic dominance-filtered incremental-efficiency
+//!   heuristic.
+//!
+//! All solvers consume the same [`Instance`] and return a [`Solution`]
+//! picking one item index per group (indices refer to the instance's item
+//! lists, which the caller maps back to `ω_ij` configurations).
+
+pub mod bb;
+pub mod dp;
+pub mod greedy;
+pub mod lagrange;
+
+pub use bb::BranchBound;
+pub use dp::DpSolver;
+pub use greedy::GreedySolver;
+pub use lagrange::LagrangeSolver;
+
+/// One item: `weight` = execution time (seconds), `value` = energy (joules).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Item {
+    pub time: f64,
+    pub energy: f64,
+}
+
+/// An MCKP instance: one item must be chosen from each group; total time
+/// must not exceed `deadline`; total energy is minimized.
+#[derive(Debug, Clone, Default)]
+pub struct Instance {
+    pub groups: Vec<Vec<Item>>,
+    pub deadline: f64,
+}
+
+impl Instance {
+    /// Fastest possible total time — infeasibility threshold.
+    pub fn min_time(&self) -> f64 {
+        self.groups
+            .iter()
+            .map(|g| g.iter().map(|i| i.time).fold(f64::INFINITY, f64::min))
+            .sum()
+    }
+
+    /// Per-group Pareto filter (drop items that are no faster *and* no
+    /// cheaper than another). Returns index maps from filtered to original
+    /// positions so solutions can be translated back.
+    pub fn pareto_filtered(&self) -> (Instance, Vec<Vec<usize>>) {
+        let mut groups = Vec::with_capacity(self.groups.len());
+        let mut maps = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            let mut idx: Vec<usize> = (0..g.len()).collect();
+            idx.sort_by(|&a, &b| {
+                g[a].time
+                    .partial_cmp(&g[b].time)
+                    .unwrap()
+                    .then(g[a].energy.partial_cmp(&g[b].energy).unwrap())
+            });
+            let mut kept_items = Vec::new();
+            let mut kept_map = Vec::new();
+            let mut best_energy = f64::INFINITY;
+            for i in idx {
+                if g[i].energy < best_energy {
+                    best_energy = g[i].energy;
+                    kept_items.push(g[i]);
+                    kept_map.push(i);
+                }
+            }
+            groups.push(kept_items);
+            maps.push(kept_map);
+        }
+        (
+            Instance {
+                groups,
+                deadline: self.deadline,
+            },
+            maps,
+        )
+    }
+}
+
+/// A solution: `picks[i]` is the chosen item index in group `i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    pub picks: Vec<usize>,
+    pub total_time: f64,
+    pub total_energy: f64,
+    /// Whether the producing solver certifies optimality.
+    pub optimal: bool,
+}
+
+impl Solution {
+    /// Recompute totals from picks (validation helper).
+    pub fn evaluate(picks: Vec<usize>, inst: &Instance, optimal: bool) -> Solution {
+        let mut total_time = 0.0;
+        let mut total_energy = 0.0;
+        for (g, &p) in inst.groups.iter().zip(&picks) {
+            total_time += g[p].time;
+            total_energy += g[p].energy;
+        }
+        Solution {
+            picks,
+            total_time,
+            total_energy,
+            optimal,
+        }
+    }
+
+    /// Translate picks through the Pareto-filter index maps.
+    pub fn translate(mut self, maps: &[Vec<usize>]) -> Solution {
+        for (pick, map) in self.picks.iter_mut().zip(maps) {
+            *pick = map[*pick];
+        }
+        self
+    }
+}
+
+/// Common solver interface.
+pub trait McKpSolver {
+    fn name(&self) -> &'static str;
+    /// `None` when the instance is infeasible (even the fastest choice per
+    /// group exceeds the deadline).
+    fn solve(&self, inst: &Instance) -> Option<Solution>;
+}
+
+/// Build a random instance (tests / benches).
+pub fn random_instance(rng: &mut crate::util::rng::Rng, groups: usize, items: usize) -> Instance {
+    let mut inst = Instance::default();
+    for _ in 0..groups {
+        let mut g = Vec::new();
+        for _ in 0..items {
+            let time = rng.range_f64(0.1e-3, 5e-3);
+            // Loosely anti-correlated energy so tradeoffs exist.
+            let energy = rng.range_f64(0.5e-6, 2e-6) / time.sqrt();
+            g.push(Item { time, energy });
+        }
+        inst.groups.push(g);
+    }
+    let min_t = inst.min_time();
+    let max_t: f64 = inst
+        .groups
+        .iter()
+        .map(|g| g.iter().map(|i| i.time).fold(0.0, f64::max))
+        .sum();
+    inst.deadline = rng.range_f64(min_t, 0.5 * (min_t + max_t));
+    inst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_filter_keeps_frontier() {
+        let inst = Instance {
+            groups: vec![vec![
+                Item { time: 1.0, energy: 5.0 },
+                Item { time: 2.0, energy: 6.0 }, // dominated
+                Item { time: 2.0, energy: 3.0 },
+                Item { time: 3.0, energy: 3.5 }, // dominated
+                Item { time: 4.0, energy: 1.0 },
+            ]],
+            deadline: 10.0,
+        };
+        let (f, maps) = inst.pareto_filtered();
+        assert_eq!(f.groups[0].len(), 3);
+        assert_eq!(maps[0], vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn solution_translate() {
+        let inst = Instance {
+            groups: vec![vec![Item { time: 1.0, energy: 1.0 }; 3]],
+            deadline: 10.0,
+        };
+        let sol = Solution::evaluate(vec![1], &inst, true);
+        let t = sol.translate(&[vec![5, 7, 9]]);
+        assert_eq!(t.picks, vec![7]);
+    }
+
+    #[test]
+    fn min_time_sums_fastest() {
+        let inst = Instance {
+            groups: vec![
+                vec![Item { time: 1.0, energy: 0.0 }, Item { time: 0.5, energy: 9.0 }],
+                vec![Item { time: 2.0, energy: 0.0 }],
+            ],
+            deadline: 0.0,
+        };
+        assert!((inst.min_time() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,73 @@
+//! Operand footprint helpers shared by the tile planner.
+
+use crate::ir::{DataWidth, Shape};
+use crate::util::units::Bytes;
+
+/// Accumulator element width used for matmul/conv partial sums held in LM.
+/// Int8/int16 kernels accumulate into 32-bit registers (requantized on
+/// write-out), so the in-LM output tile is 4 B/element while the written-out
+/// bytes stay at the kernel's data width.
+pub fn accum_bytes(dw: DataWidth) -> u64 {
+    match dw {
+        DataWidth::Int8 | DataWidth::Int16 => 4,
+        DataWidth::Int32 | DataWidth::Float32 => 4,
+    }
+}
+
+/// LM bytes needed to hold a matmul tile: an `m_t×k_c` A-strip, a `k_c×n_t`
+/// B-panel and an `m_t×n_t` 32-bit accumulator tile.
+pub fn matmul_tile_bytes(m_t: u64, k_c: u64, n_t: u64, dw: DataWidth) -> Bytes {
+    let b = dw.bytes();
+    Bytes(m_t * k_c * b + k_c * n_t * b + m_t * n_t * accum_bytes(dw))
+}
+
+/// Whether the whole (untiled) kernel fits a given LM budget.
+pub fn fits_untiled(shape: Shape, dw: DataWidth, budget: Bytes) -> bool {
+    let needed = match shape {
+        Shape::MatMul { m, k, n } => matmul_tile_bytes(m, k, n, dw),
+        Shape::Conv2d {
+            h,
+            w,
+            c_in,
+            c_out,
+            kh,
+            kw,
+        } => {
+            // im2col view: input patch matrix + filters + accumulators.
+            matmul_tile_bytes(h * w, kh * kw * c_in, c_out, dw)
+        }
+        other => other.total_bytes(dw),
+    };
+    needed.raw() <= budget.raw()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DataWidth::*;
+
+    #[test]
+    fn matmul_tile_accounting() {
+        // 28×128 A (int8) + 128×256 B + 28×256 int32 C
+        let b = matmul_tile_bytes(28, 128, 256, Int8);
+        assert_eq!(b.raw(), 28 * 128 + 128 * 256 + 28 * 256 * 4);
+    }
+
+    #[test]
+    fn ff1_does_not_fit_64k() {
+        // TSD ff1: 97×128×256 int8 → A 12.4K + B 32K + C-acc 99K > 64 KiB.
+        let s = Shape::MatMul { m: 97, k: 128, n: 256 };
+        assert!(!fits_untiled(s, Int8, Bytes::from_kib(64)));
+        // per-head QKV projection fits: 97×128×32.
+        let s2 = Shape::MatMul { m: 97, k: 128, n: 32 };
+        assert!(fits_untiled(s2, Int8, Bytes::from_kib(64)));
+    }
+
+    #[test]
+    fn elementwise_fits_by_total_bytes() {
+        let s = Shape::Elementwise { n: 97 * 128, arity: 2 };
+        // in 2×12416 + out 12416 = 37 KiB < 64 KiB
+        assert!(fits_untiled(s, Int8, Bytes::from_kib(64)));
+        assert!(!fits_untiled(s, Int8, Bytes::from_kib(32)));
+    }
+}

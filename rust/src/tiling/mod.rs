@@ -1,0 +1,25 @@
+//! Memory-aware adaptive tiling (§3.2).
+//!
+//! When a kernel's operands exceed a PE's local memory `C_LM` (or its
+//! `Λ_op` dimension bound), MEDEA decomposes it into tiles and chooses
+//! between two execution modes:
+//!
+//! * **Single-buffer** `t_sb`: tiles sized against the *full* LM budget —
+//!   maximal tiles, minimal traffic amplification and per-tile overhead,
+//!   but zero compute/transfer overlap.
+//! * **Double-buffer** `t_db`: tiles sized against *half* the LM budget so
+//!   the next tile streams in while the current one computes — overlap
+//!   hides transfer latency, at the price of smaller tiles (more per-tile
+//!   overhead and, for matmul, more B-panel reloads) and, on the NMC, VRF
+//!   bank contention between the DMA and the vector unit.
+//!
+//! [`plan`] produces the tile decomposition + traffic model; [`modes`]
+//! turns a plan into total execution cycles for each mode. MEDEA pre-selects
+//! the cycle-minimal mode per (kernel, PE, V-F) — §3.3.
+
+pub mod footprint;
+pub mod modes;
+pub mod plan;
+
+pub use modes::{execution_cycles, mode_cycles, TilingMode};
+pub use plan::plan_kernel;

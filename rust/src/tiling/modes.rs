@@ -1,0 +1,282 @@
+//! Execution-cycle models for the two tiling modes (§3.2).
+
+use super::plan::plan_kernel;
+use crate::ir::Kernel;
+use crate::platform::pe::{Pe, PeClass};
+use crate::platform::Platform;
+use crate::timing::cycle_model::CycleModel;
+use crate::util::units::{Bytes, Cycles};
+use std::fmt;
+
+/// The tiling/execution mode `c_i ∈ {t_sb, t_db}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TilingMode {
+    SingleBuffer,
+    DoubleBuffer,
+}
+
+impl TilingMode {
+    pub const BOTH: [TilingMode; 2] = [TilingMode::SingleBuffer, TilingMode::DoubleBuffer];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TilingMode::SingleBuffer => "sb",
+            TilingMode::DoubleBuffer => "db",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TilingMode> {
+        match s {
+            "sb" => Some(TilingMode::SingleBuffer),
+            "db" => Some(TilingMode::DoubleBuffer),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TilingMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// VRF bank-contention penalty on the NMC: while the host DMA streams into
+/// the vector register file, the vector unit loses a fraction of its LM
+/// bandwidth, so the overlapped phase of `t_db` is inflated by
+/// `NMC_CONTENTION · min(compute, dma)` per steady-state step.
+pub const NMC_CONTENTION: f64 = 0.25;
+
+/// Total execution cycles for `kernel` on `pe` under `mode`, or `None` when
+/// the kernel cannot be tiled into the mode's LM budget (or the PE cannot
+/// execute the kernel type/width at all).
+///
+/// The CPU has no LM and operates on L2-resident data: both modes collapse
+/// to pure compute + launch overhead.
+pub fn mode_cycles(
+    platform: &Platform,
+    model: &CycleModel,
+    pe: &Pe,
+    kernel: &Kernel,
+    mode: TilingMode,
+) -> Option<Cycles> {
+    let compute = model.kernel_cycles(pe.class, kernel)?;
+    mode_cycles_with(
+        platform,
+        pe,
+        kernel,
+        compute,
+        model.launch(pe.class),
+        model.per_tile(pe.class),
+        mode,
+    )
+}
+
+/// Core mode-cycle computation with the processing-cycle count supplied by
+/// the caller (the estimator feeds profiled/extrapolated counts here, the
+/// [`mode_cycles`] wrapper feeds the analytical model directly).
+pub fn mode_cycles_with(
+    platform: &Platform,
+    pe: &Pe,
+    kernel: &Kernel,
+    compute: Cycles,
+    launch: Cycles,
+    per_tile_oh: Cycles,
+    mode: TilingMode,
+) -> Option<Cycles> {
+    let constraint = platform.constraints.get(pe.id, kernel.ty)?;
+    if !constraint.allows_width(kernel.dw) {
+        return None;
+    }
+
+    let (Some(lm), Some(dma)) = (pe.lm, pe.dma) else {
+        // Host CPU path: no staging, no tiling.
+        return Some(launch + compute);
+    };
+
+    let budget = match mode {
+        TilingMode::SingleBuffer => lm,
+        TilingMode::DoubleBuffer => Bytes(lm.raw() / 2),
+    };
+    let plan = plan_kernel(kernel, budget, constraint.max_dim)?;
+    if plan.n_tiles == 0 {
+        return Some(launch);
+    }
+    let oh_total = Cycles(per_tile_oh.raw() * plan.n_tiles);
+
+    // DMA cycles: per-tile setup + bandwidth-limited streaming. Untiled
+    // single-buffer execution chains the activation operand from the
+    // previous kernel's LM-resident output (skipping its L2→LM transfer);
+    // double-buffering ping-pongs the LM and cannot preserve residency.
+    let n = plan.n_tiles;
+    let traffic_in = match mode {
+        TilingMode::SingleBuffer => plan.traffic_in.saturating_sub(plan.chainable_in),
+        TilingMode::DoubleBuffer => plan.traffic_in,
+    };
+    let din_total = dma_total(dma, traffic_in, n);
+    let dout_total = dma_total(dma, plan.traffic_out, n);
+
+    match mode {
+        TilingMode::SingleBuffer => {
+            // Strictly serialized: load, compute, store per tile.
+            Some(launch + compute + din_total + dout_total + oh_total)
+        }
+        TilingMode::DoubleBuffer => {
+            // Pipelined: fill (first tile in), n−1 steady steps where the
+            // next tile's in + previous tile's out overlap compute, then the
+            // last compute + drain.
+            let c_tile = compute.raw() as f64 / n as f64;
+            let din_tile = din_total.raw() as f64 / n as f64;
+            let dout_tile = dout_total.raw() as f64 / n as f64;
+            let contention = if pe.class == PeClass::Nmc {
+                NMC_CONTENTION
+            } else {
+                0.0
+            };
+            let steady_step = {
+                let c = c_tile;
+                let d = din_tile + dout_tile;
+                c.max(d) + contention * c.min(d)
+            };
+            let total = din_tile                      // fill
+                + (n.saturating_sub(1)) as f64 * steady_step
+                + c_tile                              // last compute
+                + dout_tile; // drain
+            Some(launch + Cycles(total.ceil() as u64) + oh_total)
+        }
+    }
+}
+
+fn dma_total(spec: crate::platform::pe::DmaSpec, traffic: Bytes, n_tiles: u64) -> Cycles {
+    if traffic == Bytes::ZERO {
+        return Cycles::ZERO;
+    }
+    // Per-tile setup, aggregate streaming.
+    let stream = (traffic.raw() as f64 / spec.bytes_per_cycle).ceil() as u64;
+    Cycles(spec.setup_cycles * n_tiles + stream)
+}
+
+/// The adaptive choice: cycles for the better of the two modes, plus which
+/// mode won. This is the "pre-select the execution mode that yields the
+/// minimum execution cycles" step of §3.3.
+pub fn execution_cycles(
+    platform: &Platform,
+    model: &CycleModel,
+    pe: &Pe,
+    kernel: &Kernel,
+) -> Option<(Cycles, TilingMode)> {
+    let sb = mode_cycles(platform, model, pe, kernel, TilingMode::SingleBuffer);
+    let db = mode_cycles(platform, model, pe, kernel, TilingMode::DoubleBuffer);
+    match (sb, db) {
+        (Some(s), Some(d)) => {
+            if d < s {
+                Some((d, TilingMode::DoubleBuffer))
+            } else {
+                Some((s, TilingMode::SingleBuffer))
+            }
+        }
+        (Some(s), None) => Some((s, TilingMode::SingleBuffer)),
+        (None, Some(d)) => Some((d, TilingMode::DoubleBuffer)),
+        (None, None) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataWidth::*, KernelType, Shape};
+    use crate::platform::heeptimize::{heeptimize, CARUS, CGRA, CPU};
+
+    fn setup() -> (Platform, CycleModel) {
+        (heeptimize(), CycleModel::heeptimize())
+    }
+
+    fn mm(m: u64, k: u64, n: u64) -> Kernel {
+        Kernel::new("mm", KernelType::MatMul, Shape::MatMul { m, k, n }, Int8)
+    }
+
+    #[test]
+    fn cpu_ignores_tiling() {
+        let (p, m) = setup();
+        let k = mm(97, 128, 256);
+        let sb = mode_cycles(&p, &m, p.pe(CPU), &k, TilingMode::SingleBuffer).unwrap();
+        let db = mode_cycles(&p, &m, p.pe(CPU), &k, TilingMode::DoubleBuffer).unwrap();
+        assert_eq!(sb, db);
+    }
+
+    #[test]
+    fn db_wins_on_large_compute_bound_kernels() {
+        // ff1 (97×128×256) on Carus: DMA-heavy via the 4 B/cycle port but
+        // compute still dominates; overlap should win.
+        let (p, m) = setup();
+        let k = mm(97, 128, 256);
+        let (_, mode) = execution_cycles(&p, &m, p.pe(CARUS), &k).unwrap();
+        assert_eq!(mode, TilingMode::DoubleBuffer);
+    }
+
+    #[test]
+    fn sb_wins_on_small_kernels() {
+        // A small add fits LM in one tile: sb avoids the pipeline split.
+        let (p, m) = setup();
+        let add = Kernel::new(
+            "add",
+            KernelType::Add,
+            Shape::Elementwise { n: 97 * 128, arity: 2 },
+            Int8,
+        );
+        let (_, mode) = execution_cycles(&p, &m, p.pe(CARUS), &add).unwrap();
+        assert_eq!(mode, TilingMode::SingleBuffer);
+    }
+
+    #[test]
+    fn unsupported_kernel_is_none() {
+        let (p, m) = setup();
+        let sm = Kernel::new(
+            "sm",
+            KernelType::Softmax,
+            Shape::Rowwise { rows: 97, cols: 97 },
+            Int16,
+        );
+        assert!(execution_cycles(&p, &m, p.pe(CGRA), &sm).is_none());
+        assert!(execution_cycles(&p, &m, p.pe(CPU), &sm).is_some());
+    }
+
+    #[test]
+    fn forced_db_never_faster_than_adaptive() {
+        let (p, m) = setup();
+        for k in [
+            mm(97, 128, 32),
+            mm(97, 128, 256),
+            mm(97, 32, 97),
+            mm(1, 128, 2),
+        ] {
+            for pe in [CGRA, CARUS] {
+                let (best, _) = execution_cycles(&p, &m, p.pe(pe), &k).unwrap();
+                let db = mode_cycles(&p, &m, p.pe(pe), &k, TilingMode::DoubleBuffer).unwrap();
+                assert!(best <= db, "{k:?} on {pe}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_unit_wins_elementwise() {
+        // Equal DMA bandwidth (both stage via the system DMA channel), so
+        // Carus' faster vector element-wise path and cheaper launch must win.
+        let (p, m) = setup();
+        let add = Kernel::new(
+            "add",
+            KernelType::Add,
+            Shape::Elementwise { n: 50_000, arity: 2 },
+            Int8,
+        );
+        let cgra = mode_cycles(&p, &m, p.pe(CGRA), &add, TilingMode::SingleBuffer).unwrap();
+        let carus = mode_cycles(&p, &m, p.pe(CARUS), &add, TilingMode::SingleBuffer).unwrap();
+        assert!(carus < cgra);
+    }
+
+    #[test]
+    fn mode_round_trip_names() {
+        for m in TilingMode::BOTH {
+            assert_eq!(TilingMode::from_name(m.name()), Some(m));
+        }
+    }
+}

@@ -1,0 +1,310 @@
+//! The tile planner: decompose a kernel into LM-sized tiles and model the
+//! resulting L2↔LM traffic.
+
+use super::footprint::{accum_bytes, matmul_tile_bytes};
+use crate::ir::{DataWidth, Kernel, Shape};
+use crate::util::units::Bytes;
+
+/// A tile decomposition of one kernel for one PE's LM budget.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TilePlan {
+    /// Number of tiles executed sequentially.
+    pub n_tiles: u64,
+    /// Total bytes streamed L2 → LM (includes operand re-reads).
+    pub traffic_in: Bytes,
+    /// Total bytes streamed LM → L2.
+    pub traffic_out: Bytes,
+    /// True when the kernel runs as a single tile (no decomposition).
+    pub untiled: bool,
+    /// Activation-operand bytes that may be skipped from `traffic_in` when
+    /// the kernel runs untiled and the producing kernel ran on the same PE
+    /// (single-buffer LM residency chaining — see [`super::modes`]).
+    pub chainable_in: Bytes,
+}
+
+/// Plan the tiling of `kernel` into an LM of `budget` bytes, honoring an
+/// optional `Λ_op` max-dimension bound. Returns `None` when no legal tile
+/// exists (e.g. one operand row alone exceeds the budget).
+pub fn plan_kernel(kernel: &Kernel, budget: Bytes, max_dim: Option<u64>) -> Option<TilePlan> {
+    if budget == Bytes::ZERO {
+        return None;
+    }
+    let dw = kernel.dw;
+    let mut plan = match kernel.shape {
+        Shape::MatMul { m, k, n } => plan_matmul(m, k, n, dw, budget, max_dim),
+        Shape::Conv2d {
+            h,
+            w,
+            c_in,
+            c_out,
+            kh,
+            kw,
+        } => {
+            // im2col formulation; input patches are re-materialized per tile
+            // by the DMA's 2-D addressing, so traffic follows the matmul
+            // model with `k = kh·kw·c_in`.
+            plan_matmul(h * w, kh * kw * c_in, c_out, dw, budget, max_dim)
+        }
+        Shape::Elementwise { n, arity } => {
+            // Vector PEs chunk long element-wise streams internally, so the
+            // Λ_op dimension bound does not limit the tile length here.
+            plan_streaming(n, arity * dw.bytes(), dw.bytes(), budget, None)
+        }
+        Shape::Rowwise { rows, cols } => {
+            // Whole rows must be resident (reduction over a row).
+            let row_bytes = cols * dw.bytes();
+            plan_streaming(rows, row_bytes, row_bytes, budget, max_dim)
+                .filter(|_| max_dim.is_none_or(|d| cols <= d))
+        }
+        Shape::Transpose { rows, cols } => {
+            // Tile over rows; the transposed tile is written back strided.
+            let row_bytes = cols * dw.bytes();
+            plan_streaming(rows, row_bytes, row_bytes, budget, None)
+                .filter(|_| max_dim.is_none_or(|d| cols <= d))
+        }
+        Shape::Fft { n_fft, batch } => {
+            // One FFT at a time minimum: input + scratch (complex) + output.
+            let unit = n_fft * dw.bytes() + 2 * n_fft * dw.bytes() + (n_fft / 2) * dw.bytes();
+            plan_streaming(batch, unit, (n_fft / 2) * dw.bytes(), budget, None)
+                .filter(|_| max_dim.is_none_or(|d| n_fft <= d))
+        }
+        Shape::Concat { rows, cols } => {
+            let row_bytes = cols * dw.bytes();
+            plan_streaming(rows + 1, row_bytes, row_bytes, budget, None)
+                .filter(|_| max_dim.is_none_or(|d| cols <= d))
+        }
+    }?;
+    // Untiled single-tile plans can chain their activation input from the
+    // previous kernel's LM-resident output (applied by the sb mode model).
+    if plan.untiled && plan.n_tiles == 1 {
+        plan.chainable_in = kernel.shape.activation_bytes(dw).min(plan.traffic_in);
+    }
+    Some(plan)
+}
+
+/// Streaming decomposition: `units` independent work units of `in_bytes` +
+/// `out_bytes` each; tiles are groups of units. No traffic amplification.
+fn plan_streaming(
+    units: u64,
+    in_bytes_per_unit: u64,
+    out_bytes_per_unit: u64,
+    budget: Bytes,
+    max_units_per_tile: Option<u64>,
+) -> Option<TilePlan> {
+    if units == 0 {
+        return Some(TilePlan {
+            n_tiles: 0,
+            traffic_in: Bytes::ZERO,
+            traffic_out: Bytes::ZERO,
+            untiled: true,
+            chainable_in: Bytes::ZERO,
+        });
+    }
+    let unit = in_bytes_per_unit + out_bytes_per_unit;
+    if unit == 0 || unit > budget.raw() {
+        return None;
+    }
+    let mut per_tile = budget.raw() / unit;
+    if let Some(cap) = max_units_per_tile {
+        if cap == 0 {
+            return None;
+        }
+        per_tile = per_tile.min(cap);
+    }
+    if per_tile == 0 {
+        return None;
+    }
+    let n_tiles = units.div_ceil(per_tile);
+    Some(TilePlan {
+        n_tiles,
+        traffic_in: Bytes(units * in_bytes_per_unit),
+        traffic_out: Bytes(units * out_bytes_per_unit),
+        untiled: n_tiles == 1,
+        chainable_in: Bytes::ZERO,
+    })
+}
+
+/// Matmul decomposition: outer loop over `m_t`-row strips of A (loaded
+/// once each), inner loop over `n_t`-column panels of B (each panel loaded
+/// once per strip ⇒ B traffic amplifies by the strip count), 32-bit
+/// accumulator tile resident. If `k` exceeds the dimension bound it is
+/// chunked with the accumulator kept in LM (each chunk adds one pass over
+/// A and B but not C).
+fn plan_matmul(
+    m: u64,
+    k: u64,
+    n: u64,
+    dw: DataWidth,
+    budget: Bytes,
+    max_dim: Option<u64>,
+) -> Option<TilePlan> {
+    if m == 0 || k == 0 || n == 0 {
+        return Some(TilePlan {
+            n_tiles: 0,
+            traffic_in: Bytes::ZERO,
+            traffic_out: Bytes::ZERO,
+            untiled: true,
+            chainable_in: Bytes::ZERO,
+        });
+    }
+    let b = dw.bytes();
+    let cap = max_dim.unwrap_or(u64::MAX);
+    let k_c = k.min(cap);
+    let k_chunks = k.div_ceil(k_c);
+
+    // Untiled fast path.
+    if k_chunks == 1
+        && m <= cap
+        && n <= cap
+        && matmul_tile_bytes(m, k, n, dw).raw() <= budget.raw()
+    {
+        return Some(TilePlan {
+            n_tiles: 1,
+            traffic_in: Bytes((m * k + k * n) * b),
+            traffic_out: Bytes(m * n * b),
+            untiled: true,
+            chainable_in: Bytes::ZERO,
+        });
+    }
+
+    // Choose n_t as large as legal, then the largest m_t that fits; shrink
+    // n_t geometrically if even one A-row + B-panel + C-row cannot fit.
+    let mut n_t = n.min(cap);
+    loop {
+        if n_t == 0 {
+            return None;
+        }
+        // m_t from: m_t·k_c·b + k_c·n_t·b + m_t·n_t·acc ≤ budget
+        let fixed = k_c * n_t * b;
+        if fixed >= budget.raw() {
+            n_t /= 2;
+            continue;
+        }
+        let per_row = k_c * b + n_t * accum_bytes(dw);
+        let m_t = ((budget.raw() - fixed) / per_row).min(m).min(cap);
+        if m_t == 0 {
+            n_t /= 2;
+            continue;
+        }
+        let n_m = m.div_ceil(m_t);
+        let n_n = n.div_ceil(n_t);
+        // Traffic model for the strip/panel loop nest:
+        //   for m-strip { for n-panel { for k-chunk { A-chunk, B-chunk } C } }
+        // A strips stay resident across panels when k is unchunked (loaded
+        // once, m·k); with k-chunking each panel revisits every A chunk
+        // (n_n·m·k). B panels are re-read once per strip (n_m·k·n). C is
+        // written once, requantized to `dw` on write-out.
+        let a_traffic = if k_chunks == 1 { m * k * b } else { n_n * m * k * b };
+        let traffic_in = a_traffic + n_m * k * n * b;
+        let traffic_out = m * n * b;
+        return Some(TilePlan {
+            n_tiles: n_m * n_n * k_chunks,
+            traffic_in: Bytes(traffic_in),
+            traffic_out: Bytes(traffic_out),
+            untiled: false,
+            chainable_in: Bytes::ZERO,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{DataWidth::*, Kernel, KernelType};
+    use crate::util::units::Bytes;
+
+    fn mm(m: u64, k: u64, n: u64) -> Kernel {
+        Kernel::new("mm", KernelType::MatMul, Shape::MatMul { m, k, n }, Int8)
+    }
+
+    const LM64: Bytes = Bytes(64 * 1024);
+    const LM32: Bytes = Bytes(32 * 1024);
+
+    #[test]
+    fn small_matmul_untiled() {
+        let p = plan_kernel(&mm(97, 128, 32), LM64, Some(512)).unwrap();
+        assert!(p.untiled);
+        assert_eq!(p.n_tiles, 1);
+        assert_eq!(p.traffic_in.raw(), 97 * 128 + 128 * 32);
+        assert_eq!(p.traffic_out.raw(), 97 * 32);
+    }
+
+    #[test]
+    fn ff1_tiles_and_amplifies_b_traffic() {
+        // 97×128×256 int8 does not fit 64 KiB: B panels are re-read.
+        let p = plan_kernel(&mm(97, 128, 256), LM64, Some(512)).unwrap();
+        assert!(!p.untiled);
+        assert!(p.n_tiles > 1);
+        let min_traffic = (97 * 128 + 128 * 256) as u64;
+        assert!(p.traffic_in.raw() > min_traffic, "{p:?}");
+    }
+
+    #[test]
+    fn half_budget_amplifies_more() {
+        // The t_db-vs-t_sb asymmetry: half the budget ⇒ smaller strips ⇒
+        // more B re-reads.
+        let full = plan_kernel(&mm(97, 128, 256), LM64, Some(512)).unwrap();
+        let half = plan_kernel(&mm(97, 128, 256), LM32, Some(512)).unwrap();
+        assert!(half.traffic_in.raw() >= full.traffic_in.raw());
+        assert!(half.n_tiles >= full.n_tiles);
+    }
+
+    #[test]
+    fn max_dim_forces_k_chunking() {
+        let p = plan_kernel(&mm(64, 2048, 64), LM64, Some(512)).unwrap();
+        assert!(!p.untiled);
+        // k chunked into 4 passes.
+        assert!(p.n_tiles >= 4, "{p:?}");
+    }
+
+    #[test]
+    fn impossible_tile_returns_none() {
+        // One B panel row (k·b) exceeds even the whole budget at n_t=1 …
+        let k = Kernel::new(
+            "mm",
+            KernelType::MatMul,
+            Shape::MatMul { m: 4, k: 100_000, n: 4 },
+            Int32,
+        );
+        assert!(plan_kernel(&k, Bytes(1024), None).is_none());
+    }
+
+    #[test]
+    fn rowwise_needs_whole_rows() {
+        let norm = Kernel::new(
+            "norm",
+            KernelType::Norm,
+            Shape::Rowwise { rows: 97, cols: 128 },
+            Int16,
+        );
+        let p = plan_kernel(&norm, LM64, Some(512)).unwrap();
+        assert!(p.untiled); // 97·128·2·2 = 49 KiB fits
+        // With a tiny budget it tiles by rows.
+        let p2 = plan_kernel(&norm, Bytes(4096), Some(512)).unwrap();
+        assert!(p2.n_tiles > 1);
+        // A row wider than the budget is impossible.
+        assert!(plan_kernel(&norm, Bytes(256), Some(512)).is_none());
+    }
+
+    #[test]
+    fn elementwise_streaming_no_amplification() {
+        let add = Kernel::new(
+            "add",
+            KernelType::Add,
+            Shape::Elementwise { n: 97 * 128, arity: 2 },
+            Int8,
+        );
+        let p64 = plan_kernel(&add, LM64, None).unwrap();
+        let p8 = plan_kernel(&add, Bytes(8 * 1024), None).unwrap();
+        assert_eq!(p64.traffic_in, p8.traffic_in);
+        assert_eq!(p64.traffic_out, p8.traffic_out);
+        assert!(p8.n_tiles > p64.n_tiles);
+    }
+
+    #[test]
+    fn zero_sized_shapes() {
+        let p = plan_kernel(&mm(0, 8, 8), LM64, None).unwrap();
+        assert_eq!(p.n_tiles, 0);
+        assert_eq!(p.traffic_in, Bytes::ZERO);
+    }
+}

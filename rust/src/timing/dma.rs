@@ -1,0 +1,45 @@
+//! DMA transfer model: L2 ↔ PE local memory.
+
+use crate::platform::pe::DmaSpec;
+use crate::util::units::{Bytes, Cycles};
+
+/// Cycles to move `bytes` across one DMA path: fixed programming cost plus
+/// bandwidth-limited streaming.
+pub fn dma_cycles(spec: DmaSpec, bytes: Bytes) -> Cycles {
+    if bytes == Bytes::ZERO {
+        return Cycles::ZERO;
+    }
+    let stream = (bytes.raw() as f64 / spec.bytes_per_cycle).ceil() as u64;
+    Cycles(spec.setup_cycles + stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: DmaSpec = DmaSpec {
+        bytes_per_cycle: 4.0,
+        setup_cycles: 96,
+    };
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(dma_cycles(SPEC, Bytes::ZERO), Cycles::ZERO);
+    }
+
+    #[test]
+    fn bandwidth_and_setup() {
+        assert_eq!(dma_cycles(SPEC, Bytes(4000)), Cycles(96 + 1000));
+        // Partial beat rounds up.
+        assert_eq!(dma_cycles(SPEC, Bytes(5)), Cycles(96 + 2));
+    }
+
+    #[test]
+    fn wide_port_is_faster() {
+        let wide = DmaSpec {
+            bytes_per_cycle: 16.0,
+            setup_cycles: 72,
+        };
+        assert!(dma_cycles(wide, Bytes(64 * 1024)) < dma_cycles(SPEC, Bytes(64 * 1024)));
+    }
+}

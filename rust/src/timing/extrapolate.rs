@@ -1,0 +1,142 @@
+//! Size extrapolation over profiled cycle counts (§3.3 `G_T`).
+//!
+//! MEDEA's timing model "includes both directly profiled processing-only
+//! cycles [and] extrapolated values for non-profiled kernel sizes". The
+//! characterization harness profiles a *grid* of representative sizes per
+//! (PE, kernel type, width); this module fits `cycles ≈ a·ops + b` by least
+//! squares and answers queries for arbitrary sizes — exact sizes present in
+//! the profile are answered from the table directly.
+
+use crate::util::units::Cycles;
+use std::collections::BTreeMap;
+
+/// One profiled point: operation count → measured cycles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfilePoint {
+    pub ops: u64,
+    pub cycles: u64,
+}
+
+/// Least-squares linear fit through profiled (ops, cycles) points, with
+/// exact-match lookup.
+#[derive(Debug, Clone)]
+pub struct Extrapolator {
+    exact: BTreeMap<u64, u64>,
+    /// slope (cycles per op)
+    a: f64,
+    /// intercept (fixed overhead cycles)
+    b: f64,
+}
+
+impl Extrapolator {
+    /// Fit from profiled points. Panics on an empty profile.
+    pub fn fit(points: &[ProfilePoint]) -> Extrapolator {
+        assert!(!points.is_empty(), "cannot fit an empty profile");
+        let exact: BTreeMap<u64, u64> = points.iter().map(|p| (p.ops, p.cycles)).collect();
+
+        let n = points.len() as f64;
+        if points.len() == 1 {
+            // Degenerate: pure proportionality through the single point.
+            let p = points[0];
+            let a = if p.ops == 0 { 0.0 } else { p.cycles as f64 / p.ops as f64 };
+            return Extrapolator { exact, a, b: 0.0 };
+        }
+        let sx: f64 = points.iter().map(|p| p.ops as f64).sum();
+        let sy: f64 = points.iter().map(|p| p.cycles as f64).sum();
+        let sxx: f64 = points.iter().map(|p| (p.ops as f64).powi(2)).sum();
+        let sxy: f64 = points.iter().map(|p| p.ops as f64 * p.cycles as f64).sum();
+        let denom = n * sxx - sx * sx;
+        let (a, b) = if denom.abs() < 1e-9 {
+            (sy / sx.max(1.0), 0.0)
+        } else {
+            let a = (n * sxy - sx * sy) / denom;
+            let b = (sy - a * sx) / n;
+            (a, b.max(0.0)) // negative fixed overhead is unphysical
+        };
+        Extrapolator { exact, a, b }
+    }
+
+    /// Estimated cycles for `ops` operations.
+    pub fn cycles(&self, ops: u64) -> Cycles {
+        if let Some(c) = self.exact.get(&ops) {
+            return Cycles(*c);
+        }
+        Cycles((self.a * ops as f64 + self.b).round().max(0.0) as u64)
+    }
+
+    /// Slope of the fit (marginal cycles per op).
+    pub fn slope(&self) -> f64 {
+        self.a
+    }
+
+    /// Intercept of the fit (estimated fixed overhead).
+    pub fn intercept(&self) -> f64 {
+        self.b
+    }
+
+    /// Worst relative error of the fit over its own profile points
+    /// (excluding exact-match lookup) — a fit-quality diagnostic.
+    pub fn max_rel_error(&self) -> f64 {
+        self.exact
+            .iter()
+            .map(|(&ops, &cyc)| {
+                let est = self.a * ops as f64 + self.b;
+                (est - cyc as f64).abs() / (cyc as f64).max(1.0)
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_points_answered_from_table() {
+        let e = Extrapolator::fit(&[
+            ProfilePoint { ops: 100, cycles: 260 },
+            ProfilePoint { ops: 200, cycles: 500 },
+        ]);
+        assert_eq!(e.cycles(100), Cycles(260));
+        assert_eq!(e.cycles(200), Cycles(500));
+    }
+
+    #[test]
+    fn linear_data_recovered() {
+        // cycles = 2.5·ops + 1000
+        let pts: Vec<ProfilePoint> = [1_000u64, 10_000, 100_000, 1_000_000]
+            .iter()
+            .map(|&ops| ProfilePoint {
+                ops,
+                cycles: (2.5 * ops as f64 + 1000.0) as u64,
+            })
+            .collect();
+        let e = Extrapolator::fit(&pts);
+        assert!((e.slope() - 2.5).abs() < 1e-6);
+        assert!((e.intercept() - 1000.0).abs() < 1.0);
+        let est = e.cycles(50_000);
+        assert!((est.raw() as f64 - 126_000.0).abs() < 2.0);
+        assert!(e.max_rel_error() < 1e-6);
+    }
+
+    #[test]
+    fn single_point_proportional() {
+        let e = Extrapolator::fit(&[ProfilePoint { ops: 1000, cycles: 3000 }]);
+        assert_eq!(e.cycles(2000), Cycles(6000));
+    }
+
+    #[test]
+    fn negative_intercept_clamped() {
+        let e = Extrapolator::fit(&[
+            ProfilePoint { ops: 100, cycles: 100 },
+            ProfilePoint { ops: 200, cycles: 260 },
+        ]);
+        assert!(e.intercept() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty profile")]
+    fn empty_profile_panics() {
+        Extrapolator::fit(&[]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Timing characterization stand-in (§3.1.3 `S_c` and §4.1.2 FPGA flow).
+//!
+//! The paper measures kernel cycle counts on an FPGA prototype; here a
+//! per-PE analytical cycle model ([`cycle_model`]) plays the FPGA's role.
+//! [`dma`] models L2↔LM transfers, and [`extrapolate`] reproduces the
+//! paper's "extrapolated values for non-profiled kernel sizes" mechanism on
+//! top of profile tables produced by [`crate::profile`].
+
+pub mod cycle_model;
+pub mod dma;
+pub mod extrapolate;
+
+pub use cycle_model::CycleModel;
+pub use dma::dma_cycles;
+pub use extrapolate::Extrapolator;

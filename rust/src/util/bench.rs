@@ -1,0 +1,160 @@
+//! A mini benchmark harness (criterion stand-in).
+//!
+//! `cargo bench` runs each bench binary (declared `harness = false` in
+//! `Cargo.toml`); those binaries use [`Bencher`] for warmup + timed iterations
+//! and print a uniform `name  mean ± σ  (iters)` report alongside the
+//! reproduced paper table/figure data.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Running;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: u64,
+}
+
+impl Measurement {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  (min {:>10}, max {:>10}, n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.iters
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and adaptive iteration count.
+pub struct Bencher {
+    /// Target total measurement time per benchmark.
+    pub measure_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup_time: Duration,
+    /// Upper bound on timed iterations.
+    pub max_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Honor quick runs: MEDEA_BENCH_FAST=1 trims times for CI smoke.
+        let fast = std::env::var("MEDEA_BENCH_FAST").is_ok();
+        Self {
+            measure_time: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            warmup_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must return a value (passed through `black_box`).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup: also estimates per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.measure_time.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(1, self.max_iters);
+
+        let mut stats = Running::new();
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            stats.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(stats.mean()),
+            stddev: Duration::from_secs_f64(stats.stddev()),
+            min: Duration::from_secs_f64(stats.min()),
+            max: Duration::from_secs_f64(stats.max()),
+            iters,
+        };
+        println!("{}", m.report_line());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print the closing summary (called at the end of each bench binary).
+    pub fn finish(&self, bench_name: &str) {
+        println!(
+            "\n[{bench_name}] {} benchmark(s) complete",
+            self.results.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("MEDEA_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.measure_time = Duration::from_millis(20);
+        b.warmup_time = Duration::from_millis(5);
+        let m = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.iters >= 1);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,391 @@
+//! A minimal declarative command-line parser.
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options and
+//! positional arguments, with generated `--help` text. Stands in for `clap`,
+//! which is not available in the offline vendor set.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option/flag.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Specification of a (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl CmdSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Render help text for this command.
+    pub fn help(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {} {}", self.about, prog, self.name);
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nArguments:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOptions:\n");
+            for o in &self.opts {
+                let arg = if o.takes_value {
+                    format!("--{} <VALUE>", o.name)
+                } else {
+                    format!("--{}", o.name)
+                };
+                let default = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {arg:<26} {}{default}\n", o.help));
+            }
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|e| CliError {
+                msg: format!("invalid value for --{name}: {e}"),
+            }),
+        }
+    }
+
+    /// Parse a required (possibly defaulted) option.
+    pub fn req_parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        self.get_parse(name)?.ok_or_else(|| CliError {
+            msg: format!("missing required option --{name}"),
+        })
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// Parse a comma-separated list of f64 (e.g. `--deadlines 50,200,1000`).
+    pub fn get_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<f64>().map_err(|e| CliError {
+                        msg: format!("invalid list item in --{name}: {e}"),
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+/// CLI parse error.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("{msg}")]
+pub struct CliError {
+    pub msg: String,
+}
+
+/// Outcome of parsing the full command line.
+#[derive(Debug)]
+pub enum Parsed {
+    /// A command matched; its name and parsed args.
+    Command(String, Args),
+    /// `--help`/`help` requested; the rendered help text.
+    Help(String),
+}
+
+/// The top-level application spec.
+pub struct App {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+}
+
+impl App {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        Self {
+            prog,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, cmd: CmdSpec) -> Self {
+        self.commands.push(cmd);
+        self
+    }
+
+    pub fn overview(&self) -> String {
+        let mut s = format!("{}\n\nUsage: {} <COMMAND> [OPTIONS]\n\nCommands:\n", self.about, self.prog);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!(
+            "\nRun `{} <COMMAND> --help` for command options.\n",
+            self.prog
+        ));
+        s
+    }
+
+    /// Parse an argv (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, CliError> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Ok(Parsed::Help(self.overview()));
+        }
+        let cmd_name = &argv[0];
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == *cmd_name)
+            .ok_or_else(|| CliError {
+                msg: format!("unknown command `{cmd_name}`; see --help"),
+            })?;
+
+        let mut args = Args::default();
+        for o in &spec.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Ok(Parsed::Help(spec.help(self.prog)));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = spec.find(name).ok_or_else(|| CliError {
+                    msg: format!("unknown option --{name} for `{cmd_name}`"),
+                })?;
+                if opt.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError {
+                                    msg: format!("option --{name} expects a value"),
+                                })?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError {
+                            msg: format!("flag --{name} does not take a value"),
+                        });
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+
+        if args.positionals.len() > spec.positionals.len() {
+            return Err(CliError {
+                msg: format!(
+                    "too many positional arguments for `{cmd_name}` (expected {})",
+                    spec.positionals.len()
+                ),
+            });
+        }
+        Ok(Parsed::Command(cmd_name.clone(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("medea", "MEDEA manager").command(
+            CmdSpec::new("schedule", "Generate a schedule")
+                .opt_default("deadline-ms", "Application deadline", "200")
+                .opt("solver", "MCKP solver to use")
+                .flag("verbose", "Chatty output")
+                .positional("workload", "Workload file"),
+        )
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let parsed = app()
+            .parse(&sv(&["schedule", "--deadline-ms", "50", "--verbose", "tsd.json"]))
+            .unwrap();
+        match parsed {
+            Parsed::Command(name, args) => {
+                assert_eq!(name, "schedule");
+                assert_eq!(args.req_parse::<f64>("deadline-ms").unwrap(), 50.0);
+                assert!(args.flag("verbose"));
+                assert_eq!(args.positional(0), Some("tsd.json"));
+                assert_eq!(args.get("solver"), None);
+            }
+            _ => panic!("expected command"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let Parsed::Command(_, args) = app().parse(&sv(&["schedule"])).unwrap() else {
+            panic!()
+        };
+        assert_eq!(args.req_parse::<f64>("deadline-ms").unwrap(), 200.0);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let Parsed::Command(_, args) = app()
+            .parse(&sv(&["schedule", "--deadline-ms=1000"]))
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(args.req_parse::<f64>("deadline-ms").unwrap(), 1000.0);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(app().parse(&sv(&["bogus"])).is_err());
+        assert!(app().parse(&sv(&["schedule", "--nope"])).is_err());
+        assert!(app().parse(&sv(&["schedule", "--solver"])).is_err());
+        assert!(app()
+            .parse(&sv(&["schedule", "a.json", "extra.json"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&sv(&["--help"])), Ok(Parsed::Help(_))));
+        assert!(matches!(
+            app().parse(&sv(&["schedule", "--help"])),
+            Ok(Parsed::Help(_))
+        ));
+        let Parsed::Help(h) = app().parse(&sv(&[])).unwrap() else {
+            panic!()
+        };
+        assert!(h.contains("schedule"));
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let Parsed::Command(_, args) = App::new("x", "y")
+            .command(CmdSpec::new("s", "s").opt("deadlines", "list"))
+            .parse(&sv(&["s", "--deadlines", "50, 200,1000"]))
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(
+            args.get_f64_list("deadlines").unwrap().unwrap(),
+            vec![50.0, 200.0, 1000.0]
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Zero-dependency substrates used across the library.
+//!
+//! The execution environment vendors only the `xla` crate family, so the
+//! usual ecosystem crates (serde, clap, criterion, rand, …) are rebuilt here
+//! as small, tested modules:
+//!
+//! * [`units`] — typed physical quantities (cycles, Hz, V, s, J, W, bytes).
+//! * [`json`] — a complete JSON parser/emitter for profiles and platforms.
+//! * [`cli`] — a minimal declarative command-line parser.
+//! * [`rng`] — deterministic SplitMix64/xoshiro256** RNG + sampling helpers.
+//! * [`stats`] — running statistics and percentile summaries.
+//! * [`table`] — aligned-text / markdown / CSV table rendering.
+//! * [`bench`] — a mini-criterion: warmup, timed iterations, mean ± σ.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,412 @@
+//! Typed physical quantities.
+//!
+//! The manager mixes cycle counts, frequencies, voltages, times, energies and
+//! powers; mixing them up silently is the classic failure mode of an energy
+//! model. Each quantity gets a newtype over `f64` (or `u64` for cycles) with
+//! only the physically meaningful operations defined.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+macro_rules! f64_newtype {
+    ($(#[$meta:meta])* $name:ident, $unit:expr) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+            #[inline]
+            pub fn raw(self) -> f64 {
+                self.0
+            }
+            #[inline]
+            pub fn abs(self) -> $name {
+                $name(self.0.abs())
+            }
+            #[inline]
+            pub fn min(self, other: $name) -> $name {
+                $name(self.0.min(other.0))
+            }
+            #[inline]
+            pub fn max(self, other: $name) -> $name {
+                $name(self.0.max(other.0))
+            }
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                $name(self.0 + rhs.0)
+            }
+        }
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(self.0 - rhs.0)
+            }
+        }
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: $name) {
+                self.0 += rhs.0;
+            }
+        }
+        impl SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, rhs: $name) {
+                self.0 -= rhs.0;
+            }
+        }
+        impl Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name(-self.0)
+            }
+        }
+        impl Mul<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: f64) -> $name {
+                $name(self.0 * rhs)
+            }
+        }
+        impl Div<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, rhs: f64) -> $name {
+                $name(self.0 / rhs)
+            }
+        }
+        impl Div<$name> for $name {
+            type Output = f64;
+            #[inline]
+            fn div(self, rhs: $name) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|v| v.0).sum())
+            }
+        }
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{} {}", self.0, $unit)
+            }
+        }
+    };
+}
+
+f64_newtype!(
+    /// A time span in seconds.
+    Time,
+    "s"
+);
+f64_newtype!(
+    /// An energy in joules.
+    Energy,
+    "J"
+);
+f64_newtype!(
+    /// A power in watts.
+    Power,
+    "W"
+);
+f64_newtype!(
+    /// A frequency in hertz.
+    Freq,
+    "Hz"
+);
+f64_newtype!(
+    /// A supply voltage in volts.
+    Voltage,
+    "V"
+);
+
+impl Time {
+    #[inline]
+    pub fn from_ms(ms: f64) -> Time {
+        Time(ms * 1e-3)
+    }
+    #[inline]
+    pub fn from_us(us: f64) -> Time {
+        Time(us * 1e-6)
+    }
+    #[inline]
+    pub fn as_ms(self) -> f64 {
+        self.0 * 1e3
+    }
+    #[inline]
+    pub fn as_us(self) -> f64 {
+        self.0 * 1e6
+    }
+}
+
+impl Energy {
+    #[inline]
+    pub fn from_uj(uj: f64) -> Energy {
+        Energy(uj * 1e-6)
+    }
+    #[inline]
+    pub fn as_uj(self) -> f64 {
+        self.0 * 1e6
+    }
+    #[inline]
+    pub fn as_mj(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+impl Power {
+    #[inline]
+    pub fn from_uw(uw: f64) -> Power {
+        Power(uw * 1e-6)
+    }
+    #[inline]
+    pub fn from_mw(mw: f64) -> Power {
+        Power(mw * 1e-3)
+    }
+    #[inline]
+    pub fn as_uw(self) -> f64 {
+        self.0 * 1e6
+    }
+    #[inline]
+    pub fn as_mw(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+impl Freq {
+    #[inline]
+    pub fn from_mhz(mhz: f64) -> Freq {
+        Freq(mhz * 1e6)
+    }
+    #[inline]
+    pub fn as_mhz(self) -> f64 {
+        self.0 * 1e-6
+    }
+}
+
+/// `P × t = E`
+impl Mul<Time> for Power {
+    type Output = Energy;
+    #[inline]
+    fn mul(self, rhs: Time) -> Energy {
+        Energy(self.0 * rhs.0)
+    }
+}
+/// `t × P = E`
+impl Mul<Power> for Time {
+    type Output = Energy;
+    #[inline]
+    fn mul(self, rhs: Power) -> Energy {
+        Energy(self.0 * rhs.0)
+    }
+}
+/// `E / t = P`
+impl Div<Time> for Energy {
+    type Output = Power;
+    #[inline]
+    fn div(self, rhs: Time) -> Power {
+        Power(self.0 / rhs.0)
+    }
+}
+/// `E / P = t`
+impl Div<Power> for Energy {
+    type Output = Time;
+    #[inline]
+    fn div(self, rhs: Power) -> Time {
+        Time(self.0 / rhs.0)
+    }
+}
+
+/// A cycle count. Kept integral: the characterization harness reports exact
+/// simulated cycle counts, mirroring FPGA performance counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Cycles(pub u64);
+
+impl Cycles {
+    pub const ZERO: Cycles = Cycles(0);
+
+    #[inline]
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Wall-clock time of this many cycles at frequency `f`.
+    #[inline]
+    pub fn at(self, f: Freq) -> Time {
+        Time(self.0 as f64 / f.0)
+    }
+
+    #[inline]
+    pub fn saturating_sub(self, rhs: Cycles) -> Cycles {
+        Cycles(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for Cycles {
+    type Output = Cycles;
+    #[inline]
+    fn add(self, rhs: Cycles) -> Cycles {
+        Cycles(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Cycles {
+    #[inline]
+    fn add_assign(&mut self, rhs: Cycles) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for Cycles {
+    type Output = Cycles;
+    #[inline]
+    fn sub(self, rhs: Cycles) -> Cycles {
+        Cycles(self.0 - rhs.0)
+    }
+}
+impl Mul<u64> for Cycles {
+    type Output = Cycles;
+    #[inline]
+    fn mul(self, rhs: u64) -> Cycles {
+        Cycles(self.0 * rhs)
+    }
+}
+impl Sum for Cycles {
+    fn sum<I: Iterator<Item = Cycles>>(iter: I) -> Cycles {
+        Cycles(iter.map(|c| c.0).sum())
+    }
+}
+impl fmt::Display for Cycles {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} cyc", self.0)
+    }
+}
+
+/// A memory size in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Bytes(pub u64);
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+
+    #[inline]
+    pub fn from_kib(kib: u64) -> Bytes {
+        Bytes(kib * 1024)
+    }
+    #[inline]
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+    #[inline]
+    pub fn as_kib(self) -> f64 {
+        self.0 as f64 / 1024.0
+    }
+    #[inline]
+    pub fn min(self, other: Bytes) -> Bytes {
+        Bytes(self.0.min(other.0))
+    }
+    #[inline]
+    pub fn saturating_sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    #[inline]
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Bytes {
+    #[inline]
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+impl Mul<u64> for Bytes {
+    type Output = Bytes;
+    #[inline]
+    fn mul(self, rhs: u64) -> Bytes {
+        Bytes(self.0 * rhs)
+    }
+}
+impl Sum for Bytes {
+    fn sum<I: Iterator<Item = Bytes>>(iter: I) -> Bytes {
+        Bytes(iter.map(|b| b.0).sum())
+    }
+}
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 % 1024 == 0 && self.0 > 0 {
+            write!(f, "{} KiB", self.0 / 1024)
+        } else {
+            write!(f, "{} B", self.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_time_energy_algebra() {
+        let p = Power::from_mw(2.0);
+        let t = Time::from_ms(50.0);
+        let e = p * t;
+        assert!((e.as_uj() - 100.0).abs() < 1e-9);
+        let p2 = e / t;
+        assert!((p2.as_mw() - 2.0).abs() < 1e-12);
+        let t2 = e / p;
+        assert!((t2.as_ms() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cycles_at_frequency() {
+        let c = Cycles(122_000_000);
+        let t = c.at(Freq::from_mhz(122.0));
+        assert!((t.raw() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_display_and_conv() {
+        assert_eq!(Bytes::from_kib(64).to_string(), "64 KiB");
+        assert_eq!(Bytes(100).to_string(), "100 B");
+        assert_eq!(Bytes::from_kib(128).raw(), 131072);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        assert!((Time::from_us(1500.0).as_ms() - 1.5).abs() < 1e-12);
+        assert!((Energy::from_uj(946.0).as_mj() - 0.946).abs() < 1e-12);
+        assert!((Freq::from_mhz(690.0).raw() - 690e6).abs() < 1.0);
+        assert!((Power::from_uw(129.0).as_mw() - 0.129).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sums_and_ordering() {
+        let total: Cycles = [Cycles(1), Cycles(2), Cycles(3)].into_iter().sum();
+        assert_eq!(total, Cycles(6));
+        let e: Energy = [Energy(1.0), Energy(0.5)].into_iter().sum();
+        assert!((e.raw() - 1.5).abs() < 1e-12);
+        assert!(Time(1.0) < Time(2.0));
+        assert_eq!(Time(3.0).min(Time(2.0)), Time(2.0));
+    }
+
+    #[test]
+    fn saturating_ops() {
+        assert_eq!(Cycles(5).saturating_sub(Cycles(9)), Cycles::ZERO);
+        assert_eq!(Bytes(5).saturating_sub(Bytes(9)), Bytes::ZERO);
+    }
+}

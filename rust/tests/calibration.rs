@@ -1,0 +1,142 @@
+//! Calibration integration test: the reproduced system must land in the
+//! paper's quantitative envelope (shapes and rough magnitudes, not exact
+//! numbers — see DESIGN.md "Calibration anchors").
+
+use medea::baselines::{coarse_grain_app_dvfs, cpu_max_vf, static_accel_app_dvfs, static_accel_max_vf};
+use medea::ir::tsd::{tsd_core, TsdParams};
+use medea::manager::medea::{Medea, MedeaFeatures};
+use medea::platform::heeptimize::heeptimize;
+use medea::profile::characterize;
+use medea::timing::cycle_model::CycleModel;
+use medea::util::units::Time;
+
+#[test]
+fn paper_envelope() {
+    let platform = heeptimize();
+    let model = CycleModel::heeptimize();
+    let profiles = characterize(&platform, &model);
+    let w = tsd_core(&TsdParams::default());
+
+    // ---- Table 5 shape: MEDEA across the three deadlines ---------------
+    let medea = Medea::new(&platform, &profiles, &model);
+    let s50 = medea.schedule(&w, Time::from_ms(50.0)).unwrap();
+    let s200 = medea.schedule(&w, Time::from_ms(200.0)).unwrap();
+    let s1000 = medea.schedule(&w, Time::from_ms(1000.0)).unwrap();
+
+    let report = |tag: &str, s: &medea::manager::Schedule| {
+        println!(
+            "{tag}: active {:.1} ms, active energy {:.0} uJ, total {:.0} uJ, switches {}",
+            s.active_time().as_ms(),
+            s.active_energy().as_uj(),
+            s.total_energy(&platform).as_uj(),
+            s.vf_switch_count(),
+        );
+    };
+    report("MEDEA@50ms ", &s50);
+    report("MEDEA@200ms", &s200);
+    report("MEDEA@1000ms", &s1000);
+
+    // Paper: active time 50 / 200 / 223 ms. The relaxed schedule must be
+    // deadline-insensitive (lowest V-F everywhere) and land near 200 ms so
+    // that the 200 ms deadline bites and 1000 ms does not.
+    let t1000 = s1000.active_time().as_ms();
+    assert!(
+        (150.0..300.0).contains(&t1000),
+        "min-V active time {t1000:.1} ms outside the 223 ms envelope"
+    );
+    assert!(t1000 > 200.0, "the 200 ms deadline must be binding (paper: 223 ms)");
+
+    // Paper: 946 / 395 / 368 µJ active. Check ratios, loosely.
+    let e50 = s50.active_energy().as_uj();
+    let e200 = s200.active_energy().as_uj();
+    let e1000 = s1000.active_energy().as_uj();
+    println!("active energies: {e50:.0} / {e200:.0} / {e1000:.0} uJ (paper 946/395/368)");
+    assert!(e50 / e200 > 1.6 && e50 / e200 < 4.5, "50/200 ratio {:.2}", e50 / e200);
+    assert!(e200 / e1000 > 1.0 && e200 / e1000 < 1.5, "200/1000 ratio {:.2}", e200 / e1000);
+    // Absolute scale within ~2× of the paper.
+    assert!((400.0..2200.0).contains(&e50), "e50 {e50:.0} uJ");
+    assert!((150.0..900.0).contains(&e200), "e200 {e200:.0} uJ");
+
+    // ---- Fig 5 shape: savings vs CoarseGrain ----------------------------
+    let mut fig5_failures: Vec<String> = Vec::new();
+    for (ms, lo, hi, paper) in [
+        (50.0, 0.04, 0.30, 0.14),
+        (200.0, 0.15, 0.55, 0.38),
+        (1000.0, 0.02, 0.20, 0.07),
+    ] {
+        let d = Time::from_ms(ms);
+        let cg = coarse_grain_app_dvfs(&w, &platform, &profiles, &model, d).unwrap();
+        let m = medea.schedule(&w, d).unwrap();
+        let saving = 1.0 - m.total_energy(&platform).raw() / cg.total_energy(&platform).raw();
+        println!("MEDEA vs CG @{ms} ms: {:.1} % (paper {:.0} %)", saving * 100.0, paper * 100.0);
+        if !(lo..hi).contains(&saving) {
+            fig5_failures.push(format!(
+                "saving at {ms} ms = {:.1} % outside [{:.0}, {:.0}] %",
+                saving * 100.0,
+                lo * 100.0,
+                hi * 100.0
+            ));
+        }
+    }
+
+    // ---- Fig 8 shape: per-feature ablation savings ----------------------
+    let ablate = |feats: MedeaFeatures, ms: f64| {
+        let d = Time::from_ms(ms);
+        let full = medea.schedule(&w, d).unwrap().total_energy(&platform);
+        let abl = Medea::new(&platform, &profiles, &model)
+            .with_features(feats)
+            .schedule(&w, d)
+            .unwrap()
+            .total_energy(&platform);
+        1.0 - full.raw() / abl.raw()
+    };
+
+    // Kernel-level DVFS: ~5.6 % @50, ~31.3 % @200, 0 % @1000.
+    let kd50 = ablate(MedeaFeatures::without_kernel_dvfs(), 50.0);
+    let kd200 = ablate(MedeaFeatures::without_kernel_dvfs(), 200.0);
+    let kd1000 = ablate(MedeaFeatures::without_kernel_dvfs(), 1000.0);
+    println!("KerDVFS savings: {:.1} / {:.1} / {:.1} % (paper 5.6/31.3/0)", kd50 * 100.0, kd200 * 100.0, kd1000 * 100.0);
+    assert!(kd200 > kd50, "DVFS must matter most at the 200 ms sweet spot");
+    assert!((0.10..0.50).contains(&kd200), "KerDVFS@200 {:.3}", kd200);
+    assert!(kd1000.abs() < 0.01, "KerDVFS@1000 must vanish: {:.3}", kd1000);
+    assert!((0.0..0.20).contains(&kd50), "KerDVFS@50 {:.3}", kd50);
+
+    // Adaptive tiling: ~8.1 / 8.5 / 4.8 %.
+    let at50 = ablate(MedeaFeatures::without_adaptive_tiling(), 50.0);
+    let at200 = ablate(MedeaFeatures::without_adaptive_tiling(), 200.0);
+    let at1000 = ablate(MedeaFeatures::without_adaptive_tiling(), 1000.0);
+    println!("AdapTile savings: {:.1} / {:.1} / {:.1} % (paper 8.1/8.5/4.8)", at50 * 100.0, at200 * 100.0, at1000 * 100.0);
+    for (v, tag) in [(at50, "50"), (at200, "200"), (at1000, "1000")] {
+        assert!((0.01..0.20).contains(&v), "AdapTile@{tag} {:.3}", v);
+    }
+
+    // Kernel-level scheduling: ~1.0–2.8 %.
+    let ks50 = ablate(MedeaFeatures::without_kernel_sched(), 50.0);
+    let ks200 = ablate(MedeaFeatures::without_kernel_sched(), 200.0);
+    let ks1000 = ablate(MedeaFeatures::without_kernel_sched(), 1000.0);
+    println!("KerSched savings: {:.1} / {:.1} / {:.1} % (paper 2.8/1.0/1.1)", ks50 * 100.0, ks200 * 100.0, ks1000 * 100.0);
+    for (v, tag) in [(ks50, "50"), (ks200, "200"), (ks1000, "1000")] {
+        assert!((-0.005..0.12).contains(&v), "KerSched@{tag} {:.3}", v);
+    }
+
+    assert!(fig5_failures.is_empty(), "{fig5_failures:?}");
+
+    // ---- Fig 5: full baseline sweep printed for the record --------------
+    for ms in [50.0, 200.0, 1000.0] {
+        let d = Time::from_ms(ms);
+        for (name, s) in [
+            ("cpu", cpu_max_vf(&w, &platform, &profiles, &model, d).unwrap()),
+            ("sa-max", static_accel_max_vf(&w, &platform, &profiles, &model, d).unwrap()),
+            ("sa-dvfs", static_accel_app_dvfs(&w, &platform, &profiles, &model, d).unwrap()),
+            ("cg", coarse_grain_app_dvfs(&w, &platform, &profiles, &model, d).unwrap()),
+            ("medea", medea.schedule(&w, d).unwrap()),
+        ] {
+            println!(
+                "fig5 @{ms:>4} ms {name:>8}: E_t {:>7.0} uJ, T_a {:>6.1} ms, meets={}",
+                s.total_energy(&platform).as_uj(),
+                s.active_time().as_ms(),
+                s.meets_deadline()
+            );
+        }
+    }
+}

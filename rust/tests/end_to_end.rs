@@ -1,0 +1,157 @@
+//! Cross-layer integration tests: schedules ↔ JSON ↔ simulator ↔ PJRT.
+
+use medea::baselines::{
+    coarse_grain_app_dvfs, cpu_max_vf, static_accel_app_dvfs, static_accel_max_vf,
+};
+use medea::exp::ExpContext;
+use medea::ir::tsd::{tsd_full, TsdParams};
+use medea::manager::schedule::Schedule;
+use medea::runtime::artifacts::ArtifactManifest;
+use medea::runtime::client::Runtime;
+use medea::sim::replay::simulate;
+use medea::util::units::{Energy, Time};
+
+#[test]
+fn schedule_json_round_trip_preserves_sim_outcome() {
+    let ctx = ExpContext::paper();
+    let schedule = ctx
+        .medea()
+        .schedule(&ctx.workload, Time::from_ms(200.0))
+        .unwrap();
+    let dir = std::env::temp_dir().join("medea_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("schedule.json");
+    schedule.save(&path).unwrap();
+    let loaded = Schedule::load(&path).unwrap();
+    loaded.validate(&ctx.workload, &ctx.platform).unwrap();
+
+    let r1 = simulate(&ctx.workload, &ctx.platform, &ctx.model, &schedule);
+    let r2 = simulate(&ctx.workload, &ctx.platform, &ctx.model, &loaded);
+    assert!((r1.active_time.raw() - r2.active_time.raw()).abs() < 1e-9);
+    assert!((r1.active_energy.raw() - r2.active_energy.raw()).abs() < 1e-12);
+    assert_eq!(r1.events, r2.events);
+}
+
+#[test]
+fn all_schedulers_produce_valid_simulable_schedules() {
+    let ctx = ExpContext::paper();
+    let d = Time::from_ms(200.0);
+    let (w, p, pr, m) = (&ctx.workload, &ctx.platform, &ctx.profiles, &ctx.model);
+    let schedules = vec![
+        cpu_max_vf(w, p, pr, m, d).unwrap(),
+        static_accel_max_vf(w, p, pr, m, d).unwrap(),
+        static_accel_app_dvfs(w, p, pr, m, d).unwrap(),
+        coarse_grain_app_dvfs(w, p, pr, m, d).unwrap(),
+        ctx.medea().schedule(w, d).unwrap(),
+    ];
+    for s in schedules {
+        s.validate(w, p).unwrap_or_else(|e| panic!("{}: {e}", s.scheduler));
+        let r = simulate(w, p, m, &s);
+        assert!(r.active_time.raw() > 0.0);
+        assert!(r.active_energy.raw() > 0.0);
+        // The sim's independent accounting stays within 10 % of the
+        // scheduler's own estimates for every scheduler.
+        let dt = (r.active_time.raw() - s.active_time().raw()).abs() / s.active_time().raw();
+        assert!(dt < 0.10, "{}: sim/est time gap {dt:.3}", s.scheduler);
+    }
+}
+
+#[test]
+fn full_tsd_workload_with_frontend_is_schedulable() {
+    // The tsd_full variant adds the CPU-only FFT frontend kernel; MEDEA
+    // must handle it (it pins to the CPU) and the extra cost must push the
+    // makespan up, not break feasibility at moderate deadlines.
+    let ctx = ExpContext::paper();
+    let full = tsd_full(&TsdParams::default());
+    let s_core = ctx
+        .medea()
+        .schedule(&ctx.workload, Time::from_ms(400.0))
+        .unwrap();
+    let s_full = ctx.medea().schedule(&full, Time::from_ms(400.0)).unwrap();
+    s_full.validate(&full, &ctx.platform).unwrap();
+    assert!(s_full.active_time().raw() > s_core.active_time().raw());
+    // The FFT kernel landed on the CPU.
+    let fft_decision = s_full
+        .decisions
+        .iter()
+        .find(|dec| full.kernels()[dec.kernel].name == "frontend.fft_mag")
+        .unwrap();
+    assert_eq!(fft_decision.pe, ctx.platform.cpu().id);
+}
+
+#[test]
+fn energy_budget_and_deadline_objectives_are_consistent() {
+    // Scheduling for deadline T yields energy E*; scheduling for energy
+    // budget E* must then achieve a time ≤ T (duality sanity).
+    let ctx = ExpContext::paper();
+    let d = Time::from_ms(300.0);
+    let by_deadline = ctx.medea().schedule(&ctx.workload, d).unwrap();
+    let e = by_deadline.active_energy();
+    let by_budget = ctx
+        .medea()
+        .schedule_energy_budget(&ctx.workload, Energy(e.raw() * 1.0001), 30)
+        .unwrap();
+    assert!(
+        by_budget.active_time().raw() <= d.raw() * 1.01,
+        "budget-dual time {:.1} ms exceeds {:.1} ms",
+        by_budget.active_time().as_ms(),
+        d.as_ms()
+    );
+    assert!(by_budget.active_energy().raw() <= e.raw() * 1.0002);
+}
+
+#[test]
+fn pjrt_kernel_chain_matches_reference_statistics() {
+    // Kernel-level dispatch through PJRT: norm -> gelu chained on the rust
+    // side, validated against the mathematical definitions.
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(&dir).unwrap();
+    let x: Vec<f32> = (0..97 * 128)
+        .map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.2)
+        .collect();
+    let normed = rt.run_f32("k_norm", &[&x]).unwrap().remove(0);
+    // Row statistics of layernorm output.
+    for r in 0..97 {
+        let row = &normed[r * 128..(r + 1) * 128];
+        let mean: f32 = row.iter().sum::<f32>() / 128.0;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 128.0;
+        assert!(mean.abs() < 1e-4, "row {r} mean {mean}");
+        assert!((var - 1.0).abs() < 1e-2, "row {r} var {var}");
+    }
+    // Chain into an add with itself: PJRT output feeds PJRT input.
+    let doubled = rt.run_f32("k_add", &[&normed, &normed]).unwrap().remove(0);
+    for (d, n) in doubled.iter().zip(&normed) {
+        assert!((d - 2.0 * n).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn deadline_feasibility_boundary_is_sharp() {
+    // Just above the minimum makespan must be feasible; well below must
+    // error as infeasible — no silent deadline violations.
+    let ctx = ExpContext::paper();
+    // Probe for the edge.
+    let mut lo = 1.0f64;
+    let mut hi = 200.0f64;
+    for _ in 0..20 {
+        let mid = 0.5 * (lo + hi);
+        if ctx.medea().schedule(&ctx.workload, Time::from_ms(mid)).is_ok() {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let ok = ctx
+        .medea()
+        .schedule(&ctx.workload, Time::from_ms(hi * 1.01))
+        .unwrap();
+    assert!(ok.meets_deadline());
+    assert!(ctx
+        .medea()
+        .schedule(&ctx.workload, Time::from_ms(lo * 0.9))
+        .is_err());
+}

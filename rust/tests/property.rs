@@ -1,0 +1,298 @@
+//! Property-based tests over randomized inputs (deterministic seeds via the
+//! in-house `check_cases` driver — replays exactly on failure).
+
+use medea::config::estimator::{Estimator, TilingPolicy};
+use medea::ir::builder::{encoder_block, small_cnn, TransformerDims};
+use medea::ir::{DataWidth, Kernel, KernelType, Shape, Workload};
+use medea::manager::medea::Medea;
+use medea::platform::heeptimize::{heeptimize, CARUS, CGRA};
+use medea::platform::loader::{platform_from_json, platform_to_json};
+use medea::profile::characterize;
+use medea::solver::{random_instance, BranchBound, DpSolver, GreedySolver, LagrangeSolver, McKpSolver};
+use medea::tiling::modes::TilingMode;
+use medea::tiling::plan::plan_kernel;
+use medea::timing::cycle_model::CycleModel;
+use medea::util::json::parse;
+use medea::util::rng::{check_cases, Rng};
+use medea::util::units::{Bytes, Time};
+
+// ---- MCKP solver invariants -------------------------------------------
+
+#[test]
+fn solver_sandwich_property() {
+    // For every random instance: lagrange lower bound ≤ bb ≈ dp ≤ greedy,
+    // and every returned solution is feasible.
+    check_cases(0xC0FFEE, 25, |rng, case| {
+        let groups = rng.usize_below(20) + 3;
+        let items = rng.usize_below(8) + 2;
+        let inst = random_instance(rng, groups, items);
+        let dp = DpSolver::with_resolution(30_000).solve(&inst);
+        let bb = BranchBound::default().solve(&inst);
+        let gr = GreedySolver.solve(&inst);
+        let lb = LagrangeSolver::default().lower_bound(&inst);
+        match (dp, bb, gr, lb) {
+            (Some(d), Some(b), Some(g), Some(l)) => {
+                for s in [&d, &b, &g] {
+                    assert!(s.total_time <= inst.deadline + 1e-9, "case {case}: infeasible");
+                }
+                assert!(
+                    l <= d.total_energy + d.total_energy.abs() * 1e-6,
+                    "case {case}: bound {l} above dp {}",
+                    d.total_energy
+                );
+                let rel = (b.total_energy - d.total_energy).abs() / d.total_energy;
+                assert!(rel < 5e-3, "case {case}: bb vs dp {rel}");
+                assert!(
+                    g.total_energy >= d.total_energy * 0.995,
+                    "case {case}: greedy {} below exact {}",
+                    g.total_energy,
+                    d.total_energy
+                );
+            }
+            (None, None, None, None) => {}
+            other => panic!("case {case}: solvers disagree on feasibility: {other:?}"),
+        }
+    });
+}
+
+// ---- tiling invariants --------------------------------------------------
+
+fn random_kernel(rng: &mut Rng) -> Kernel {
+    let dw = *rng.choose(&[DataWidth::Int8, DataWidth::Int16, DataWidth::Int32]);
+    let d = |rng: &mut Rng| rng.range_u64(1, 300);
+    match rng.below(5) {
+        0 => Kernel::new(
+            "mm",
+            KernelType::MatMul,
+            Shape::MatMul { m: d(rng), k: d(rng), n: d(rng) },
+            dw,
+        ),
+        1 => Kernel::new(
+            "add",
+            KernelType::Add,
+            Shape::Elementwise { n: rng.range_u64(1, 100_000), arity: 2 },
+            dw,
+        ),
+        2 => Kernel::new(
+            "norm",
+            KernelType::Norm,
+            Shape::Rowwise { rows: d(rng), cols: rng.range_u64(1, 400) },
+            dw,
+        ),
+        3 => Kernel::new(
+            "t",
+            KernelType::Transpose,
+            Shape::Transpose { rows: d(rng), cols: rng.range_u64(1, 400) },
+            dw,
+        ),
+        _ => Kernel::new(
+            "conv",
+            KernelType::Conv2d,
+            Shape::Conv2d {
+                h: rng.range_u64(1, 32),
+                w: rng.range_u64(1, 32),
+                c_in: rng.range_u64(1, 32),
+                c_out: rng.range_u64(1, 32),
+                kh: 3,
+                kw: 3,
+            },
+            dw,
+        ),
+    }
+}
+
+#[test]
+fn tiling_plan_invariants() {
+    check_cases(0x7114E, 300, |rng, case| {
+        let kernel = random_kernel(rng);
+        let budget = Bytes(rng.range_u64(512, 128 * 1024));
+        let max_dim = if rng.bool() { Some(rng.range_u64(8, 1024)) } else { None };
+        let Some(plan) = plan_kernel(&kernel, budget, max_dim) else {
+            return; // legitimately untileable for this budget
+        };
+        // Traffic covers at least the raw operand bytes (reloads only add).
+        assert!(
+            plan.traffic_in.raw() + 1 >= kernel.shape.input_bytes(kernel.dw).raw(),
+            "case {case}: in-traffic below operand size for {kernel:?}"
+        );
+        assert!(
+            plan.traffic_out == kernel.shape.output_bytes(kernel.dw),
+            "case {case}: out-traffic mismatch"
+        );
+        // Chaining discount never exceeds the activation bytes or traffic.
+        assert!(plan.chainable_in.raw() <= kernel.shape.activation_bytes(kernel.dw).raw());
+        assert!(plan.chainable_in.raw() <= plan.traffic_in.raw());
+        // For streaming shapes (no reload amplification), halving the
+        // budget never reduces tiles and never changes traffic. Matmul/conv
+        // legitimately trade strip width for panel width, so only the
+        // operand-minimum bound applies there.
+        let streaming = !matches!(
+            kernel.shape,
+            Shape::MatMul { .. } | Shape::Conv2d { .. }
+        );
+        if let Some(half) = plan_kernel(&kernel, Bytes(budget.raw() / 2), max_dim) {
+            if streaming {
+                assert!(half.n_tiles >= plan.n_tiles, "case {case}: tiles shrank");
+                assert_eq!(
+                    half.traffic_in, plan.traffic_in,
+                    "case {case}: streaming traffic changed with budget"
+                );
+            } else {
+                assert!(
+                    half.traffic_in.raw() + 1 >= kernel.shape.input_bytes(kernel.dw).raw(),
+                    "case {case}: half-budget traffic below operand size"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn mode_cycles_relationships() {
+    // For every kernel × accelerator: adaptive ≤ forced-db; both ≥ pure
+    // compute cycles (DMA and overheads only ever add).
+    let platform = heeptimize();
+    let model = CycleModel::heeptimize();
+    let profiles = characterize(&platform, &model);
+    check_cases(0xAB1E, 200, |rng, case| {
+        let kernel = random_kernel(rng);
+        let est = Estimator::new(&platform, &profiles, &model);
+        let est_db =
+            Estimator::new(&platform, &profiles, &model).with_policy(TilingPolicy::ForceDouble);
+        for pe in [CGRA, CARUS] {
+            let (Some((_, ad)), Some((_, db))) = (est.best_mode(pe, &kernel), est_db.best_mode(pe, &kernel))
+            else {
+                continue;
+            };
+            assert!(ad <= db, "case {case}: adaptive worse than forced db on {pe}");
+            if let Some(compute) = est.processing_cycles(pe, &kernel) {
+                assert!(ad >= compute, "case {case}: total below compute");
+            }
+        }
+    });
+}
+
+// ---- scheduler invariants over random workloads --------------------------
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    match rng.below(2) {
+        0 => {
+            let mut w = Workload::new("rand-transformer");
+            let dims = TransformerDims {
+                seq: rng.range_u64(8, 128),
+                d_model: 16 * rng.range_u64(1, 8),
+                heads: *rng.choose(&[1, 2, 4]),
+                d_ff: 16 * rng.range_u64(1, 16),
+                dw: DataWidth::Int8,
+                dw_row: DataWidth::Int16,
+            };
+            for b in 0..rng.range_u64(1, 3) {
+                encoder_block(&mut w, &format!("e{b}"), dims);
+            }
+            w
+        }
+        _ => small_cnn(
+            "rand-cnn",
+            rng.range_u64(4, 24),
+            rng.range_u64(4, 24),
+            &[
+                rng.range_u64(1, 8),
+                rng.range_u64(4, 32),
+                rng.range_u64(4, 32),
+            ],
+            rng.range_u64(2, 12),
+            DataWidth::Int8,
+        ),
+    }
+}
+
+#[test]
+fn medea_schedules_random_workloads() {
+    let platform = heeptimize();
+    let model = CycleModel::heeptimize();
+    let profiles = characterize(&platform, &model);
+    check_cases(0x5EED, 20, |rng, case| {
+        let w = random_workload(rng);
+        let medea = Medea::new(&platform, &profiles, &model);
+        // A generous deadline must always be feasible and optimal.
+        let relaxed = medea
+            .schedule(&w, Time::from_ms(10_000.0))
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        relaxed.validate(&w, &platform).unwrap();
+        assert!(relaxed.meets_deadline());
+        // Tightening to the relaxed makespan stays feasible; the energy is
+        // monotone non-increasing as the deadline relaxes.
+        let tight = medea.schedule(&w, relaxed.active_time() * 1.2);
+        if let Ok(t) = tight {
+            t.validate(&w, &platform).unwrap();
+            assert!(
+                t.active_energy().raw() >= relaxed.active_energy().raw() * 0.999,
+                "case {case}: tighter deadline yielded less energy"
+            );
+        }
+    });
+}
+
+// ---- platform JSON fuzz ---------------------------------------------------
+
+#[test]
+fn platform_json_round_trip_preserves_values() {
+    // Unit conversion (W <-> uW) may move floats by an ulp per trip, so
+    // exact string fixpoints are not guaranteed; values must stay within
+    // a few ulps across repeated round trips, and structure must be exact.
+    let mut p = heeptimize();
+    let reference = heeptimize();
+    for _ in 0..4 {
+        p = platform_from_json(&parse(&platform_to_json(&p).to_pretty()).unwrap()).unwrap();
+    }
+    assert_eq!(p.pes.len(), reference.pes.len());
+    assert_eq!(p.vf.points().len(), reference.vf.points().len());
+    assert_eq!(
+        p.constraints.iter().count(),
+        reference.constraints.iter().count()
+    );
+    let close = |a: f64, b: f64| (a - b).abs() <= a.abs().max(b.abs()) * 1e-9;
+    assert!(close(p.sleep_power.raw(), reference.sleep_power.raw()));
+    for (a, b) in p.pes.iter().zip(&reference.pes) {
+        assert!(close(a.power.p_stat_ref.raw(), b.power.p_stat_ref.raw()));
+        assert!(close(a.power.c_eff, b.power.c_eff));
+        assert!(close(a.power.e_fixed, b.power.e_fixed));
+        assert_eq!(a.lm, b.lm);
+        assert_eq!(a.dma, b.dma);
+    }
+}
+
+#[test]
+fn json_codec_fuzz_round_trip() {
+    use medea::util::json::{Json, JsonObj};
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.range_f64(-1e9, 1e9) * 1e3).round() / 1e3),
+            3 => {
+                let len = rng.usize_below(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| *rng.choose(&['a', 'é', '"', '\\', '\n', '😀', ' ', 'z']))
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.usize_below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = JsonObj::new();
+                for i in 0..rng.usize_below(5) {
+                    o.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(o)
+            }
+        }
+    }
+    check_cases(0x15AC, 200, |rng, case| {
+        let v = random_json(rng, 3);
+        for text in [v.to_pretty(), v.to_compact()] {
+            let back = parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+            assert_eq!(back, v, "case {case}");
+        }
+    });
+}

@@ -1,0 +1,92 @@
+//! Atlas-backed serving: precompute the schedule atlas, then push a burst
+//! of mixed-deadline traffic (including infeasible requests) through the
+//! multi-worker pool. Runs without AOT artifacts — responses are
+//! schedule-only, which is exactly the serving-path machinery this example
+//! demonstrates.
+//!
+//! ```sh
+//! cargo run --release --example atlas_serving
+//! ```
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::serve::{AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServePool};
+use medea::util::units::Time;
+use std::time::Instant;
+
+fn main() {
+    // 1. Design time: sweep the feasible deadline range once.
+    let ctx = ExpContext::paper();
+    let t0 = Instant::now();
+    let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &AtlasConfig::default())
+        .expect("atlas build");
+    println!(
+        "atlas: {} knots in {:.0} ms, floor {:.1} ms (min makespan {:.1} ms)",
+        atlas.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        atlas.floor().as_ms(),
+        atlas.min_makespan.as_ms()
+    );
+    for k in atlas.knots().iter().take(6) {
+        println!(
+            "  knot {:>7.1} ms -> active {:>6.2} ms, {:>7.1} uJ",
+            k.deadline.as_ms(),
+            k.schedule.active_time().as_ms(),
+            k.schedule.active_energy().as_uj()
+        );
+    }
+    if atlas.len() > 6 {
+        println!("  ... ({} more)", atlas.len() - 6);
+    }
+
+    // 2. Serve time: share the atlas across a worker pool and burst-submit.
+    let floor_ms = atlas.floor().as_ms();
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 4,
+            ..PoolConfig::default()
+        },
+        atlas,
+    )
+    .expect("start pool");
+
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let deadlines_ms = [
+        floor_ms * 0.6, // infeasible: shed with a typed rejection
+        floor_ms * 1.2,
+        100.0,
+        200.0,
+        1000.0,
+    ];
+    let mut tickets = Vec::new();
+    for i in 0..40 {
+        let d = Time::from_ms(deadlines_ms[i % deadlines_ms.len()]);
+        match pool.submit(gen.next_window(), d) {
+            Ok(t) => tickets.push(t),
+            Err(Rejection::BelowFloor { requested, floor }) => println!(
+                "request {i:>2}: shed ({:.1} ms below floor {:.1} ms)",
+                requested.as_ms(),
+                floor.as_ms()
+            ),
+            Err(other) => println!("request {i:>2}: shed ({other})"),
+        }
+    }
+    for t in tickets {
+        let out = t.wait().expect("serve");
+        if out.window_index < 5 {
+            println!(
+                "request {:>2}: knot {:>6.1} ms, sim {:>6.2} ms / {:>6.1} uJ, met={}, host {:?}",
+                out.window_index,
+                out.knot_deadline.as_ms(),
+                out.sim.active_time.as_ms(),
+                out.sim.total_energy().as_uj(),
+                out.sim.deadline_met,
+                out.host_latency
+            );
+        }
+    }
+
+    // 3. Cross-worker metrics.
+    let metrics = pool.shutdown();
+    println!("\n{}", metrics.summary());
+}

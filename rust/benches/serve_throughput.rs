@@ -1,0 +1,148 @@
+//! Bench: serving-path latency and pool throughput.
+//!
+//! Two comparisons back the serve subsystem's existence:
+//!
+//! 1. **cold vs warm request path** — the pre-atlas coordinator ran a full
+//!    MCKP DP solve for every previously unseen deadline; the atlas resolves
+//!    the same request with an `O(log n)` binary search. Both are measured
+//!    over a rotating set of distinct deadlines (so caches cannot hide the
+//!    solve) and the speedup is reported — the acceptance bar is ≥ 10×.
+//! 2. **pool load test** — a burst of requests with a mixed deadline
+//!    profile (including infeasible ones that must shed) through the
+//!    multi-worker pool, reporting throughput and latency percentiles.
+//!
+//! Results are printed and written to `BENCH_serve.json`.
+//!
+//! `cargo bench --bench serve_throughput` (set MEDEA_BENCH_FAST=1 to trim).
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::json_obj;
+use medea::serve::{AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServePool, Ticket};
+use medea::util::bench::Bencher;
+use medea::util::units::Time;
+use std::cell::Cell;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let ctx = ExpContext::paper();
+    let mut b = Bencher::new();
+
+    let atlas_cfg = AtlasConfig::default();
+    let t0 = Instant::now();
+    let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &atlas_cfg).unwrap();
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "atlas: {} knots, floor {:.1} ms, built in {:.0} ms\n",
+        atlas.len(),
+        atlas.floor().as_ms(),
+        build_ms
+    );
+
+    // Rotating distinct deadlines spanning the whole feasible range, so the
+    // cold path re-solves every time (as the old per-deadline cache would
+    // on its compulsory miss) and the warm path exercises varied knots.
+    let floor = atlas.floor().as_ms();
+    let deadlines: Vec<Time> = (0..64)
+        .map(|i| Time::from_ms(floor * (1.02 + 0.35 * i as f64)))
+        .collect();
+
+    let idx = Cell::new(0usize);
+    let cold = b
+        .bench("serve/cold-miss (full DP solve)", || {
+            let d = deadlines[idx.get() % deadlines.len()];
+            idx.set(idx.get() + 1);
+            ctx.medea().schedule(&ctx.workload, d * 0.97).unwrap().decisions.len()
+        })
+        .mean;
+
+    let idx = Cell::new(0usize);
+    let warm = b
+        .bench("serve/warm atlas resolve", || {
+            let d = deadlines[idx.get() % deadlines.len()];
+            idx.set(idx.get() + 1);
+            atlas.resolve(d).unwrap().decisions.len()
+        })
+        .mean;
+
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-12);
+    println!(
+        "\nsteady-state speedup: {speedup:.0}x (cold {:.3} ms, warm {:.3} us)",
+        cold.as_secs_f64() * 1e3,
+        warm.as_secs_f64() * 1e6
+    );
+    assert!(
+        speedup >= 10.0,
+        "warm atlas path must be >= 10x faster than the cold DP path, got {speedup:.1}x"
+    );
+
+    // Pool load test: burst-submit a mixed-deadline profile; a slice of the
+    // traffic is infeasible and must shed with a typed rejection.
+    let requests = if std::env::var("MEDEA_BENCH_FAST").is_ok() { 128 } else { 512 };
+    let pool = ServePool::start(PoolConfig {
+        workers: 4,
+        queue_capacity: requests,
+        artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+        ..PoolConfig::default()
+    })
+    .unwrap();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let load_start = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(requests);
+    let mut shed_floor = 0u64;
+    for i in 0..requests {
+        // 1-in-8 requests are below the feasibility floor.
+        let d = if i % 8 == 7 {
+            Time::from_ms(floor * 0.5)
+        } else {
+            Time::from_ms(floor * (1.05 + 2.3 * ((i % 7) as f64)))
+        };
+        match pool.submit(gen.next_window(), d) {
+            Ok(t) => tickets.push(t),
+            Err(Rejection::BelowFloor { .. }) => shed_floor += 1,
+            Err(other) => panic!("unexpected rejection: {other}"),
+        }
+    }
+    let served = tickets.len();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let elapsed = load_start.elapsed();
+    let metrics = pool.shutdown();
+    assert_eq!(metrics.aggregate.requests as usize, served);
+    assert_eq!(metrics.shed_below_floor, shed_floor);
+    assert_eq!(metrics.aggregate.deadline_misses, 0);
+    let rps = served as f64 / elapsed.as_secs_f64();
+    println!(
+        "\npool: {} served + {} shed in {:.1} ms ({:.0} req/s)  {}",
+        served,
+        shed_floor,
+        elapsed.as_secs_f64() * 1e3,
+        rps,
+        metrics.summary()
+    );
+
+    // Machine-readable summary.
+    let out = json_obj! {
+        "atlas_knots" => atlas.len(),
+        "atlas_build_ms" => build_ms,
+        "atlas_floor_ms" => floor,
+        "cold_dp_us" => cold.as_secs_f64() * 1e6,
+        "warm_atlas_us" => warm.as_secs_f64() * 1e6,
+        "speedup" => speedup,
+        "pool" => json_obj! {
+            "workers" => 4u64,
+            "served" => served,
+            "shed_below_floor" => shed_floor,
+            "elapsed_ms" => elapsed.as_secs_f64() * 1e3,
+            "reqs_per_sec" => rps,
+            "host_p50_us" => metrics.p50().as_secs_f64() * 1e6,
+            "host_p99_us" => metrics.p99().as_secs_f64() * 1e6,
+        },
+    };
+    std::fs::write("BENCH_serve.json", out.to_pretty()).expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+
+    b.finish("serve_throughput");
+}

@@ -9,13 +9,24 @@ use crate::timing::cycle_model::CycleModel;
 use crate::util::units::{Energy, Time};
 
 /// Baseline failure modes.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum BaselineError {
-    #[error("kernel `{0}` cannot execute anywhere")]
     NoConfig(String),
-    #[error("workload has no coarse groups covering all kernels")]
     NoGroups,
 }
+
+impl std::fmt::Display for BaselineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BaselineError::NoConfig(k) => write!(f, "kernel `{k}` cannot execute anywhere"),
+            BaselineError::NoGroups => {
+                write!(f, "workload has no coarse groups covering all kernels")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BaselineError {}
 
 fn forced_db_estimator<'a>(
     platform: &'a Platform,

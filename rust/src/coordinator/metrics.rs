@@ -3,6 +3,11 @@
 use crate::util::stats::{percentile, Running};
 use std::time::Duration;
 
+/// Cap on retained latency samples. Mean/min/max stay exact (streaming);
+/// percentiles beyond this many requests come from a uniform reservoir
+/// sample, so long-running serve pools don't grow memory per request.
+const LATENCY_RESERVOIR: usize = 4096;
+
 /// Aggregated service metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -14,7 +19,10 @@ pub struct Metrics {
     /// Simulated on-device active time across all served windows (s).
     pub sim_active_s: f64,
     host_latency: Running,
+    /// Bounded reservoir of latency samples (seconds).
     latencies: Vec<f64>,
+    /// xorshift64* state for reservoir replacement (0 = not yet seeded).
+    reservoir_rng: u64,
 }
 
 impl Metrics {
@@ -29,18 +37,68 @@ impl Metrics {
         self.sim_energy_j += energy_j;
         self.sim_active_s += active_s;
         self.host_latency.push(host.as_secs_f64());
-        self.latencies.push(host.as_secs_f64());
+        self.reservoir_push(host.as_secs_f64());
+    }
+
+    /// Algorithm R: once the buffer is full, each new sample replaces a
+    /// random slot with probability `capacity / samples_seen`.
+    fn reservoir_push(&mut self, x: f64) {
+        if self.latencies.len() < LATENCY_RESERVOIR {
+            self.latencies.push(x);
+            return;
+        }
+        if self.reservoir_rng == 0 {
+            self.reservoir_rng = 0x9E37_79B9_7F4A_7C15;
+        }
+        self.reservoir_rng ^= self.reservoir_rng << 13;
+        self.reservoir_rng ^= self.reservoir_rng >> 7;
+        self.reservoir_rng ^= self.reservoir_rng << 17;
+        let seen = self.host_latency.count().max(1);
+        let j = (self.reservoir_rng.wrapping_mul(0x2545_F491_4F6C_DD1D) % seen) as usize;
+        if j < LATENCY_RESERVOIR {
+            self.latencies[j] = x;
+        }
+    }
+
+    /// Fold another worker's metrics into this one (used by the serve
+    /// pool's cross-worker aggregation). Counters and mean/min/max merge
+    /// exactly; the bounded latency reservoir absorbs the other side's
+    /// samples as a stream, so percentiles are approximate once the
+    /// combined sample count exceeds the reservoir size.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.seizures_detected += other.seizures_detected;
+        self.deadline_misses += other.deadline_misses;
+        self.sim_energy_j += other.sim_energy_j;
+        self.sim_active_s += other.sim_active_s;
+        self.host_latency.merge(&other.host_latency);
+        for &x in &other.latencies {
+            self.reservoir_push(x);
+        }
     }
 
     pub fn host_latency_mean(&self) -> Duration {
         Duration::from_secs_f64(self.host_latency.mean().max(0.0))
     }
 
-    pub fn host_latency_p95(&self) -> Duration {
+    /// Host-latency percentile (`q` in `[0, 100]`); zero when empty.
+    pub fn host_latency_percentile(&self, q: f64) -> Duration {
         if self.latencies.is_empty() {
             return Duration::ZERO;
         }
-        Duration::from_secs_f64(percentile(&self.latencies, 95.0))
+        Duration::from_secs_f64(percentile(&self.latencies, q))
+    }
+
+    pub fn host_latency_p50(&self) -> Duration {
+        self.host_latency_percentile(50.0)
+    }
+
+    pub fn host_latency_p95(&self) -> Duration {
+        self.host_latency_percentile(95.0)
+    }
+
+    pub fn host_latency_p99(&self) -> Duration {
+        self.host_latency_percentile(99.0)
     }
 
     pub fn summary(&self) -> String {
@@ -73,5 +131,43 @@ mod tests {
         assert!(m.host_latency_mean() >= Duration::from_millis(2));
         let s = m.summary();
         assert!(s.contains("requests=2"));
+    }
+
+    #[test]
+    fn merge_aggregates_workers() {
+        let mut a = Metrics::default();
+        a.record(true, true, 500e-6, 0.05, Duration::from_millis(2));
+        let mut b = Metrics::default();
+        b.record(false, false, 400e-6, 0.20, Duration::from_millis(4));
+        b.record(false, true, 100e-6, 0.10, Duration::from_millis(6));
+        a.merge(&b);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.seizures_detected, 1);
+        assert_eq!(a.deadline_misses, 1);
+        assert!((a.sim_energy_j - 1000e-6).abs() < 1e-12);
+        // Percentiles span both workers' samples.
+        assert_eq!(a.host_latency_percentile(0.0), Duration::from_millis(2));
+        assert_eq!(a.host_latency_percentile(100.0), Duration::from_millis(6));
+        assert!(a.host_latency_p50() >= Duration::from_millis(2));
+        assert!(a.host_latency_p99() <= Duration::from_millis(6));
+        // Merging into an empty accumulator works too.
+        let mut fresh = Metrics::default();
+        fresh.merge(&a);
+        assert_eq!(fresh.requests, 3);
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded() {
+        let mut m = Metrics::default();
+        for i in 0..3 * LATENCY_RESERVOIR {
+            m.record(false, true, 0.0, 0.0, Duration::from_micros(100 + (i % 50) as u64));
+        }
+        assert_eq!(m.requests as usize, 3 * LATENCY_RESERVOIR);
+        assert_eq!(m.latencies.len(), LATENCY_RESERVOIR);
+        // Percentiles still land inside the observed sample range.
+        let p99 = m.host_latency_p99();
+        assert!(p99 >= Duration::from_micros(99) && p99 <= Duration::from_micros(150));
+        // Mean stays exact (streaming, not sampled).
+        assert!(m.host_latency_mean() >= Duration::from_micros(100));
     }
 }

@@ -1,11 +1,11 @@
-//! The inference coordinator: a threaded request loop gluing the MEDEA
-//! schedule, the platform simulator (time/energy accounting) and the PJRT
-//! runtime (functional prediction).
+//! The legacy inference coordinator.
 //!
-//! Rust owns the event loop and process lifetime; Python existed only at
-//! `make artifacts` time. One worker thread owns the PJRT runtime; clients
-//! submit EEG windows over a channel and receive predictions plus the
-//! simulated on-device cost of the schedule that would have produced them.
+//! Originally a self-contained request loop (one worker thread, per-deadline
+//! DP solves, unbounded schedule cache); now a thin compatibility wrapper
+//! over the [`crate::serve`] subsystem: a single-worker
+//! [`crate::serve::ServePool`] resolving every deadline against the
+//! precomputed schedule atlas, with a bounded LRU on the request path.
+//! [`Metrics`] remains the per-worker metrics type the pool aggregates.
 
 pub mod metrics;
 pub mod service;

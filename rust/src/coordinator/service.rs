@@ -1,24 +1,24 @@
-//! The threaded inference service.
+//! The legacy inference service, now a thin compatibility wrapper.
+//!
+//! Historically this module owned a worker thread that ran a full MCKP DP
+//! solve for every distinct deadline and cached the results in an
+//! *unbounded* `BTreeMap`. Both problems are gone: [`Coordinator`] now
+//! wraps a single-worker [`ServePool`], so every deadline resolves against
+//! the precomputed [`crate::serve::ScheduleAtlas`] in `O(log n)` and the
+//! per-worker schedule cache is a bounded LRU. The public API is unchanged;
+//! new code should use [`ServePool`] directly for multi-worker serving and
+//! typed shed rejections.
+
+use crate::eeg::synth::EegWindow;
+use crate::serve::atlas::AtlasConfig;
+use crate::serve::pool::{PoolConfig, ServePool};
+use crate::util::error::{anyhow, Result};
+use crate::util::units::Time;
+use std::path::Path;
+
+pub use crate::serve::pool::InferenceOutcome;
 
 use super::metrics::Metrics;
-use crate::eeg::synth::EegWindow;
-use crate::ir::tsd::{tsd_core, TsdParams};
-use crate::ir::Workload;
-use crate::manager::medea::{Medea, MedeaFeatures, SolverKind};
-use crate::manager::schedule::Schedule;
-use crate::platform::Platform;
-use crate::profile::{characterize, Profiles};
-use crate::runtime::client::Runtime;
-use crate::runtime::infer::{Prediction, TsdInference};
-use crate::sim::replay::{simulate, SimReport};
-use crate::timing::cycle_model::CycleModel;
-use crate::util::units::Time;
-use anyhow::Result;
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// One inference request: a window and its timing constraint.
 pub struct Request {
@@ -26,174 +26,50 @@ pub struct Request {
     pub deadline: Time,
 }
 
-/// The response: functional prediction + simulated on-device execution.
-#[derive(Debug)]
-pub struct InferenceOutcome {
-    pub window_index: usize,
-    pub prediction: Prediction,
-    pub sim: SimReport,
-    pub scheduler: String,
-    pub host_latency: std::time::Duration,
-}
-
-enum Message {
-    Infer(Request, mpsc::Sender<Result<InferenceOutcome>>),
-    Shutdown,
-}
-
-/// A running coordinator: one worker thread owning the PJRT runtime and the
-/// schedule cache (one MEDEA schedule per distinct deadline).
+/// A running coordinator: a single-worker [`ServePool`].
 pub struct Coordinator {
-    tx: mpsc::Sender<Message>,
-    worker: Option<JoinHandle<Metrics>>,
+    pool: ServePool,
 }
 
 impl Coordinator {
-    /// Spawn the worker. `artifact_dir` must contain the AOT artifacts.
+    /// Spawn the worker. `artifact_dir` must contain the AOT artifacts (a
+    /// missing or unloadable manifest degrades to schedule-only responses,
+    /// as before).
     pub fn start(artifact_dir: &Path) -> Result<Coordinator> {
-        // Build the design-time state up front (it is Send; the PJRT
-        // runtime is created inside the worker thread).
-        let platform = crate::platform::heeptimize::heeptimize();
-        let model = CycleModel::heeptimize();
-        let profiles = characterize(&platform, &model);
-        let workload = tsd_core(&TsdParams::default());
-        let dir = artifact_dir.to_path_buf();
-
-        let (tx, rx) = mpsc::channel::<Message>();
-        let worker = std::thread::Builder::new()
-            .name("medea-coordinator".into())
-            .spawn(move || worker_loop(rx, &dir, platform, model, profiles, workload))
-            .expect("spawn coordinator worker");
+        let config = PoolConfig {
+            workers: 1,
+            artifact_dir: artifact_dir.to_path_buf(),
+            // The wrapper is the compatibility path: a coarser sweep keeps
+            // startup latency close to the old lazy coordinator (which
+            // solved nothing up front) while still eliminating per-request
+            // solves. Production callers use [`ServePool`] directly with
+            // the default sweep, or load a prebuilt atlas.
+            atlas: AtlasConfig {
+                growth: 1.3,
+                refine_rel_energy: 0.03,
+                ..AtlasConfig::default()
+            },
+            ..PoolConfig::default()
+        };
         Ok(Coordinator {
-            tx,
-            worker: Some(worker),
+            pool: ServePool::start(config)?,
         })
     }
 
-    /// Submit a request; blocks until the worker responds.
+    /// Submit a request; blocks until the worker responds. Shed requests
+    /// (deadline below the atlas feasibility floor) surface as errors here
+    /// for backward compatibility — [`ServePool::submit`] exposes them as
+    /// typed [`crate::serve::Rejection`]s instead.
     pub fn infer(&self, req: Request) -> Result<InferenceOutcome> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Message::Infer(req, rtx))
-            .map_err(|_| anyhow::anyhow!("coordinator is down"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("worker dropped response"))?
+        self.pool
+            .infer(req.window, req.deadline)
+            .map_err(|e| anyhow!("{e}"))
     }
 
     /// Stop the worker and collect final metrics.
-    pub fn shutdown(mut self) -> Metrics {
-        let _ = self.tx.send(Message::Shutdown);
-        self.worker
-            .take()
-            .map(|h| h.join().expect("worker panicked"))
-            .unwrap_or_default()
+    pub fn shutdown(self) -> Metrics {
+        self.pool.shutdown().aggregate
     }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Message::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_loop(
-    rx: mpsc::Receiver<Message>,
-    artifact_dir: &Path,
-    platform: Platform,
-    model: CycleModel,
-    profiles: Profiles,
-    workload: Workload,
-) -> Metrics {
-    let mut metrics = Metrics::default();
-    let mut runtime = match Runtime::new(artifact_dir) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            log::warn!("PJRT runtime unavailable ({e}); serving schedule-only responses");
-            None
-        }
-    };
-    let infer = TsdInference::default();
-    // Schedule cache keyed by deadline in microseconds.
-    let mut schedules: BTreeMap<u64, Schedule> = BTreeMap::new();
-
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Message::Shutdown => break,
-            Message::Infer(req, reply) => {
-                let t0 = Instant::now();
-                let outcome = serve(
-                    &req,
-                    &platform,
-                    &model,
-                    &profiles,
-                    &workload,
-                    &mut schedules,
-                    runtime.as_mut(),
-                    &infer,
-                    t0,
-                );
-                if let Ok(o) = &outcome {
-                    metrics.record(
-                        o.prediction.seizure,
-                        o.sim.deadline_met,
-                        o.sim.total_energy().raw(),
-                        o.sim.active_time.raw(),
-                        o.host_latency,
-                    );
-                }
-                let _ = reply.send(outcome);
-            }
-        }
-    }
-    metrics
-}
-
-#[allow(clippy::too_many_arguments)]
-fn serve(
-    req: &Request,
-    platform: &Platform,
-    model: &CycleModel,
-    profiles: &Profiles,
-    workload: &Workload,
-    schedules: &mut BTreeMap<u64, Schedule>,
-    runtime: Option<&mut Runtime>,
-    infer: &TsdInference,
-    t0: Instant,
-) -> Result<InferenceOutcome> {
-    let key = (req.deadline.as_us().round() as u64).max(1);
-    if !schedules.contains_key(&key) {
-        // Schedule against a small margin (3 %) so the event-level replay
-        // (which does not grant the estimator's optimistic LM-residency
-        // chaining when the chain breaks) still lands inside the deadline.
-        let mut schedule = Medea::new(platform, profiles, model)
-            .with_features(MedeaFeatures::default())
-            .with_solver(SolverKind::Dp)
-            .schedule(workload, req.deadline * 0.97)
-            .map_err(|e| anyhow::anyhow!("scheduling failed: {e}"))?;
-        schedule.deadline = req.deadline;
-        schedules.insert(key, schedule);
-    }
-    let schedule = &schedules[&key];
-    let sim = simulate(workload, platform, model, schedule);
-
-    let prediction = match runtime {
-        Some(rt) => infer.infer_staged(rt, &req.window)?,
-        None => Prediction {
-            logits: vec![0.0, 0.0],
-            class_idx: 0,
-            seizure: false,
-        },
-    };
-
-    Ok(InferenceOutcome {
-        window_index: req.window.index,
-        prediction,
-        sim,
-        scheduler: schedule.scheduler.clone(),
-        host_latency: t0.elapsed(),
-    })
 }
 
 #[cfg(test)]
@@ -201,9 +77,78 @@ mod tests {
     use super::*;
     use crate::eeg::synth::{EegGenerator, SynthConfig};
     use crate::runtime::artifacts::ArtifactManifest;
+    use crate::runtime::client::Runtime;
+
+    #[test]
+    fn serves_schedule_only_without_artifacts() {
+        // No manifest required: the wrapper must degrade to schedule-only
+        // responses, with every deadline resolved from the atlas.
+        let coord = Coordinator::start(Path::new("/nonexistent-artifacts")).unwrap();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 3);
+        for i in 0..6 {
+            let deadline = Time::from_ms(match i % 3 {
+                0 => 120.0,
+                1 => 200.0,
+                _ => 1000.0,
+            });
+            let out = coord
+                .infer(Request {
+                    window: gen.next_window(),
+                    deadline,
+                })
+                .unwrap();
+            assert_eq!(out.window_index, i);
+            assert!(out.sim.deadline_met, "window {i}");
+            assert_eq!(out.scheduler, "medea");
+            assert_eq!(out.prediction.logits.len(), 2);
+        }
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.requests, 6);
+        assert_eq!(metrics.deadline_misses, 0);
+    }
+
+    #[test]
+    fn infeasible_deadline_errors_cleanly() {
+        let coord = Coordinator::start(Path::new("/nonexistent-artifacts")).unwrap();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 4);
+        let err = coord
+            .infer(Request {
+                window: gen.next_window(),
+                deadline: Time::from_ms(1.0),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("feasibility floor"), "{err}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn diverse_deadlines_stay_bounded() {
+        // The historic failure mode: unbounded per-deadline cache growth.
+        // 50 distinct deadlines churn through the bounded LRU; everything
+        // must still be served correctly.
+        let coord = Coordinator::start(Path::new("/nonexistent-artifacts")).unwrap();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 5);
+        for i in 0..50 {
+            let deadline = Time::from_ms(100.0 + 13.7 * i as f64);
+            let out = coord
+                .infer(Request {
+                    window: gen.next_window(),
+                    deadline,
+                })
+                .unwrap();
+            assert!(out.sim.deadline_met, "deadline #{i}");
+        }
+        let metrics = coord.shutdown();
+        assert_eq!(metrics.requests, 50);
+        assert_eq!(metrics.deadline_misses, 0);
+    }
 
     #[test]
     fn serves_requests_end_to_end() {
+        if !Runtime::available() {
+            eprintln!("skipping: PJRT backend not built (stub; build with --cfg medea_pjrt)");
+            return;
+        }
         let dir = ArtifactManifest::default_dir();
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");
@@ -227,41 +172,5 @@ mod tests {
         let metrics = coord.shutdown();
         assert_eq!(metrics.requests, 4);
         assert_eq!(metrics.deadline_misses, 0);
-    }
-
-    #[test]
-    fn schedule_cache_survives_many_requests() {
-        let dir = ArtifactManifest::default_dir();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let coord = Coordinator::start(&dir).unwrap();
-        let mut gen = EegGenerator::new(SynthConfig::default(), 5);
-        let mut first_latency = None;
-        let mut later = Vec::new();
-        for i in 0..6 {
-            let out = coord
-                .infer(Request {
-                    window: gen.next_window(),
-                    deadline: Time::from_ms(200.0),
-                })
-                .unwrap();
-            if i == 0 {
-                first_latency = Some(out.host_latency);
-            } else {
-                later.push(out.host_latency);
-            }
-        }
-        // After the first request the schedule + executable are cached, so
-        // later requests must be significantly faster.
-        let first = first_latency.unwrap();
-        let avg_later: f64 =
-            later.iter().map(|d| d.as_secs_f64()).sum::<f64>() / later.len() as f64;
-        assert!(
-            avg_later < first.as_secs_f64(),
-            "no caching effect: first {first:?}, later avg {avg_later}"
-        );
-        coord.shutdown();
     }
 }

@@ -39,8 +39,12 @@
 //! * [`eeg`] — synthetic EEG generation and the FFT-magnitude frontend.
 //! * [`runtime`] — the PJRT path: loads AOT-compiled HLO artifacts (produced
 //!   by `python/compile/aot.py`) and executes them from Rust.
-//! * [`coordinator`] — a threaded inference service gluing schedule + sim +
-//!   runtime behind a request loop.
+//! * [`serve`] — the online serving subsystem: a precomputed **schedule
+//!   atlas** (all MCKP solves moved to startup; requests resolve by binary
+//!   search), an EDF admission queue with typed shedding, a sharded
+//!   multi-worker pool, and cross-worker metrics.
+//! * [`coordinator`] — the legacy threaded inference service, now a thin
+//!   single-worker compatibility wrapper over [`serve`].
 //! * [`exp`] / [`report`] — drivers that regenerate every table and figure of
 //!   the paper's evaluation, and their formatting helpers.
 
@@ -56,6 +60,7 @@ pub mod power;
 pub mod profile;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod solver;
 pub mod tiling;

@@ -72,11 +72,22 @@ fn app() -> App {
                 .opt("out-dir", "Persist CSV/MD copies under this directory"),
         )
         .command(
-            CmdSpec::new("serve", "End-to-end demo: synthetic EEG -> MEDEA schedule -> sim -> PJRT inference")
+            CmdSpec::new("serve", "Serve synthetic EEG traffic through the atlas-backed worker pool")
                 .opt_default("windows", "Number of EEG windows", "10")
                 .opt_default("deadline-ms", "Per-window deadline in ms", "200")
+                .opt("deadlines", "Comma-separated deadline mix in ms (cycled across windows; overrides --deadline-ms)")
                 .opt_default("seed", "EEG generator seed", "42")
+                .opt_default("workers", "Worker threads in the serving pool", "4")
+                .opt_default("queue-cap", "Per-worker admission queue capacity", "256")
+                .opt("atlas", "Schedule-atlas JSON path: loaded when present, else built and saved there")
                 .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)"),
+        )
+        .command(
+            CmdSpec::new("atlas", "Precompute the schedule atlas and write it to disk")
+                .opt_default("out", "Output JSON path", "atlas.json")
+                .opt_default("relax", "Sweep bound as a multiple of the feasibility floor", "24")
+                .opt_default("growth", "Geometric knot spacing (>1)", "1.15")
+                .flag("verbose", "Print every knot"),
         )
 }
 
@@ -100,23 +111,7 @@ fn main() {
 }
 
 fn logger_init() {
-    struct Stderr;
-    impl log::Log for Stderr {
-        fn enabled(&self, _: &log::Metadata) -> bool {
-            true
-        }
-        fn log(&self, record: &log::Record) {
-            eprintln!("[{}] {}", record.level(), record.args());
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: Stderr = Stderr;
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(match std::env::var("MEDEA_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Warn,
-    });
+    medea::util::log::init_from_env();
 }
 
 fn out_dir(args: &Args) -> Option<PathBuf> {
@@ -174,6 +169,7 @@ fn dispatch(name: &str, args: &Args) -> Result<(), String> {
         }
         "all" => cmd_all(args),
         "serve" => cmd_serve(args),
+        "atlas" => cmd_atlas(args),
         other => Err(format!("unhandled command {other}")),
     }
 }
@@ -350,37 +346,122 @@ fn cmd_all(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    use medea::coordinator::service::{Coordinator, Request};
+    use medea::serve::{PoolConfig, ScheduleAtlas, ServePool, Ticket};
     let windows: usize = args.req_parse("windows").map_err(|e| e.to_string())?;
-    let deadline = Time::from_ms(args.req_parse::<f64>("deadline-ms").map_err(|e| e.to_string())?);
+    let default_deadline: f64 = args.req_parse("deadline-ms").map_err(|e| e.to_string())?;
+    let deadlines_ms = args
+        .get_f64_list("deadlines")
+        .map_err(|e| e.to_string())?
+        .unwrap_or_else(|| vec![default_deadline]);
     let seed: u64 = args.req_parse("seed").map_err(|e| e.to_string())?;
+    let workers: usize = args.req_parse("workers").map_err(|e| e.to_string())?;
+    let queue_cap: usize = args.req_parse("queue-cap").map_err(|e| e.to_string())?;
     let dir = args
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(ArtifactManifest::default_dir);
 
-    let coord = Coordinator::start(&dir).map_err(|e| e.to_string())?;
+    let config = PoolConfig {
+        workers,
+        queue_capacity: queue_cap,
+        artifact_dir: dir,
+        ..PoolConfig::default()
+    };
+    let pool = match args.get("atlas").map(Path::new) {
+        Some(path) if path.exists() => {
+            let atlas = ScheduleAtlas::load(path)?;
+            println!("atlas: loaded {} knots from {}", atlas.len(), path.display());
+            ServePool::start_with_atlas(config, atlas).map_err(|e| e.to_string())?
+        }
+        other => {
+            let pool = ServePool::start(config).map_err(|e| e.to_string())?;
+            println!(
+                "atlas: built {} knots, floor {:.1} ms",
+                pool.atlas().len(),
+                pool.floor().as_ms()
+            );
+            if let Some(path) = other {
+                pool.atlas().save(path)?;
+                println!("atlas: saved to {}", path.display());
+            }
+            pool
+        }
+    };
+
+    // Burst-submit everything, then collect: exercises the EDF queues.
     let mut gen = EegGenerator::new(SynthConfig::default(), seed);
-    for _ in 0..windows {
+    let mut pending: Vec<(usize, bool, Option<Ticket>)> = Vec::with_capacity(windows);
+    for i in 0..windows {
+        let deadline = Time::from_ms(deadlines_ms[i % deadlines_ms.len()]);
         let window = gen.next_window();
         let truth = window.seizure;
-        let out = coord
-            .infer(Request { window, deadline })
-            .map_err(|e| e.to_string())?;
-        println!(
-            "window {:>3}: pred={:<10} truth={:<10} logits=[{:+.3} {:+.3}] sim: {:.1} ms / {:.0} uJ (met={}) host={:?}",
-            out.window_index,
-            if out.prediction.seizure { "seizure" } else { "background" },
-            if truth { "seizure" } else { "background" },
-            out.prediction.logits[0],
-            out.prediction.logits[1],
-            out.sim.active_time.as_ms(),
-            out.sim.total_energy().as_uj(),
-            out.sim.deadline_met,
-            out.host_latency,
-        );
+        match pool.submit(window, deadline) {
+            Ok(ticket) => pending.push((i, truth, Some(ticket))),
+            Err(rejection) => {
+                println!("window {i:>3}: {rejection}");
+                pending.push((i, truth, None));
+            }
+        }
     }
-    let metrics = coord.shutdown();
+    for (i, truth, ticket) in pending {
+        let Some(ticket) = ticket else { continue };
+        match ticket.wait() {
+            Ok(out) => println!(
+                "window {:>3}: pred={:<10} truth={:<10} logits=[{:+.3} {:+.3}] sim: {:.1} ms / {:.0} uJ (met={}) knot={:.0} ms host={:?}",
+                out.window_index,
+                if out.prediction.seizure { "seizure" } else { "background" },
+                if truth { "seizure" } else { "background" },
+                out.prediction.logits[0],
+                out.prediction.logits[1],
+                out.sim.active_time.as_ms(),
+                out.sim.total_energy().as_uj(),
+                out.sim.deadline_met,
+                out.knot_deadline.as_ms(),
+                out.host_latency,
+            ),
+            Err(e) => println!("window {i:>3}: {e}"),
+        }
+    }
+    let metrics = pool.shutdown();
     println!("---\n{}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_atlas(args: &Args) -> Result<(), String> {
+    use medea::serve::{AtlasConfig, ScheduleAtlas};
+    let out = PathBuf::from(args.get("out").unwrap_or("atlas.json"));
+    let relax: f64 = args.req_parse("relax").map_err(|e| e.to_string())?;
+    let growth: f64 = args.req_parse("growth").map_err(|e| e.to_string())?;
+    if growth <= 1.0 {
+        return Err("--growth must be > 1".into());
+    }
+    if relax <= 1.0 {
+        return Err("--relax must be > 1".into());
+    }
+    let ctx = ExpContext::paper();
+    let cfg = AtlasConfig {
+        relax_factor: relax,
+        growth,
+        ..AtlasConfig::default()
+    };
+    let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &cfg).map_err(|e| e.to_string())?;
+    println!(
+        "atlas: {} knots, floor {:.1} ms, min makespan {:.1} ms",
+        atlas.len(),
+        atlas.floor().as_ms(),
+        atlas.min_makespan.as_ms()
+    );
+    if args.flag("verbose") {
+        for k in atlas.knots() {
+            println!(
+                "  knot {:>8.1} ms  active {:>7.2} ms  energy {:>8.1} uJ",
+                k.deadline.as_ms(),
+                k.schedule.active_time().as_ms(),
+                k.schedule.active_energy().as_uj()
+            );
+        }
+    }
+    atlas.save(&out)?;
+    println!("atlas written to {}", out.display());
     Ok(())
 }

@@ -91,15 +91,33 @@ impl SolverKind {
 }
 
 /// Scheduling failure modes.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum ScheduleError {
-    #[error("infeasible: fastest schedule needs {min_ms:.2} ms > deadline {deadline_ms:.2} ms")]
     Infeasible { min_ms: f64, deadline_ms: f64 },
-    #[error("workload has no coarse groups covering all kernels (required when kernel-level scheduling is disabled)")]
     NoGroups,
-    #[error("energy budget {budget_uj:.0} uJ below the unconstrained minimum {min_uj:.0} uJ")]
     EnergyBudgetInfeasible { budget_uj: f64, min_uj: f64 },
 }
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::Infeasible { min_ms, deadline_ms } => write!(
+                f,
+                "infeasible: fastest schedule needs {min_ms:.2} ms > deadline {deadline_ms:.2} ms"
+            ),
+            ScheduleError::NoGroups => write!(
+                f,
+                "workload has no coarse groups covering all kernels (required when kernel-level scheduling is disabled)"
+            ),
+            ScheduleError::EnergyBudgetInfeasible { budget_uj, min_uj } => write!(
+                f,
+                "energy budget {budget_uj:.0} uJ below the unconstrained minimum {min_uj:.0} uJ"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 /// The design-time manager.
 pub struct Medea<'a> {
@@ -151,6 +169,36 @@ impl<'a> Medea<'a> {
             TilingPolicy::ForceDouble
         };
         Estimator::new(self.platform, self.profiles, self.model).with_policy(policy)
+    }
+
+    /// The estimator-level feasibility floor: the fastest achievable
+    /// makespan across all configurations. Deadlines below this are
+    /// infeasible for [`Medea::schedule`]; the serving atlas uses it to
+    /// reject requests up front instead of failing a solve per request.
+    pub fn min_makespan(&self, workload: &Workload) -> Result<Time, ScheduleError> {
+        let (inst, _) = self.build_instance(workload, Time(1.0))?;
+        Ok(Time(inst.min_time()))
+    }
+
+    /// The slowest single-choice makespan: past this deadline extra slack
+    /// cannot change the optimum, so it bounds deadline sweeps.
+    pub fn max_makespan(&self, workload: &Workload) -> Result<Time, ScheduleError> {
+        let (inst, _) = self.build_instance(workload, Time(1.0))?;
+        Ok(Time(inst.max_time()))
+    }
+
+    fn build_instance(
+        &self,
+        workload: &Workload,
+        deadline: Time,
+    ) -> Result<(Instance, Vec<Vec<usize>>), ScheduleError> {
+        let est = self.estimator();
+        let units = if self.features.kernel_sched {
+            self.kernel_units(workload, &est)
+        } else {
+            self.group_units(workload, &est)?
+        };
+        Ok(Self::instance(&units, deadline, None))
     }
 
     /// Generate the energy-minimal schedule for `workload` under `deadline`.
@@ -566,6 +614,21 @@ mod tests {
         let tight = medea.schedule_energy_budget(&w, e_min * 1.2, 20).unwrap();
         let loose = medea.schedule_energy_budget(&w, e_min * 2.5, 20).unwrap();
         assert!(loose.active_time().raw() <= tight.active_time().raw() * 1.01);
+    }
+
+    #[test]
+    fn makespan_bounds_bracket_feasibility() {
+        let c = ctx();
+        let medea = Medea::new(&c.platform, &c.profiles, &c.model);
+        let w = tsd_core(&TsdParams::default());
+        let t_min = medea.min_makespan(&w).unwrap();
+        let t_max = medea.max_makespan(&w).unwrap();
+        assert!(t_min.raw() > 0.0);
+        assert!(t_max.raw() > t_min.raw());
+        // Slightly above the floor is schedulable (1 % covers the DP's
+        // per-item round-up, ≤ 164/40000 of the deadline); below is not.
+        assert!(medea.schedule(&w, t_min * 1.01).is_ok());
+        assert!(medea.schedule(&w, t_min * 0.9).is_err());
     }
 
     #[test]

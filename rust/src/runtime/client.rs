@@ -1,9 +1,15 @@
 //! The PJRT client wrapper: compile-once executable cache + typed execute.
 
 use super::artifacts::{ArtifactManifest, ArtifactMeta};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+
+// Without `--cfg medea_pjrt`, `xla::` resolves to the in-crate stub whose
+// client constructor fails cleanly; with it, to the real bindings (which the
+// build must then provide as an external crate).
+#[cfg(not(medea_pjrt))]
+use super::xla_stub as xla;
 
 /// A loaded PJRT runtime with an executable cache.
 pub struct Runtime {
@@ -109,6 +115,14 @@ impl Runtime {
     pub fn cached_executables(&self) -> usize {
         self.cache.len()
     }
+
+    /// Whether this build can execute PJRT artifacts at all. `false` when
+    /// compiled against the stub backend (no `--cfg medea_pjrt`), in which
+    /// case [`Runtime::new`] always errors and serving degrades to
+    /// schedule-only responses.
+    pub fn available() -> bool {
+        cfg!(medea_pjrt)
+    }
 }
 
 fn validate_inputs(meta: &ArtifactMeta, inputs: &[&[f32]]) -> Result<()> {
@@ -140,6 +154,10 @@ mod tests {
     use crate::runtime::artifacts::ArtifactManifest;
 
     fn runtime() -> Option<Runtime> {
+        if !Runtime::available() {
+            eprintln!("skipping: PJRT backend not built (stub; build with --cfg medea_pjrt)");
+            return None;
+        }
         let dir = ArtifactManifest::default_dir();
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");

@@ -8,6 +8,8 @@
 pub mod artifacts;
 pub mod client;
 pub mod infer;
+#[cfg(not(medea_pjrt))]
+pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactManifest, ArtifactMeta};
 pub use client::Runtime;

@@ -1,0 +1,104 @@
+//! Compile-time stand-in for the `xla` PJRT bindings.
+//!
+//! The build image does not always carry the vendored `xla` crate, so the
+//! default build compiles against this API-compatible stub: every entry point
+//! that would touch PJRT fails with a clear message, and [`PjRtClient::cpu`]
+//! failing up front means callers ([`super::client::Runtime`]) degrade to
+//! schedule-only serving before any stubbed method could be reached. Build
+//! with `RUSTFLAGS="--cfg medea_pjrt"` (and add the real `xla` dependency)
+//! to swap this out for actual execution.
+
+use crate::util::error::{Error, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT backend not built: rebuild with --cfg medea_pjrt and provide the `xla` crate";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error::msg(UNAVAILABLE))
+}
+
+/// Stub for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("medea_pjrt"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

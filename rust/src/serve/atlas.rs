@@ -1,0 +1,491 @@
+//! The schedule atlas: every MEDEA solve moved to startup.
+//!
+//! MEDEA is a design-time manager — the energy-optimal configuration vector
+//! for a deadline `T_d` does not depend on anything known only at request
+//! time. The atlas exploits that: at startup it sweeps deadlines from the
+//! feasibility floor up to a relaxed bound, solves the MCKP once per sweep
+//! knot, and keeps the resulting schedules sorted by deadline. A request for
+//! any deadline then resolves with an `O(log n)` binary search to the
+//! *tightest precomputed schedule that still meets it* — no DP solve on the
+//! request path, ever.
+//!
+//! The sweep is a geometric grid (constant relative spacing, so the relative
+//! energy pessimism of snapping a deadline down to a knot is bounded by the
+//! growth factor) refined where the energy Pareto front curves: adjacent
+//! knots whose optimal energies differ by more than a threshold get a
+//! midpoint knot, recursively, until the front is flat or the knot budget is
+//! exhausted. Past the point where the energy-minimal schedule is reached,
+//! knots are deduplicated — the last knot serves every laxer deadline.
+//!
+//! Atlases serialize through [`crate::util::json`] so they can be built once
+//! at design time and shipped next to the model artifacts.
+
+use crate::ir::Workload;
+use crate::manager::medea::{Medea, ScheduleError};
+use crate::manager::schedule::Schedule;
+use crate::sim::replay::simulate;
+use crate::util::json::{parse, Json, JsonObj};
+use crate::util::units::Time;
+use std::fmt;
+
+/// Sweep parameters for [`ScheduleAtlas::build`].
+#[derive(Debug, Clone)]
+pub struct AtlasConfig {
+    /// Upper sweep bound as a multiple of the feasibility floor. The energy
+    /// front flattens once every kernel runs at the lowest V-F, so a modest
+    /// factor covers the whole useful range.
+    pub relax_factor: f64,
+    /// Geometric grid growth between adjacent knots (> 1). Also bounds the
+    /// worst-case relative deadline-tightening a lookup can incur.
+    pub growth: f64,
+    /// Refine between adjacent knots whose energies differ relatively by
+    /// more than this; `0` disables refinement.
+    pub refine_rel_energy: f64,
+    /// Hard cap on the number of knots (refinement stops there).
+    pub max_knots: usize,
+    /// Fraction of each knot deadline actually given to the solver, so the
+    /// event-level replay (which does not always grant the estimator's
+    /// optimistic LM-residency chaining) still lands inside the deadline.
+    /// Mirrors `ExpContext::SIM_MARGIN`.
+    pub margin: f64,
+}
+
+impl Default for AtlasConfig {
+    fn default() -> Self {
+        AtlasConfig {
+            relax_factor: 24.0,
+            growth: 1.15,
+            refine_rel_energy: 0.02,
+            max_knots: 256,
+            margin: 0.97,
+        }
+    }
+}
+
+/// One precomputed point: the energy-optimal schedule for `deadline`,
+/// validated against the event-level simulator at build time.
+#[derive(Debug, Clone)]
+pub struct AtlasKnot {
+    pub deadline: Time,
+    /// The deadline actually handed to the solver (margin folded in, then
+    /// tightened further if the simulator overshot). Kept so independent
+    /// solvers can re-derive the same optimization problem.
+    pub solve_deadline: Time,
+    pub schedule: Schedule,
+}
+
+/// Typed lookup failure: the request is below the atlas's feasibility floor.
+/// This is an *admission* outcome, not a solver error — serving layers shed
+/// such requests instead of attempting a doomed solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BelowFloor {
+    pub requested: Time,
+    pub floor: Time,
+}
+
+impl fmt::Display for BelowFloor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "deadline {:.2} ms below the atlas feasibility floor {:.2} ms",
+            self.requested.as_ms(),
+            self.floor.as_ms()
+        )
+    }
+}
+
+impl std::error::Error for BelowFloor {}
+
+/// A deadline-indexed library of precomputed MEDEA schedules.
+#[derive(Debug, Clone)]
+pub struct ScheduleAtlas {
+    /// Workload the schedules were generated for (checked on load).
+    pub workload: String,
+    /// Estimator-level minimum makespan (pre-margin), kept for diagnostics.
+    pub min_makespan: Time,
+    /// Knots in strictly ascending deadline order.
+    knots: Vec<AtlasKnot>,
+}
+
+impl ScheduleAtlas {
+    /// Sweep `medea` over the feasible deadline range and precompute one
+    /// schedule per knot.
+    pub fn build(
+        medea: &Medea<'_>,
+        workload: &Workload,
+        cfg: &AtlasConfig,
+    ) -> Result<ScheduleAtlas, ScheduleError> {
+        assert!(cfg.growth > 1.0, "atlas growth must be > 1");
+        assert!(cfg.relax_factor > 1.0, "atlas relax_factor must be > 1");
+        assert!(cfg.margin > 0.0 && cfg.margin <= 1.0, "atlas margin in (0, 1]");
+
+        let t_min = medea.min_makespan(workload)?;
+        let t_max = medea.max_makespan(workload)?;
+        // Nominal first knot: the margin plus 1 % slack for the DP's
+        // per-item round-up (≤ #kernels / resolution of the deadline). The
+        // *actual* floor is wherever the first sim-validated knot lands.
+        let nominal_floor = Time(t_min.raw() * 1.01 / cfg.margin);
+        // Past the slowest single-choice makespan extra slack cannot change
+        // the optimum, so the sweep stops at whichever bound is tighter.
+        let flat_hi = (t_max.raw() / cfg.margin).max(nominal_floor.raw() * cfg.growth);
+        let hi = Time((nominal_floor.raw() * cfg.relax_factor).min(flat_hi));
+
+        // Geometric grid, then solve + sim-validate every point. Points too
+        // tight to validate are skipped; the first that validates defines
+        // the atlas floor.
+        let mut grid = Vec::new();
+        let mut d = nominal_floor;
+        while d.raw() < hi.raw() {
+            grid.push(d);
+            d = d * cfg.growth;
+        }
+        grid.push(hi);
+
+        let mut knots: Vec<AtlasKnot> = Vec::with_capacity(grid.len());
+        let mut last_invalid: Option<Time> = None;
+        for d in grid {
+            match Self::solve_knot(medea, workload, d, cfg.margin)? {
+                Some(knot) => knots.push(knot),
+                None if knots.is_empty() => last_invalid = Some(d),
+                // A mid-sweep validation failure (laxer than an already
+                // validated knot) cannot happen with a deadline-monotone
+                // solver; skip defensively if it ever does.
+                None => {}
+            }
+        }
+        if knots.is_empty() {
+            return Err(ScheduleError::Infeasible {
+                min_ms: t_min.as_ms(),
+                deadline_ms: hi.as_ms(),
+            });
+        }
+        // Tighten the floor: bisect between the tightest deadline known to
+        // fail validation and the first knot that passed. Even when the
+        // first grid point validated immediately, the true (sim-validated)
+        // feasibility boundary can sit below it — and nothing at or below
+        // the estimator's minimum makespan can ever validate, so `t_min`
+        // bounds the search from below.
+        {
+            let mut bad = last_invalid.unwrap_or(t_min);
+            let mut good = knots[0].deadline;
+            for _ in 0..5 {
+                if good.raw() / bad.raw() < 1.005 {
+                    break;
+                }
+                let mid = Time((bad.raw() * good.raw()).sqrt());
+                match Self::solve_knot(medea, workload, mid, cfg.margin)? {
+                    Some(knot) => {
+                        good = knot.deadline;
+                        knots.insert(0, knot);
+                    }
+                    None => bad = mid,
+                }
+            }
+            knots.sort_by(|a, b| a.deadline.raw().total_cmp(&b.deadline.raw()));
+        }
+
+        // Energy-Pareto refinement: split intervals where the front still
+        // curves. Work left to right so inserted knots are re-examined.
+        if cfg.refine_rel_energy > 0.0 {
+            let mut i = 0;
+            while i + 1 < knots.len() && knots.len() < cfg.max_knots {
+                let e_lo = knots[i].schedule.active_energy().raw();
+                let e_hi = knots[i + 1].schedule.active_energy().raw();
+                let rel = (e_lo - e_hi).abs() / e_lo.max(e_hi).max(f64::MIN_POSITIVE);
+                let d_lo = knots[i].deadline.raw();
+                let d_hi = knots[i + 1].deadline.raw();
+                // Stop splitting once intervals are narrow: below 1 %
+                // spacing the DP's quantization dominates any gain.
+                if rel > cfg.refine_rel_energy && d_hi / d_lo > 1.01 {
+                    let mid = Time((d_lo * d_hi).sqrt());
+                    match Self::solve_knot(medea, workload, mid, cfg.margin)? {
+                        Some(knot) => knots.insert(i + 1, knot),
+                        None => i += 1,
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // Dedup the flat tail: once the energy-minimal schedule is reached,
+        // one knot suffices (it serves every laxer deadline). Keep a knot
+        // only when it improves on the previous kept knot's energy.
+        let mut kept: Vec<AtlasKnot> = Vec::with_capacity(knots.len());
+        for knot in knots {
+            let improves = kept
+                .last()
+                .map(|prev| {
+                    knot.schedule.active_energy().raw()
+                        < prev.schedule.active_energy().raw() * (1.0 - 1e-9)
+                })
+                .unwrap_or(true);
+            if improves {
+                kept.push(knot);
+            }
+        }
+
+        Ok(ScheduleAtlas {
+            workload: workload.name.clone(),
+            min_makespan: t_min,
+            knots: kept,
+        })
+    }
+
+    /// Solve for one knot and validate it on the event-level simulator.
+    /// The sim does not always grant the estimator's optimistic
+    /// LM-residency chaining, so when the replayed makespan overshoots the
+    /// knot deadline the solve is retried with a proportionally tighter
+    /// target. Returns `Ok(None)` when no sim-valid schedule exists at this
+    /// deadline (it is below the *true* feasibility floor).
+    fn solve_knot(
+        medea: &Medea<'_>,
+        workload: &Workload,
+        deadline: Time,
+        margin: f64,
+    ) -> Result<Option<AtlasKnot>, ScheduleError> {
+        let mut target = deadline * margin;
+        for _ in 0..4 {
+            let mut schedule = match medea.schedule(workload, target) {
+                Ok(s) => s,
+                Err(ScheduleError::Infeasible { .. }) => return Ok(None),
+                Err(e) => return Err(e),
+            };
+            schedule.deadline = deadline;
+            let sim = simulate(workload, medea.platform, medea.model, &schedule);
+            if sim.active_time.raw() <= deadline.raw() {
+                return Ok(Some(AtlasKnot {
+                    deadline,
+                    solve_deadline: target,
+                    schedule,
+                }));
+            }
+            // Shrink the solve target by the observed overshoot (plus a
+            // hair) and retry.
+            target = Time(target.raw() * deadline.raw() / sim.active_time.raw() * 0.998);
+        }
+        Ok(None)
+    }
+
+    /// The tightest deadline this atlas can serve. Requests below it are
+    /// infeasible and should be shed at admission.
+    pub fn floor(&self) -> Time {
+        self.knots[0].deadline
+    }
+
+    pub fn len(&self) -> usize {
+        self.knots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.knots.is_empty()
+    }
+
+    pub fn knots(&self) -> &[AtlasKnot] {
+        &self.knots
+    }
+
+    /// `O(log n)` lookup: the highest knot whose deadline is ≤ `deadline` —
+    /// i.e. the lowest-energy precomputed schedule that still meets it
+    /// (knot energy is non-increasing in knot deadline by construction).
+    pub fn lookup(&self, deadline: Time) -> Result<&AtlasKnot, BelowFloor> {
+        let idx = self
+            .knots
+            .partition_point(|k| k.deadline.raw() <= deadline.raw());
+        if idx == 0 {
+            return Err(BelowFloor {
+                requested: deadline,
+                floor: self.floor(),
+            });
+        }
+        Ok(&self.knots[idx - 1])
+    }
+
+    /// Like [`ScheduleAtlas::lookup`], but clones the schedule and stamps
+    /// the *requested* deadline on it, so downstream sleep-energy and
+    /// deadline-met accounting use what the caller asked for.
+    pub fn resolve(&self, deadline: Time) -> Result<Schedule, BelowFloor> {
+        let knot = self.lookup(deadline)?;
+        let mut schedule = knot.schedule.clone();
+        schedule.deadline = deadline;
+        Ok(schedule)
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("workload", self.workload.clone());
+        o.insert("min_makespan_ms", self.min_makespan.as_ms());
+        let knots: Vec<Json> = self
+            .knots
+            .iter()
+            .map(|k| {
+                let mut kj = JsonObj::new();
+                kj.insert("deadline_ms", k.deadline.as_ms());
+                kj.insert("solve_deadline_ms", k.solve_deadline.as_ms());
+                kj.insert("schedule", k.schedule.to_json());
+                Json::Obj(kj)
+            })
+            .collect();
+        o.insert("knots", Json::Arr(knots));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<ScheduleAtlas, String> {
+        let workload = v.req("workload")?.as_str().ok_or("workload")?.to_string();
+        let min_makespan =
+            Time::from_ms(v.req("min_makespan_ms")?.as_f64().ok_or("min_makespan_ms")?);
+        let mut knots = Vec::new();
+        for kv in v.req("knots")?.as_arr().ok_or("knots")? {
+            let deadline = Time::from_ms(kv.req("deadline_ms")?.as_f64().ok_or("deadline_ms")?);
+            let solve_deadline = Time::from_ms(
+                kv.req("solve_deadline_ms")?
+                    .as_f64()
+                    .ok_or("solve_deadline_ms")?,
+            );
+            let schedule = Schedule::from_json(kv.req("schedule")?)?;
+            knots.push(AtlasKnot {
+                deadline,
+                solve_deadline,
+                schedule,
+            });
+        }
+        if knots.is_empty() {
+            return Err("atlas has no knots".to_string());
+        }
+        for w in knots.windows(2) {
+            if w[1].deadline.raw() <= w[0].deadline.raw() {
+                return Err("atlas knots not in ascending deadline order".to_string());
+            }
+        }
+        Ok(ScheduleAtlas {
+            workload,
+            min_makespan,
+            knots,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_pretty()).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ScheduleAtlas, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        ScheduleAtlas::from_json(&parse(&text).map_err(|e| e.to_string())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::ExpContext;
+
+    fn small_cfg() -> AtlasConfig {
+        // Coarse grid to keep unit tests fast; integration tests use the
+        // default config.
+        AtlasConfig {
+            relax_factor: 8.0,
+            growth: 1.5,
+            refine_rel_energy: 0.05,
+            max_knots: 32,
+            ..AtlasConfig::default()
+        }
+    }
+
+    #[test]
+    fn builds_sorted_deduped_knots() {
+        let ctx = ExpContext::paper();
+        let medea = ctx.medea();
+        let atlas = ScheduleAtlas::build(&medea, &ctx.workload, &small_cfg()).unwrap();
+        assert!(!atlas.is_empty());
+        assert_eq!(atlas.workload, ctx.workload.name);
+        for w in atlas.knots().windows(2) {
+            assert!(w[1].deadline.raw() > w[0].deadline.raw());
+            // Energy strictly improves along kept knots.
+            assert!(
+                w[1].schedule.active_energy().raw() < w[0].schedule.active_energy().raw(),
+                "non-improving knot survived dedup"
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_picks_tightest_covering_knot() {
+        let ctx = ExpContext::paper();
+        let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &small_cfg()).unwrap();
+        assert!(atlas.len() >= 2, "degenerate atlas: {} knots", atlas.len());
+        let i = atlas.len() / 2 - 1;
+        // Exactly on a knot → that knot.
+        let k_lo = &atlas.knots()[i];
+        let hit = atlas.lookup(k_lo.deadline).unwrap();
+        assert!((hit.deadline.raw() - k_lo.deadline.raw()).abs() < 1e-15);
+        // Between knots → the lower one.
+        let k_hi = &atlas.knots()[i + 1];
+        let mid = Time(0.5 * (k_lo.deadline.raw() + k_hi.deadline.raw()));
+        let hit = atlas.lookup(mid).unwrap();
+        assert!((hit.deadline.raw() - k_lo.deadline.raw()).abs() < 1e-15);
+        // Beyond the last knot → the last (energy-minimal) knot.
+        let last = atlas.knots().last().unwrap();
+        let hit = atlas.lookup(last.deadline * 100.0).unwrap();
+        assert!((hit.deadline.raw() - last.deadline.raw()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn below_floor_is_typed() {
+        let ctx = ExpContext::paper();
+        let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &small_cfg()).unwrap();
+        let bad = atlas.floor() * 0.5;
+        let err = atlas.lookup(bad).unwrap_err();
+        assert_eq!(err.floor.raw(), atlas.floor().raw());
+        assert!((err.requested.raw() - bad.raw()).abs() < 1e-15);
+        assert!(err.to_string().contains("feasibility floor"));
+    }
+
+    #[test]
+    fn resolve_stamps_requested_deadline() {
+        let ctx = ExpContext::paper();
+        let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &small_cfg()).unwrap();
+        let req = atlas.floor() * 3.7;
+        let s = atlas.resolve(req).unwrap();
+        assert!((s.deadline.raw() - req.raw()).abs() < 1e-15);
+        assert!(s.meets_deadline());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let ctx = ExpContext::paper();
+        let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &small_cfg()).unwrap();
+        let text = atlas.to_json().to_pretty();
+        let back = ScheduleAtlas::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), atlas.len());
+        assert_eq!(back.workload, atlas.workload);
+        let d = atlas.floor() * 2.0;
+        let a = atlas.resolve(d).unwrap();
+        let b = back.resolve(d).unwrap();
+        assert!((a.active_energy().raw() - b.active_energy().raw()).abs() < 1e-15);
+        assert_eq!(a.decisions.len(), b.decisions.len());
+    }
+
+    #[test]
+    fn refinement_adds_knots_where_front_curves() {
+        let ctx = ExpContext::paper();
+        let medea = ctx.medea();
+        let coarse = ScheduleAtlas::build(
+            &medea,
+            &ctx.workload,
+            &AtlasConfig {
+                refine_rel_energy: 0.0,
+                ..small_cfg()
+            },
+        )
+        .unwrap();
+        let refined = ScheduleAtlas::build(&medea, &ctx.workload, &small_cfg()).unwrap();
+        assert!(
+            refined.len() > coarse.len(),
+            "refinement added no knots ({} vs {})",
+            refined.len(),
+            coarse.len()
+        );
+    }
+}

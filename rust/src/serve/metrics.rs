@@ -1,0 +1,124 @@
+//! Cross-worker serving metrics.
+//!
+//! Each pool worker keeps an ordinary [`crate::coordinator::Metrics`]; at
+//! shutdown the pool merges them into one [`ServeMetrics`] and attaches the
+//! admission-side shed counters (which live in the pool, not in any worker,
+//! since shed requests never reach a worker).
+
+use crate::coordinator::Metrics;
+use crate::util::json::{Json, JsonObj};
+use std::time::Duration;
+
+/// Aggregated view over a pool run.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Number of workers that contributed.
+    pub workers: usize,
+    /// Per-worker request counts (diagnostic for dispatch balance).
+    pub per_worker_requests: Vec<u64>,
+    /// All worker metrics merged.
+    pub aggregate: Metrics,
+    /// Requests shed because the deadline was below the feasibility floor.
+    pub shed_below_floor: u64,
+    /// Requests shed because the admission queue was full.
+    pub shed_queue_full: u64,
+}
+
+impl ServeMetrics {
+    /// Merge per-worker metrics with the pool's shed counters.
+    pub fn aggregate(
+        per_worker: Vec<Metrics>,
+        shed_below_floor: u64,
+        shed_queue_full: u64,
+    ) -> ServeMetrics {
+        let mut agg = Metrics::default();
+        let mut per_worker_requests = Vec::with_capacity(per_worker.len());
+        for m in &per_worker {
+            per_worker_requests.push(m.requests);
+            agg.merge(m);
+        }
+        ServeMetrics {
+            workers: per_worker.len(),
+            per_worker_requests,
+            aggregate: agg,
+            shed_below_floor,
+            shed_queue_full,
+        }
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.shed_below_floor + self.shed_queue_full
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.aggregate.host_latency_p50()
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.aggregate.host_latency_p99()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "workers={} requests={} [{}] misses={} shed={} (floor={} full={}) energy={:.1} uJ p50={:?} p99={:?}",
+            self.workers,
+            self.aggregate.requests,
+            self.per_worker_requests
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            self.aggregate.deadline_misses,
+            self.total_shed(),
+            self.shed_below_floor,
+            self.shed_queue_full,
+            self.aggregate.sim_energy_j * 1e6,
+            self.p50(),
+            self.p99(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("workers", self.workers);
+        o.insert("requests", self.aggregate.requests);
+        o.insert(
+            "per_worker_requests",
+            Json::Arr(self.per_worker_requests.iter().map(|&n| Json::from(n)).collect()),
+        );
+        o.insert("deadline_misses", self.aggregate.deadline_misses);
+        o.insert("shed_below_floor", self.shed_below_floor);
+        o.insert("shed_queue_full", self.shed_queue_full);
+        o.insert("sim_energy_uj", self.aggregate.sim_energy_j * 1e6);
+        o.insert("sim_active_ms", self.aggregate.sim_active_s * 1e3);
+        o.insert("host_p50_us", self.p50().as_secs_f64() * 1e6);
+        o.insert("host_p99_us", self.p99().as_secs_f64() * 1e6);
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_across_workers() {
+        let mut w0 = Metrics::default();
+        w0.record(false, true, 100e-6, 0.01, Duration::from_millis(1));
+        w0.record(true, true, 100e-6, 0.01, Duration::from_millis(3));
+        let mut w1 = Metrics::default();
+        w1.record(false, false, 200e-6, 0.02, Duration::from_millis(9));
+        let m = ServeMetrics::aggregate(vec![w0, w1], 4, 2);
+        assert_eq!(m.workers, 2);
+        assert_eq!(m.aggregate.requests, 3);
+        assert_eq!(m.per_worker_requests, vec![2, 1]);
+        assert_eq!(m.aggregate.deadline_misses, 1);
+        assert_eq!(m.total_shed(), 6);
+        assert!(m.p99() >= m.p50());
+        let s = m.summary();
+        assert!(s.contains("workers=2") && s.contains("shed=6"), "{s}");
+        let j = m.to_json();
+        assert_eq!(j.get("requests").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("shed_below_floor").unwrap().as_u64(), Some(4));
+    }
+}

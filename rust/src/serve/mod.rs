@@ -1,0 +1,36 @@
+//! The online serving subsystem: design-time optimization, table-lookup
+//! request path.
+//!
+//! MEDEA (§3.3) is a *design-time* manager: the energy-optimal schedule for
+//! a deadline depends only on the platform characterization, never on the
+//! request. This module exploits that to serve production traffic without a
+//! single solver invocation on the hot path:
+//!
+//! * [`atlas`] — the **schedule atlas**: a startup sweep over the feasible
+//!   deadline range (geometric grid + energy-Pareto refinement) precomputes
+//!   one MEDEA schedule per knot; requests resolve by `O(log n)` binary
+//!   search to the tightest covering knot. Serializable via
+//!   [`crate::util::json`] so it can be built once and shipped.
+//! * [`queue`] — deadline-aware admission control: a bounded EDF priority
+//!   queue that sheds infeasible (below the atlas floor) and overflow
+//!   requests with a typed [`queue::Rejection`] instead of a scheduling
+//!   error.
+//! * [`pool`] — the sharded worker pool: N threads, one PJRT runtime handle
+//!   each, sharing the atlas behind an `Arc`, round-robin dispatch, bounded
+//!   per-worker schedule LRUs, graceful draining shutdown.
+//! * [`metrics`] — cross-worker aggregation (p50/p99 host latency, energy,
+//!   deadline-miss and shed counts) merged from per-worker
+//!   [`crate::coordinator::Metrics`].
+//!
+//! The legacy [`crate::coordinator::Coordinator`] is a thin single-worker
+//! compatibility wrapper over [`pool::ServePool`].
+
+pub mod atlas;
+pub mod metrics;
+pub mod pool;
+pub mod queue;
+
+pub use atlas::{AtlasConfig, AtlasKnot, BelowFloor, ScheduleAtlas};
+pub use metrics::ServeMetrics;
+pub use pool::{InferenceOutcome, PoolConfig, ServeError, ServePool, Ticket};
+pub use queue::{Admission, EdfQueue, Rejection};

@@ -1,0 +1,517 @@
+//! The sharded serving pool.
+//!
+//! `N` worker threads share one [`ScheduleAtlas`] behind an `Arc`; each
+//! worker owns its *own* PJRT runtime handle (PJRT clients are not shared
+//! across threads), a bounded LRU of deadline-stamped schedules, and a
+//! per-worker [`crate::coordinator::Metrics`]. Requests are dispatched
+//! round-robin to per-worker EDF admission queues; infeasible or overflow
+//! requests are shed with a typed [`Rejection`] at submit time, never as a
+//! solver error. Shutdown is graceful: queues drain, then workers exit and
+//! their metrics are merged into a [`ServeMetrics`].
+
+use crate::coordinator::Metrics;
+use crate::eeg::synth::EegWindow;
+use crate::ir::tsd::{tsd_core, TsdParams};
+use crate::ir::Workload;
+use crate::manager::medea::Medea;
+use crate::manager::schedule::Schedule;
+use crate::platform::heeptimize::heeptimize;
+use crate::platform::Platform;
+use crate::profile::characterize;
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::runtime::client::Runtime;
+use crate::runtime::infer::{Prediction, TsdInference};
+use crate::serve::atlas::{AtlasConfig, ScheduleAtlas};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::queue::{Admission, EdfQueue, Rejection};
+use crate::sim::replay::{simulate, SimReport};
+use crate::timing::cycle_model::CycleModel;
+use crate::util::error::{anyhow, bail, Result};
+use crate::util::lru::LruCache;
+use crate::util::units::Time;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Pool sizing and atlas parameters.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker thread count (≥ 1).
+    pub workers: usize,
+    /// Per-worker admission queue capacity.
+    pub queue_capacity: usize,
+    /// Per-worker LRU capacity for deadline-stamped schedules.
+    pub schedule_cache: usize,
+    /// Directory holding the AOT artifacts (`manifest.json`); when absent
+    /// or unloadable the pool serves schedule-only responses.
+    pub artifact_dir: PathBuf,
+    pub atlas: AtlasConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .clamp(1, 4),
+            queue_capacity: 256,
+            schedule_cache: 64,
+            artifact_dir: ArtifactManifest::default_dir(),
+            atlas: AtlasConfig::default(),
+        }
+    }
+}
+
+/// The response: functional prediction + simulated on-device execution.
+#[derive(Debug)]
+pub struct InferenceOutcome {
+    pub window_index: usize,
+    pub prediction: Prediction,
+    pub sim: SimReport,
+    pub scheduler: String,
+    /// Deadline of the atlas knot that served this request (≤ the requested
+    /// deadline; the gap is the lookup's energy pessimism window).
+    pub knot_deadline: Time,
+    /// Submission-to-response latency, queue wait included.
+    pub host_latency: Duration,
+}
+
+/// Serving failure modes surfaced to a waiting client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The request was shed by admission control (typed, expected under
+    /// overload or infeasible deadlines).
+    Shed(Rejection),
+    /// Unexpected worker-side failure (runtime execution error, …).
+    Internal(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Shed(r) => write!(f, "{r}"),
+            ServeError::Internal(msg) => write!(f, "internal serving error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Handle for one in-flight request.
+#[derive(Debug)]
+pub struct Ticket {
+    rx: mpsc::Receiver<std::result::Result<InferenceOutcome, ServeError>>,
+}
+
+impl Ticket {
+    /// Block until the worker responds.
+    pub fn wait(self) -> std::result::Result<InferenceOutcome, ServeError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(ServeError::Internal("worker dropped response".into())))
+    }
+}
+
+struct Job {
+    window: EegWindow,
+    deadline: Time,
+    submitted: Instant,
+    reply: mpsc::Sender<std::result::Result<InferenceOutcome, ServeError>>,
+}
+
+struct ShardState {
+    queue: EdfQueue<Job>,
+    stopping: bool,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+/// Design-time state shared read-only by every worker.
+struct ServeContext {
+    platform: Platform,
+    model: CycleModel,
+    workload: Workload,
+}
+
+/// A running pool. Dropping it shuts workers down (discarding metrics);
+/// call [`ServePool::shutdown`] to collect the aggregate instead.
+pub struct ServePool {
+    shards: Vec<Arc<Shard>>,
+    workers: Vec<JoinHandle<Metrics>>,
+    next: AtomicUsize,
+    atlas: Arc<ScheduleAtlas>,
+    // Only touched through &self (submit/shutdown) — workers never see
+    // shed requests, so plain atomics suffice.
+    shed_below_floor: AtomicU64,
+    shed_queue_full: AtomicU64,
+}
+
+impl ServePool {
+    /// Build the design-time state, sweep the atlas, and spawn the workers.
+    pub fn start(config: PoolConfig) -> Result<ServePool> {
+        let platform = heeptimize();
+        let model = CycleModel::heeptimize();
+        let profiles = characterize(&platform, &model);
+        let workload = tsd_core(&TsdParams::default());
+        let medea = Medea::new(&platform, &profiles, &model);
+        let atlas = ScheduleAtlas::build(&medea, &workload, &config.atlas)
+            .map_err(|e| anyhow!("atlas build failed: {e}"))?;
+        Self::start_with_atlas(config, atlas)
+    }
+
+    /// Spawn workers over a prebuilt (e.g. loaded-from-disk) atlas.
+    pub fn start_with_atlas(config: PoolConfig, atlas: ScheduleAtlas) -> Result<ServePool> {
+        let workload = tsd_core(&TsdParams::default());
+        if atlas.workload != workload.name {
+            bail!(
+                "atlas was built for workload `{}`, this pool serves `{}`",
+                atlas.workload,
+                workload.name
+            );
+        }
+        if atlas.is_empty() {
+            bail!("atlas has no knots");
+        }
+        let ctx = Arc::new(ServeContext {
+            platform: heeptimize(),
+            model: CycleModel::heeptimize(),
+            workload,
+        });
+        let atlas = Arc::new(atlas);
+        let floor = atlas.floor();
+
+        let n = config.workers.max(1);
+        let mut shards = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let shard = Arc::new(Shard {
+                state: Mutex::new(ShardState {
+                    queue: EdfQueue::new(config.queue_capacity.max(1)).with_floor(floor),
+                    stopping: false,
+                }),
+                cv: Condvar::new(),
+            });
+            let handle = std::thread::Builder::new()
+                .name(format!("medea-serve-{i}"))
+                .spawn({
+                    let shard = shard.clone();
+                    let ctx = ctx.clone();
+                    let atlas = atlas.clone();
+                    let dir = config.artifact_dir.clone();
+                    let cache = config.schedule_cache.max(1);
+                    move || worker_loop(&shard, &ctx, &atlas, &dir, cache)
+                })
+                .map_err(|e| anyhow!("spawn serve worker {i}: {e}"))?;
+            shards.push(shard);
+            workers.push(handle);
+        }
+
+        Ok(ServePool {
+            shards,
+            workers,
+            next: AtomicUsize::new(0),
+            atlas,
+            shed_below_floor: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+        })
+    }
+
+    pub fn atlas(&self) -> &ScheduleAtlas {
+        &self.atlas
+    }
+
+    /// The tightest deadline admission control will accept.
+    pub fn floor(&self) -> Time {
+        self.atlas.floor()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Round-robin dispatch into a worker's EDF queue. Returns a [`Ticket`]
+    /// on admission, or the typed shed reason.
+    pub fn submit(
+        &self,
+        window: EegWindow,
+        deadline: Time,
+    ) -> std::result::Result<Ticket, Rejection> {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let shard = &self.shards[idx];
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            window,
+            deadline,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let mut st = shard.state.lock().expect("shard lock poisoned");
+        if st.stopping {
+            return Err(Rejection::ShuttingDown);
+        }
+        let capacity = st.queue.capacity();
+        match st.queue.push(deadline, job) {
+            Admission::Accepted => {
+                drop(st);
+                shard.cv.notify_one();
+                Ok(Ticket { rx })
+            }
+            Admission::AcceptedShedding { evicted, .. } => {
+                self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                let _ = evicted
+                    .reply
+                    .send(Err(ServeError::Shed(Rejection::QueueFull { capacity })));
+                drop(st);
+                shard.cv.notify_one();
+                Ok(Ticket { rx })
+            }
+            Admission::Rejected { reason, .. } => {
+                match reason {
+                    Rejection::BelowFloor { .. } => {
+                        self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Rejection::QueueFull { .. } => {
+                        self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Rejection::ShuttingDown => {}
+                }
+                Err(reason)
+            }
+        }
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(
+        &self,
+        window: EegWindow,
+        deadline: Time,
+    ) -> std::result::Result<InferenceOutcome, ServeError> {
+        match self.submit(window, deadline) {
+            Ok(ticket) => ticket.wait(),
+            Err(rejection) => Err(ServeError::Shed(rejection)),
+        }
+    }
+
+    fn begin_stop(&self) {
+        for shard in &self.shards {
+            let mut st = shard.state.lock().expect("shard lock poisoned");
+            st.stopping = true;
+            drop(st);
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Graceful shutdown: queues drain, workers exit, metrics merge.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.begin_stop();
+        let per_worker: Vec<Metrics> = self
+            .workers
+            .drain(..)
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect();
+        ServeMetrics::aggregate(
+            per_worker,
+            self.shed_below_floor.load(Ordering::Relaxed),
+            self.shed_queue_full.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Drop for ServePool {
+    fn drop(&mut self) {
+        self.begin_stop();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    shard: &Shard,
+    ctx: &ServeContext,
+    atlas: &ScheduleAtlas,
+    artifact_dir: &std::path::Path,
+    cache_capacity: usize,
+) -> Metrics {
+    let mut metrics = Metrics::default();
+    // One PJRT runtime handle per worker, created on the worker thread.
+    let mut runtime = match Runtime::new(artifact_dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            crate::log_warn!("PJRT runtime unavailable ({e}); serving schedule-only responses");
+            None
+        }
+    };
+    let infer = TsdInference::default();
+    // Deadline-stamped schedules, bounded (the pre-atlas coordinator kept
+    // an unbounded BTreeMap here).
+    let mut schedules: LruCache<u64, (Schedule, Time)> = LruCache::new(cache_capacity);
+
+    loop {
+        let job = {
+            let mut st = shard.state.lock().expect("shard lock poisoned");
+            loop {
+                if let Some((_, job)) = st.queue.pop() {
+                    break Some(job);
+                }
+                if st.stopping {
+                    break None;
+                }
+                st = shard.cv.wait(st).expect("shard lock poisoned");
+            }
+        };
+        let Some(job) = job else { break };
+        let outcome = process(&job, ctx, atlas, &mut schedules, runtime.as_mut(), &infer);
+        if let Ok(o) = &outcome {
+            metrics.record(
+                o.prediction.seizure,
+                o.sim.deadline_met,
+                o.sim.total_energy().raw(),
+                o.sim.active_time.raw(),
+                o.host_latency,
+            );
+        }
+        let _ = job.reply.send(outcome);
+    }
+    metrics
+}
+
+fn process(
+    job: &Job,
+    ctx: &ServeContext,
+    atlas: &ScheduleAtlas,
+    schedules: &mut LruCache<u64, (Schedule, Time)>,
+    runtime: Option<&mut Runtime>,
+    infer: &TsdInference,
+) -> std::result::Result<InferenceOutcome, ServeError> {
+    // O(log n) atlas resolution, micro-second-keyed LRU on top.
+    let key = (job.deadline.as_us().round() as u64).max(1);
+    if !schedules.contains(&key) {
+        let knot = atlas.lookup(job.deadline).map_err(|miss| {
+            // Admission already floor-checked; this only races atlas swaps.
+            ServeError::Shed(Rejection::BelowFloor {
+                requested: miss.requested,
+                floor: miss.floor,
+            })
+        })?;
+        let mut schedule = knot.schedule.clone();
+        schedule.deadline = job.deadline;
+        schedules.insert(key, (schedule, knot.deadline));
+    }
+    let (schedule, knot_deadline) = schedules.get(&key).expect("just inserted");
+    let knot_deadline = *knot_deadline;
+
+    let sim = simulate(&ctx.workload, &ctx.platform, &ctx.model, schedule);
+    let prediction = match runtime {
+        Some(rt) => infer
+            .infer_staged(rt, &job.window)
+            .map_err(|e| ServeError::Internal(e.to_string()))?,
+        None => Prediction {
+            logits: vec![0.0, 0.0],
+            class_idx: 0,
+            seizure: false,
+        },
+    };
+
+    Ok(InferenceOutcome {
+        window_index: job.window.index,
+        prediction,
+        sim,
+        scheduler: schedule.scheduler.clone(),
+        knot_deadline,
+        host_latency: job.submitted.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eeg::synth::{EegGenerator, SynthConfig};
+
+    fn test_config() -> PoolConfig {
+        PoolConfig {
+            workers: 2,
+            queue_capacity: 64,
+            schedule_cache: 8,
+            // Nonexistent on purpose: exercises the schedule-only path.
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            atlas: AtlasConfig {
+                relax_factor: 8.0,
+                growth: 1.5,
+                refine_rel_energy: 0.05,
+                max_knots: 32,
+                ..AtlasConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn pool_serves_schedule_only_end_to_end() {
+        let pool = ServePool::start(test_config()).unwrap();
+        assert_eq!(pool.worker_count(), 2);
+        let mut gen = EegGenerator::new(SynthConfig::default(), 7);
+        let mut tickets = Vec::new();
+        for i in 0..16 {
+            let deadline = Time::from_ms(if i % 2 == 0 { 200.0 } else { 1000.0 });
+            tickets.push(pool.submit(gen.next_window(), deadline).unwrap());
+        }
+        for (i, t) in tickets.into_iter().enumerate() {
+            let out = t.wait().unwrap();
+            assert_eq!(out.window_index, i);
+            assert!(out.sim.deadline_met, "window {i}");
+            assert_eq!(out.scheduler, "medea");
+            assert!(out.knot_deadline.raw() <= Time::from_ms(1000.0).raw() + 1e-12);
+            assert_eq!(out.prediction.logits.len(), 2);
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.workers, 2);
+        assert_eq!(m.aggregate.requests, 16);
+        // Round-robin dispatch from one thread splits evenly.
+        assert_eq!(m.per_worker_requests, vec![8, 8]);
+        assert_eq!(m.aggregate.deadline_misses, 0);
+        assert_eq!(m.total_shed(), 0);
+    }
+
+    #[test]
+    fn below_floor_is_shed_at_submit_with_typed_rejection() {
+        let pool = ServePool::start(test_config()).unwrap();
+        let floor = pool.floor();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 8);
+        let err = pool.submit(gen.next_window(), floor * 0.5).unwrap_err();
+        match err {
+            Rejection::BelowFloor { requested, floor: f } => {
+                assert!((requested.raw() - floor.raw() * 0.5).abs() < 1e-15);
+                assert_eq!(f.raw(), floor.raw());
+            }
+            other => panic!("expected BelowFloor, got {other:?}"),
+        }
+        // A feasible request still goes through afterwards.
+        let out = pool.infer(gen.next_window(), floor * 4.0).unwrap();
+        assert!(out.sim.deadline_met);
+        let m = pool.shutdown();
+        assert_eq!(m.shed_below_floor, 1);
+        assert_eq!(m.aggregate.requests, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work() {
+        let pool = ServePool::start(test_config()).unwrap();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 9);
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| pool.submit(gen.next_window(), Time::from_ms(500.0)).unwrap())
+            .collect();
+        // Shut down immediately: queued jobs must still be answered.
+        let m = pool.shutdown();
+        assert_eq!(m.aggregate.requests, 8);
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+    }
+}

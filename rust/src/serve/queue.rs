@@ -1,0 +1,300 @@
+//! Deadline-aware admission control: a bounded EDF priority queue.
+//!
+//! Two shedding rules run at admission, both returning a typed
+//! [`Rejection`] instead of letting an infeasible request reach the solver
+//! or an overloaded worker:
+//!
+//! * **Feasibility floor** — requests whose deadline is below the atlas's
+//!   floor can never be scheduled; they are rejected immediately.
+//! * **Capacity** — when the queue is full, the entry with the *latest*
+//!   deadline (the one with the most slack, least harmed by waiting and, by
+//!   EDF order, served last anyway) is shed; that may be the incoming
+//!   request itself.
+//!
+//! Admitted entries pop in earliest-deadline-first order, FIFO among equal
+//! deadlines.
+
+use crate::util::units::Time;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::fmt;
+
+/// Why a request was shed at admission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejection {
+    /// The deadline is below the atlas's sim-validated feasibility floor:
+    /// no precomputed schedule meets it, and nothing below the estimator's
+    /// minimum makespan ever could on this platform.
+    BelowFloor { requested: Time, floor: Time },
+    /// The queue is at capacity and this request had the most slack.
+    QueueFull { capacity: usize },
+    /// The pool is shutting down.
+    ShuttingDown,
+}
+
+impl fmt::Display for Rejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejection::BelowFloor { requested, floor } => write!(
+                f,
+                "shed: deadline {:.2} ms below feasibility floor {:.2} ms",
+                requested.as_ms(),
+                floor.as_ms()
+            ),
+            Rejection::QueueFull { capacity } => {
+                write!(f, "shed: queue full (capacity {capacity})")
+            }
+            Rejection::ShuttingDown => write!(f, "shed: pool shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+/// Outcome of [`EdfQueue::push`].
+#[derive(Debug)]
+pub enum Admission<T> {
+    /// Admitted; nothing was displaced.
+    Accepted,
+    /// Admitted by shedding the queued entry with the latest deadline.
+    AcceptedShedding { evicted: T, evicted_deadline: Time },
+    /// The request itself was shed; ownership returns to the caller.
+    Rejected { item: T, reason: Rejection },
+}
+
+struct Entry<T> {
+    deadline: Time,
+    /// Admission sequence number: FIFO tie-break among equal deadlines.
+    seq: u64,
+    item: T,
+}
+
+// BinaryHeap is a max-heap; order entries so the earliest deadline (then
+// the earliest admission) is the maximum.
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .deadline
+            .raw()
+            .total_cmp(&self.deadline.raw())
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+/// A bounded earliest-deadline-first queue with an optional feasibility
+/// floor.
+pub struct EdfQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    capacity: usize,
+    floor: Option<Time>,
+    seq: u64,
+}
+
+impl<T> EdfQueue<T> {
+    /// `capacity` must be ≥ 1.
+    pub fn new(capacity: usize) -> EdfQueue<T> {
+        assert!(capacity >= 1, "EdfQueue capacity must be >= 1");
+        EdfQueue {
+            heap: BinaryHeap::with_capacity(capacity + 1),
+            capacity,
+            floor: None,
+            seq: 0,
+        }
+    }
+
+    /// Shed pushes whose deadline is below `floor`.
+    pub fn with_floor(mut self, floor: Time) -> EdfQueue<T> {
+        self.floor = Some(floor);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit `item` under EDF shedding rules.
+    pub fn push(&mut self, deadline: Time, item: T) -> Admission<T> {
+        if let Some(floor) = self.floor {
+            if deadline.raw() < floor.raw() {
+                return Admission::Rejected {
+                    item,
+                    reason: Rejection::BelowFloor {
+                        requested: deadline,
+                        floor,
+                    },
+                };
+            }
+        }
+        if self.heap.len() >= self.capacity {
+            // Shed the latest-deadline entry — possibly the incoming one.
+            // O(n) scan; admission-queue capacities are small.
+            let latest_queued = self
+                .heap
+                .iter()
+                .map(|e| e.deadline.raw())
+                .fold(f64::NEG_INFINITY, f64::max);
+            if deadline.raw() >= latest_queued {
+                return Admission::Rejected {
+                    item,
+                    reason: Rejection::QueueFull {
+                        capacity: self.capacity,
+                    },
+                };
+            }
+            let mut entries = std::mem::take(&mut self.heap).into_vec();
+            let drop_pos = entries
+                .iter()
+                .enumerate()
+                .max_by(|(_, a), (_, b)| {
+                    a.deadline
+                        .raw()
+                        .total_cmp(&b.deadline.raw())
+                        // Among equal latest deadlines, shed the youngest
+                        // (latest-admitted) to preserve FIFO fairness.
+                        .then_with(|| a.seq.cmp(&b.seq))
+                })
+                .map(|(i, _)| i)
+                .expect("full queue has entries");
+            let evicted = entries.swap_remove(drop_pos);
+            self.heap = BinaryHeap::from(entries);
+            self.push_unchecked(deadline, item);
+            return Admission::AcceptedShedding {
+                evicted: evicted.item,
+                evicted_deadline: evicted.deadline,
+            };
+        }
+        self.push_unchecked(deadline, item);
+        Admission::Accepted
+    }
+
+    fn push_unchecked(&mut self, deadline: Time, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { deadline, seq, item });
+    }
+
+    /// Remove and return the earliest-deadline entry.
+    pub fn pop(&mut self) -> Option<(Time, T)> {
+        self.heap.pop().map(|e| (e.deadline, e.item))
+    }
+
+    /// Deadline of the entry that would pop next.
+    pub fn peek_deadline(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.deadline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: f64) -> Time {
+        Time::from_ms(v)
+    }
+
+    #[test]
+    fn pops_in_edf_order() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(8);
+        assert!(matches!(q.push(ms(200.0), "b"), Admission::Accepted));
+        assert!(matches!(q.push(ms(50.0), "a"), Admission::Accepted));
+        assert!(matches!(q.push(ms(1000.0), "c"), Admission::Accepted));
+        assert_eq!(q.peek_deadline(), Some(ms(50.0)));
+        assert_eq!(q.pop().unwrap().1, "a");
+        assert_eq!(q.pop().unwrap().1, "b");
+        assert_eq!(q.pop().unwrap().1, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn equal_deadlines_are_fifo() {
+        let mut q: EdfQueue<u32> = EdfQueue::new(8);
+        for i in 0..5 {
+            q.push(ms(100.0), i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn floor_rejection_is_typed() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(4).with_floor(ms(30.0));
+        match q.push(ms(10.0), "x") {
+            Admission::Rejected { item, reason } => {
+                assert_eq!(item, "x");
+                assert_eq!(
+                    reason,
+                    Rejection::BelowFloor {
+                        requested: ms(10.0),
+                        floor: ms(30.0)
+                    }
+                );
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert!(matches!(q.push(ms(30.0), "ok"), Admission::Accepted));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn overflow_sheds_latest_deadline() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(2);
+        q.push(ms(100.0), "a");
+        q.push(ms(500.0), "slack");
+        // Tighter than everything queued: evicts the slackest entry.
+        match q.push(ms(50.0), "urgent") {
+            Admission::AcceptedShedding {
+                evicted,
+                evicted_deadline,
+            } => {
+                assert_eq!(evicted, "slack");
+                assert_eq!(evicted_deadline, ms(500.0));
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        // Slacker than everything queued: the incoming one is shed.
+        match q.push(ms(900.0), "late") {
+            Admission::Rejected { item, reason } => {
+                assert_eq!(item, "late");
+                assert_eq!(reason, Rejection::QueueFull { capacity: 2 });
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // EDF order among survivors holds.
+        assert_eq!(q.pop().unwrap().1, "urgent");
+        assert_eq!(q.pop().unwrap().1, "a");
+    }
+
+    #[test]
+    fn rejection_messages_render() {
+        let r = Rejection::BelowFloor {
+            requested: ms(5.0),
+            floor: ms(31.0),
+        };
+        assert!(r.to_string().contains("feasibility floor"));
+        assert!(Rejection::QueueFull { capacity: 7 }.to_string().contains("7"));
+        assert!(Rejection::ShuttingDown.to_string().contains("shutting down"));
+    }
+}

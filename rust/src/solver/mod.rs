@@ -52,6 +52,15 @@ impl Instance {
             .sum()
     }
 
+    /// Slowest possible total time — beyond this, extra deadline slack
+    /// cannot change the optimum (used to bound schedule-atlas sweeps).
+    pub fn max_time(&self) -> f64 {
+        self.groups
+            .iter()
+            .map(|g| g.iter().map(|i| i.time).fold(0.0, f64::max))
+            .sum()
+    }
+
     /// Per-group Pareto filter (drop items that are no faster *and* no
     /// cheaper than another). Returns index maps from filtered to original
     /// positions so solutions can be translated back.
@@ -198,5 +207,6 @@ mod tests {
             deadline: 0.0,
         };
         assert!((inst.min_time() - 2.5).abs() < 1e-12);
+        assert!((inst.max_time() - 3.0).abs() < 1e-12);
     }
 }

@@ -175,11 +175,18 @@ impl Args {
 }
 
 /// CLI parse error.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("{msg}")]
+#[derive(Debug, Clone)]
 pub struct CliError {
     pub msg: String,
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Outcome of parsing the full command line.
 #[derive(Debug)]

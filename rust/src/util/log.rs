@@ -1,0 +1,114 @@
+//! A minimal leveled stderr logger (stand-in for the `log` crate facade).
+//!
+//! The library logs rarely — runtime-unavailable warnings, worker lifecycle
+//! notes — so a static atomic level plus `eprintln!` covers everything the
+//! `log` crate was used for, without the external dependency.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered from quietest to chattiest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "OFF",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+/// Set the maximum emitted level.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize the level from `$MEDEA_LOG` (error|warn|info|debug|trace|off);
+/// defaults to `warn`.
+pub fn init_from_env() {
+    let level = match std::env::var("MEDEA_LOG").as_deref() {
+        Ok("off") => Level::Off,
+        Ok("error") => Level::Error,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
+    };
+    set_max_level(level);
+}
+
+/// Emit one record (used by the macros; prefer those at call sites).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.name(), args);
+    }
+}
+
+/// Log at WARN.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at INFO.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at DEBUG.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_emission() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_max_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        // Restore the default so other tests see the usual behavior.
+        set_max_level(Level::Warn);
+    }
+
+    #[test]
+    fn names_render() {
+        assert_eq!(Level::Warn.name(), "WARN");
+        assert_eq!(Level::Trace.name(), "TRACE");
+    }
+}

@@ -1,0 +1,151 @@
+//! A small bounded LRU cache.
+//!
+//! Used by the serving layers to bound per-worker schedule caches (the
+//! original coordinator kept an unbounded `BTreeMap` keyed by deadline, which
+//! grows without limit under diverse-deadline traffic). Recency is tracked in
+//! a `VecDeque` of keys; with the small capacities used here (≤ a few
+//! hundred) the O(len) touch on hit is cheaper than a linked-map would be.
+
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
+
+/// A bounded map evicting the least-recently-used entry on overflow.
+#[derive(Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    map: HashMap<K, V>,
+    /// Keys from least- to most-recently used.
+    order: VecDeque<K>,
+    capacity: usize,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// `capacity` must be ≥ 1.
+    pub fn new(capacity: usize) -> LruCache<K, V> {
+        assert!(capacity >= 1, "LruCache capacity must be >= 1");
+        LruCache {
+            map: HashMap::with_capacity(capacity),
+            order: VecDeque::with_capacity(capacity),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    fn touch(&mut self, key: &K) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos).unwrap();
+            self.order.push_back(k);
+        }
+    }
+
+    /// Fetch and mark as most-recently used.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        if self.map.contains_key(key) {
+            self.touch(key);
+            self.map.get(key)
+        } else {
+            None
+        }
+    }
+
+    /// Insert (or replace), evicting the least-recently-used entry when the
+    /// cache is full. Returns the evicted `(key, value)`, if any.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if self.map.contains_key(&key) {
+            self.touch(&key);
+            self.map.insert(key, value);
+            return None;
+        }
+        let evicted = if self.map.len() >= self.capacity {
+            self.order.pop_front().map(|old| {
+                let v = self.map.remove(&old).expect("order/map out of sync");
+                (old, v)
+            })
+        } else {
+            None
+        };
+        self.order.push_back(key.clone());
+        self.map.insert(key, value);
+        evicted
+    }
+
+    /// Fetch, or insert the value produced by `make` (marking it MRU).
+    pub fn get_or_insert_with(&mut self, key: K, make: impl FnOnce() -> V) -> &V {
+        if !self.map.contains_key(&key) {
+            let v = make();
+            self.insert(key.clone(), v);
+        } else {
+            self.touch(&key);
+        }
+        self.map.get(&key).expect("just inserted")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<u64, &str> = LruCache::new(2);
+        assert!(c.insert(1, "a").is_none());
+        assert!(c.insert(2, "b").is_none());
+        // Touch 1 so 2 becomes LRU.
+        assert_eq!(c.get(&1), Some(&"a"));
+        let evicted = c.insert(3, "c").unwrap();
+        assert_eq!(evicted, (2, "b"));
+        assert!(c.contains(&1) && c.contains(&3) && !c.contains(&2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn replace_does_not_evict() {
+        let mut c: LruCache<u64, u64> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert!(c.insert(1, 11).is_none());
+        assert_eq!(c.get(&1), Some(&11));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn get_or_insert_with_runs_once() {
+        let mut c: LruCache<u64, u64> = LruCache::new(4);
+        let mut calls = 0;
+        for _ in 0..3 {
+            c.get_or_insert_with(7, || {
+                calls += 1;
+                42
+            });
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(c.get(&7), Some(&42));
+    }
+
+    #[test]
+    fn stays_bounded_under_churn() {
+        let mut c: LruCache<u64, u64> = LruCache::new(8);
+        for i in 0..1000 {
+            c.insert(i, i);
+        }
+        assert_eq!(c.len(), 8);
+        // The eight most recent keys survive.
+        for i in 992..1000 {
+            assert!(c.contains(&i), "{i}");
+        }
+    }
+}

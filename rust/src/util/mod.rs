@@ -11,10 +11,16 @@
 //! * [`stats`] — running statistics and percentile summaries.
 //! * [`table`] — aligned-text / markdown / CSV table rendering.
 //! * [`bench`] — a mini-criterion: warmup, timed iterations, mean ± σ.
+//! * [`error`] — string-backed dynamic error + context chaining (anyhow-ish).
+//! * [`log`] — leveled stderr logging behind `$MEDEA_LOG`.
+//! * [`lru`] — a bounded least-recently-used cache.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod log;
+pub mod lru;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -54,6 +54,27 @@ impl Running {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Fold another accumulator into this one (Chan et al.'s parallel
+    /// mean/variance combination) — used to merge per-worker metrics.
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Percentile over a sample (linear interpolation, like numpy's default).
@@ -114,6 +135,37 @@ mod tests {
         assert!((r.stddev() - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
         assert_eq!(r.min(), 2.0);
         assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn merge_matches_single_pass() {
+        let data = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut whole = Running::new();
+        for x in data {
+            whole.push(x);
+        }
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for x in &data[..3] {
+            a.push(*x);
+        }
+        for x in &data[3..] {
+            b.push(*x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.stddev() - whole.stddev()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // Merging an empty accumulator is a no-op in both directions.
+        let empty = Running::new();
+        let before = a.clone();
+        a.merge(&empty);
+        assert!((a.mean() - before.mean()).abs() < 1e-15);
+        let mut fresh = Running::new();
+        fresh.merge(&before);
+        assert_eq!(fresh.count(), before.count());
     }
 
     #[test]

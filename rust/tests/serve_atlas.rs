@@ -1,0 +1,142 @@
+//! Serving-subsystem integration tests: atlas correctness against the
+//! event-level simulator, cross-solver agreement on knot energies, and the
+//! pool's typed shedding behavior.
+
+use medea::exp::ExpContext;
+use medea::manager::medea::SolverKind;
+use medea::serve::{AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServePool};
+use medea::sim::replay::simulate;
+use medea::util::rng::Rng;
+use medea::util::units::Time;
+
+fn default_atlas(ctx: &ExpContext) -> ScheduleAtlas {
+    ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &AtlasConfig::default()).unwrap()
+}
+
+#[test]
+fn atlas_meets_100_random_deadlines_in_simulation() {
+    // The acceptance property: for any requested deadline at or above the
+    // floor, the atlas-resolved schedule's *simulated* makespan (which does
+    // not grant the estimator's optimistic LM-residency chaining) meets it.
+    let ctx = ExpContext::paper();
+    let atlas = default_atlas(&ctx);
+    let lo = atlas.floor().raw();
+    let hi = lo * 30.0; // deliberately past the sweep bound: laxer deadlines
+                        // fall back to the energy-minimal knot
+    let mut rng = Rng::new(0xA71A5);
+    for case in 0..100 {
+        let deadline = Time(rng.range_f64(lo, hi));
+        let schedule = atlas.resolve(deadline).unwrap();
+        assert!(
+            (schedule.deadline.raw() - deadline.raw()).abs() < 1e-15,
+            "case {case}: resolve must stamp the requested deadline"
+        );
+        let report = simulate(&ctx.workload, &ctx.platform, &ctx.model, &schedule);
+        assert!(
+            report.deadline_met,
+            "case {case}: deadline {:.2} ms missed (sim makespan {:.2} ms)",
+            deadline.as_ms(),
+            report.active_time.as_ms()
+        );
+    }
+}
+
+#[test]
+fn atlas_energy_is_monotone_in_deadline() {
+    // Snapping down to knots must preserve the design-time Pareto property:
+    // more slack never costs more active energy.
+    let ctx = ExpContext::paper();
+    let atlas = default_atlas(&ctx);
+    let mut last = f64::INFINITY;
+    let lo = atlas.floor().as_ms();
+    for i in 0..40 {
+        let d = Time::from_ms(lo * (1.0 + 0.6 * i as f64));
+        let e = atlas.resolve(d).unwrap().active_energy().as_uj();
+        assert!(e <= last * 1.001, "deadline {:.1} ms: {e} > {last}", d.as_ms());
+        last = e;
+    }
+}
+
+#[test]
+fn dp_and_bb_agree_on_knot_energies() {
+    // The atlas is built with the DP solver; the independent exact
+    // branch-and-bound must certify (within DP quantization tolerance) the
+    // same optimal energy at every sampled knot deadline.
+    let ctx = ExpContext::paper();
+    let atlas = default_atlas(&ctx);
+    let step = (atlas.len() / 8).max(1);
+    for knot in atlas.knots().iter().step_by(step) {
+        let dp_energy = knot.schedule.active_energy().as_uj();
+        // Re-derive the exact optimization problem the atlas solved (the
+        // knot records its effective solve deadline).
+        let bb = ctx
+            .medea()
+            .with_solver(SolverKind::Bb)
+            .schedule(&ctx.workload, knot.solve_deadline)
+            .unwrap();
+        let bb_energy = bb.active_energy().as_uj();
+        let rel = (dp_energy - bb_energy).abs() / dp_energy.max(bb_energy);
+        assert!(
+            rel < 5e-3,
+            "knot {:.2} ms: dp {dp_energy:.2} uJ vs bb {bb_energy:.2} uJ (rel {rel:.4})",
+            knot.deadline.as_ms()
+        );
+    }
+}
+
+#[test]
+fn atlas_round_trips_through_disk() {
+    let ctx = ExpContext::paper();
+    let atlas = default_atlas(&ctx);
+    let dir = std::env::temp_dir().join("medea_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("atlas.json");
+    atlas.save(&path).unwrap();
+    let loaded = ScheduleAtlas::load(&path).unwrap();
+    assert_eq!(loaded.len(), atlas.len());
+    assert_eq!(loaded.workload, atlas.workload);
+    assert!((loaded.floor().raw() - atlas.floor().raw()).abs() < 1e-12);
+    // A loaded atlas drives a pool end-to-end.
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 2,
+            artifact_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+            ..PoolConfig::default()
+        },
+        loaded,
+    )
+    .unwrap();
+    let mut gen = medea::eeg::synth::EegGenerator::new(Default::default(), 11);
+    let out = pool.infer(gen.next_window(), Time::from_ms(250.0)).unwrap();
+    assert!(out.sim.deadline_met);
+    assert_eq!(out.scheduler, "medea");
+    pool.shutdown();
+}
+
+#[test]
+fn infeasible_deadlines_shed_with_typed_rejection_not_solver_error() {
+    // Acceptance criterion: the EDF queue sheds infeasible deadlines with a
+    // typed rejection rather than an `Err` bubbling out of the solver.
+    let ctx = ExpContext::paper();
+    let atlas = default_atlas(&ctx);
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 1,
+            artifact_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+            ..PoolConfig::default()
+        },
+        atlas,
+    )
+    .unwrap();
+    let floor = pool.floor();
+    let mut gen = medea::eeg::synth::EegGenerator::new(Default::default(), 12);
+    match pool.submit(gen.next_window(), floor * 0.25) {
+        Err(Rejection::BelowFloor { requested, floor: f }) => {
+            assert!(requested.raw() < f.raw());
+        }
+        other => panic!("expected typed BelowFloor rejection, got {other:?}"),
+    }
+    let metrics = pool.shutdown();
+    assert_eq!(metrics.shed_below_floor, 1);
+    assert_eq!(metrics.aggregate.requests, 0);
+}

@@ -1,0 +1,137 @@
+//! Fleet serving: build a multi-platform atlas library, serve mixed
+//! deadline- and energy-budget traffic for two platforms and two workloads
+//! through one pool, then hot-swap a rebuilt atlas under live traffic.
+//! Runs without AOT artifacts — responses are schedule-only.
+//!
+//! ```sh
+//! cargo run --release --example fleet_serving
+//! ```
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::fleet::{
+    Demand, EnergyAtlasConfig, FleetConfig, FleetEntry, FleetPool, FleetPoolConfig, FleetRegistry,
+};
+use medea::serve::AtlasConfig;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn build_cfg() -> FleetConfig {
+    // Coarse sweeps keep the example snappy; `medea fleet build` uses the
+    // production defaults.
+    FleetConfig {
+        atlas: AtlasConfig {
+            relax_factor: 8.0,
+            growth: 1.5,
+            refine_rel_energy: 0.05,
+            max_knots: 32,
+            ..AtlasConfig::default()
+        },
+        energy: EnergyAtlasConfig {
+            growth: 1.5,
+            max_knots: 10,
+            bisect_iters: 12,
+            ..EnergyAtlasConfig::default()
+        },
+    }
+}
+
+fn main() {
+    // 1. Design time: one library entry per (platform preset, workload).
+    let registry = Arc::new(FleetRegistry::new());
+    let t0 = Instant::now();
+    for platform in ["heeptimize", "heeptimize-hp"] {
+        for workload in ["tsd-core", "tsd-small"] {
+            let entry = FleetEntry::build(platform, workload, &build_cfg()).expect("entry build");
+            println!(
+                "entry {platform}/{workload}: key {}, {} deadline knots (floor {:.1} ms), \
+                 {} energy knots (floor {:.1} uJ)",
+                entry.key,
+                entry.atlas.len(),
+                entry.atlas.floor().as_ms(),
+                entry.energy.len(),
+                entry.energy.floor().as_uj(),
+            );
+            registry.publish(entry);
+        }
+    }
+    println!(
+        "library: {} entries in {:.0} ms\n",
+        registry.len(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 2. Serve time: one pool, requests tagged with (platform, workload)
+    // and carrying either a deadline or an energy cap.
+    let pool = FleetPool::start(
+        registry.clone(),
+        FleetPoolConfig {
+            workers: 4,
+            ..FleetPoolConfig::default()
+        },
+    )
+    .expect("start pool");
+
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let mut tickets = Vec::new();
+    for i in 0..24 {
+        let platform = if i % 2 == 0 { "heeptimize" } else { "heeptimize-hp" };
+        let workload = if i % 4 < 2 { "tsd-core" } else { "tsd-small" };
+        let entry = registry.resolve_named(platform, workload).unwrap().entry;
+        let demand = if i % 3 == 0 {
+            Demand::EnergyBudget(entry.energy.floor() * 1.8)
+        } else {
+            Demand::Deadline(entry.atlas.floor() * 3.0)
+        };
+        match pool.submit(platform, workload, gen.next_window(), demand) {
+            Ok(t) => tickets.push(t),
+            Err(rejection) => println!("request {i:>2}: {rejection}"),
+        }
+    }
+
+    // 3. Hot swap under traffic: rebuild one entry with a finer sweep and
+    // publish it — queued requests finish on the old atlas, new requests
+    // resolve the new one. Nothing drains, nothing is rejected.
+    let mut finer = build_cfg();
+    finer.atlas.growth = 1.2;
+    let rebuilt = FleetEntry::build("heeptimize", "tsd-core", &finer).expect("rebuild");
+    let knots = rebuilt.atlas.len();
+    let epoch = registry.publish(rebuilt);
+    println!("\nhot swap: heeptimize/tsd-core now {knots} knots at epoch {epoch}\n");
+    let entry = registry.resolve_named("heeptimize", "tsd-core").unwrap().entry;
+    for _ in 0..8 {
+        tickets.push(
+            pool.submit(
+                "heeptimize",
+                "tsd-core",
+                gen.next_window(),
+                Demand::Deadline(entry.atlas.floor() * 3.0),
+            )
+            .expect("post-swap submit"),
+        );
+    }
+
+    for t in tickets {
+        let out = t.wait().expect("serve");
+        if out.window_index < 6 || out.window_index >= 24 {
+            let demand = match out.demand {
+                Demand::Deadline(d) => format!("deadline {:>6.1} ms", d.as_ms()),
+                Demand::EnergyBudget(b) => format!("cap {:>8.1} uJ", b.as_uj()),
+            };
+            println!(
+                "request {:>2}: {:>13}/{:<9} epoch {} {} -> sim {:>6.2} ms / {:>7.1} uJ (met={})",
+                out.window_index,
+                out.platform,
+                out.workload,
+                out.epoch,
+                demand,
+                out.sim.active_time.as_ms(),
+                out.sim.total_energy().as_uj(),
+                out.sim.deadline_met,
+            );
+        }
+    }
+
+    // 4. Cross-worker metrics.
+    let metrics = pool.shutdown();
+    println!("\n{}", metrics.summary());
+}

@@ -1,0 +1,155 @@
+//! Bench: fleet routing overhead and hot-swap latency.
+//!
+//! The fleet layer adds two `O(log n)` map walks (name alias → key → entry)
+//! in front of the atlas binary search; this bench measures that full
+//! request-path resolution against the raw single-atlas lookup it wraps,
+//! plus the energy-budget path and the cost of an atomic registry publish
+//! (the hot-swap primitive). Results are printed and written to
+//! `BENCH_fleet.json`.
+//!
+//! `cargo bench --bench fleet_lookup` (set MEDEA_BENCH_FAST=1 to trim).
+
+use medea::fleet::{Demand, EnergyAtlasConfig, FleetConfig, FleetEntry, FleetRegistry};
+use medea::json_obj;
+use medea::serve::AtlasConfig;
+use medea::util::bench::Bencher;
+use std::cell::Cell;
+use std::time::Instant;
+
+const PLATFORMS: [&str; 2] = ["heeptimize", "heeptimize-hp"];
+const WORKLOADS: [&str; 2] = ["tsd-core", "tsd-small"];
+
+fn bench_cfg() -> FleetConfig {
+    FleetConfig {
+        atlas: AtlasConfig {
+            relax_factor: 8.0,
+            growth: 1.5,
+            refine_rel_energy: 0.05,
+            max_knots: 32,
+            ..AtlasConfig::default()
+        },
+        energy: EnergyAtlasConfig {
+            growth: 1.5,
+            max_knots: 12,
+            bisect_iters: 12,
+            ..EnergyAtlasConfig::default()
+        },
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    let build_start = Instant::now();
+    let registry = FleetRegistry::new();
+    let mut combos: Vec<(String, String)> = Vec::new();
+    for p in PLATFORMS {
+        for w in WORKLOADS {
+            let entry = FleetEntry::build(p, w, &bench_cfg()).unwrap();
+            println!(
+                "entry {p}/{w}: {} deadline + {} energy knots (floor {:.1} ms / {:.1} uJ)",
+                entry.atlas.len(),
+                entry.energy.len(),
+                entry.atlas.floor().as_ms(),
+                entry.energy.floor().as_uj(),
+            );
+            registry.publish(entry);
+            combos.push((p.to_string(), w.to_string()));
+        }
+    }
+    let build_ms = build_start.elapsed().as_secs_f64() * 1e3;
+    println!("library: {} entries built in {build_ms:.0} ms\n", registry.len());
+
+    // Request-shaped probes: rotate across every entry and a spread of
+    // demands so the measurement covers the whole routing surface.
+    let probes: Vec<(String, String, Demand)> = combos
+        .iter()
+        .flat_map(|(p, w)| {
+            let entry = registry.resolve_named(p, w).unwrap().entry;
+            let d_floor = entry.atlas.floor();
+            let e_floor = entry.energy.floor();
+            (0..8).map(move |i| {
+                let demand = if i % 2 == 0 {
+                    Demand::Deadline(d_floor * (1.5 + i as f64))
+                } else {
+                    Demand::EnergyBudget(e_floor * (1.2 + i as f64 * 0.7))
+                };
+                (p.clone(), w.clone(), demand)
+            })
+        })
+        .collect();
+
+    // Baseline: the raw single-atlas binary search the fleet path wraps.
+    let single = registry
+        .resolve_named(&combos[0].0, &combos[0].1)
+        .unwrap()
+        .entry;
+    let single_floor = single.atlas.floor();
+    let idx = Cell::new(0usize);
+    let raw = b
+        .bench("fleet/raw single-atlas lookup", || {
+            let i = idx.get();
+            idx.set(i + 1);
+            let d = single_floor * (1.5 + (i % 8) as f64);
+            single.atlas.lookup(d).unwrap().schedule.decisions.len()
+        })
+        .mean;
+
+    let idx = Cell::new(0usize);
+    let routed = b
+        .bench("fleet/registry route + lookup", || {
+            let i = idx.get();
+            idx.set(i + 1);
+            let (p, w, demand) = &probes[i % probes.len()];
+            let entry = registry.resolve_named(p, w).unwrap().entry;
+            match demand {
+                Demand::Deadline(d) => entry.atlas.lookup(*d).unwrap().schedule.decisions.len(),
+                Demand::EnergyBudget(e) => {
+                    entry.energy.lookup(*e).unwrap().schedule.decisions.len()
+                }
+            }
+        })
+        .mean;
+
+    // Hot-swap latency: republish a clone of an existing entry (an atomic
+    // Arc swap plus an epoch bump — the cost a live rebuild pays at the
+    // moment of cutover, excluding the rebuild itself).
+    let template = registry
+        .resolve_named(&combos[0].0, &combos[0].1)
+        .unwrap()
+        .entry;
+    let publish = b
+        .bench("fleet/hot-swap publish", || {
+            registry.publish((*template).clone())
+        })
+        .mean;
+
+    let overhead = routed.as_secs_f64() / raw.as_secs_f64().max(1e-12);
+    println!(
+        "\nrouting: raw {:.0} ns, routed {:.0} ns ({overhead:.1}x), publish {:.2} us",
+        raw.as_secs_f64() * 1e9,
+        routed.as_secs_f64() * 1e9,
+        publish.as_secs_f64() * 1e6,
+    );
+    // The routed path must stay interconnect-grade cheap: far below a
+    // millisecond even on a loaded CI box.
+    assert!(
+        routed.as_secs_f64() < 1e-3,
+        "fleet routing took {:.3} ms",
+        routed.as_secs_f64() * 1e3
+    );
+
+    let out = json_obj! {
+        "entries" => registry.len(),
+        "library_build_ms" => build_ms,
+        "raw_lookup_ns" => raw.as_secs_f64() * 1e9,
+        "routed_lookup_ns" => routed.as_secs_f64() * 1e9,
+        "routing_overhead_x" => overhead,
+        "hot_swap_publish_us" => publish.as_secs_f64() * 1e6,
+        "final_epoch" => registry.epoch(),
+    };
+    std::fs::write("BENCH_fleet.json", out.to_pretty()).expect("write BENCH_fleet.json");
+    println!("\nwrote BENCH_fleet.json");
+
+    b.finish("fleet_lookup");
+}

@@ -1,0 +1,67 @@
+//! Named presets the fleet layer can (re)build entries from.
+//!
+//! Library entries persist their atlases but not the platform's cycle model
+//! (which is code, not data), so every entry records the *preset names* it
+//! was built from; loading resolves those names here and verifies the
+//! content keys still match (see [`crate::fleet::entry`]). A preset rename
+//! is harmless — keys are content hashes — but a preset whose constants
+//! drifted since the entry was built fails the key check and is rebuilt.
+
+use crate::ir::tsd::{tsd_core, tsd_full, tsd_small, TsdParams};
+use crate::ir::Workload;
+use crate::platform::heeptimize::heeptimize;
+use crate::platform::presets::heeptimize_hp;
+use crate::platform::Platform;
+use crate::timing::cycle_model::CycleModel;
+
+/// Platform presets servable by the fleet layer.
+pub const PLATFORM_PRESETS: [&str; 2] = ["heeptimize", "heeptimize-hp"];
+
+/// Workload presets servable by the fleet layer.
+pub const WORKLOAD_PRESETS: [&str; 3] = ["tsd-core", "tsd-small", "tsd-full"];
+
+/// Resolve a platform preset name to its description and cycle model.
+pub fn platform_preset(name: &str) -> Option<(Platform, CycleModel)> {
+    match name {
+        "heeptimize" => Some((heeptimize(), CycleModel::heeptimize())),
+        // Same microarchitectural families, so the calibrated per-class
+        // cycle model carries over; the platform constants differ.
+        "heeptimize-hp" => Some((heeptimize_hp(), CycleModel::heeptimize())),
+        _ => None,
+    }
+}
+
+/// Resolve a workload preset name to its kernel workload.
+pub fn workload_preset(name: &str) -> Option<Workload> {
+    match name {
+        "tsd-core" => Some(tsd_core(&TsdParams::default())),
+        "tsd-small" => Some(tsd_small()),
+        "tsd-full" => Some(tsd_full(&TsdParams::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_listed_presets_resolve() {
+        for name in PLATFORM_PRESETS {
+            let (p, _) = platform_preset(name).expect(name);
+            p.validate().unwrap();
+            assert_eq!(p.name, name);
+        }
+        for name in WORKLOAD_PRESETS {
+            let w = workload_preset(name).expect(name);
+            assert_eq!(w.name, name);
+            assert!(!w.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_presets_are_none() {
+        assert!(platform_preset("no-such-soc").is_none());
+        assert!(workload_preset("no-such-net").is_none());
+    }
+}

@@ -1,0 +1,395 @@
+//! The energy-budget atlas: the dual objective, precomputed.
+//!
+//! [`crate::serve::atlas::ScheduleAtlas`] answers "cheapest schedule meeting
+//! deadline `T_d`"; this module answers the dual — "fastest schedule within
+//! energy cap `E_b`" — with the same design-time discipline. A geometric
+//! sweep over energy budgets (bounded by the Pareto front the deadline atlas
+//! already traced) solves [`crate::manager::medea::Medea::schedule_energy_budget`]
+//! once per knot and validates every knot on the event-level simulator, so a
+//! request carrying an energy cap resolves by `O(log n)` binary search to a
+//! schedule whose *simulated* active energy fits the cap.
+
+use crate::ir::Workload;
+use crate::manager::medea::{Medea, ScheduleError};
+use crate::manager::schedule::Schedule;
+use crate::serve::atlas::ScheduleAtlas;
+use crate::sim::replay::simulate;
+use crate::util::json::{Json, JsonObj};
+use crate::util::units::{Energy, Time};
+use std::fmt;
+
+/// Sweep parameters for [`EnergyAtlas::build`].
+#[derive(Debug, Clone)]
+pub struct EnergyAtlasConfig {
+    /// Geometric budget spacing between adjacent knots (> 1). Bounds the
+    /// relative energy headroom a lookup can leave unused.
+    pub growth: f64,
+    /// Hard cap on the number of knots; truncation is logged, never silent.
+    pub max_knots: usize,
+    /// Fraction of each knot budget handed to the solver, so the event-level
+    /// replay (which does not always grant the estimator's optimistic
+    /// LM-residency chaining) still lands inside the budget.
+    pub margin: f64,
+    /// Bisection iterations per `schedule_energy_budget` solve.
+    pub bisect_iters: usize,
+}
+
+impl Default for EnergyAtlasConfig {
+    fn default() -> Self {
+        EnergyAtlasConfig {
+            growth: 1.25,
+            max_knots: 48,
+            margin: 0.97,
+            bisect_iters: 18,
+        }
+    }
+}
+
+/// One precomputed point: the fastest schedule whose simulated active energy
+/// fits `budget`.
+#[derive(Debug, Clone)]
+pub struct EnergyKnot {
+    pub budget: Energy,
+    /// The budget actually handed to the solver (margin folded in, then
+    /// tightened further if the simulator overshot).
+    pub solve_budget: Energy,
+    /// Simulated active time of the schedule, recorded at build time (the
+    /// quantity a budget-capped caller is trading energy against).
+    pub sim_time: Time,
+    /// Simulated active energy (≤ `budget` by construction).
+    pub sim_energy: Energy,
+    pub schedule: Schedule,
+}
+
+/// Typed lookup failure: the cap is below the tightest sim-validated budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BelowEnergyFloor {
+    pub requested: Energy,
+    pub floor: Energy,
+}
+
+impl fmt::Display for BelowEnergyFloor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "energy budget {:.1} uJ below the atlas energy floor {:.1} uJ",
+            self.requested.as_uj(),
+            self.floor.as_uj()
+        )
+    }
+}
+
+impl std::error::Error for BelowEnergyFloor {}
+
+/// A budget-indexed library of precomputed dual-objective schedules, sorted
+/// by ascending budget with simulated time non-increasing along the knots.
+#[derive(Debug, Clone)]
+pub struct EnergyAtlas {
+    /// Workload the schedules were generated for (checked on load).
+    pub workload: String,
+    knots: Vec<EnergyKnot>,
+}
+
+impl EnergyAtlas {
+    /// Sweep energy budgets across the Pareto range traced by `atlas` and
+    /// precompute one time-optimal schedule per knot.
+    pub fn build(
+        medea: &Medea<'_>,
+        workload: &Workload,
+        atlas: &ScheduleAtlas,
+        cfg: &EnergyAtlasConfig,
+    ) -> Result<EnergyAtlas, ScheduleError> {
+        assert!(cfg.growth > 1.0, "energy atlas growth must be > 1");
+        assert!(cfg.max_knots >= 2, "energy atlas needs at least 2 knots");
+        assert!(cfg.margin > 0.0 && cfg.margin <= 1.0, "energy atlas margin in (0, 1]");
+
+        // The deadline atlas already traced the energy Pareto front: its
+        // laxest knot is the unconstrained energy minimum, its tightest the
+        // most energy any useful budget can demand.
+        let knots = atlas.knots();
+        let e_min = knots[knots.len() - 1].schedule.active_energy();
+        let e_max = knots[0].schedule.active_energy();
+
+        // Geometric grid. The 2 % fudge above the estimator minimum mirrors
+        // the deadline atlas's floor slack: nothing at the exact estimator
+        // optimum survives simulator validation.
+        let lo = Energy(e_min.raw() * 1.02 / cfg.margin);
+        let hi = Energy(e_max.raw().max(lo.raw() * cfg.growth));
+        let mut grid = Vec::new();
+        let mut b = lo;
+        while b.raw() < hi.raw() {
+            grid.push(b);
+            b = b * cfg.growth;
+        }
+        grid.push(hi);
+        if grid.len() > cfg.max_knots {
+            crate::log_warn!(
+                "energy atlas knot cap {} reached: truncating sweep from {} grid points \
+                 (budgets above {:.1} uJ collapse onto the final knot)",
+                cfg.max_knots,
+                grid.len(),
+                grid[cfg.max_knots - 2].as_uj()
+            );
+            grid.truncate(cfg.max_knots - 1);
+            grid.push(hi);
+        }
+
+        let mut kept: Vec<EnergyKnot> = Vec::with_capacity(grid.len());
+        for budget in grid {
+            let Some(knot) = Self::solve_knot(medea, workload, budget, cfg)? else {
+                continue;
+            };
+            // Dedup the flat tail: keep a knot only when the extra budget
+            // actually buys simulated time.
+            let improves = kept
+                .last()
+                .map(|prev| knot.sim_time.raw() < prev.sim_time.raw() * (1.0 - 1e-9))
+                .unwrap_or(true);
+            if improves {
+                kept.push(knot);
+            }
+        }
+        if kept.is_empty() {
+            return Err(ScheduleError::EnergyBudgetInfeasible {
+                budget_uj: hi.as_uj(),
+                min_uj: e_min.as_uj(),
+            });
+        }
+        Ok(EnergyAtlas {
+            workload: workload.name.clone(),
+            knots: kept,
+        })
+    }
+
+    /// Solve the dual objective for one budget and validate on the
+    /// event-level simulator, retrying with a proportionally tighter solve
+    /// budget when the replayed energy overshoots. `Ok(None)` when no
+    /// sim-valid schedule exists within this budget.
+    fn solve_knot(
+        medea: &Medea<'_>,
+        workload: &Workload,
+        budget: Energy,
+        cfg: &EnergyAtlasConfig,
+    ) -> Result<Option<EnergyKnot>, ScheduleError> {
+        let mut target = budget * cfg.margin;
+        for _ in 0..4 {
+            let schedule = match medea.schedule_energy_budget(workload, target, cfg.bisect_iters) {
+                Ok(s) => s,
+                Err(ScheduleError::EnergyBudgetInfeasible { .. }) => return Ok(None),
+                Err(e) => return Err(e),
+            };
+            let sim = simulate(workload, medea.platform, medea.model, &schedule);
+            if sim.active_energy.raw() <= budget.raw() {
+                return Ok(Some(EnergyKnot {
+                    budget,
+                    solve_budget: target,
+                    sim_time: sim.active_time,
+                    sim_energy: sim.active_energy,
+                    schedule,
+                }));
+            }
+            target = Energy(target.raw() * budget.raw() / sim.active_energy.raw() * 0.998);
+        }
+        Ok(None)
+    }
+
+    /// The tightest budget this atlas can serve.
+    pub fn floor(&self) -> Energy {
+        self.knots[0].budget
+    }
+
+    pub fn len(&self) -> usize {
+        self.knots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.knots.is_empty()
+    }
+
+    pub fn knots(&self) -> &[EnergyKnot] {
+        &self.knots
+    }
+
+    /// `O(log n)` lookup: the highest knot whose budget is ≤ `budget` —
+    /// i.e. the fastest precomputed schedule that fits the cap (knot time is
+    /// non-increasing in knot budget by construction).
+    pub fn lookup(&self, budget: Energy) -> Result<&EnergyKnot, BelowEnergyFloor> {
+        let idx = self
+            .knots
+            .partition_point(|k| k.budget.raw() <= budget.raw());
+        if idx == 0 {
+            return Err(BelowEnergyFloor {
+                requested: budget,
+                floor: self.floor(),
+            });
+        }
+        Ok(&self.knots[idx - 1])
+    }
+
+    /// Like [`EnergyAtlas::lookup`], but clones the schedule (its deadline
+    /// stays the bisected deadline the dual solve converged to).
+    pub fn resolve(&self, budget: Energy) -> Result<Schedule, BelowEnergyFloor> {
+        Ok(self.lookup(budget)?.schedule.clone())
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("workload", self.workload.clone());
+        let knots: Vec<Json> = self
+            .knots
+            .iter()
+            .map(|k| {
+                let mut kj = JsonObj::new();
+                kj.insert("budget_uj", k.budget.as_uj());
+                kj.insert("solve_budget_uj", k.solve_budget.as_uj());
+                kj.insert("sim_time_ms", k.sim_time.as_ms());
+                kj.insert("sim_energy_uj", k.sim_energy.as_uj());
+                kj.insert("schedule", k.schedule.to_json());
+                Json::Obj(kj)
+            })
+            .collect();
+        o.insert("knots", Json::Arr(knots));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<EnergyAtlas, String> {
+        let workload = v.req("workload")?.as_str().ok_or("workload")?.to_string();
+        let mut knots = Vec::new();
+        for kv in v.req("knots")?.as_arr().ok_or("knots")? {
+            knots.push(EnergyKnot {
+                budget: Energy::from_uj(kv.req("budget_uj")?.as_f64().ok_or("budget_uj")?),
+                solve_budget: Energy::from_uj(
+                    kv.req("solve_budget_uj")?.as_f64().ok_or("solve_budget_uj")?,
+                ),
+                sim_time: Time::from_ms(kv.req("sim_time_ms")?.as_f64().ok_or("sim_time_ms")?),
+                sim_energy: Energy::from_uj(
+                    kv.req("sim_energy_uj")?.as_f64().ok_or("sim_energy_uj")?,
+                ),
+                schedule: Schedule::from_json(kv.req("schedule")?)?,
+            });
+        }
+        if knots.is_empty() {
+            return Err("energy atlas has no knots".to_string());
+        }
+        for w in knots.windows(2) {
+            if w[1].budget.raw() <= w[0].budget.raw() {
+                return Err("energy atlas knots not in ascending budget order".to_string());
+            }
+        }
+        Ok(EnergyAtlas { workload, knots })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::ExpContext;
+    use crate::ir::tsd::tsd_small;
+    use crate::serve::atlas::AtlasConfig;
+    use crate::util::json::parse;
+
+    fn small_atlas_cfg() -> AtlasConfig {
+        AtlasConfig {
+            relax_factor: 8.0,
+            growth: 1.5,
+            refine_rel_energy: 0.0,
+            max_knots: 16,
+            ..AtlasConfig::default()
+        }
+    }
+
+    fn small_energy_cfg() -> EnergyAtlasConfig {
+        EnergyAtlasConfig {
+            growth: 1.6,
+            max_knots: 8,
+            bisect_iters: 10,
+            ..EnergyAtlasConfig::default()
+        }
+    }
+
+    struct Built {
+        ctx: ExpContext,
+        atlas: EnergyAtlas,
+    }
+
+    fn built() -> Built {
+        let mut ctx = ExpContext::paper();
+        ctx.workload = tsd_small();
+        let medea = ctx.medea();
+        let deadline_atlas =
+            ScheduleAtlas::build(&medea, &ctx.workload, &small_atlas_cfg()).unwrap();
+        let atlas =
+            EnergyAtlas::build(&medea, &ctx.workload, &deadline_atlas, &small_energy_cfg())
+                .unwrap();
+        Built { ctx, atlas }
+    }
+
+    #[test]
+    fn knots_are_sorted_and_time_monotone() {
+        let b = built();
+        assert!(!b.atlas.is_empty());
+        assert_eq!(b.atlas.workload, "tsd-small");
+        for w in b.atlas.knots().windows(2) {
+            assert!(w[1].budget.raw() > w[0].budget.raw());
+            assert!(
+                w[1].sim_time.raw() < w[0].sim_time.raw(),
+                "extra budget must buy simulated time"
+            );
+        }
+    }
+
+    #[test]
+    fn every_knot_is_sim_validated() {
+        let b = built();
+        for k in b.atlas.knots() {
+            let sim = simulate(&b.ctx.workload, &b.ctx.platform, &b.ctx.model, &k.schedule);
+            assert!(
+                sim.active_energy.raw() <= k.budget.raw() * (1.0 + 1e-9),
+                "knot {:.1} uJ: sim energy {:.1} uJ over budget",
+                k.budget.as_uj(),
+                sim.active_energy.as_uj()
+            );
+            assert!((sim.active_energy.raw() - k.sim_energy.raw()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lookup_picks_fastest_fitting_knot() {
+        let b = built();
+        assert!(b.atlas.len() >= 2, "degenerate energy atlas: {} knots", b.atlas.len());
+        let k_lo = &b.atlas.knots()[0];
+        let k_hi = &b.atlas.knots()[1];
+        let mid = Energy(0.5 * (k_lo.budget.raw() + k_hi.budget.raw()));
+        let hit = b.atlas.lookup(mid).unwrap();
+        assert!((hit.budget.raw() - k_lo.budget.raw()).abs() < 1e-15);
+        // A huge cap resolves to the fastest (last) knot.
+        let last = b.atlas.knots().last().unwrap();
+        let hit = b.atlas.lookup(last.budget * 50.0).unwrap();
+        assert!((hit.budget.raw() - last.budget.raw()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn below_floor_is_typed() {
+        let b = built();
+        let bad = b.atlas.floor() * 0.5;
+        let err = b.atlas.lookup(bad).unwrap_err();
+        assert_eq!(err.floor.raw(), b.atlas.floor().raw());
+        assert!(err.to_string().contains("energy floor"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let b = built();
+        let text = b.atlas.to_json().to_pretty();
+        let back = EnergyAtlas::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), b.atlas.len());
+        assert_eq!(back.workload, b.atlas.workload);
+        let cap = b.atlas.floor() * 1.7;
+        let a = b.atlas.resolve(cap).unwrap();
+        let c = back.resolve(cap).unwrap();
+        assert_eq!(a.decisions.len(), c.decisions.len());
+        assert!((a.active_energy().raw() - c.active_energy().raw()).abs() < 1e-15);
+    }
+}

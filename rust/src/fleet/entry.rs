@@ -1,0 +1,196 @@
+//! One fleet library entry: everything needed to serve a (platform,
+//! workload) pair.
+//!
+//! An entry bundles the deadline atlas and the energy-budget atlas with the
+//! resolved platform description, cycle model, and workload — the read-only
+//! state a pool worker needs to replay any resolved schedule on the
+//! event-level simulator. Entries are built from *preset names*
+//! ([`crate::fleet::catalog`]) and keyed by *content*
+//! ([`crate::fleet::key`]): the persisted form stores both, and loading
+//! fails closed when a preset's constants have drifted since the entry was
+//! built (a stale atlas must be rebuilt, never served).
+
+use super::catalog;
+use super::energy::{EnergyAtlas, EnergyAtlasConfig};
+use super::key::FleetKey;
+use crate::ir::Workload;
+use crate::manager::medea::Medea;
+use crate::platform::Platform;
+use crate::profile::characterize;
+use crate::serve::atlas::{AtlasConfig, ScheduleAtlas};
+use crate::timing::cycle_model::CycleModel;
+use crate::util::json::{Json, JsonObj};
+
+/// Build parameters for a fleet entry (both atlases).
+#[derive(Debug, Clone, Default)]
+pub struct FleetConfig {
+    pub atlas: AtlasConfig,
+    pub energy: EnergyAtlasConfig,
+}
+
+/// A servable (platform, workload) pair with its precomputed atlases.
+#[derive(Debug, Clone)]
+pub struct FleetEntry {
+    pub key: FleetKey,
+    pub platform_preset: String,
+    pub workload_preset: String,
+    pub platform: Platform,
+    pub model: CycleModel,
+    pub workload: Workload,
+    pub atlas: ScheduleAtlas,
+    pub energy: EnergyAtlas,
+}
+
+impl FleetEntry {
+    /// Characterize the preset pair and sweep both atlases.
+    pub fn build(
+        platform_preset: &str,
+        workload_preset: &str,
+        cfg: &FleetConfig,
+    ) -> Result<FleetEntry, String> {
+        let (platform, model) = catalog::platform_preset(platform_preset)
+            .ok_or_else(|| format!("unknown platform preset `{platform_preset}`"))?;
+        let workload = catalog::workload_preset(workload_preset)
+            .ok_or_else(|| format!("unknown workload preset `{workload_preset}`"))?;
+        let profiles = characterize(&platform, &model);
+        let medea = Medea::new(&platform, &profiles, &model);
+        let atlas = ScheduleAtlas::build(&medea, &workload, &cfg.atlas)
+            .map_err(|e| format!("{platform_preset}/{workload_preset}: atlas build failed: {e}"))?;
+        let energy = EnergyAtlas::build(&medea, &workload, &atlas, &cfg.energy).map_err(|e| {
+            format!("{platform_preset}/{workload_preset}: energy atlas build failed: {e}")
+        })?;
+        let key = FleetKey::of(&platform, &workload);
+        Ok(FleetEntry {
+            key,
+            platform_preset: platform_preset.to_string(),
+            workload_preset: workload_preset.to_string(),
+            platform,
+            model,
+            workload,
+            atlas,
+            energy,
+        })
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("key", self.key.to_string());
+        o.insert("platform_preset", self.platform_preset.clone());
+        o.insert("workload_preset", self.workload_preset.clone());
+        o.insert("atlas", self.atlas.to_json());
+        o.insert("energy", self.energy.to_json());
+        Json::Obj(o)
+    }
+
+    /// Re-resolve the presets and verify the stored content key still
+    /// matches — the library's staleness check: if the platform constants or
+    /// the workload definition drifted since this entry was built, its
+    /// schedules no longer describe the hardware and the entry must be
+    /// rebuilt.
+    pub fn from_json(v: &Json) -> Result<FleetEntry, String> {
+        let platform_preset = v
+            .req("platform_preset")?
+            .as_str()
+            .ok_or("platform_preset")?
+            .to_string();
+        let workload_preset = v
+            .req("workload_preset")?
+            .as_str()
+            .ok_or("workload_preset")?
+            .to_string();
+        let stored_key = FleetKey::parse(v.req("key")?.as_str().ok_or("key")?)
+            .ok_or("key: not a fleet key")?;
+        let (platform, model) = catalog::platform_preset(&platform_preset)
+            .ok_or_else(|| format!("unknown platform preset `{platform_preset}`"))?;
+        let workload = catalog::workload_preset(&workload_preset)
+            .ok_or_else(|| format!("unknown workload preset `{workload_preset}`"))?;
+        let key = FleetKey::of(&platform, &workload);
+        if key != stored_key {
+            return Err(format!(
+                "stale entry for {platform_preset}/{workload_preset}: stored key {stored_key} \
+                 no longer matches current content key {key}; rebuild the entry"
+            ));
+        }
+        let atlas = ScheduleAtlas::from_json(v.req("atlas")?)?;
+        if atlas.workload != workload.name {
+            return Err(format!(
+                "entry atlas was built for workload `{}`, preset resolves to `{}`",
+                atlas.workload, workload.name
+            ));
+        }
+        let energy = EnergyAtlas::from_json(v.req("energy")?)?;
+        if energy.workload != workload.name {
+            return Err(format!(
+                "entry energy atlas was built for workload `{}`, preset resolves to `{}`",
+                energy.workload, workload.name
+            ));
+        }
+        Ok(FleetEntry {
+            key,
+            platform_preset,
+            workload_preset,
+            platform,
+            model,
+            workload,
+            atlas,
+            energy,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn fast_cfg() -> FleetConfig {
+        FleetConfig {
+            atlas: AtlasConfig {
+                relax_factor: 6.0,
+                growth: 1.7,
+                refine_rel_energy: 0.0,
+                max_knots: 12,
+                ..AtlasConfig::default()
+            },
+            energy: EnergyAtlasConfig {
+                growth: 1.7,
+                max_knots: 6,
+                bisect_iters: 10,
+                ..EnergyAtlasConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn build_and_round_trip() {
+        let entry = FleetEntry::build("heeptimize", "tsd-small", &fast_cfg()).unwrap();
+        assert_eq!(entry.platform.name, "heeptimize");
+        assert_eq!(entry.workload.name, "tsd-small");
+        assert!(!entry.atlas.is_empty() && !entry.energy.is_empty());
+
+        let text = entry.to_json().to_pretty();
+        let back = FleetEntry::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back.key, entry.key);
+        assert_eq!(back.atlas.len(), entry.atlas.len());
+        assert_eq!(back.energy.len(), entry.energy.len());
+    }
+
+    #[test]
+    fn drifted_key_is_rejected_as_stale() {
+        let entry = FleetEntry::build("heeptimize", "tsd-small", &fast_cfg()).unwrap();
+        let mut j = entry.to_json();
+        if let Json::Obj(ref mut o) = j {
+            o.insert("key", "0000000000000000-0000000000000000");
+        }
+        let err = FleetEntry::from_json(&j).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+    }
+
+    #[test]
+    fn unknown_presets_fail_to_build() {
+        assert!(FleetEntry::build("no-such-soc", "tsd-small", &fast_cfg()).is_err());
+        assert!(FleetEntry::build("heeptimize", "no-such-net", &fast_cfg()).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Canonical keying: content hashes for platforms and workloads.
+//!
+//! A fleet library is indexed by *what* is being served, not what it is
+//! called: two platform descriptions that differ only in display names (or
+//! two identical networks exported under different model names) must map to
+//! the same atlas. Keys are therefore FNV-1a hashes over a **canonical JSON
+//! projection** of each description — the structural fields that feed the
+//! characterization and the solver, with every free-form label stripped.
+//! The JSON codec emits deterministically (insertion-ordered keys, shortest
+//! round-trippable numbers), so the projection doubles as a stable
+//! serialization fingerprint across processes and library files.
+
+use crate::ir::Workload;
+use crate::platform::loader::platform_to_json;
+use crate::platform::Platform;
+use crate::util::json::{Json, JsonObj};
+use std::fmt;
+
+/// 64-bit FNV-1a over a byte string.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn parse_hex16(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Copy a subset of fields from a JSON object, preserving canonical order.
+fn project(v: &Json, keys: &[&str]) -> Json {
+    let mut o = JsonObj::new();
+    for &key in keys {
+        if let Some(field) = v.get(key) {
+            o.insert(key, field.clone());
+        }
+    }
+    Json::Obj(o)
+}
+
+/// Content hash of a workload: kernel types, widths, shapes, and the coarse
+/// group partition — kernel and group *names* are display labels and do not
+/// participate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct WorkloadHash(pub u64);
+
+impl WorkloadHash {
+    pub fn of(workload: &Workload) -> WorkloadHash {
+        let full = workload.to_json();
+        let kernels: Vec<Json> = full
+            .get("kernels")
+            .and_then(|k| k.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|kv| project(kv, &["type", "dw", "shape"]))
+            .collect();
+        let groups: Vec<Json> = full
+            .get("groups")
+            .and_then(|g| g.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|gv| project(gv, &["start", "end"]))
+            .collect();
+        let mut o = JsonObj::new();
+        o.insert("kernels", Json::Arr(kernels));
+        o.insert("groups", Json::Arr(groups));
+        WorkloadHash(fnv1a64(Json::Obj(o).to_compact().as_bytes()))
+    }
+}
+
+impl fmt::Display for WorkloadHash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// Content fingerprint of a platform: PE classes and physical constants,
+/// V-F table, memories, constraints — platform and PE *names* do not
+/// participate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlatformFingerprint(pub u64);
+
+impl PlatformFingerprint {
+    pub fn of(platform: &Platform) -> PlatformFingerprint {
+        let full = platform_to_json(platform);
+        let mut o = JsonObj::new();
+        for key in ["l2_bytes", "sleep_power_uw", "vf_switch_cycles", "active_base", "vf"] {
+            if let Some(field) = full.get(key) {
+                o.insert(key, field.clone());
+            }
+        }
+        let pes: Vec<Json> = full
+            .get("pes")
+            .and_then(|p| p.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|pv| project(pv, &["id", "class", "lm_bytes", "dma", "power"]))
+            .collect();
+        o.insert("pes", Json::Arr(pes));
+        if let Some(cons) = full.get("constraints") {
+            o.insert("constraints", cons.clone());
+        }
+        PlatformFingerprint(fnv1a64(Json::Obj(o).to_compact().as_bytes()))
+    }
+}
+
+impl fmt::Display for PlatformFingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// The library index key: one atlas per (platform, workload) content pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FleetKey {
+    pub platform: PlatformFingerprint,
+    pub workload: WorkloadHash,
+}
+
+impl FleetKey {
+    pub fn of(platform: &Platform, workload: &Workload) -> FleetKey {
+        FleetKey {
+            platform: PlatformFingerprint::of(platform),
+            workload: WorkloadHash::of(workload),
+        }
+    }
+
+    /// Parse the `Display` form (`<platform16hex>-<workload16hex>`), which
+    /// also names library entry files on disk.
+    pub fn parse(s: &str) -> Option<FleetKey> {
+        let (p, w) = s.split_once('-')?;
+        Some(FleetKey {
+            platform: PlatformFingerprint(parse_hex16(p)?),
+            workload: WorkloadHash(parse_hex16(w)?),
+        })
+    }
+}
+
+impl fmt::Display for FleetKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}-{}", self.platform, self.workload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::tsd::{tsd_core, tsd_small, TsdParams};
+    use crate::platform::heeptimize::heeptimize;
+    use crate::platform::presets::heeptimize_hp;
+
+    #[test]
+    fn renaming_does_not_change_keys() {
+        let mut p = heeptimize();
+        let fp_a = PlatformFingerprint::of(&p);
+        p.name = "rebadged-silicon".into();
+        p.pes[0].name = "host".into();
+        assert_eq!(PlatformFingerprint::of(&p), fp_a);
+
+        let mut w = tsd_core(&TsdParams::default());
+        let wh_a = WorkloadHash::of(&w);
+        w.name = "tsd-export-v2".into();
+        assert_eq!(WorkloadHash::of(&w), wh_a);
+    }
+
+    #[test]
+    fn distinct_content_gets_distinct_keys() {
+        assert_ne!(
+            PlatformFingerprint::of(&heeptimize()),
+            PlatformFingerprint::of(&heeptimize_hp())
+        );
+        assert_ne!(
+            WorkloadHash::of(&tsd_core(&TsdParams::default())),
+            WorkloadHash::of(&tsd_small())
+        );
+    }
+
+    #[test]
+    fn key_display_round_trips() {
+        let key = FleetKey::of(&heeptimize(), &tsd_small());
+        let text = key.to_string();
+        assert_eq!(text.len(), 33);
+        assert_eq!(FleetKey::parse(&text), Some(key));
+        assert_eq!(FleetKey::parse("nonsense"), None);
+        assert_eq!(FleetKey::parse("0123-4567"), None);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_across_calls() {
+        assert_eq!(
+            PlatformFingerprint::of(&heeptimize()),
+            PlatformFingerprint::of(&heeptimize())
+        );
+        assert_eq!(
+            WorkloadHash::of(&tsd_small()),
+            WorkloadHash::of(&tsd_small())
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! The fleet layer: a multi-platform atlas **library** with live hot-swap
+//! and energy-budget serving.
+//!
+//! MEDEA is a design-time manager, so every expensive multi-objective solve
+//! can be staged before traffic arrives — but one
+//! [`crate::serve::ScheduleAtlas`] covers exactly one (platform, workload)
+//! pair. A heterogeneous device fleet needs many: this module owns them.
+//!
+//! * [`key`] — canonical content keys: [`key::PlatformFingerprint`] and
+//!   [`key::WorkloadHash`] over name-stripped canonical JSON, so equivalent
+//!   platform/network descriptions dedupe to one atlas.
+//! * [`catalog`] — the named platform/workload presets entries are built
+//!   from (and re-resolved against at load time).
+//! * [`energy`] — the **energy-budget atlas**: the dual objective
+//!   ([`crate::manager::medea::Medea::schedule_energy_budget`]) swept over a
+//!   budget grid with simulator-validated knots, so a request may carry an
+//!   energy cap instead of a deadline.
+//! * [`entry`] — one library entry: both atlases plus the resolved platform,
+//!   cycle model, and workload, keyed by content and staleness-checked on
+//!   load.
+//! * [`registry`] — the epoch-versioned [`registry::FleetRegistry`]:
+//!   `Arc`-swap publishing rebuilt atlases into a running pool without
+//!   draining it.
+//! * [`store`] — the on-disk library (entry files + index manifest, all
+//!   writes atomic via temp-file rename).
+//! * [`pool`] — the [`pool::FleetPool`]: one sharded worker pool serving
+//!   every published entry, requests tagged (platform preset, workload
+//!   preset, deadline-or-energy [`pool::Demand`]), resolved in `O(log n)` at
+//!   admission.
+
+pub mod catalog;
+pub mod energy;
+pub mod entry;
+pub mod key;
+pub mod pool;
+pub mod registry;
+pub mod store;
+
+pub use energy::{BelowEnergyFloor, EnergyAtlas, EnergyAtlasConfig, EnergyKnot};
+pub use entry::{FleetConfig, FleetEntry};
+pub use key::{FleetKey, PlatformFingerprint, WorkloadHash};
+pub use pool::{Demand, FleetOutcome, FleetPool, FleetPoolConfig, FleetTicket};
+pub use registry::{FleetRegistry, Resolved};
+pub use store::{load_library, save_library, swap_entry};

@@ -1,0 +1,426 @@
+//! The fleet serving pool: one worker pool, many atlases.
+//!
+//! Where [`crate::serve::pool::ServePool`] serves a single frozen atlas,
+//! this pool routes every request through a shared [`FleetRegistry`]: a
+//! request arrives tagged with a platform preset and a workload preset plus
+//! a [`Demand`] (deadline *or* energy cap), resolves its entry and schedule
+//! in `O(log n)` at submit time, and carries the entry's `Arc` with the job.
+//! That submit-time binding is what makes hot swaps safe: publishing a
+//! rebuilt atlas changes what subsequent lookups resolve, while queued and
+//! executing jobs keep the entry they were admitted under — nothing drains,
+//! nothing is rejected.
+//!
+//! Dispatch, admission, and shutdown follow the serve pool: per-worker EDF
+//! queues with typed shedding, [`crate::serve::pool::pick_shard`]'s
+//! EDF-aware dispatch heuristic, graceful drain on shutdown.
+
+use super::entry::FleetEntry;
+use super::registry::FleetRegistry;
+use crate::coordinator::Metrics;
+use crate::eeg::synth::EegWindow;
+use crate::manager::schedule::Schedule;
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::runtime::client::Runtime;
+use crate::runtime::infer::{Prediction, TsdInference};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::pool::{pick_shard, ServeError};
+use crate::serve::queue::{Admission, EdfQueue, Rejection};
+use crate::sim::replay::{simulate, SimReport};
+use crate::util::error::{anyhow, Result};
+use crate::util::units::{Energy, Time};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What a request asks of its atlas entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Demand {
+    /// Meet this deadline with minimal energy (deadline atlas).
+    Deadline(Time),
+    /// Stay within this active-energy cap, as fast as possible (energy
+    /// atlas).
+    EnergyBudget(Energy),
+}
+
+/// Pool sizing (atlases are prebuilt in the registry, so no sweep config).
+#[derive(Debug, Clone)]
+pub struct FleetPoolConfig {
+    /// Worker thread count (≥ 1).
+    pub workers: usize,
+    /// Per-worker admission queue capacity.
+    pub queue_capacity: usize,
+    /// Directory holding the AOT artifacts (`manifest.json`); when absent
+    /// or unloadable the pool serves schedule-only responses.
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for FleetPoolConfig {
+    fn default() -> Self {
+        FleetPoolConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .clamp(1, 4),
+            queue_capacity: 256,
+            artifact_dir: ArtifactManifest::default_dir(),
+        }
+    }
+}
+
+/// The response: functional prediction + simulated on-device execution, plus
+/// the routing provenance (entry, epoch, covering knot).
+#[derive(Debug)]
+pub struct FleetOutcome {
+    pub window_index: usize,
+    pub prediction: Prediction,
+    pub sim: SimReport,
+    pub scheduler: String,
+    /// Platform preset that served this request.
+    pub platform: String,
+    /// Workload preset that served this request.
+    pub workload: String,
+    /// Registry epoch of the entry this request was admitted under — stays
+    /// the admission-time epoch across hot swaps.
+    pub epoch: u64,
+    pub demand: Demand,
+    /// Deadline of the schedule actually executed (the covering knot's for
+    /// deadline demands, the dual solve's converged deadline for energy
+    /// demands).
+    pub knot_deadline: Time,
+    /// Covering budget knot (energy demands only).
+    pub knot_budget: Option<Energy>,
+    /// Submission-to-response latency, queue wait included.
+    pub host_latency: Duration,
+}
+
+/// Handle for one in-flight request.
+#[derive(Debug)]
+pub struct FleetTicket {
+    rx: mpsc::Receiver<std::result::Result<FleetOutcome, ServeError>>,
+}
+
+impl FleetTicket {
+    /// Block until the worker responds.
+    pub fn wait(self) -> std::result::Result<FleetOutcome, ServeError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(ServeError::Internal("worker dropped response".into())))
+    }
+}
+
+struct Job {
+    window: EegWindow,
+    schedule: Schedule,
+    entry: Arc<FleetEntry>,
+    epoch: u64,
+    demand: Demand,
+    knot_deadline: Time,
+    knot_budget: Option<Energy>,
+    submitted: Instant,
+    reply: mpsc::Sender<std::result::Result<FleetOutcome, ServeError>>,
+}
+
+struct ShardState {
+    queue: EdfQueue<Job>,
+    stopping: bool,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+    depth: AtomicUsize,
+}
+
+/// A running fleet pool. Dropping it shuts workers down (discarding
+/// metrics); call [`FleetPool::shutdown`] to collect the aggregate instead.
+pub struct FleetPool {
+    registry: Arc<FleetRegistry>,
+    shards: Vec<Arc<Shard>>,
+    workers: Vec<JoinHandle<Metrics>>,
+    next: AtomicUsize,
+    shed_below_floor: AtomicU64,
+    shed_queue_full: AtomicU64,
+    shed_unknown: AtomicU64,
+}
+
+impl FleetPool {
+    /// Spawn workers over a prebuilt registry. The registry stays shared:
+    /// publishing into it while the pool runs hot-swaps what subsequent
+    /// requests resolve.
+    pub fn start(registry: Arc<FleetRegistry>, config: FleetPoolConfig) -> Result<FleetPool> {
+        let n = config.workers.max(1);
+        let mut shards = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let shard = Arc::new(Shard {
+                state: Mutex::new(ShardState {
+                    queue: EdfQueue::new(config.queue_capacity.max(1)),
+                    stopping: false,
+                }),
+                cv: Condvar::new(),
+                depth: AtomicUsize::new(0),
+            });
+            let handle = std::thread::Builder::new()
+                .name(format!("medea-fleet-{i}"))
+                .spawn({
+                    let shard = shard.clone();
+                    let dir = config.artifact_dir.clone();
+                    move || worker_loop(&shard, &dir)
+                })
+                .map_err(|e| anyhow!("spawn fleet worker {i}: {e}"))?;
+            shards.push(shard);
+            workers.push(handle);
+        }
+        Ok(FleetPool {
+            registry,
+            shards,
+            workers,
+            next: AtomicUsize::new(0),
+            shed_below_floor: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+            shed_unknown: AtomicU64::new(0),
+        })
+    }
+
+    pub fn registry(&self) -> &Arc<FleetRegistry> {
+        &self.registry
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Route, resolve, and enqueue one request. The atlas lookup happens
+    /// here — before admission — so infeasible demands and unknown targets
+    /// shed with a typed [`Rejection`] and never occupy queue space.
+    pub fn submit(
+        &self,
+        platform: &str,
+        workload: &str,
+        window: EegWindow,
+        demand: Demand,
+    ) -> std::result::Result<FleetTicket, Rejection> {
+        let Some(resolved) = self.registry.resolve_named(platform, workload) else {
+            self.shed_unknown.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejection::UnknownEntry {
+                platform: platform.to_string(),
+                workload: workload.to_string(),
+            });
+        };
+        let entry = resolved.entry;
+        let (schedule, knot_deadline, knot_budget) = match demand {
+            Demand::Deadline(deadline) => match entry.atlas.lookup(deadline) {
+                Ok(knot) => {
+                    let mut schedule = knot.schedule.clone();
+                    schedule.deadline = deadline;
+                    (schedule, knot.deadline, None)
+                }
+                Err(miss) => {
+                    self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
+                    return Err(Rejection::BelowFloor {
+                        requested: miss.requested,
+                        floor: miss.floor,
+                    });
+                }
+            },
+            Demand::EnergyBudget(budget) => match entry.energy.lookup(budget) {
+                Ok(knot) => (knot.schedule.clone(), knot.schedule.deadline, Some(knot.budget)),
+                Err(miss) => {
+                    self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
+                    return Err(Rejection::BelowEnergyFloor {
+                        requested: miss.requested,
+                        floor: miss.floor,
+                    });
+                }
+            },
+        };
+
+        let rr = self.next.fetch_add(1, Ordering::Relaxed);
+        let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
+        let shard = &self.shards[pick_shard(depths, rr)];
+        let (tx, rx) = mpsc::channel();
+        // EDF priority: the schedule's effective deadline (energy demands
+        // queue at the urgency their dual solve converged to).
+        let priority = schedule.deadline;
+        let job = Job {
+            window,
+            schedule,
+            entry,
+            epoch: resolved.epoch,
+            demand,
+            knot_deadline,
+            knot_budget,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let mut st = shard.state.lock().expect("fleet shard lock poisoned");
+        if st.stopping {
+            return Err(Rejection::ShuttingDown);
+        }
+        let capacity = st.queue.capacity();
+        match st.queue.push(priority, job) {
+            Admission::Accepted => {
+                shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                drop(st);
+                shard.cv.notify_one();
+                Ok(FleetTicket { rx })
+            }
+            Admission::AcceptedShedding { evicted, .. } => {
+                shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                let _ = evicted
+                    .reply
+                    .send(Err(ServeError::Shed(Rejection::QueueFull { capacity })));
+                drop(st);
+                shard.cv.notify_one();
+                Ok(FleetTicket { rx })
+            }
+            Admission::Rejected { reason, .. } => {
+                if matches!(reason, Rejection::QueueFull { .. }) {
+                    self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(reason)
+            }
+        }
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(
+        &self,
+        platform: &str,
+        workload: &str,
+        window: EegWindow,
+        demand: Demand,
+    ) -> std::result::Result<FleetOutcome, ServeError> {
+        match self.submit(platform, workload, window, demand) {
+            Ok(ticket) => ticket.wait(),
+            Err(rejection) => Err(ServeError::Shed(rejection)),
+        }
+    }
+
+    fn begin_stop(&self) {
+        for shard in &self.shards {
+            let mut st = shard.state.lock().expect("fleet shard lock poisoned");
+            st.stopping = true;
+            drop(st);
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Graceful shutdown: queues drain, workers exit, metrics merge.
+    pub fn shutdown(mut self) -> ServeMetrics {
+        self.begin_stop();
+        let per_worker: Vec<Metrics> = self
+            .workers
+            .drain(..)
+            .map(|h| h.join().expect("fleet worker panicked"))
+            .collect();
+        ServeMetrics::aggregate(
+            per_worker,
+            self.shed_below_floor.load(Ordering::Relaxed),
+            self.shed_queue_full.load(Ordering::Relaxed),
+        )
+        .with_unknown_entries(self.shed_unknown.load(Ordering::Relaxed))
+    }
+}
+
+impl Drop for FleetPool {
+    fn drop(&mut self) {
+        self.begin_stop();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shard: &Shard, artifact_dir: &std::path::Path) -> Metrics {
+    let mut metrics = Metrics::default();
+    // One PJRT runtime handle per worker, created on the worker thread.
+    let mut runtime = match Runtime::new(artifact_dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            crate::log_warn!("PJRT runtime unavailable ({e}); serving schedule-only responses");
+            None
+        }
+    };
+    let infer = TsdInference::default();
+
+    loop {
+        let job = {
+            let mut st = shard.state.lock().expect("fleet shard lock poisoned");
+            loop {
+                if let Some((_, job)) = st.queue.pop() {
+                    shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                    break Some(job);
+                }
+                if st.stopping {
+                    break None;
+                }
+                st = shard.cv.wait(st).expect("fleet shard lock poisoned");
+            }
+        };
+        let Some(job) = job else { break };
+        // `process` consumes the job (the entry `Arc` and schedule ride in
+        // it) and hands the reply channel back alongside the outcome.
+        let (reply, outcome) = process(job, runtime.as_mut(), &infer);
+        if let Ok(o) = &outcome {
+            metrics.record(
+                o.prediction.seizure,
+                o.sim.deadline_met,
+                o.sim.total_energy().raw(),
+                o.sim.active_time.raw(),
+                o.host_latency,
+            );
+        }
+        let _ = reply.send(outcome);
+    }
+    metrics
+}
+
+type Reply = mpsc::Sender<std::result::Result<FleetOutcome, ServeError>>;
+
+fn process(
+    job: Job,
+    runtime: Option<&mut Runtime>,
+    infer: &TsdInference,
+) -> (Reply, std::result::Result<FleetOutcome, ServeError>) {
+    let Job {
+        window,
+        schedule,
+        entry,
+        epoch,
+        demand,
+        knot_deadline,
+        knot_budget,
+        submitted,
+        reply,
+    } = job;
+    let sim = simulate(&entry.workload, &entry.platform, &entry.model, &schedule);
+    let prediction = match runtime {
+        Some(rt) => match infer.infer_staged(rt, &window) {
+            Ok(p) => p,
+            Err(e) => return (reply, Err(ServeError::Internal(e.to_string()))),
+        },
+        None => Prediction {
+            logits: vec![0.0, 0.0],
+            class_idx: 0,
+            seizure: false,
+        },
+    };
+    let outcome = FleetOutcome {
+        window_index: window.index,
+        prediction,
+        sim,
+        scheduler: schedule.scheduler.clone(),
+        platform: entry.platform_preset.clone(),
+        workload: entry.workload_preset.clone(),
+        epoch,
+        demand,
+        knot_deadline,
+        knot_budget,
+        host_latency: submitted.elapsed(),
+    };
+    (reply, Ok(outcome))
+}

@@ -1,0 +1,137 @@
+//! The epoch-versioned, atomically swappable atlas registry.
+//!
+//! The registry is the live heart of the fleet layer: a read-mostly map from
+//! [`FleetKey`] to `Arc<FleetEntry>`, plus a (preset, workload) name alias
+//! table for request routing. Publishing a rebuilt entry swaps the `Arc`
+//! under a briefly held write lock and bumps a global epoch — readers that
+//! already resolved an entry keep serving from their clone, so a hot swap
+//! never drains or rejects in-flight requests; it only changes what
+//! *subsequent* lookups see. Both maps are `BTreeMap`s, so a resolve is two
+//! `O(log n)` walks with no hashing on the request path.
+
+use super::entry::FleetEntry;
+use super::key::FleetKey;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+struct Slot {
+    epoch: u64,
+    entry: Arc<FleetEntry>,
+}
+
+/// A successful resolve: the entry plus the epoch at which it was published
+/// (serving layers stamp it on outcomes so swaps are observable).
+#[derive(Debug, Clone)]
+pub struct Resolved {
+    pub entry: Arc<FleetEntry>,
+    pub epoch: u64,
+}
+
+/// The versioned atlas library registry.
+pub struct FleetRegistry {
+    slots: RwLock<BTreeMap<FleetKey, Slot>>,
+    /// `"platform/workload"` preset-name aliases → content key.
+    names: RwLock<BTreeMap<String, FleetKey>>,
+    /// Global publish counter; each publish gets the next epoch.
+    epoch: AtomicU64,
+}
+
+fn alias(platform: &str, workload: &str) -> String {
+    format!("{platform}/{workload}")
+}
+
+impl FleetRegistry {
+    pub fn new() -> FleetRegistry {
+        FleetRegistry {
+            slots: RwLock::new(BTreeMap::new()),
+            names: RwLock::new(BTreeMap::new()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// Insert or atomically replace the entry for its content key. Returns
+    /// the epoch assigned to this publish. In-flight requests holding the
+    /// previous `Arc` are unaffected.
+    pub fn publish(&self, entry: FleetEntry) -> u64 {
+        let key = entry.key;
+        let name = alias(&entry.platform_preset, &entry.workload_preset);
+        let entry = Arc::new(entry);
+        // Epoch allocation happens under the slots write lock so that
+        // concurrent publishes of the same key commit in epoch order — a
+        // later epoch always denotes the build that actually won the slot.
+        // Slot before alias: a name must never resolve to a missing slot.
+        let epoch;
+        {
+            let mut slots = self.slots.write().expect("fleet slot lock poisoned");
+            epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+            slots.insert(key, Slot { epoch, entry });
+        }
+        {
+            let mut names = self.names.write().expect("fleet name lock poisoned");
+            names.insert(name, key);
+        }
+        epoch
+    }
+
+    /// Resolve by content key.
+    pub fn resolve(&self, key: &FleetKey) -> Option<Resolved> {
+        let slots = self.slots.read().expect("fleet slot lock poisoned");
+        slots.get(key).map(|slot| Resolved {
+            entry: slot.entry.clone(),
+            epoch: slot.epoch,
+        })
+    }
+
+    /// Resolve by (platform preset, workload preset) request tags.
+    pub fn resolve_named(&self, platform: &str, workload: &str) -> Option<Resolved> {
+        let key = {
+            let names = self.names.read().expect("fleet name lock poisoned");
+            *names.get(&alias(platform, workload))?
+        };
+        self.resolve(&key)
+    }
+
+    /// Keys currently published, in order.
+    pub fn keys(&self) -> Vec<FleetKey> {
+        let slots = self.slots.read().expect("fleet slot lock poisoned");
+        slots.keys().copied().collect()
+    }
+
+    /// Snapshot of every published entry (arc clones, cheap).
+    pub fn entries(&self) -> Vec<Resolved> {
+        let slots = self.slots.read().expect("fleet slot lock poisoned");
+        slots
+            .values()
+            .map(|slot| Resolved {
+                entry: slot.entry.clone(),
+                epoch: slot.epoch,
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.read().expect("fleet slot lock poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The epoch of the most recent publish (0 when nothing was published).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Advance the publish counter to at least `epoch` (used when loading a
+    /// persisted library so future publishes continue its epoch sequence).
+    pub fn advance_epoch_to(&self, epoch: u64) {
+        self.epoch.fetch_max(epoch, Ordering::SeqCst);
+    }
+}
+
+impl Default for FleetRegistry {
+    fn default() -> Self {
+        FleetRegistry::new()
+    }
+}

@@ -1,0 +1,164 @@
+//! The on-disk fleet library: a directory of entries plus an index manifest.
+//!
+//! Layout:
+//!
+//! ```text
+//! fleet-lib/
+//!   index.json                  # { version, epoch, entries: [meta…] }
+//!   entries/<key>.json          # one FleetEntry per (platform, workload)
+//! ```
+//!
+//! All writes are atomic at the file level (write to `*.tmp`, then rename),
+//! so a crashed `fleet swap` leaves either the old or the new entry — never
+//! a torn one. Loading skips entries whose content key no longer matches the
+//! current presets (staleness, see [`crate::fleet::entry`]) with a warning,
+//! so a library survives preset drift by serving what is still valid.
+
+use super::entry::FleetEntry;
+use super::registry::FleetRegistry;
+use crate::util::json::{parse, Json, JsonObj};
+use std::path::{Path, PathBuf};
+
+/// Index manifest file name.
+pub const INDEX_FILE: &str = "index.json";
+
+/// Subdirectory holding entry files.
+pub const ENTRY_DIR: &str = "entries";
+
+const VERSION: u64 = 1;
+
+/// Path of one entry file within a library directory.
+pub fn entry_path(dir: &Path, entry: &FleetEntry) -> PathBuf {
+    dir.join(ENTRY_DIR).join(format!("{}.json", entry.key))
+}
+
+fn atomic_write(path: &Path, contents: &str) -> Result<(), String> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, contents).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+fn entry_meta(entry: &FleetEntry) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("key", entry.key.to_string());
+    o.insert("platform_preset", entry.platform_preset.clone());
+    o.insert("workload_preset", entry.workload_preset.clone());
+    o.insert("file", format!("{ENTRY_DIR}/{}.json", entry.key));
+    o.insert("knots", entry.atlas.len());
+    o.insert("energy_knots", entry.energy.len());
+    o.insert("floor_ms", entry.atlas.floor().as_ms());
+    o.insert("energy_floor_uj", entry.energy.floor().as_uj());
+    Json::Obj(o)
+}
+
+fn index_json(metas: Vec<Json>, epoch: u64) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("version", VERSION);
+    o.insert("epoch", epoch);
+    o.insert("entries", Json::Arr(metas));
+    Json::Obj(o)
+}
+
+/// Write one entry file atomically (no index update).
+pub fn write_entry(dir: &Path, entry: &FleetEntry) -> Result<PathBuf, String> {
+    let entries_dir = dir.join(ENTRY_DIR);
+    std::fs::create_dir_all(&entries_dir)
+        .map_err(|e| format!("create {}: {e}", entries_dir.display()))?;
+    let path = entry_path(dir, entry);
+    atomic_write(&path, &entry.to_json().to_pretty())?;
+    Ok(path)
+}
+
+/// Persist a whole registry as a library directory.
+pub fn save_library(dir: &Path, registry: &FleetRegistry) -> Result<(), String> {
+    let mut metas = Vec::new();
+    for resolved in registry.entries() {
+        write_entry(dir, &resolved.entry)?;
+        metas.push(entry_meta(&resolved.entry));
+    }
+    atomic_write(
+        &dir.join(INDEX_FILE),
+        &index_json(metas, registry.epoch()).to_pretty(),
+    )
+}
+
+/// Load a library directory into a fresh registry. Entries that fail the
+/// staleness check (or fail to parse) are skipped with a warning; the load
+/// only errors when the index itself is unreadable.
+pub fn load_library(dir: &Path) -> Result<FleetRegistry, String> {
+    let index_path = dir.join(INDEX_FILE);
+    let text = std::fs::read_to_string(&index_path)
+        .map_err(|e| format!("read {}: {e}", index_path.display()))?;
+    let index = parse(&text).map_err(|e| e.to_string())?;
+    let version = index.req("version")?.as_u64().ok_or("version")?;
+    if version != VERSION {
+        return Err(format!("unsupported fleet library version {version}"));
+    }
+    let epoch = index.req("epoch")?.as_u64().ok_or("epoch")?;
+
+    let registry = FleetRegistry::new();
+    for meta in index.req("entries")?.as_arr().ok_or("entries")? {
+        let file = meta.req("file")?.as_str().ok_or("file")?;
+        let path = dir.join(file);
+        let loaded = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))
+            .and_then(|t| parse(&t).map_err(|e| e.to_string()))
+            .and_then(|v| FleetEntry::from_json(&v));
+        match loaded {
+            Ok(entry) => {
+                registry.publish(entry);
+            }
+            Err(e) => {
+                crate::log_warn!("fleet library: skipping {}: {e}", path.display());
+            }
+        }
+    }
+    registry.advance_epoch_to(epoch);
+    Ok(registry)
+}
+
+/// Atomically replace (or add) one entry in a persisted library and bump the
+/// index epoch. Returns the new epoch. This is the on-disk counterpart of
+/// [`FleetRegistry::publish`]: a running pool that loaded the library keeps
+/// serving its in-memory entries until it republishes from disk.
+pub fn swap_entry(dir: &Path, entry: &FleetEntry) -> Result<u64, String> {
+    let index_path = dir.join(INDEX_FILE);
+    let (mut metas, epoch) = if index_path.exists() {
+        let text = std::fs::read_to_string(&index_path)
+            .map_err(|e| format!("read {}: {e}", index_path.display()))?;
+        let index = parse(&text).map_err(|e| e.to_string())?;
+        let epoch = index.req("epoch")?.as_u64().ok_or("epoch")?;
+        let metas: Vec<Json> = index
+            .req("entries")?
+            .as_arr()
+            .ok_or("entries")?
+            .to_vec();
+        (metas, epoch)
+    } else {
+        (Vec::new(), 0)
+    };
+
+    write_entry(dir, entry)?;
+    let key = entry.key.to_string();
+    // Supersede by key *and* by preset pair: when a preset's content drifted
+    // since the last build, the rebuilt entry lands under a new key, and the
+    // old (now stale) row plus its entry file must not linger in the library.
+    metas.retain(|m| {
+        let same_key = m.get("key").and_then(|k| k.as_str()) == Some(key.as_str());
+        let same_presets = m.get("platform_preset").and_then(|v| v.as_str())
+            == Some(entry.platform_preset.as_str())
+            && m.get("workload_preset").and_then(|v| v.as_str())
+                == Some(entry.workload_preset.as_str());
+        if same_presets && !same_key {
+            if let Some(file) = m.get("file").and_then(|f| f.as_str()) {
+                let _ = std::fs::remove_file(dir.join(file));
+            }
+        }
+        !(same_key || same_presets)
+    });
+    metas.push(entry_meta(entry));
+    let epoch = epoch + 1;
+    atomic_write(&index_path, &index_json(metas, epoch).to_pretty())?;
+    Ok(epoch)
+}

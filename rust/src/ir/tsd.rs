@@ -61,6 +61,20 @@ impl Default for TsdParams {
 }
 
 impl TsdParams {
+    /// A lighter TSD variant (half the patches, narrower/shallower core):
+    /// the second workload of a heterogeneous serving fleet, and a fast
+    /// stand-in for tests that need two structurally distinct networks.
+    pub fn small() -> TsdParams {
+        TsdParams {
+            patches: 48,
+            d_model: 64,
+            blocks: 2,
+            heads: 2,
+            d_ff: 128,
+            ..TsdParams::default()
+        }
+    }
+
     pub fn dims(&self) -> TransformerDims {
         TransformerDims {
             seq: self.patches + 1, // + class token
@@ -115,6 +129,14 @@ pub fn tsd_core(p: &TsdParams) -> Workload {
     w
 }
 
+/// The transformer core at [`TsdParams::small`] dimensioning, under its own
+/// workload name so the fleet layer treats it as a distinct network.
+pub fn tsd_small() -> Workload {
+    let mut w = tsd_core(&TsdParams::small());
+    w.name = "tsd-small".to_string();
+    w
+}
+
 /// The matmul subset of the TSD core that is executable on *both*
 /// accelerators — used by the Fig 7 crossover study.
 pub fn tsd_matmul_subset(p: &TsdParams) -> Workload {
@@ -142,6 +164,16 @@ mod tests {
         // embed(2) + 4 blocks × 40 + classifier(2)
         assert_eq!(core.len(), 2 + 4 * 40 + 2);
         assert!(core.groups_cover_all());
+    }
+
+    #[test]
+    fn small_variant_is_smaller_and_covered() {
+        let small = tsd_small();
+        let core = tsd_core(&TsdParams::default());
+        assert_eq!(small.name, "tsd-small");
+        assert!(small.len() < core.len() / 2);
+        assert!(small.groups_cover_all());
+        assert!(small.total_ops() < core.total_ops() / 3);
     }
 
     #[test]

@@ -43,6 +43,11 @@
 //!   atlas** (all MCKP solves moved to startup; requests resolve by binary
 //!   search), an EDF admission queue with typed shedding, a sharded
 //!   multi-worker pool, and cross-worker metrics.
+//! * [`fleet`] — the multi-platform atlas **library**: content-keyed entries
+//!   (platform fingerprint × workload hash) each carrying a deadline atlas
+//!   and an energy-budget atlas, an epoch-versioned registry with live
+//!   `Arc`-swap, an on-disk store, and a pool that routes requests tagged
+//!   with (platform preset, workload preset, deadline-or-energy demand).
 //! * [`coordinator`] — the legacy threaded inference service, now a thin
 //!   single-worker compatibility wrapper over [`serve`].
 //! * [`exp`] / [`report`] — drivers that regenerate every table and figure of
@@ -53,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eeg;
 pub mod exp;
+pub mod fleet;
 pub mod ir;
 pub mod manager;
 pub mod platform;

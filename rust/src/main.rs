@@ -80,6 +80,10 @@ fn app() -> App {
                 .opt_default("workers", "Worker threads in the serving pool", "4")
                 .opt_default("queue-cap", "Per-worker admission queue capacity", "256")
                 .opt("atlas", "Schedule-atlas JSON path: loaded when present, else built and saved there")
+                .opt("fleet-dir", "Fleet library directory: serve through the multi-platform FleetPool instead of the single-atlas pool")
+                .opt_default("platform", "Platform preset tag for fleet routing", "heeptimize")
+                .opt_default("workload", "Workload preset tag for fleet routing", "tsd-core")
+                .opt("energy-budgets-uj", "Comma-separated energy caps in uJ (cycled; requests carry an energy budget instead of a deadline; fleet mode only)")
                 .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)"),
         )
         .command(
@@ -87,7 +91,23 @@ fn app() -> App {
                 .opt_default("out", "Output JSON path", "atlas.json")
                 .opt_default("relax", "Sweep bound as a multiple of the feasibility floor", "24")
                 .opt_default("growth", "Geometric knot spacing (>1)", "1.15")
+                .opt_default("max-knots", "Hard cap on knot count (truncation is logged)", "256")
                 .flag("verbose", "Print every knot"),
+        )
+        .command(
+            CmdSpec::new("fleet", "Build, inspect, or hot-swap a multi-platform atlas library")
+                .positional("action", "build | inspect | swap")
+                .opt_default("dir", "Library directory", "fleet-lib")
+                .opt("platforms", "Comma-separated platform presets for `build` (default: all)")
+                .opt("workloads", "Comma-separated workload presets for `build` (default: tsd-core,tsd-small)")
+                .opt("platform", "Platform preset for `swap`")
+                .opt("workload", "Workload preset for `swap`")
+                .opt_default("relax", "Deadline sweep bound as a multiple of the feasibility floor", "24")
+                .opt_default("growth", "Geometric deadline knot spacing (>1)", "1.15")
+                .opt_default("max-knots", "Knot cap per deadline atlas", "256")
+                .opt_default("energy-growth", "Geometric energy-budget knot spacing (>1)", "1.25")
+                .opt_default("energy-knots", "Knot cap per energy atlas", "48")
+                .flag("verbose", "Print every entry's knots"),
         )
 }
 
@@ -170,6 +190,7 @@ fn dispatch(name: &str, args: &Args) -> Result<(), String> {
         "all" => cmd_all(args),
         "serve" => cmd_serve(args),
         "atlas" => cmd_atlas(args),
+        "fleet" => cmd_fleet(args),
         other => Err(format!("unhandled command {other}")),
     }
 }
@@ -347,6 +368,9 @@ fn cmd_all(args: &Args) -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     use medea::serve::{PoolConfig, ScheduleAtlas, ServePool, Ticket};
+    if args.get("fleet-dir").is_some() {
+        return cmd_serve_fleet(args);
+    }
     let windows: usize = args.req_parse("windows").map_err(|e| e.to_string())?;
     let default_deadline: f64 = args.req_parse("deadline-ms").map_err(|e| e.to_string())?;
     let deadlines_ms = args
@@ -432,16 +456,21 @@ fn cmd_atlas(args: &Args) -> Result<(), String> {
     let out = PathBuf::from(args.get("out").unwrap_or("atlas.json"));
     let relax: f64 = args.req_parse("relax").map_err(|e| e.to_string())?;
     let growth: f64 = args.req_parse("growth").map_err(|e| e.to_string())?;
+    let max_knots: usize = args.req_parse("max-knots").map_err(|e| e.to_string())?;
     if growth <= 1.0 {
         return Err("--growth must be > 1".into());
     }
     if relax <= 1.0 {
         return Err("--relax must be > 1".into());
     }
+    if max_knots < 2 {
+        return Err("--max-knots must be >= 2".into());
+    }
     let ctx = ExpContext::paper();
     let cfg = AtlasConfig {
         relax_factor: relax,
         growth,
+        max_knots,
         ..AtlasConfig::default()
     };
     let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &cfg).map_err(|e| e.to_string())?;
@@ -464,4 +493,224 @@ fn cmd_atlas(args: &Args) -> Result<(), String> {
     atlas.save(&out)?;
     println!("atlas written to {}", out.display());
     Ok(())
+}
+
+/// Serve through the multi-platform fleet pool (`serve --fleet-dir …`).
+fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
+    use medea::fleet::{load_library, Demand, FleetPool, FleetPoolConfig};
+    use medea::util::units::Energy;
+    use std::sync::Arc;
+
+    let dir = PathBuf::from(args.get("fleet-dir").expect("checked by caller"));
+    let windows: usize = args.req_parse("windows").map_err(|e| e.to_string())?;
+    let default_deadline: f64 = args.req_parse("deadline-ms").map_err(|e| e.to_string())?;
+    let deadlines_ms = args
+        .get_f64_list("deadlines")
+        .map_err(|e| e.to_string())?
+        .unwrap_or_else(|| vec![default_deadline]);
+    let budgets_uj = args.get_f64_list("energy-budgets-uj").map_err(|e| e.to_string())?;
+    let seed: u64 = args.req_parse("seed").map_err(|e| e.to_string())?;
+    let workers: usize = args.req_parse("workers").map_err(|e| e.to_string())?;
+    let queue_cap: usize = args.req_parse("queue-cap").map_err(|e| e.to_string())?;
+    let platform = args.get("platform").unwrap_or("heeptimize").to_string();
+    let workload = args.get("workload").unwrap_or("tsd-core").to_string();
+    let artifact_dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(ArtifactManifest::default_dir);
+
+    let registry = Arc::new(load_library(&dir)?);
+    println!(
+        "fleet: loaded {} entries (epoch {}) from {}",
+        registry.len(),
+        registry.epoch(),
+        dir.display()
+    );
+    if registry.is_empty() {
+        return Err("fleet library has no servable entries".into());
+    }
+    let pool = FleetPool::start(
+        registry,
+        FleetPoolConfig {
+            workers,
+            queue_capacity: queue_cap,
+            artifact_dir,
+        },
+    )
+    .map_err(|e| e.to_string())?;
+
+    let mut gen = EegGenerator::new(SynthConfig::default(), seed);
+    let mut pending = Vec::with_capacity(windows);
+    for i in 0..windows {
+        let demand = match &budgets_uj {
+            Some(budgets) => Demand::EnergyBudget(Energy::from_uj(budgets[i % budgets.len()])),
+            None => Demand::Deadline(Time::from_ms(deadlines_ms[i % deadlines_ms.len()])),
+        };
+        match pool.submit(&platform, &workload, gen.next_window(), demand) {
+            Ok(ticket) => pending.push((i, Some(ticket))),
+            Err(rejection) => {
+                println!("window {i:>3}: {rejection}");
+                pending.push((i, None));
+            }
+        }
+    }
+    for (i, ticket) in pending {
+        let Some(ticket) = ticket else { continue };
+        match ticket.wait() {
+            Ok(out) => {
+                let demand = match out.demand {
+                    Demand::Deadline(d) => format!("deadline {:.0} ms", d.as_ms()),
+                    Demand::EnergyBudget(b) => format!("cap {:.0} uJ", b.as_uj()),
+                };
+                println!(
+                    "window {:>3}: {}/{} epoch={} {} sim: {:.1} ms / {:.0} uJ (met={}) host={:?}",
+                    out.window_index,
+                    out.platform,
+                    out.workload,
+                    out.epoch,
+                    demand,
+                    out.sim.active_time.as_ms(),
+                    out.sim.total_energy().as_uj(),
+                    out.sim.deadline_met,
+                    out.host_latency,
+                );
+            }
+            Err(e) => println!("window {i:>3}: {e}"),
+        }
+    }
+    let metrics = pool.shutdown();
+    println!("---\n{}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<(), String> {
+    use medea::fleet::catalog::{PLATFORM_PRESETS, WORKLOAD_PRESETS};
+    use medea::fleet::{load_library, save_library, swap_entry, FleetEntry, FleetRegistry};
+    use medea::serve::AtlasConfig;
+
+    let action = args
+        .positional(0)
+        .ok_or("fleet needs an action: build | inspect | swap")?;
+    let dir = PathBuf::from(args.get("dir").unwrap_or("fleet-lib"));
+
+    let relax: f64 = args.req_parse("relax").map_err(|e| e.to_string())?;
+    let growth: f64 = args.req_parse("growth").map_err(|e| e.to_string())?;
+    let max_knots: usize = args.req_parse("max-knots").map_err(|e| e.to_string())?;
+    let energy_growth: f64 = args.req_parse("energy-growth").map_err(|e| e.to_string())?;
+    let energy_knots: usize = args.req_parse("energy-knots").map_err(|e| e.to_string())?;
+    if growth <= 1.0 || energy_growth <= 1.0 {
+        return Err("--growth and --energy-growth must be > 1".into());
+    }
+    if max_knots < 2 || energy_knots < 2 {
+        return Err("--max-knots and --energy-knots must be >= 2".into());
+    }
+    let cfg = medea::fleet::FleetConfig {
+        atlas: AtlasConfig {
+            relax_factor: relax,
+            growth,
+            max_knots,
+            ..AtlasConfig::default()
+        },
+        energy: medea::fleet::EnergyAtlasConfig {
+            growth: energy_growth,
+            max_knots: energy_knots,
+            ..medea::fleet::EnergyAtlasConfig::default()
+        },
+    };
+
+    let list = |opt: Option<&str>, default: &[&str]| -> Vec<String> {
+        match opt {
+            Some(raw) => raw.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    };
+
+    match action {
+        "build" => {
+            let platforms = list(args.get("platforms"), &PLATFORM_PRESETS);
+            let workloads = list(args.get("workloads"), &["tsd-core", "tsd-small"]);
+            let registry = FleetRegistry::new();
+            for p in &platforms {
+                for w in &workloads {
+                    let entry = FleetEntry::build(p, w, &cfg)?;
+                    println!(
+                        "built {p}/{w}: key {} | {} deadline knots (floor {:.1} ms) | {} energy knots (floor {:.1} uJ)",
+                        entry.key,
+                        entry.atlas.len(),
+                        entry.atlas.floor().as_ms(),
+                        entry.energy.len(),
+                        entry.energy.floor().as_uj(),
+                    );
+                    registry.publish(entry);
+                }
+            }
+            save_library(&dir, &registry)?;
+            println!(
+                "fleet library: {} entries written to {} (epoch {})",
+                registry.len(),
+                dir.display(),
+                registry.epoch()
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let registry = load_library(&dir)?;
+            println!(
+                "fleet library at {}: {} entries, epoch {}",
+                dir.display(),
+                registry.len(),
+                registry.epoch()
+            );
+            for resolved in registry.entries() {
+                let e = &resolved.entry;
+                println!(
+                    "  {} {:>14}/{:<10} {:>3} knots (floor {:>7.1} ms)  {:>3} energy knots (floor {:>8.1} uJ)",
+                    e.key,
+                    e.platform_preset,
+                    e.workload_preset,
+                    e.atlas.len(),
+                    e.atlas.floor().as_ms(),
+                    e.energy.len(),
+                    e.energy.floor().as_uj(),
+                );
+                if args.flag("verbose") {
+                    for k in e.atlas.knots() {
+                        println!(
+                            "      deadline {:>8.1} ms  energy {:>8.1} uJ",
+                            k.deadline.as_ms(),
+                            k.schedule.active_energy().as_uj()
+                        );
+                    }
+                    for k in e.energy.knots() {
+                        println!(
+                            "      budget   {:>8.1} uJ  sim time {:>7.2} ms",
+                            k.budget.as_uj(),
+                            k.sim_time.as_ms()
+                        );
+                    }
+                }
+            }
+            Ok(())
+        }
+        "swap" => {
+            let platform = args.get("platform").ok_or("swap needs --platform")?;
+            let workload = args.get("workload").ok_or("swap needs --workload")?;
+            let entry = FleetEntry::build(platform, workload, &cfg)?;
+            let knots = entry.atlas.len();
+            let energy_knots = entry.energy.len();
+            let key = entry.key;
+            let epoch = swap_entry(&dir, &entry)?;
+            println!(
+                "swapped {platform}/{workload} (key {key}): {knots} deadline + {energy_knots} energy knots, library now at epoch {epoch}"
+            );
+            println!("(a pool serving this library picks the new entry up on its next reload/publish; in-process pools swap live via FleetRegistry::publish)");
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown fleet action `{other}` (expected build | inspect | swap); \
+             available platforms: {}; workloads: {}",
+            PLATFORM_PRESETS.join(", "),
+            WORKLOAD_PRESETS.join(", ")
+        )),
+    }
 }

@@ -10,6 +10,7 @@ pub mod constraints;
 pub mod heeptimize;
 pub mod loader;
 pub mod pe;
+pub mod presets;
 pub mod vf;
 
 pub use constraints::{OpConstraint, OpConstraints};

@@ -1,0 +1,102 @@
+//! Additional named platform presets beyond the paper's HEEPtimize.
+//!
+//! A device *fleet* rarely ships one SoC revision: the serving layer
+//! ([`crate::fleet`]) routes requests by platform preset, so each preset here
+//! is a complete, validated [`Platform`] with its own characterization
+//! fingerprint. [`heeptimize_hp`] is a scaled-up derivative of the paper's
+//! evaluation platform — the kind of next-revision part a deployment would
+//! run side by side with the original silicon.
+
+use super::constraints::{OpConstraint, OpConstraints};
+use super::heeptimize::{heeptimize, CARUS, CGRA, CPU};
+use super::pe::DmaSpec;
+use super::vf::{VfPoint, VfTable};
+use super::Platform;
+use crate::ir::DataWidth::{Int16, Int32, Int8};
+use crate::ir::KernelType;
+use crate::util::units::{Bytes, Power};
+
+/// HEEPtimize-HP: a hypothetical higher-performance spin of the paper's
+/// platform. Same PE set and power models, but:
+///
+/// * one extra V-F point (1.00 V @ 800 MHz) extending the top of the range,
+/// * 128 KiB local memories and a 256 KiB L2 (double the originals),
+/// * a burst-capable DMA (2.6 B/cycle, 80-cycle setup) instead of the
+///   single-beat OBI channel,
+/// * relaxed operational constraints (larger maximum dimensions).
+///
+/// Structurally different from [`heeptimize`] in every fingerprinted field,
+/// so the fleet layer treats it as a distinct platform.
+pub fn heeptimize_hp() -> Platform {
+    let mut p = heeptimize();
+    p.name = "heeptimize-hp".into();
+
+    let mut points: Vec<VfPoint> = p.vf.points().to_vec();
+    points.push(VfPoint::new(1.00, 800.0));
+    p.vf = VfTable::new(points);
+
+    p.l2 = Bytes::from_kib(256);
+    p.sleep_power = Power::from_uw(158.0); // larger SRAM macros leak more
+
+    for pe in &mut p.pes {
+        if pe.lm.is_some() {
+            pe.lm = Some(Bytes::from_kib(128));
+        }
+        if pe.dma.is_some() {
+            pe.dma = Some(DmaSpec {
+                bytes_per_cycle: 2.6,
+                setup_cycles: 80,
+            });
+        }
+    }
+
+    let mut constraints = OpConstraints::new();
+    constraints.allow_all(CPU);
+    let fixed = [Int8, Int16, Int32];
+    for ty in [
+        KernelType::MatMul,
+        KernelType::Conv2d,
+        KernelType::Add,
+        KernelType::Norm,
+        KernelType::Scale,
+        KernelType::Transpose,
+    ] {
+        constraints.allow(CGRA, ty, OpConstraint::with_max_dim(2048).widths(&fixed));
+        constraints.allow(CARUS, ty, OpConstraint::with_max_dim(1024).widths(&fixed));
+    }
+    p.constraints = constraints;
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hp_preset_validates() {
+        let p = heeptimize_hp();
+        p.validate().unwrap();
+        assert_eq!(p.name, "heeptimize-hp");
+        assert_eq!(p.vf.len(), 5);
+        assert_eq!(p.l2, Bytes::from_kib(256));
+    }
+
+    #[test]
+    fn hp_differs_from_base_structurally() {
+        let base = heeptimize();
+        let hp = heeptimize_hp();
+        assert_ne!(base.vf.len(), hp.vf.len());
+        assert_ne!(base.l2, hp.l2);
+        assert_ne!(
+            base.pes[CGRA.0].dma.unwrap().bytes_per_cycle,
+            hp.pes[CGRA.0].dma.unwrap().bytes_per_cycle
+        );
+    }
+
+    #[test]
+    fn hp_tops_out_faster() {
+        let hp = heeptimize_hp();
+        assert!(hp.vf.max().f.as_mhz() > 690.0 + 1.0);
+        assert_eq!(hp.vf.min().label(), "0.50V@122MHz");
+    }
+}

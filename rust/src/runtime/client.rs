@@ -5,10 +5,12 @@ use crate::util::error::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-// Without `--cfg medea_pjrt`, `xla::` resolves to the in-crate stub whose
-// client constructor fails cleanly; with it, to the real bindings (which the
-// build must then provide as an external crate).
-#[cfg(not(medea_pjrt))]
+// Two cfg gates keep every build combination compilable offline:
+// `--cfg medea_pjrt` opts into the functional path (type-checked against the
+// in-crate stub, whose client constructor fails cleanly at runtime), while
+// `--cfg medea_pjrt_sys` additionally resolves `xla::` to the real vendored
+// bindings — which the build must then provide as an external crate.
+#[cfg(not(medea_pjrt_sys))]
 use super::xla_stub as xla;
 
 /// A loaded PJRT runtime with an executable cache.
@@ -116,12 +118,14 @@ impl Runtime {
         self.cache.len()
     }
 
-    /// Whether this build can execute PJRT artifacts at all. `false` when
-    /// compiled against the stub backend (no `--cfg medea_pjrt`), in which
-    /// case [`Runtime::new`] always errors and serving degrades to
-    /// schedule-only responses.
+    /// Whether this build can actually execute PJRT artifacts: it needs
+    /// both `--cfg medea_pjrt` (the functional path) and
+    /// `--cfg medea_pjrt_sys` (the real vendored `xla` bindings replacing
+    /// the in-tree stub). With either cfg missing, [`Runtime::new`] always
+    /// errors and serving degrades to schedule-only responses — and
+    /// artifact-gated tests skip instead of panicking on the stub.
     pub fn available() -> bool {
-        cfg!(medea_pjrt)
+        cfg!(all(medea_pjrt, medea_pjrt_sys))
     }
 }
 

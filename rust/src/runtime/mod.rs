@@ -8,7 +8,7 @@
 pub mod artifacts;
 pub mod client;
 pub mod infer;
-#[cfg(not(medea_pjrt))]
+#[cfg(not(medea_pjrt_sys))]
 pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactManifest, ArtifactMeta};

@@ -118,6 +118,7 @@ impl ScheduleAtlas {
         assert!(cfg.growth > 1.0, "atlas growth must be > 1");
         assert!(cfg.relax_factor > 1.0, "atlas relax_factor must be > 1");
         assert!(cfg.margin > 0.0 && cfg.margin <= 1.0, "atlas margin in (0, 1]");
+        assert!(cfg.max_knots >= 2, "atlas max_knots must be >= 2");
 
         let t_min = medea.min_makespan(workload)?;
         let t_max = medea.max_makespan(workload)?;
@@ -140,6 +141,20 @@ impl ScheduleAtlas {
             d = d * cfg.growth;
         }
         grid.push(hi);
+        if grid.len() > cfg.max_knots {
+            // Never truncate silently: the caller chose a cap that cannot
+            // even hold the base grid, so lookups between the last kept
+            // knot and `hi` will snap further down than `growth` implies.
+            crate::log_warn!(
+                "atlas knot cap {} below the {}-point base grid: truncating \
+                 (deadlines above {:.1} ms collapse onto the final knot)",
+                cfg.max_knots,
+                grid.len(),
+                grid[cfg.max_knots - 2].as_ms()
+            );
+            grid.truncate(cfg.max_knots - 1);
+            grid.push(hi);
+        }
 
         let mut knots: Vec<AtlasKnot> = Vec::with_capacity(grid.len());
         let mut last_invalid: Option<Time> = None;
@@ -169,7 +184,7 @@ impl ScheduleAtlas {
             let mut bad = last_invalid.unwrap_or(t_min);
             let mut good = knots[0].deadline;
             for _ in 0..5 {
-                if good.raw() / bad.raw() < 1.005 {
+                if good.raw() / bad.raw() < 1.005 || knots.len() >= cfg.max_knots {
                     break;
                 }
                 let mid = Time((bad.raw() * good.raw()).sqrt());
@@ -204,6 +219,29 @@ impl ScheduleAtlas {
                     }
                 } else {
                     i += 1;
+                }
+            }
+            // Never cap silently: report the worst interval the knot budget
+            // left unrefined, so operators know to raise `max_knots` (or
+            // accept the extra energy pessimism between those knots).
+            if knots.len() >= cfg.max_knots {
+                let worst = knots
+                    .windows(2)
+                    .map(|w| {
+                        let e_lo = w[0].schedule.active_energy().raw();
+                        let e_hi = w[1].schedule.active_energy().raw();
+                        let rel = (e_lo - e_hi).abs() / e_lo.max(e_hi).max(f64::MIN_POSITIVE);
+                        let splittable = w[1].deadline.raw() / w[0].deadline.raw() > 1.01;
+                        if splittable { rel } else { 0.0 }
+                    })
+                    .fold(0.0, f64::max);
+                if worst > cfg.refine_rel_energy {
+                    crate::log_warn!(
+                        "atlas knot cap {} reached: Pareto refinement truncated with a \
+                         {:.1} % relative energy gap still unrefined",
+                        cfg.max_knots,
+                        worst * 100.0
+                    );
                 }
             }
         }
@@ -465,6 +503,25 @@ mod tests {
         let b = back.resolve(d).unwrap();
         assert!((a.active_energy().raw() - b.active_energy().raw()).abs() < 1e-15);
         assert_eq!(a.decisions.len(), b.decisions.len());
+    }
+
+    #[test]
+    fn knot_cap_is_a_hard_invariant() {
+        // An aggressive refinement threshold under a tiny cap: the build
+        // must truncate (with a warning) rather than exceed the cap.
+        let ctx = ExpContext::paper();
+        let atlas = ScheduleAtlas::build(
+            &ctx.medea(),
+            &ctx.workload,
+            &AtlasConfig {
+                refine_rel_energy: 1e-4,
+                max_knots: 6,
+                ..small_cfg()
+            },
+        )
+        .unwrap();
+        assert!(atlas.len() <= 6, "cap exceeded: {} knots", atlas.len());
+        assert!(!atlas.is_empty());
     }
 
     #[test]

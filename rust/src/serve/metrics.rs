@@ -18,10 +18,14 @@ pub struct ServeMetrics {
     pub per_worker_requests: Vec<u64>,
     /// All worker metrics merged.
     pub aggregate: Metrics,
-    /// Requests shed because the deadline was below the feasibility floor.
+    /// Requests shed because the deadline (or energy budget) was below the
+    /// corresponding atlas floor.
     pub shed_below_floor: u64,
     /// Requests shed because the admission queue was full.
     pub shed_queue_full: u64,
+    /// Requests shed because no atlas was published for the requested
+    /// (platform, workload) pair — fleet routing only, 0 elsewhere.
+    pub shed_unknown_entry: u64,
 }
 
 impl ServeMetrics {
@@ -43,11 +47,18 @@ impl ServeMetrics {
             aggregate: agg,
             shed_below_floor,
             shed_queue_full,
+            shed_unknown_entry: 0,
         }
     }
 
+    /// Attach the fleet router's unknown-entry shed count.
+    pub fn with_unknown_entries(mut self, shed_unknown_entry: u64) -> ServeMetrics {
+        self.shed_unknown_entry = shed_unknown_entry;
+        self
+    }
+
     pub fn total_shed(&self) -> u64 {
-        self.shed_below_floor + self.shed_queue_full
+        self.shed_below_floor + self.shed_queue_full + self.shed_unknown_entry
     }
 
     pub fn p50(&self) -> Duration {
@@ -60,7 +71,7 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "workers={} requests={} [{}] misses={} shed={} (floor={} full={}) energy={:.1} uJ p50={:?} p99={:?}",
+            "workers={} requests={} [{}] misses={} shed={} (floor={} full={} unknown={}) energy={:.1} uJ p50={:?} p99={:?}",
             self.workers,
             self.aggregate.requests,
             self.per_worker_requests
@@ -72,6 +83,7 @@ impl ServeMetrics {
             self.total_shed(),
             self.shed_below_floor,
             self.shed_queue_full,
+            self.shed_unknown_entry,
             self.aggregate.sim_energy_j * 1e6,
             self.p50(),
             self.p99(),
@@ -89,6 +101,7 @@ impl ServeMetrics {
         o.insert("deadline_misses", self.aggregate.deadline_misses);
         o.insert("shed_below_floor", self.shed_below_floor);
         o.insert("shed_queue_full", self.shed_queue_full);
+        o.insert("shed_unknown_entry", self.shed_unknown_entry);
         o.insert("sim_energy_uj", self.aggregate.sim_energy_j * 1e6);
         o.insert("sim_active_ms", self.aggregate.sim_active_s * 1e3);
         o.insert("host_p50_us", self.p50().as_secs_f64() * 1e6);
@@ -120,5 +133,9 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("requests").unwrap().as_u64(), Some(3));
         assert_eq!(j.get("shed_below_floor").unwrap().as_u64(), Some(4));
+        let m = m.with_unknown_entries(3);
+        assert_eq!(m.total_shed(), 9);
+        assert!(m.summary().contains("unknown=3"));
+        assert_eq!(m.to_json().get("shed_unknown_entry").unwrap().as_u64(), Some(3));
     }
 }

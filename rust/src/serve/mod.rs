@@ -16,14 +16,19 @@
 //!   requests with a typed [`queue::Rejection`] instead of a scheduling
 //!   error.
 //! * [`pool`] — the sharded worker pool: N threads, one PJRT runtime handle
-//!   each, sharing the atlas behind an `Arc`, round-robin dispatch, bounded
-//!   per-worker schedule LRUs, graceful draining shutdown.
+//!   each, sharing the atlas behind an `Arc`, EDF-aware dispatch
+//!   (round-robin while shard backlogs balance, least-backlogged shard when
+//!   they skew), bounded per-worker schedule LRUs, graceful draining
+//!   shutdown.
 //! * [`metrics`] — cross-worker aggregation (p50/p99 host latency, energy,
 //!   deadline-miss and shed counts) merged from per-worker
 //!   [`crate::coordinator::Metrics`].
 //!
 //! The legacy [`crate::coordinator::Coordinator`] is a thin single-worker
-//! compatibility wrapper over [`pool::ServePool`].
+//! compatibility wrapper over [`pool::ServePool`]. Serving *many* (platform,
+//! workload) pairs from one process — with live atlas hot-swap and
+//! energy-budget demands — is the [`crate::fleet`] layer, built on the same
+//! queue and metrics primitives.
 
 pub mod atlas;
 pub mod metrics;

@@ -131,6 +131,42 @@ struct ShardState {
 struct Shard {
     state: Mutex<ShardState>,
     cv: Condvar,
+    /// Queue depth mirror, readable without taking the shard lock: the
+    /// dispatcher samples every shard's backlog on each submit.
+    depth: AtomicUsize,
+}
+
+/// Backlog skew (max − min queue depth) beyond which dispatch abandons
+/// round-robin for the least-backlogged shard.
+pub(crate) const DISPATCH_SKEW_THRESHOLD: usize = 2;
+
+/// EDF-aware dispatch: plain round-robin while shard backlogs are balanced
+/// (it preserves submission-order fairness and costs one atomic), but when
+/// depths skew — deadline-heavy bursts landing on one shard, a worker stuck
+/// on a slow request — pick the least-backlogged shard instead. Under EDF
+/// queues, backlog is the work queued ahead of the new request, so the
+/// least-backlogged shard is where it keeps the most laxity; this is the
+/// small-heuristic alternative to full cross-shard work stealing.
+pub(crate) fn pick_shard(depths: impl Iterator<Item = usize>, round_robin: usize) -> usize {
+    let mut n = 0;
+    let mut min_i = 0;
+    let mut min_d = usize::MAX;
+    let mut max_d = 0;
+    for (i, d) in depths.enumerate() {
+        n += 1;
+        if d < min_d {
+            min_d = d;
+            min_i = i;
+        }
+        if d > max_d {
+            max_d = d;
+        }
+    }
+    if max_d.saturating_sub(min_d) >= DISPATCH_SKEW_THRESHOLD {
+        min_i
+    } else {
+        round_robin % n.max(1)
+    }
 }
 
 /// Design-time state shared read-only by every worker.
@@ -197,6 +233,7 @@ impl ServePool {
                     stopping: false,
                 }),
                 cv: Condvar::new(),
+                depth: AtomicUsize::new(0),
             });
             let handle = std::thread::Builder::new()
                 .name(format!("medea-serve-{i}"))
@@ -236,15 +273,17 @@ impl ServePool {
         self.workers.len()
     }
 
-    /// Round-robin dispatch into a worker's EDF queue. Returns a [`Ticket`]
-    /// on admission, or the typed shed reason.
+    /// Dispatch into a worker's EDF queue ([`pick_shard`]: round-robin while
+    /// backlogs are balanced, least-backlogged shard when they skew).
+    /// Returns a [`Ticket`] on admission, or the typed shed reason.
     pub fn submit(
         &self,
         window: EegWindow,
         deadline: Time,
     ) -> std::result::Result<Ticket, Rejection> {
-        let idx = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
-        let shard = &self.shards[idx];
+        let rr = self.next.fetch_add(1, Ordering::Relaxed);
+        let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
+        let shard = &self.shards[pick_shard(depths, rr)];
         let (tx, rx) = mpsc::channel();
         let job = Job {
             window,
@@ -259,11 +298,13 @@ impl ServePool {
         let capacity = st.queue.capacity();
         match st.queue.push(deadline, job) {
             Admission::Accepted => {
+                shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 drop(st);
                 shard.cv.notify_one();
                 Ok(Ticket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
+                shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
                 let _ = evicted
                     .reply
@@ -274,13 +315,13 @@ impl ServePool {
             }
             Admission::Rejected { reason, .. } => {
                 match reason {
-                    Rejection::BelowFloor { .. } => {
+                    Rejection::BelowFloor { .. } | Rejection::BelowEnergyFloor { .. } => {
                         self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
                     }
                     Rejection::QueueFull { .. } => {
                         self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
                     }
-                    Rejection::ShuttingDown => {}
+                    Rejection::UnknownEntry { .. } | Rejection::ShuttingDown => {}
                 }
                 Err(reason)
             }
@@ -359,6 +400,7 @@ fn worker_loop(
             let mut st = shard.state.lock().expect("shard lock poisoned");
             loop {
                 if let Some((_, job)) = st.queue.pop() {
+                    shard.depth.store(st.queue.len(), Ordering::Relaxed);
                     break Some(job);
                 }
                 if st.stopping {
@@ -473,8 +515,10 @@ mod tests {
         let m = pool.shutdown();
         assert_eq!(m.workers, 2);
         assert_eq!(m.aggregate.requests, 16);
-        // Round-robin dispatch from one thread splits evenly.
-        assert_eq!(m.per_worker_requests, vec![8, 8]);
+        // Dispatch is round-robin while backlogs stay balanced, but workers
+        // drain concurrently with the submit burst, so only the total is
+        // deterministic.
+        assert_eq!(m.per_worker_requests.iter().sum::<u64>(), 16);
         assert_eq!(m.aggregate.deadline_misses, 0);
         assert_eq!(m.total_shed(), 0);
     }
@@ -498,6 +542,20 @@ mod tests {
         let m = pool.shutdown();
         assert_eq!(m.shed_below_floor, 1);
         assert_eq!(m.aggregate.requests, 1);
+    }
+
+    #[test]
+    fn dispatch_is_round_robin_until_backlogs_skew() {
+        let pick = |depths: &[usize], rr| pick_shard(depths.iter().copied(), rr);
+        // Balanced: the round-robin counter decides.
+        assert_eq!(pick(&[0, 0, 0], 0), 0);
+        assert_eq!(pick(&[0, 0, 0], 4), 1);
+        assert_eq!(pick(&[3, 3, 4], 2), 2); // skew 1 < threshold
+        // Skewed: the least-backlogged shard wins regardless of the counter.
+        assert_eq!(pick(&[5, 0, 5], 0), 1);
+        assert_eq!(pick(&[2, 7, 4], 1), 0);
+        // Ties on minimum depth resolve to the first such shard.
+        assert_eq!(pick(&[9, 0, 0], 2), 1);
     }
 
     #[test]

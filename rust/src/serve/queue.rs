@@ -14,7 +14,7 @@
 //! Admitted entries pop in earliest-deadline-first order, FIFO among equal
 //! deadlines.
 
-use crate::util::units::Time;
+use crate::util::units::{Energy, Time};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::fmt;
@@ -26,6 +26,11 @@ pub enum Rejection {
     /// no precomputed schedule meets it, and nothing below the estimator's
     /// minimum makespan ever could on this platform.
     BelowFloor { requested: Time, floor: Time },
+    /// The energy cap is below the atlas's sim-validated energy floor: even
+    /// the unconstrained energy-minimal schedule exceeds it.
+    BelowEnergyFloor { requested: Energy, floor: Energy },
+    /// No atlas is published for the requested (platform, workload) pair.
+    UnknownEntry { platform: String, workload: String },
     /// The queue is at capacity and this request had the most slack.
     QueueFull { capacity: usize },
     /// The pool is shutting down.
@@ -41,6 +46,15 @@ impl fmt::Display for Rejection {
                 requested.as_ms(),
                 floor.as_ms()
             ),
+            Rejection::BelowEnergyFloor { requested, floor } => write!(
+                f,
+                "shed: energy budget {:.1} uJ below energy floor {:.1} uJ",
+                requested.as_uj(),
+                floor.as_uj()
+            ),
+            Rejection::UnknownEntry { platform, workload } => {
+                write!(f, "shed: no atlas for platform `{platform}` workload `{workload}`")
+            }
             Rejection::QueueFull { capacity } => {
                 write!(f, "shed: queue full (capacity {capacity})")
             }
@@ -105,9 +119,9 @@ pub struct EdfQueue<T> {
 }
 
 impl<T> EdfQueue<T> {
-    /// `capacity` must be ≥ 1.
+    /// A queue with capacity 0 admits nothing: every push is rejected with
+    /// [`Rejection::QueueFull`] (useful as a drain/bypass sentinel).
     pub fn new(capacity: usize) -> EdfQueue<T> {
-        assert!(capacity >= 1, "EdfQueue capacity must be >= 1");
         EdfQueue {
             heap: BinaryHeap::with_capacity(capacity + 1),
             capacity,
@@ -288,6 +302,80 @@ mod tests {
     }
 
     #[test]
+    fn capacity_zero_rejects_everything() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(0);
+        match q.push(ms(50.0), "x") {
+            Admission::Rejected { item, reason } => {
+                assert_eq!(item, "x");
+                assert_eq!(reason, Rejection::QueueFull { capacity: 0 });
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        // The floor check still runs first.
+        let mut q: EdfQueue<&str> = EdfQueue::new(0).with_floor(ms(30.0));
+        assert!(matches!(
+            q.push(ms(10.0), "y"),
+            Admission::Rejected {
+                reason: Rejection::BelowFloor { .. },
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn capacity_one_swaps_only_for_tighter_deadlines() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(1);
+        assert!(matches!(q.push(ms(100.0), "a"), Admission::Accepted));
+        // Equal deadline: the incoming request is the youngest, so it sheds.
+        match q.push(ms(100.0), "dup") {
+            Admission::Rejected { item, reason } => {
+                assert_eq!(item, "dup");
+                assert_eq!(reason, Rejection::QueueFull { capacity: 1 });
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // Slacker: also sheds.
+        assert!(matches!(q.push(ms(101.0), "late"), Admission::Rejected { .. }));
+        // Tighter: evicts the sole occupant.
+        match q.push(ms(99.0), "tight") {
+            Admission::AcceptedShedding {
+                evicted,
+                evicted_deadline,
+            } => {
+                assert_eq!(evicted, "a");
+                assert_eq!(evicted_deadline, ms(100.0));
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().1, "tight");
+    }
+
+    #[test]
+    fn overflow_among_duplicate_deadlines_sheds_the_youngest() {
+        let mut q: EdfQueue<u32> = EdfQueue::new(3);
+        q.push(ms(200.0), 0);
+        q.push(ms(200.0), 1);
+        q.push(ms(200.0), 2);
+        // Tighter incoming: among the equal-latest entries, the youngest
+        // admission (2) is shed, preserving FIFO fairness for the rest.
+        match q.push(ms(50.0), 99) {
+            Admission::AcceptedShedding {
+                evicted,
+                evicted_deadline,
+            } => {
+                assert_eq!(evicted, 2);
+                assert_eq!(evicted_deadline, ms(200.0));
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![99, 0, 1]);
+    }
+
+    #[test]
     fn rejection_messages_render() {
         let r = Rejection::BelowFloor {
             requested: ms(5.0),
@@ -296,5 +384,15 @@ mod tests {
         assert!(r.to_string().contains("feasibility floor"));
         assert!(Rejection::QueueFull { capacity: 7 }.to_string().contains("7"));
         assert!(Rejection::ShuttingDown.to_string().contains("shutting down"));
+        let e = Rejection::BelowEnergyFloor {
+            requested: crate::util::units::Energy::from_uj(10.0),
+            floor: crate::util::units::Energy::from_uj(25.0),
+        };
+        assert!(e.to_string().contains("energy floor"));
+        let u = Rejection::UnknownEntry {
+            platform: "soc-x".into(),
+            workload: "net-y".into(),
+        };
+        assert!(u.to_string().contains("soc-x") && u.to_string().contains("net-y"));
     }
 }

@@ -137,6 +137,48 @@ mod tests {
     }
 
     #[test]
+    fn eviction_follows_full_recency_order() {
+        // Interleave inserts, hits, and replacements, then drain by
+        // overflowing: evictions must come out exactly in recency order.
+        let mut c: LruCache<u64, u64> = LruCache::new(4);
+        for k in [1, 2, 3, 4] {
+            c.insert(k, k * 10);
+        }
+        assert_eq!(c.get(&2), Some(&20)); // order now 1, 3, 4, 2
+        c.insert(3, 33); // replace touches: order now 1, 4, 2, 3
+        c.get_or_insert_with(1, || unreachable!()); // order now 4, 2, 3, 1
+        let mut evicted = Vec::new();
+        for k in [100, 101, 102, 103] {
+            evicted.push(c.insert(k, 0).unwrap().0);
+        }
+        assert_eq!(evicted, vec![4, 2, 3, 1]);
+    }
+
+    #[test]
+    fn capacity_one_always_holds_the_latest() {
+        let mut c: LruCache<u64, &str> = LruCache::new(1);
+        assert!(c.insert(1, "a").is_none());
+        assert_eq!(c.insert(2, "b"), Some((1, "a")));
+        assert_eq!(c.insert(3, "c"), Some((2, "b")));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&3), Some(&"c"));
+        assert!(c.get(&1).is_none());
+        // Replacing the sole entry evicts nothing.
+        assert!(c.insert(3, "c2").is_none());
+        assert_eq!(c.get(&3), Some(&"c2"));
+    }
+
+    #[test]
+    fn get_miss_does_not_disturb_order() {
+        let mut c: LruCache<u64, u64> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert!(c.get(&99).is_none());
+        // 1 is still the LRU entry.
+        assert_eq!(c.insert(3, 30).unwrap(), (1, 10));
+    }
+
+    #[test]
     fn stays_bounded_under_churn() {
         let mut c: LruCache<u64, u64> = LruCache::new(8);
         for i in 0..1000 {

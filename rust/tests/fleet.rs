@@ -1,0 +1,266 @@
+//! Fleet-subsystem integration tests: one registry serving multiple
+//! platform/workload entries, live hot-swap under traffic, energy-budget
+//! resolution, and the on-disk library round trip.
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::fleet::{
+    load_library, save_library, swap_entry, Demand, EnergyAtlasConfig, FleetConfig, FleetEntry,
+    FleetPool, FleetPoolConfig, FleetRegistry,
+};
+use medea::serve::{AtlasConfig, Rejection};
+use medea::sim::replay::simulate;
+use medea::util::rng::Rng;
+use medea::util::units::Energy;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+const PLATFORMS: [&str; 2] = ["heeptimize", "heeptimize-hp"];
+const WORKLOADS: [&str; 2] = ["tsd-core", "tsd-small"];
+
+/// Coarse sweeps keep the 2×2 build affordable; correctness properties do
+/// not depend on knot density.
+fn fast_cfg() -> FleetConfig {
+    FleetConfig {
+        atlas: AtlasConfig {
+            relax_factor: 6.0,
+            growth: 1.7,
+            refine_rel_energy: 0.0,
+            max_knots: 12,
+            ..AtlasConfig::default()
+        },
+        energy: EnergyAtlasConfig {
+            growth: 1.7,
+            max_knots: 6,
+            bisect_iters: 10,
+            ..EnergyAtlasConfig::default()
+        },
+    }
+}
+
+/// The full 2 platforms × 2 workloads library, built once per test binary.
+fn shared_registry() -> Arc<FleetRegistry> {
+    static REG: OnceLock<Arc<FleetRegistry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let registry = FleetRegistry::new();
+        for p in PLATFORMS {
+            for w in WORKLOADS {
+                registry.publish(FleetEntry::build(p, w, &fast_cfg()).unwrap());
+            }
+        }
+        Arc::new(registry)
+    })
+    .clone()
+}
+
+fn pool_config(workers: usize) -> FleetPoolConfig {
+    FleetPoolConfig {
+        workers,
+        queue_capacity: 64,
+        // Nonexistent on purpose: exercises the schedule-only path.
+        artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+    }
+}
+
+#[test]
+fn one_registry_serves_two_platforms_and_two_workloads() {
+    let registry = shared_registry();
+    assert_eq!(registry.len(), 4);
+    let pool = FleetPool::start(registry.clone(), pool_config(2)).unwrap();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 7);
+
+    let mut tickets = Vec::new();
+    for p in PLATFORMS {
+        for w in WORKLOADS {
+            let floor = registry.resolve_named(p, w).unwrap().entry.atlas.floor();
+            for _ in 0..2 {
+                let ticket = pool
+                    .submit(p, w, gen.next_window(), Demand::Deadline(floor * 4.0))
+                    .unwrap();
+                tickets.push((p, w, ticket));
+            }
+        }
+    }
+    for (p, w, ticket) in tickets {
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.platform, p);
+        assert_eq!(out.workload, w);
+        assert!(out.sim.deadline_met, "{p}/{w} missed its deadline");
+        assert_eq!(out.scheduler, "medea");
+    }
+
+    // Unrouteable tags shed with a typed rejection, never a panic or solve.
+    let err = pool
+        .submit(
+            "no-such-soc",
+            "tsd-core",
+            gen.next_window(),
+            Demand::Deadline(medea::util::units::Time::from_ms(100.0)),
+        )
+        .unwrap_err();
+    assert!(matches!(err, Rejection::UnknownEntry { .. }), "got {err:?}");
+
+    let m = pool.shutdown();
+    assert_eq!(m.workers, 2);
+    assert_eq!(m.aggregate.requests, 8);
+    assert_eq!(m.aggregate.deadline_misses, 0);
+    assert_eq!(m.shed_unknown_entry, 1);
+    assert_eq!(m.total_shed(), 1);
+}
+
+#[test]
+fn hot_swap_mid_stream_changes_lookups_without_rejecting_inflight() {
+    // A private registry so the swap does not disturb the shared one.
+    let registry = Arc::new(FleetRegistry::new());
+    let e1 = FleetEntry::build("heeptimize", "tsd-small", &fast_cfg()).unwrap();
+    let key = e1.key;
+    let n1 = e1.atlas.len();
+    let floor = e1.atlas.floor();
+    let epoch1 = registry.publish(e1);
+
+    let pool = FleetPool::start(registry.clone(), pool_config(1)).unwrap();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 8);
+    let submit = |gen: &mut EegGenerator| {
+        pool.submit(
+            "heeptimize",
+            "tsd-small",
+            gen.next_window(),
+            Demand::Deadline(floor * 4.0),
+        )
+        .unwrap()
+    };
+
+    // First wave admitted under epoch 1, then swap in a finer rebuild while
+    // those jobs are still queued/executing, then a second wave.
+    let first: Vec<_> = (0..6).map(|_| submit(&mut gen)).collect();
+    let mut finer = fast_cfg();
+    finer.atlas.growth = 1.25;
+    let e2 = FleetEntry::build("heeptimize", "tsd-small", &finer).unwrap();
+    assert_eq!(e2.key, key, "same content must key identically");
+    let n2 = e2.atlas.len();
+    assert!(n2 >= n1, "finer sweep lost knots ({n2} vs {n1})");
+    let epoch2 = registry.publish(e2);
+    assert!(epoch2 > epoch1);
+    let second: Vec<_> = (0..6).map(|_| submit(&mut gen)).collect();
+
+    // Every in-flight request of the first wave completes under the entry
+    // it was admitted with; the second wave sees the swapped entry.
+    for ticket in first {
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.epoch, epoch1);
+        assert!(out.sim.deadline_met);
+    }
+    for ticket in second {
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.epoch, epoch2);
+        assert!(out.sim.deadline_met);
+    }
+    assert_eq!(registry.resolve(&key).unwrap().entry.atlas.len(), n2);
+
+    let m = pool.shutdown();
+    assert_eq!(m.aggregate.requests, 12);
+    assert_eq!(m.total_shed(), 0);
+}
+
+#[test]
+fn energy_budget_requests_resolve_through_the_library() {
+    let registry = shared_registry();
+    let resolved = registry.resolve_named("heeptimize", "tsd-small").unwrap();
+    let entry = &resolved.entry;
+    let floor = entry.energy.floor();
+
+    // Sim-validated knots: any cap at or above the floor resolves to a
+    // schedule whose *simulated* active energy fits the cap.
+    let mut rng = Rng::new(0xF1EE7);
+    for case in 0..40 {
+        let budget = Energy(rng.range_f64(floor.raw(), floor.raw() * 8.0));
+        let schedule = entry.energy.resolve(budget).unwrap();
+        let sim = simulate(&entry.workload, &entry.platform, &entry.model, &schedule);
+        assert!(
+            sim.active_energy.raw() <= budget.raw() * (1.0 + 1e-9),
+            "case {case}: cap {:.1} uJ, sim {:.1} uJ",
+            budget.as_uj(),
+            sim.active_energy.as_uj()
+        );
+    }
+
+    // The same path through the pool: typed shed below the energy floor,
+    // served within the cap above it.
+    let pool = FleetPool::start(registry.clone(), pool_config(2)).unwrap();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 9);
+    match pool.submit(
+        "heeptimize",
+        "tsd-small",
+        gen.next_window(),
+        Demand::EnergyBudget(floor * 0.4),
+    ) {
+        Err(Rejection::BelowEnergyFloor { requested, floor: f }) => {
+            assert!(requested.raw() < f.raw());
+        }
+        other => panic!("expected BelowEnergyFloor, got {other:?}"),
+    }
+    let cap = floor * 2.0;
+    let out = pool
+        .infer(
+            "heeptimize",
+            "tsd-small",
+            gen.next_window(),
+            Demand::EnergyBudget(cap),
+        )
+        .unwrap();
+    assert_eq!(out.demand, Demand::EnergyBudget(cap));
+    let knot_budget = out.knot_budget.expect("energy demand records its knot");
+    assert!(knot_budget.raw() <= cap.raw() * (1.0 + 1e-9));
+    assert!(out.sim.active_energy.raw() <= cap.raw() * (1.0 + 1e-9));
+
+    let m = pool.shutdown();
+    assert_eq!(m.shed_below_floor, 1);
+    assert_eq!(m.aggregate.requests, 1);
+}
+
+#[test]
+fn library_round_trips_swaps_and_skips_stale_entries() {
+    let dir = std::env::temp_dir().join("medea_fleet_test_lib");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let registry = FleetRegistry::new();
+    for p in PLATFORMS {
+        registry.publish(FleetEntry::build(p, "tsd-small", &fast_cfg()).unwrap());
+    }
+    save_library(&dir, &registry).unwrap();
+
+    let loaded = load_library(&dir).unwrap();
+    assert_eq!(loaded.len(), 2);
+    assert_eq!(loaded.epoch(), registry.epoch());
+    for r in registry.entries() {
+        let l = loaded.resolve(&r.entry.key).unwrap();
+        assert_eq!(l.entry.atlas.len(), r.entry.atlas.len());
+        assert_eq!(l.entry.energy.len(), r.entry.energy.len());
+        assert!(
+            (l.entry.atlas.floor().raw() - r.entry.atlas.floor().raw()).abs() < 1e-12,
+            "floor drifted across the disk round trip"
+        );
+    }
+
+    // An atomic on-disk swap bumps the index epoch and keeps entry count.
+    let mut coarser = fast_cfg();
+    coarser.atlas.relax_factor = 5.0;
+    let e2 = FleetEntry::build("heeptimize", "tsd-small", &coarser).unwrap();
+    let epoch = swap_entry(&dir, &e2).unwrap();
+    assert_eq!(epoch, registry.epoch() + 1);
+    let reloaded = load_library(&dir).unwrap();
+    assert_eq!(reloaded.len(), 2);
+    assert_eq!(reloaded.epoch(), epoch);
+
+    // Corrupting an entry's content key makes it stale: loading skips it
+    // (with a warning) instead of serving schedules for the wrong hardware.
+    let path = dir.join("entries").join(format!("{}.json", e2.key));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let bad = text.replace(
+        &e2.key.to_string(),
+        "0000000000000000-0000000000000000",
+    );
+    std::fs::write(&path, bad).unwrap();
+    let partial = load_library(&dir).unwrap();
+    assert_eq!(partial.len(), 1);
+    assert!(partial.resolve(&e2.key).is_none());
+}

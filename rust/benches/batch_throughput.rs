@@ -1,0 +1,164 @@
+//! Bench: batched vs solo dispatch throughput on the stub backend.
+//!
+//! The batch admission layer exists to amortize per-dispatch overhead
+//! (simulated on-device run + PJRT invocation) across compatible requests.
+//! This bench drives the same burst — identical lax deadlines, so every
+//! request resolves to one atlas knot — through two pools that differ only
+//! in `BatchConfig`:
+//!
+//! * **solo**  — `max_batch = 1`, the legacy one-dispatch-per-request path;
+//! * **batch** — `max_batch = 8`, opportunistic coalescing (no fill window).
+//!
+//! Acceptance bar: ≥ 2× requests/sec at batch size 8, with zero deadline
+//! misses in either run. Results are printed and written to
+//! `BENCH_batch.json`.
+//!
+//! `cargo bench --bench batch_throughput` (set MEDEA_BENCH_FAST=1 to trim).
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::json_obj;
+use medea::serve::{
+    AtlasConfig, BatchConfig, PoolConfig, ScheduleAtlas, ServeMetrics, ServePool, Ticket,
+};
+use medea::util::units::Time;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+struct LoadResult {
+    elapsed: Duration,
+    rps: f64,
+    metrics: ServeMetrics,
+}
+
+fn run_load(
+    atlas: &ScheduleAtlas,
+    batch: BatchConfig,
+    requests: usize,
+    deadline: Time,
+) -> LoadResult {
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 2,
+            queue_capacity: requests,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            batch,
+            ..PoolConfig::default()
+        },
+        atlas.clone(),
+    )
+    .expect("start pool");
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let start = Instant::now();
+    let tickets: Vec<Ticket> = (0..requests)
+        .map(|_| pool.submit(gen.next_window(), deadline).expect("admit"))
+        .collect();
+    for t in tickets {
+        let out = t.wait().expect("serve");
+        assert!(out.sim.deadline_met, "deadline violated under load");
+    }
+    let elapsed = start.elapsed();
+    let metrics = pool.shutdown();
+    assert_eq!(metrics.aggregate.requests as usize, requests);
+    assert_eq!(
+        metrics.aggregate.deadline_misses, 0,
+        "batched admission must keep zero deadline misses"
+    );
+    LoadResult {
+        elapsed,
+        rps: requests as f64 / elapsed.as_secs_f64(),
+        metrics,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("MEDEA_BENCH_FAST").is_ok();
+    let requests = if fast { 256 } else { 1024 };
+
+    let ctx = ExpContext::paper();
+    let atlas = ScheduleAtlas::build(
+        &ctx.medea(),
+        &ctx.workload,
+        &AtlasConfig {
+            relax_factor: 8.0,
+            growth: 1.4,
+            refine_rel_energy: 0.02,
+            max_knots: 48,
+            ..AtlasConfig::default()
+        },
+    )
+    .expect("atlas build");
+    // Lax enough that even a full batch of the energy-minimal knot fits:
+    // hi ≤ relax_factor·floor, so sim_time·scale(8) < 8·floor·6.95 < 64·floor.
+    let deadline = atlas.floor() * 64.0;
+    println!(
+        "atlas: {} knots, floor {:.1} ms; load: {} requests at deadline {:.0} ms\n",
+        atlas.len(),
+        atlas.floor().as_ms(),
+        requests,
+        deadline.as_ms()
+    );
+
+    let solo = run_load(&atlas, BatchConfig::solo(), requests, deadline);
+    println!(
+        "solo  (max_batch=1): {:>8.1} req/s in {:.1} ms  {}",
+        solo.rps,
+        solo.elapsed.as_secs_f64() * 1e3,
+        solo.metrics.summary()
+    );
+
+    let batched = run_load(
+        &atlas,
+        BatchConfig {
+            max_batch: 8,
+            ..BatchConfig::default()
+        },
+        requests,
+        deadline,
+    );
+    println!(
+        "batch (max_batch=8): {:>8.1} req/s in {:.1} ms  {}",
+        batched.rps,
+        batched.elapsed.as_secs_f64() * 1e3,
+        batched.metrics.summary()
+    );
+    let hist = batched.metrics.batch_histogram().to_vec();
+    println!("batch-size histogram (dispatches of size 1..): {hist:?}");
+
+    let speedup = batched.rps / solo.rps.max(1e-9);
+    println!("\nbatched vs solo dispatch: {speedup:.2}x requests/sec");
+    assert!(
+        batched.metrics.batched_requests() > 0,
+        "load burst formed no batches — amortization never engaged"
+    );
+    assert!(
+        speedup >= 2.0,
+        "batched dispatch must deliver >= 2x requests/sec at batch size 8, got {speedup:.2}x"
+    );
+
+    let out = json_obj! {
+        "requests" => requests,
+        "deadline_ms" => deadline.as_ms(),
+        "atlas_knots" => atlas.len(),
+        "solo" => json_obj! {
+            "reqs_per_sec" => solo.rps,
+            "elapsed_ms" => solo.elapsed.as_secs_f64() * 1e3,
+            "p50_us" => solo.metrics.p50().as_secs_f64() * 1e6,
+            "p99_us" => solo.metrics.p99().as_secs_f64() * 1e6,
+        },
+        "batch8" => json_obj! {
+            "reqs_per_sec" => batched.rps,
+            "elapsed_ms" => batched.elapsed.as_secs_f64() * 1e3,
+            "p50_us" => batched.metrics.p50().as_secs_f64() * 1e6,
+            "p99_us" => batched.metrics.p99().as_secs_f64() * 1e6,
+            "batched_requests" => batched.metrics.batched_requests(),
+            "solo_requests" => batched.metrics.solo_requests(),
+            "batch_hist" => medea::util::json::Json::Arr(
+                hist.iter().map(|&n| medea::util::json::Json::from(n)).collect()
+            ),
+        },
+        "speedup" => speedup,
+    };
+    std::fs::write("BENCH_batch.json", out.to_pretty()).expect("write BENCH_batch.json");
+    println!("\nwrote BENCH_batch.json");
+}

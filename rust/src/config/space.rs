@@ -63,7 +63,10 @@ impl ConfigSpace {
                     kernel.name,
                     platform.name
                 );
-                configs.sort_by(|a, b| a.time.raw().partial_cmp(&b.time.raw()).unwrap());
+                // total_cmp: a NaN estimate (corrupt calibration) must not
+                // panic enumeration — the order stays total and
+                // deterministic (NaNs sort to the extremes by sign bit).
+                configs.sort_by(|a, b| a.time.raw().total_cmp(&b.time.raw()));
                 configs
             })
             .collect();
@@ -99,7 +102,7 @@ impl ConfigSpace {
         for cs in &self.per_kernel {
             let best = cs
                 .iter()
-                .min_by(|a, b| a.energy.raw().partial_cmp(&b.energy.raw()).unwrap())
+                .min_by(|a, b| a.energy.raw().total_cmp(&b.energy.raw()))
                 .unwrap();
             t += best.time;
             e += best.energy;

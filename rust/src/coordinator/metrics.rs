@@ -18,6 +18,9 @@ pub struct Metrics {
     pub sim_energy_j: f64,
     /// Simulated on-device active time across all served windows (s).
     pub sim_active_s: f64,
+    /// Dispatch-batch size histogram: `batch_hist[i]` counts dispatches of
+    /// `i + 1` coalesced requests (solo dispatches land in `batch_hist[0]`).
+    pub batch_hist: Vec<u64>,
     host_latency: Running,
     /// Bounded reservoir of latency samples (seconds).
     latencies: Vec<f64>,
@@ -38,6 +41,30 @@ impl Metrics {
         self.sim_active_s += active_s;
         self.host_latency.push(host.as_secs_f64());
         self.reservoir_push(host.as_secs_f64());
+    }
+
+    /// Record one dispatch of `size` coalesced requests (1 = solo).
+    pub fn record_batch(&mut self, size: usize) {
+        let size = size.max(1);
+        if self.batch_hist.len() < size {
+            self.batch_hist.resize(size, 0);
+        }
+        self.batch_hist[size - 1] += 1;
+    }
+
+    /// Requests served through a multi-request dispatch (batch size ≥ 2).
+    pub fn batched_requests(&self) -> u64 {
+        self.batch_hist
+            .iter()
+            .enumerate()
+            .skip(1)
+            .map(|(i, &n)| (i as u64 + 1) * n)
+            .sum()
+    }
+
+    /// Requests served through a solo dispatch.
+    pub fn solo_requests(&self) -> u64 {
+        self.batch_hist.first().copied().unwrap_or(0)
     }
 
     /// Algorithm R: once the buffer is full, each new sample replaces a
@@ -71,6 +98,12 @@ impl Metrics {
         self.deadline_misses += other.deadline_misses;
         self.sim_energy_j += other.sim_energy_j;
         self.sim_active_s += other.sim_active_s;
+        if self.batch_hist.len() < other.batch_hist.len() {
+            self.batch_hist.resize(other.batch_hist.len(), 0);
+        }
+        for (slot, &n) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
+            *slot += n;
+        }
         self.host_latency.merge(&other.host_latency);
         for &x in &other.latencies {
             self.reservoir_push(x);
@@ -154,6 +187,29 @@ mod tests {
         let mut fresh = Metrics::default();
         fresh.merge(&a);
         assert_eq!(fresh.requests, 3);
+    }
+
+    #[test]
+    fn batch_histogram_counts_and_merges() {
+        let mut a = Metrics::default();
+        a.record_batch(1);
+        a.record_batch(4);
+        a.record_batch(4);
+        assert_eq!(a.batch_hist, vec![1, 0, 0, 2]);
+        assert_eq!(a.solo_requests(), 1);
+        assert_eq!(a.batched_requests(), 8);
+        let mut b = Metrics::default();
+        b.record_batch(2);
+        b.record_batch(6);
+        a.merge(&b);
+        assert_eq!(a.batch_hist, vec![1, 1, 0, 2, 0, 1]);
+        assert_eq!(a.batched_requests(), 8 + 2 + 6);
+        // Merging the longer histogram into the shorter also works.
+        let mut c = Metrics::default();
+        c.record_batch(1);
+        c.merge(&a);
+        assert_eq!(c.batch_hist, vec![2, 1, 0, 2, 0, 1]);
+        assert_eq!(c.solo_requests(), 2);
     }
 
     #[test]

@@ -61,6 +61,24 @@ pub struct EnergyKnot {
     pub schedule: Schedule,
 }
 
+impl EnergyKnot {
+    /// Sim-anchored batch makespan for `n` stacked windows (see
+    /// [`crate::serve::batch`]): `sim_time · (1 + a·(n−1))`.
+    pub fn batch_makespan(&self, n: usize, amortization: f64) -> Time {
+        crate::serve::batch::batch_makespan(self.sim_time, n, amortization)
+    }
+
+    /// Per-member active-energy share of an `n`-window batch: total batch
+    /// energy scales like the makespan (same power envelope), so each member
+    /// is charged `sim_energy · scale(n) / n` — non-increasing in `n`, and
+    /// exactly the sim-validated solo energy at `n = 1`. This is the dual
+    /// admission check: a member joins a batch only while the share fits
+    /// every member's requested cap.
+    pub fn batch_energy_per_member(&self, n: usize, amortization: f64) -> Energy {
+        crate::serve::batch::batch_energy_share(self.sim_energy, n, amortization)
+    }
+}
+
 /// Typed lookup failure: the cap is below the tightest sim-validated budget.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BelowEnergyFloor {
@@ -377,6 +395,24 @@ mod tests {
         let err = b.atlas.lookup(bad).unwrap_err();
         assert_eq!(err.floor.raw(), b.atlas.floor().raw());
         assert!(err.to_string().contains("energy floor"));
+    }
+
+    #[test]
+    fn batch_share_never_exceeds_solo_energy() {
+        let b = built();
+        for k in b.atlas.knots() {
+            let solo = k.batch_energy_per_member(1, 0.85);
+            assert!((solo.raw() - k.sim_energy.raw()).abs() < 1e-15);
+            for n in 2..=8usize {
+                let share = k.batch_energy_per_member(n, 0.85);
+                // Batching only ever lowers the per-member charge, so a
+                // budget the solo path fits, every batch size fits too.
+                assert!(share.raw() <= k.sim_energy.raw() + 1e-15);
+                assert!(share.raw() <= k.batch_energy_per_member(n - 1, 0.85).raw() + 1e-15);
+                // And the makespan grows sublinearly off the sim anchor.
+                assert!(k.batch_makespan(n, 0.85).raw() > k.batch_makespan(n - 1, 0.85).raw());
+            }
+        }
     }
 
     #[test]

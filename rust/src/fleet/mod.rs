@@ -26,7 +26,13 @@
 //! * [`pool`] — the [`pool::FleetPool`]: one sharded worker pool serving
 //!   every published entry, requests tagged (platform preset, workload
 //!   preset, deadline-or-energy [`pool::Demand`]), resolved in `O(log n)` at
-//!   admission.
+//!   admission, and coalesced at dispatch time into batches per
+//!   `(entry, resolved knot)` under [`crate::serve::batch::BatchConfig`].
+
+// Serving hot path: a panicking `.unwrap()` here takes a whole pool worker
+// down with it. Shed with a typed rejection or carry the error instead
+// (`.expect` with an invariant message is allowed for real invariants).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod catalog;
 pub mod energy;

@@ -12,9 +12,14 @@
 //!
 //! Dispatch, admission, and shutdown follow the serve pool: per-worker EDF
 //! queues with typed shedding, [`crate::serve::pool::pick_shard`]'s
-//! EDF-aware dispatch heuristic, graceful drain on shutdown.
+//! EDF-aware dispatch heuristic, graceful drain on shutdown — and batched
+//! dequeue ([`crate::serve::batch`]): jobs sharing one `(entry, resolved
+//! knot)` identity coalesce into a single dispatch, deadline demands gated
+//! by the sim-anchored batch makespan, energy demands by the dual
+//! per-member budget-share check.
 
 use super::entry::FleetEntry;
+use super::key::FleetKey;
 use super::registry::FleetRegistry;
 use crate::coordinator::Metrics;
 use crate::eeg::synth::EegWindow;
@@ -22,15 +27,18 @@ use crate::manager::schedule::Schedule;
 use crate::runtime::artifacts::ArtifactManifest;
 use crate::runtime::client::Runtime;
 use crate::runtime::infer::{Prediction, TsdInference};
+use crate::serve::batch::{
+    batch_energy_share, batch_makespan, batch_share, member_report, stub_predictions, BatchConfig,
+};
 use crate::serve::metrics::ServeMetrics;
-use crate::serve::pool::{pick_shard, ServeError};
+use crate::serve::pool::{pick_shard, pop_group, ServeError, Shard};
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
 use crate::util::error::{anyhow, Result};
 use crate::util::units::{Energy, Time};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,6 +62,8 @@ pub struct FleetPoolConfig {
     /// Directory holding the AOT artifacts (`manifest.json`); when absent
     /// or unloadable the pool serves schedule-only responses.
     pub artifact_dir: PathBuf,
+    /// Batched-admission knobs (`max_batch == 1` is the solo legacy path).
+    pub batch: BatchConfig,
 }
 
 impl Default for FleetPoolConfig {
@@ -65,6 +75,7 @@ impl Default for FleetPoolConfig {
                 .clamp(1, 4),
             queue_capacity: 256,
             artifact_dir: ArtifactManifest::default_dir(),
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -91,6 +102,10 @@ pub struct FleetOutcome {
     pub knot_deadline: Time,
     /// Covering budget knot (energy demands only).
     pub knot_budget: Option<Energy>,
+    /// How many requests shared this dispatch (1 = solo). Batch members are
+    /// charged amortized per-member active time/energy shares; demands and
+    /// sleep windows are judged against the batch completion time.
+    pub batch_size: usize,
     /// Submission-to-response latency, queue wait included.
     pub host_latency: Duration,
 }
@@ -118,26 +133,27 @@ struct Job {
     demand: Demand,
     knot_deadline: Time,
     knot_budget: Option<Energy>,
+    /// Batch identity within the entry: jobs coalesce only when they carry
+    /// the same resolved schedule — `(demand kind, knot coordinate bits)`.
+    /// The dispatch key additionally includes the admission epoch, so jobs
+    /// straddling a hot swap never coalesce: a rebuilt entry can reproduce
+    /// a knot coordinate with a different schedule.
+    batch_key: (u8, u64),
+    /// Sim-validated solo active time of the resolved knot: the anchor of
+    /// the batch-makespan check.
+    unit_time: Time,
+    /// Solo active energy of the resolved knot (sim-validated for energy
+    /// knots): the anchor of the dual per-member budget-share check.
+    unit_energy: Energy,
     submitted: Instant,
     reply: mpsc::Sender<std::result::Result<FleetOutcome, ServeError>>,
-}
-
-struct ShardState {
-    queue: EdfQueue<Job>,
-    stopping: bool,
-}
-
-struct Shard {
-    state: Mutex<ShardState>,
-    cv: Condvar,
-    depth: AtomicUsize,
 }
 
 /// A running fleet pool. Dropping it shuts workers down (discarding
 /// metrics); call [`FleetPool::shutdown`] to collect the aggregate instead.
 pub struct FleetPool {
     registry: Arc<FleetRegistry>,
-    shards: Vec<Arc<Shard>>,
+    shards: Vec<Arc<Shard<Job>>>,
     workers: Vec<JoinHandle<Metrics>>,
     next: AtomicUsize,
     shed_below_floor: AtomicU64,
@@ -151,23 +167,18 @@ impl FleetPool {
     /// requests resolve.
     pub fn start(registry: Arc<FleetRegistry>, config: FleetPoolConfig) -> Result<FleetPool> {
         let n = config.workers.max(1);
+        let batch = config.batch.clone().sanitized();
         let mut shards = Vec::with_capacity(n);
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
-            let shard = Arc::new(Shard {
-                state: Mutex::new(ShardState {
-                    queue: EdfQueue::new(config.queue_capacity.max(1)),
-                    stopping: false,
-                }),
-                cv: Condvar::new(),
-                depth: AtomicUsize::new(0),
-            });
+            let shard = Arc::new(Shard::new(EdfQueue::new(config.queue_capacity.max(1))));
             let handle = std::thread::Builder::new()
                 .name(format!("medea-fleet-{i}"))
                 .spawn({
                     let shard = shard.clone();
                     let dir = config.artifact_dir.clone();
-                    move || worker_loop(&shard, &dir)
+                    let batch = batch.clone();
+                    move || worker_loop(&shard, &dir, &batch)
                 })
                 .map_err(|e| anyhow!("spawn fleet worker {i}: {e}"))?;
             shards.push(shard);
@@ -210,32 +221,47 @@ impl FleetPool {
             });
         };
         let entry = resolved.entry;
-        let (schedule, knot_deadline, knot_budget) = match demand {
-            Demand::Deadline(deadline) => match entry.atlas.lookup(deadline) {
-                Ok(knot) => {
-                    let mut schedule = knot.schedule.clone();
-                    schedule.deadline = deadline;
-                    (schedule, knot.deadline, None)
-                }
-                Err(miss) => {
-                    self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
-                    return Err(Rejection::BelowFloor {
-                        requested: miss.requested,
-                        floor: miss.floor,
-                    });
-                }
-            },
-            Demand::EnergyBudget(budget) => match entry.energy.lookup(budget) {
-                Ok(knot) => (knot.schedule.clone(), knot.schedule.deadline, Some(knot.budget)),
-                Err(miss) => {
-                    self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
-                    return Err(Rejection::BelowEnergyFloor {
-                        requested: miss.requested,
-                        floor: miss.floor,
-                    });
-                }
-            },
-        };
+        let (schedule, knot_deadline, knot_budget, batch_key, unit_time, unit_energy) =
+            match demand {
+                Demand::Deadline(deadline) => match entry.atlas.lookup(deadline) {
+                    Ok(knot) => {
+                        let mut schedule = knot.schedule.clone();
+                        schedule.deadline = deadline;
+                        (
+                            schedule,
+                            knot.deadline,
+                            None,
+                            (0u8, knot.deadline.raw().to_bits()),
+                            knot.sim_time,
+                            knot.schedule.active_energy(),
+                        )
+                    }
+                    Err(miss) => {
+                        self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
+                        return Err(Rejection::BelowFloor {
+                            requested: miss.requested,
+                            floor: miss.floor,
+                        });
+                    }
+                },
+                Demand::EnergyBudget(budget) => match entry.energy.lookup(budget) {
+                    Ok(knot) => (
+                        knot.schedule.clone(),
+                        knot.schedule.deadline,
+                        Some(knot.budget),
+                        (1u8, knot.budget.raw().to_bits()),
+                        knot.sim_time,
+                        knot.sim_energy,
+                    ),
+                    Err(miss) => {
+                        self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
+                        return Err(Rejection::BelowEnergyFloor {
+                            requested: miss.requested,
+                            floor: miss.floor,
+                        });
+                    }
+                },
+            };
 
         let rr = self.next.fetch_add(1, Ordering::Relaxed);
         let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
@@ -252,6 +278,9 @@ impl FleetPool {
             demand,
             knot_deadline,
             knot_budget,
+            batch_key,
+            unit_time,
+            unit_energy,
             submitted: Instant::now(),
             reply: tx,
         };
@@ -335,7 +364,11 @@ impl Drop for FleetPool {
     }
 }
 
-fn worker_loop(shard: &Shard, artifact_dir: &std::path::Path) -> Metrics {
+fn worker_loop(
+    shard: &Shard<Job>,
+    artifact_dir: &std::path::Path,
+    batch: &BatchConfig,
+) -> Metrics {
     let mut metrics = Metrics::default();
     // One PJRT runtime handle per worker, created on the worker thread.
     let mut runtime = match Runtime::new(artifact_dir) {
@@ -346,37 +379,158 @@ fn worker_loop(shard: &Shard, artifact_dir: &std::path::Path) -> Metrics {
         }
     };
     let infer = TsdInference::default();
+    let amort = batch.amortization;
 
     loop {
-        let job = {
-            let mut st = shard.state.lock().expect("fleet shard lock poisoned");
-            loop {
-                if let Some((_, job)) = st.queue.pop() {
-                    shard.depth.store(st.queue.len(), Ordering::Relaxed);
-                    break Some(job);
+        let group = pop_group(
+            shard,
+            batch,
+            // Same entry + same epoch + same resolved knot ⇒ one coalesced
+            // dispatch. The kind tag keeps deadline- and energy-resolved
+            // schedules apart even when knot coordinates collide bitwise;
+            // the epoch keeps pre- and post-hot-swap jobs apart, since a
+            // rebuilt entry (same content key, different sweep config) can
+            // reproduce a knot coordinate with a different schedule.
+            |job: &Job| -> (FleetKey, u64, (u8, u64)) {
+                (job.entry.key, job.epoch, job.batch_key)
+            },
+            |group, _cand_deadline, cand| {
+                let head = &group[0].1;
+                let n = group.len() + 1;
+                match head.demand {
+                    // Deadline members: the batch makespan must fit the
+                    // *earliest* member deadline (everyone else is laxer in
+                    // EDF pop order).
+                    Demand::Deadline(_) => {
+                        batch_makespan(head.unit_time, n, amort).raw() <= group[0].0.raw()
+                    }
+                    // Energy members promise energy, not latency: the dual
+                    // EnergyAtlas check admits while the amortized
+                    // per-member share fits every member's requested cap
+                    // (the share is non-increasing in n, so existing
+                    // members can only get cheaper).
+                    Demand::EnergyBudget(_) => {
+                        let share = batch_energy_share(head.unit_energy, n, amort).raw();
+                        group
+                            .iter()
+                            .map(|(_, j)| j)
+                            .chain(std::iter::once(cand))
+                            .all(|j| match j.demand {
+                                Demand::EnergyBudget(cap) => share <= cap.raw(),
+                                Demand::Deadline(_) => false, // distinct batch_key kind
+                            })
+                    }
                 }
-                if st.stopping {
-                    break None;
-                }
-                st = shard.cv.wait(st).expect("fleet shard lock poisoned");
-            }
-        };
-        let Some(job) = job else { break };
-        // `process` consumes the job (the entry `Arc` and schedule ride in
-        // it) and hands the reply channel back alongside the outcome.
-        let (reply, outcome) = process(job, runtime.as_mut(), &infer);
-        if let Ok(o) = &outcome {
-            metrics.record(
-                o.prediction.seizure,
-                o.sim.deadline_met,
-                o.sim.total_energy().raw(),
-                o.sim.active_time.raw(),
-                o.host_latency,
-            );
+            },
+        );
+        let Some(group) = group else { break };
+        if group.is_empty() {
+            continue;
         }
-        let _ = reply.send(outcome);
+        if group.len() == 1 {
+            // Solo dispatch: the exact legacy path. `process` consumes the
+            // job (the entry `Arc` and schedule ride in it) and hands the
+            // reply channel back alongside the outcome.
+            let (_, job) = group.into_iter().next().expect("len checked");
+            let (reply, outcome) = process(job, runtime.as_mut(), &infer);
+            if let Ok(o) = &outcome {
+                metrics.record_batch(1);
+                metrics.record(
+                    o.prediction.seizure,
+                    o.sim.deadline_met,
+                    o.sim.total_energy().raw(),
+                    o.sim.active_time.raw(),
+                    o.host_latency,
+                );
+            }
+            let _ = reply.send(outcome);
+        } else {
+            process_batch(group, runtime.as_mut(), &infer, batch, &mut metrics);
+        }
     }
     metrics
+}
+
+/// Execute one coalesced dispatch for a fleet batch: one simulated run of
+/// the shared schedule (under the head's entry — all members resolved the
+/// same content key) and one amortized inference invocation, fanned back
+/// out per member.
+/// Deadline members get `deadline_met = makespan ≤ their deadline`; energy
+/// members get `deadline_met = amortized share ≤ their cap` — each member is
+/// judged against the demand it actually made.
+fn process_batch(
+    group: Vec<(Time, Job)>,
+    runtime: Option<&mut Runtime>,
+    infer: &TsdInference,
+    batch: &BatchConfig,
+    metrics: &mut Metrics,
+) {
+    let n = group.len();
+    let head = &group[0].1;
+    let entry = &head.entry;
+    let sim = simulate(&entry.workload, &entry.platform, &entry.model, &head.schedule);
+    let share = batch_share(&sim, n, batch.amortization);
+    let scheduler = head.schedule.scheduler.clone();
+
+    let predictions: Vec<Prediction> = match runtime {
+        Some(rt) => {
+            let windows: Vec<&EegWindow> = group.iter().map(|(_, j)| &j.window).collect();
+            match infer.infer_staged_batch(rt, &windows) {
+                Ok(p) => p,
+                Err(e) => {
+                    let msg = e.to_string();
+                    for (_, job) in group {
+                        let _ = job.reply.send(Err(ServeError::Internal(msg.clone())));
+                    }
+                    return;
+                }
+            }
+        }
+        None => stub_predictions(n),
+    };
+
+    // Only successful fan-outs count as dispatches (the error path above
+    // returns early), keeping batched + solo == recorded requests.
+    metrics.record_batch(n);
+    for ((_, job), prediction) in group.into_iter().zip(predictions) {
+        // Each member is judged against the demand it actually made.
+        let met = match job.demand {
+            Demand::Deadline(d) => share.batch_time.raw() <= d.raw(),
+            Demand::EnergyBudget(cap) => share.member_energy.raw() <= cap.raw(),
+        };
+        // Sleep re-derives against the member's own stamped deadline
+        // (requested for deadline demands, the dual solve's for energy
+        // demands).
+        let member_sim = member_report(
+            &sim,
+            share,
+            job.schedule.deadline,
+            job.entry.platform.sleep_power,
+            met,
+        );
+        metrics.record(
+            prediction.seizure,
+            member_sim.deadline_met,
+            member_sim.total_energy().raw(),
+            member_sim.active_time.raw(),
+            job.submitted.elapsed(),
+        );
+        let outcome = FleetOutcome {
+            window_index: job.window.index,
+            prediction,
+            sim: member_sim,
+            scheduler: scheduler.clone(),
+            platform: job.entry.platform_preset.clone(),
+            workload: job.entry.workload_preset.clone(),
+            epoch: job.epoch,
+            demand: job.demand,
+            knot_deadline: job.knot_deadline,
+            knot_budget: job.knot_budget,
+            batch_size: n,
+            host_latency: job.submitted.elapsed(),
+        };
+        let _ = job.reply.send(Ok(outcome));
+    }
 }
 
 type Reply = mpsc::Sender<std::result::Result<FleetOutcome, ServeError>>;
@@ -394,6 +548,9 @@ fn process(
         demand,
         knot_deadline,
         knot_budget,
+        batch_key: _,
+        unit_time: _,
+        unit_energy: _,
         submitted,
         reply,
     } = job;
@@ -420,6 +577,7 @@ fn process(
         demand,
         knot_deadline,
         knot_budget,
+        batch_size: 1,
         host_latency: submitted.elapsed(),
     };
     (reply, Ok(outcome))

@@ -84,6 +84,8 @@ fn app() -> App {
                 .opt_default("platform", "Platform preset tag for fleet routing", "heeptimize")
                 .opt_default("workload", "Workload preset tag for fleet routing", "tsd-core")
                 .opt("energy-budgets-uj", "Comma-separated energy caps in uJ (cycled; requests carry an energy budget instead of a deadline; fleet mode only)")
+                .opt_default("max-batch", "Coalesce up to N compatible queued requests into one dispatch (1 = solo)", "8")
+                .opt_default("batch-window-us", "Extra microseconds a worker waits for stragglers when the backlog cannot fill a batch (0 = opportunistic only)", "0")
                 .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)"),
         )
         .command(
@@ -366,6 +368,20 @@ fn cmd_all(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse `--max-batch` / `--batch-window-us` into a [`BatchConfig`].
+fn parse_batch(args: &Args) -> Result<medea::serve::BatchConfig, String> {
+    let max_batch: usize = args.req_parse("max-batch").map_err(|e| e.to_string())?;
+    let window_us: u64 = args.req_parse("batch-window-us").map_err(|e| e.to_string())?;
+    if max_batch < 1 {
+        return Err("--max-batch must be >= 1".into());
+    }
+    Ok(medea::serve::BatchConfig {
+        max_batch,
+        window: std::time::Duration::from_micros(window_us),
+        ..medea::serve::BatchConfig::default()
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     use medea::serve::{PoolConfig, ScheduleAtlas, ServePool, Ticket};
     if args.get("fleet-dir").is_some() {
@@ -389,6 +405,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         workers,
         queue_capacity: queue_cap,
         artifact_dir: dir,
+        batch: parse_batch(args)?,
         ..PoolConfig::default()
     };
     let pool = match args.get("atlas").map(Path::new) {
@@ -535,6 +552,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
             workers,
             queue_capacity: queue_cap,
             artifact_dir,
+            batch: parse_batch(args)?,
         },
     )
     .map_err(|e| e.to_string())?;

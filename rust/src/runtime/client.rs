@@ -113,6 +113,130 @@ impl Runtime {
         Ok(outs)
     }
 
+    /// Execute the named artifact over a *batch* of members, warming the
+    /// compile cache once up front so a cold compilation is charged to the
+    /// batch, not to its first member. `members[m][i]` is member `m`'s data
+    /// for input `i`, with the same per-member shapes (and per-member
+    /// validation) as [`Runtime::run_f32`]. Returns one output set per
+    /// member.
+    ///
+    /// Today's AOT artifacts are exported per-window (no batch axis), so
+    /// execution itself is still one `execute` per member; a true
+    /// single-dispatch batch is [`Runtime::run_f32_stacked`], which needs a
+    /// batch-shaped artifact (see the ROADMAP item on batch-shaped export).
+    pub fn run_f32_batch(
+        &mut self,
+        name: &str,
+        members: &[Vec<&[f32]>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        if members.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.executable(name)?;
+        members.iter().map(|m| self.run_f32(name, m)).collect()
+    }
+
+    /// Execute a **batch-shaped** artifact once over `members` stacked along
+    /// the leading axis — the true single-dispatch batch. The manifest's
+    /// leading dimension must equal the batch size on every input and
+    /// output (the executable was compiled for `[n, …]`, so anything else
+    /// would be rejected by the backend), and each member supplies its
+    /// per-member slice (`elements() / n` values per tensor). Today's AOT
+    /// pipeline does not yet emit batch-shaped artifacts; see the ROADMAP.
+    pub fn run_f32_stacked(
+        &mut self,
+        name: &str,
+        members: &[Vec<&[f32]>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let n = members.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        let shaped = meta
+            .inputs
+            .iter()
+            .chain(meta.outputs.iter())
+            .all(|sig| sig.shape.first() == Some(&n));
+        if !shaped {
+            bail!(
+                "artifact `{name}` is not batch-shaped for n={n}: every input/output \
+                 leading dimension must equal the batch size (got inputs {:?})",
+                meta.inputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>()
+            );
+        }
+        for (mi, m) in members.iter().enumerate() {
+            if m.len() != meta.inputs.len() {
+                bail!(
+                    "artifact `{name}` takes {} inputs, member {mi} supplied {}",
+                    meta.inputs.len(),
+                    m.len()
+                );
+            }
+            for (i, sig) in meta.inputs.iter().enumerate() {
+                let per_member = sig.elements() / n;
+                if m[i].len() != per_member {
+                    bail!(
+                        "artifact `{name}` input {i} needs {per_member} elements per \
+                         member ({:?} / n={n}), member {mi} supplied {}",
+                        sig.shape,
+                        m[i].len()
+                    );
+                }
+            }
+        }
+
+        let mut literals = Vec::with_capacity(meta.inputs.len());
+        for (i, sig) in meta.inputs.iter().enumerate() {
+            // Stack member `i`-th slices contiguously into the compiled
+            // [n, ...] parameter shape.
+            let mut stacked = Vec::with_capacity(sig.elements());
+            for m in members {
+                stacked.extend_from_slice(m[i]);
+            }
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(&stacked)
+                    .reshape(&dims)
+                    .context("reshape stacked input literal")?,
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("stacked execute `{name}` (n={n})"))?[0][0]
+            .to_literal_sync()
+            .context("fetch stacked result")?;
+        let elems = result.to_tuple().context("untuple stacked result")?;
+        if elems.len() != meta.outputs.len() {
+            bail!(
+                "artifact `{name}` returned {} outputs, manifest says {}",
+                elems.len(),
+                meta.outputs.len()
+            );
+        }
+        // Split each stacked output back into per-member chunks.
+        let mut per_member: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(elems.len()); n];
+        for (lit, sig) in elems.iter().zip(&meta.outputs) {
+            let v = lit.to_vec::<f32>().context("stacked output to_vec")?;
+            if v.len() != sig.elements() {
+                bail!(
+                    "artifact `{name}` stacked output has {} elements, expected {}",
+                    v.len(),
+                    sig.elements()
+                );
+            }
+            for (m, chunk) in v.chunks_exact(sig.elements() / n).enumerate() {
+                per_member[m].push(chunk.to_vec());
+            }
+        }
+        Ok(per_member)
+    }
+
     /// Number of compiled executables currently cached.
     pub fn cached_executables(&self) -> usize {
         self.cache.len()

@@ -23,10 +23,15 @@ pub struct Prediction {
 }
 
 fn to_prediction(logits: Vec<f32>) -> Prediction {
+    // A NaN logit (runtime numerical blow-up) must not panic the pool
+    // worker, and must not win the argmax either: non-finite logits are
+    // skipped, so a finite class wins whenever one exists (all-NaN falls
+    // back to class 0).
     let class_idx = logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .filter(|(_, v)| v.is_finite())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
     Prediction {
@@ -65,6 +70,34 @@ impl TsdInference {
         let flat: Vec<f32> = feats.into_iter().flatten().collect();
         let out = rt.run_f32("tsd_core", &[&flat])?;
         Ok(to_prediction(out.into_iter().next().unwrap()))
+    }
+
+    /// Batched staged path: run every window's Rust frontend, then execute
+    /// `tsd_core` over the whole batch via [`Runtime::run_f32_batch`] (a
+    /// cold compile is charged to the batch, not its first member).
+    /// Returns one prediction per window, in order.
+    pub fn infer_staged_batch(
+        &self,
+        rt: &mut Runtime,
+        windows: &[&EegWindow],
+    ) -> Result<Vec<Prediction>> {
+        let flats: Vec<Vec<f32>> = windows
+            .iter()
+            .map(|w| {
+                window_features(&w.data, self.n_fft, self.patch_dim)
+                    .into_iter()
+                    .flatten()
+                    .collect()
+            })
+            .collect();
+        let members: Vec<Vec<&[f32]>> = flats.iter().map(|f| vec![f.as_slice()]).collect();
+        let outs = rt.run_f32_batch("tsd_core", &members)?;
+        Ok(outs
+            .into_iter()
+            .map(|o| {
+                to_prediction(o.into_iter().next().unwrap_or_default())
+            })
+            .collect())
     }
 }
 

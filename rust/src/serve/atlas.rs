@@ -71,7 +71,23 @@ pub struct AtlasKnot {
     /// tightened further if the simulator overshot). Kept so independent
     /// solvers can re-derive the same optimization problem.
     pub solve_deadline: Time,
+    /// The event-level simulator's measured active time for this schedule,
+    /// recorded when the knot passed validation (≤ `deadline` by
+    /// construction). Anchors the batch-makespan model — atlases saved
+    /// before this field existed load with the conservative `deadline`.
+    pub sim_time: Time,
     pub schedule: Schedule,
+}
+
+impl AtlasKnot {
+    /// Sim-anchored batch makespan: executing `n` compatible windows as one
+    /// dispatch completes in `sim_time · batch_scale(n, amortization)`
+    /// ([`crate::serve::batch`]). `n = 1` is exactly the sim-validated solo
+    /// active time, so any deadline the solo path meets, a batch of one
+    /// meets too (deadline monotonicity).
+    pub fn batch_makespan(&self, n: usize, amortization: f64) -> Time {
+        crate::serve::batch::batch_makespan(self.sim_time, n, amortization)
+    }
 }
 
 /// Typed lookup failure: the request is below the atlas's feasibility floor.
@@ -295,6 +311,7 @@ impl ScheduleAtlas {
                 return Ok(Some(AtlasKnot {
                     deadline,
                     solve_deadline: target,
+                    sim_time: sim.active_time,
                     schedule,
                 }));
             }
@@ -362,6 +379,7 @@ impl ScheduleAtlas {
                 let mut kj = JsonObj::new();
                 kj.insert("deadline_ms", k.deadline.as_ms());
                 kj.insert("solve_deadline_ms", k.solve_deadline.as_ms());
+                kj.insert("sim_time_ms", k.sim_time.as_ms());
                 kj.insert("schedule", k.schedule.to_json());
                 Json::Obj(kj)
             })
@@ -382,10 +400,18 @@ impl ScheduleAtlas {
                     .as_f64()
                     .ok_or("solve_deadline_ms")?,
             );
+            // Atlases serialized before the batch model default to the knot
+            // deadline: a conservative (sim-validated upper bound) anchor.
+            let sim_time = kv
+                .get("sim_time_ms")
+                .and_then(|v| v.as_f64())
+                .map(Time::from_ms)
+                .unwrap_or(deadline);
             let schedule = Schedule::from_json(kv.req("schedule")?)?;
             knots.push(AtlasKnot {
                 deadline,
                 solve_deadline,
+                sim_time,
                 schedule,
             });
         }
@@ -491,12 +517,34 @@ mod tests {
     }
 
     #[test]
+    fn batch_makespan_is_sim_anchored() {
+        let ctx = ExpContext::paper();
+        let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &small_cfg()).unwrap();
+        for k in atlas.knots() {
+            // The anchor is the validated solo time, within the deadline.
+            assert!(k.sim_time.raw() > 0.0);
+            assert!(k.sim_time.raw() <= k.deadline.raw() + 1e-15);
+            assert!((k.batch_makespan(1, 0.85).raw() - k.sim_time.raw()).abs() < 1e-15);
+            // Monotone in batch size, sublinear per member.
+            for n in 1..8usize {
+                let m_n = k.batch_makespan(n, 0.85);
+                let m_next = k.batch_makespan(n + 1, 0.85);
+                assert!(m_next.raw() > m_n.raw());
+                assert!(m_next.raw() / (n + 1) as f64 <= k.sim_time.raw() + 1e-15);
+            }
+        }
+    }
+
+    #[test]
     fn json_round_trip() {
         let ctx = ExpContext::paper();
         let atlas = ScheduleAtlas::build(&ctx.medea(), &ctx.workload, &small_cfg()).unwrap();
         let text = atlas.to_json().to_pretty();
         let back = ScheduleAtlas::from_json(&parse(&text).unwrap()).unwrap();
         assert_eq!(back.len(), atlas.len());
+        for (a, b) in atlas.knots().iter().zip(back.knots()) {
+            assert!((a.sim_time.raw() - b.sim_time.raw()).abs() < 1e-12);
+        }
         assert_eq!(back.workload, atlas.workload);
         let d = atlas.floor() * 2.0;
         let a = atlas.resolve(d).unwrap();

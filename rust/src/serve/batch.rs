@@ -1,0 +1,225 @@
+//! Batched admission: coalesce compatible queued requests into one dispatch.
+//!
+//! MEDEA amortizes per-invocation overhead at *design time* (one solve per
+//! atlas knot, zero on the request path); this module amortizes it at
+//! *dispatch time*. When several admitted requests resolve to the same atlas
+//! knot — the common case under heavy traffic, where a handful of knots
+//! serve the whole deadline mix — they execute as one dispatch: a single
+//! event-level replay of the shared schedule, and a single amortized
+//! inference invocation ([`crate::runtime::client::Runtime::run_f32_batch`];
+//! a true stacked `[n, …]` PJRT execute — `run_f32_stacked` — additionally
+//! needs the artifact exported batch-shaped, an open ROADMAP item). The
+//! makespan model below prices the *on-device* side of that coalescing: the
+//! per-invocation wakeup/dispatch/DMA-priming overhead the simulator grounds.
+//!
+//! The makespan model is anchored on each knot's **sim-validated** solo
+//! active time `t₁` (recorded when the knot passed event-level replay at
+//! build time): a batch of `n` compatible windows completes in
+//!
+//! ```text
+//! makespan(n) = t₁ · scale(n)        scale(n) = 1 + a·(n − 1)
+//! ```
+//!
+//! where `a ∈ (0, 1]` is the calibrated marginal-cost (amortization) factor:
+//! the fraction of a solo invocation that is true per-window work, the rest
+//! being dispatch/setup recovered by batching. `a = 1` degenerates to solo
+//! cost (batching buys nothing, but also never risks anything); smaller `a`
+//! models more recoverable overhead.
+//!
+//! **Deadline monotonicity** (the safety property the admission check and
+//! the property tests pin): a batch is only formed when `makespan(n)` fits
+//! the *earliest* member deadline. Members pop in EDF order, so every other
+//! member is laxer, and `scale(1) = 1` means a batch of one is exactly the
+//! solo path — batching can never violate a deadline the solo path would
+//! have met.
+//!
+//! **Energy duality**: total batch active energy scales like the makespan
+//! (same power envelope, shorter aggregate runtime), so the per-member share
+//! `E₁ · scale(n) / n` is non-increasing in `n`. Energy-budget members admit
+//! a new member only when the share still fits every member's requested cap
+//! — the dual [`crate::fleet::energy::EnergyAtlas`] check.
+
+use crate::runtime::infer::Prediction;
+use crate::sim::replay::SimReport;
+use crate::util::units::{Energy, Power, Time};
+use std::time::Duration;
+
+/// Batch-admission knobs shared by [`crate::serve::pool::ServePool`] and
+/// [`crate::fleet::pool::FleetPool`].
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Largest number of requests coalesced into one dispatch; `1` disables
+    /// batching (the exact legacy solo path).
+    pub max_batch: usize,
+    /// How long a worker waits for stragglers when the backlog cannot fill
+    /// a batch. `0` dispatches whatever is already queued (opportunistic
+    /// batching only — no added latency).
+    pub window: Duration,
+    /// Marginal per-member cost fraction `a` in `(0, 1]` of the sublinear
+    /// makespan model `t₁·(1 + a·(n−1))`.
+    pub amortization: f64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 8,
+            window: Duration::ZERO,
+            // ~15 % of a solo invocation modeled as fixed wakeup/dispatch/
+            // DMA-priming overhead recovered by coalescing.
+            amortization: 0.85,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// The solo-dispatch configuration (exact legacy behavior).
+    pub fn solo() -> BatchConfig {
+        BatchConfig {
+            max_batch: 1,
+            ..BatchConfig::default()
+        }
+    }
+
+    /// Clamp into the ranges the makespan model is valid for.
+    pub fn sanitized(mut self) -> BatchConfig {
+        self.max_batch = self.max_batch.max(1);
+        if !(self.amortization > 0.0 && self.amortization <= 1.0) {
+            self.amortization = 1.0; // NaN/out-of-range ⇒ no amortization claimed
+        }
+        self
+    }
+}
+
+/// `scale(n) = 1 + a·(n − 1)`: batch makespan as a multiple of the solo
+/// sim-validated time. `scale(1) = 1` exactly, so batch admission with
+/// `n = 1` is the solo feasibility check.
+pub fn batch_scale(n: usize, amortization: f64) -> f64 {
+    1.0 + amortization * (n.saturating_sub(1)) as f64
+}
+
+/// Batch makespan from a sim-validated solo time anchor:
+/// `unit_time · scale(n)`. The single source of truth for every admission
+/// check ([`crate::serve::atlas::AtlasKnot::batch_makespan`], the pools'
+/// grow predicates, and [`batch_share`] all delegate here).
+pub fn batch_makespan(unit_time: Time, n: usize, amortization: f64) -> Time {
+    Time(unit_time.raw() * batch_scale(n, amortization))
+}
+
+/// Amortized per-member active-energy share from a solo energy anchor:
+/// `unit_energy · scale(n) / n`, non-increasing in `n`. The single source
+/// of truth for the dual budget check
+/// ([`crate::fleet::energy::EnergyKnot::batch_energy_per_member`] and the
+/// fleet pool's grow predicate delegate here).
+pub fn batch_energy_share(unit_energy: Energy, n: usize, amortization: f64) -> Energy {
+    let n = n.max(1);
+    Energy(unit_energy.raw() * batch_scale(n, amortization) / n as f64)
+}
+
+/// Per-member accounting for one coalesced dispatch, derived from a single
+/// fresh event-level replay of the shared schedule. Shared by the serve and
+/// fleet pools so the amortization math cannot drift between them.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BatchShare {
+    /// Completion time of every member (the batch makespan): what deadline
+    /// checks and sleep windows are judged against.
+    pub(crate) batch_time: Time,
+    /// Amortized active-time charge per member (`batch_time / n`). Member
+    /// shares sum to the true batch device time, so aggregated
+    /// `sim_active_s` stays honest under batching — mirroring the energy
+    /// share.
+    pub(crate) member_time: Time,
+    /// Amortized active-energy charge per member.
+    pub(crate) member_energy: Energy,
+}
+
+pub(crate) fn batch_share(sim: &SimReport, n: usize, amortization: f64) -> BatchShare {
+    let n = n.max(1);
+    let batch_time = batch_makespan(sim.active_time, n, amortization);
+    BatchShare {
+        batch_time,
+        member_time: Time(batch_time.raw() / n as f64),
+        member_energy: batch_energy_share(sim.active_energy, n, amortization),
+    }
+}
+
+/// Clone the shared replay into one member's report: the amortized
+/// active-time and active-energy *shares* (so per-request aggregates sum to
+/// the true batch totals), with the sleep window re-derived against
+/// `sleep_deadline` from the batch *completion* time (the device sleeps
+/// only once the whole batch finishes), mirroring the simulator's
+/// `sleep = max(0, deadline − active)` accounting.
+pub(crate) fn member_report(
+    sim: &SimReport,
+    share: BatchShare,
+    sleep_deadline: Time,
+    sleep_power: Power,
+    deadline_met: bool,
+) -> SimReport {
+    let mut r = sim.clone();
+    r.active_time = share.member_time;
+    r.active_energy = share.member_energy;
+    r.sleep_time = Time((sleep_deadline.raw() - share.batch_time.raw()).max(0.0));
+    r.sleep_energy = sleep_power * r.sleep_time;
+    r.deadline_met = deadline_met;
+    r
+}
+
+/// Placeholder predictions for schedule-only serving (no PJRT runtime).
+pub(crate) fn stub_predictions(n: usize) -> Vec<Prediction> {
+    (0..n)
+        .map(|_| Prediction {
+            logits: vec![0.0, 0.0],
+            class_idx: 0,
+            seizure: false,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_anchors_at_solo() {
+        assert_eq!(batch_scale(1, 0.85), 1.0);
+        assert_eq!(batch_scale(0, 0.85), 1.0); // degenerate, clamped
+        assert!((batch_scale(8, 1.0) - 8.0).abs() < 1e-12);
+        assert!((batch_scale(8, 0.5) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_is_monotone_and_sublinear() {
+        for &a in &[0.1, 0.5, 0.85, 1.0] {
+            for n in 1..32usize {
+                let s_n = batch_scale(n, a);
+                let s_next = batch_scale(n + 1, a);
+                assert!(s_next > s_n, "scale must grow with batch size");
+                // Sublinear: per-member cost never exceeds solo cost.
+                assert!(s_next / (n + 1) as f64 <= 1.0 + 1e-12);
+                // Per-member cost is non-increasing in n (energy-share
+                // monotonicity the fleet's dual budget check relies on).
+                assert!(s_next / (n + 1) as f64 <= s_n / n as f64 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sanitize_clamps_nonsense() {
+        let c = BatchConfig {
+            max_batch: 0,
+            amortization: f64::NAN,
+            ..BatchConfig::default()
+        }
+        .sanitized();
+        assert_eq!(c.max_batch, 1);
+        assert_eq!(c.amortization, 1.0);
+        let c = BatchConfig {
+            amortization: -3.0,
+            ..BatchConfig::default()
+        }
+        .sanitized();
+        assert_eq!(c.amortization, 1.0);
+        assert_eq!(BatchConfig::solo().max_batch, 1);
+    }
+}

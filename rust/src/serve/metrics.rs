@@ -61,6 +61,22 @@ impl ServeMetrics {
         self.shed_below_floor + self.shed_queue_full + self.shed_unknown_entry
     }
 
+    /// Dispatch-size histogram merged across workers (`[i]` = dispatches of
+    /// `i + 1` coalesced requests).
+    pub fn batch_histogram(&self) -> &[u64] {
+        &self.aggregate.batch_hist
+    }
+
+    /// Requests that rode a multi-request dispatch.
+    pub fn batched_requests(&self) -> u64 {
+        self.aggregate.batched_requests()
+    }
+
+    /// Requests dispatched solo.
+    pub fn solo_requests(&self) -> u64 {
+        self.aggregate.solo_requests()
+    }
+
     pub fn p50(&self) -> Duration {
         self.aggregate.host_latency_p50()
     }
@@ -71,7 +87,7 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "workers={} requests={} [{}] misses={} shed={} (floor={} full={} unknown={}) energy={:.1} uJ p50={:?} p99={:?}",
+            "workers={} requests={} [{}] batched={} solo={} misses={} shed={} (floor={} full={} unknown={}) energy={:.1} uJ p50={:?} p99={:?}",
             self.workers,
             self.aggregate.requests,
             self.per_worker_requests
@@ -79,6 +95,8 @@ impl ServeMetrics {
                 .map(|n| n.to_string())
                 .collect::<Vec<_>>()
                 .join("/"),
+            self.batched_requests(),
+            self.solo_requests(),
             self.aggregate.deadline_misses,
             self.total_shed(),
             self.shed_below_floor,
@@ -99,6 +117,12 @@ impl ServeMetrics {
             Json::Arr(self.per_worker_requests.iter().map(|&n| Json::from(n)).collect()),
         );
         o.insert("deadline_misses", self.aggregate.deadline_misses);
+        o.insert("batched_requests", self.batched_requests());
+        o.insert("solo_requests", self.solo_requests());
+        o.insert(
+            "batch_hist",
+            Json::Arr(self.batch_histogram().iter().map(|&n| Json::from(n)).collect()),
+        );
         o.insert("shed_below_floor", self.shed_below_floor);
         o.insert("shed_queue_full", self.shed_queue_full);
         o.insert("shed_unknown_entry", self.shed_unknown_entry);
@@ -137,5 +161,43 @@ mod tests {
         assert_eq!(m.total_shed(), 9);
         assert!(m.summary().contains("unknown=3"));
         assert_eq!(m.to_json().get("shed_unknown_entry").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn percentiles_hold_on_degenerate_windows() {
+        // Empty window: both percentiles are zero (p99 ≥ p50 trivially).
+        let m = ServeMetrics::aggregate(vec![Metrics::default()], 0, 0);
+        assert_eq!(m.p50(), Duration::ZERO);
+        assert_eq!(m.p99(), Duration::ZERO);
+        assert!(m.p99() >= m.p50());
+        // One sample: every percentile is that sample.
+        let mut w = Metrics::default();
+        w.record(false, true, 0.0, 0.0, Duration::from_millis(7));
+        let m = ServeMetrics::aggregate(vec![w], 0, 0);
+        assert_eq!(m.p50(), Duration::from_millis(7));
+        assert_eq!(m.p99(), Duration::from_millis(7));
+        assert!(m.p99() >= m.p50());
+    }
+
+    #[test]
+    fn batch_counters_surface_in_summary_and_json() {
+        let mut w0 = Metrics::default();
+        for _ in 0..4 {
+            w0.record(false, true, 1e-6, 0.01, Duration::from_millis(1));
+        }
+        w0.record_batch(4); // one dispatch of 4
+        let mut w1 = Metrics::default();
+        w1.record(false, true, 1e-6, 0.01, Duration::from_millis(1));
+        w1.record_batch(1); // one solo dispatch
+        let m = ServeMetrics::aggregate(vec![w0, w1], 0, 0);
+        assert_eq!(m.batched_requests(), 4);
+        assert_eq!(m.solo_requests(), 1);
+        assert_eq!(m.batch_histogram(), &[1, 0, 0, 1]);
+        let s = m.summary();
+        assert!(s.contains("batched=4") && s.contains("solo=1"), "{s}");
+        let j = m.to_json();
+        assert_eq!(j.get("batched_requests").unwrap().as_u64(), Some(4));
+        assert_eq!(j.get("solo_requests").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("batch_hist").unwrap().as_arr().unwrap().len(), 4);
     }
 }

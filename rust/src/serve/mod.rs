@@ -14,15 +14,20 @@
 //! * [`queue`] — deadline-aware admission control: a bounded EDF priority
 //!   queue that sheds infeasible (below the atlas floor) and overflow
 //!   requests with a typed [`queue::Rejection`] instead of a scheduling
-//!   error.
+//!   error, and pops EDF-contiguous compatible groups
+//!   ([`queue::EdfQueue::pop_compatible`]) for batched dispatch.
+//! * [`batch`] — batched admission: queued requests resolving to the same
+//!   atlas knot coalesce into one dispatch under a sim-anchored sublinear
+//!   makespan model ([`batch::BatchConfig`]), deadline-monotone by
+//!   construction.
 //! * [`pool`] — the sharded worker pool: N threads, one PJRT runtime handle
 //!   each, sharing the atlas behind an `Arc`, EDF-aware dispatch
 //!   (round-robin while shard backlogs balance, least-backlogged shard when
-//!   they skew), bounded per-worker schedule LRUs, graceful draining
-//!   shutdown.
+//!   they skew), batch-aware dequeue, bounded per-worker schedule LRUs,
+//!   graceful draining shutdown.
 //! * [`metrics`] — cross-worker aggregation (p50/p99 host latency, energy,
-//!   deadline-miss and shed counts) merged from per-worker
-//!   [`crate::coordinator::Metrics`].
+//!   per-batch-size dispatch histograms, deadline-miss and shed counts)
+//!   merged from per-worker [`crate::coordinator::Metrics`].
 //!
 //! The legacy [`crate::coordinator::Coordinator`] is a thin single-worker
 //! compatibility wrapper over [`pool::ServePool`]. Serving *many* (platform,
@@ -30,12 +35,19 @@
 //! energy-budget demands — is the [`crate::fleet`] layer, built on the same
 //! queue and metrics primitives.
 
+// Serving hot path: a panicking `.unwrap()` here takes a whole pool worker
+// down with it. Shed with a typed rejection or carry the error instead
+// (`.expect` with an invariant message is allowed for real invariants).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod atlas;
+pub mod batch;
 pub mod metrics;
 pub mod pool;
 pub mod queue;
 
 pub use atlas::{AtlasConfig, AtlasKnot, BelowFloor, ScheduleAtlas};
+pub use batch::BatchConfig;
 pub use metrics::ServeMetrics;
 pub use pool::{InferenceOutcome, PoolConfig, ServeError, ServePool, Ticket};
 pub use queue::{Admission, EdfQueue, Rejection};

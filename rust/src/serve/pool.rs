@@ -6,8 +6,11 @@
 //! per-worker [`crate::coordinator::Metrics`]. Requests are dispatched
 //! round-robin to per-worker EDF admission queues; infeasible or overflow
 //! requests are shed with a typed [`Rejection`] at submit time, never as a
-//! solver error. Shutdown is graceful: queues drain, then workers exit and
-//! their metrics are merged into a [`ServeMetrics`].
+//! solver error. At dequeue time workers pop EDF-contiguous groups of
+//! requests resolving to the same atlas knot and execute each group as one
+//! dispatch ([`crate::serve::batch`]); dispatch routing itself stays
+//! EDF-aware ([`pick_shard`]). Shutdown is graceful: queues drain, then
+//! workers exit and their metrics are merged into a [`ServeMetrics`].
 
 use crate::coordinator::Metrics;
 use crate::eeg::synth::EegWindow;
@@ -22,6 +25,9 @@ use crate::runtime::artifacts::ArtifactManifest;
 use crate::runtime::client::Runtime;
 use crate::runtime::infer::{Prediction, TsdInference};
 use crate::serve::atlas::{AtlasConfig, ScheduleAtlas};
+use crate::serve::batch::{
+    batch_makespan, batch_share, member_report, stub_predictions, BatchConfig,
+};
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
@@ -49,6 +55,8 @@ pub struct PoolConfig {
     /// or unloadable the pool serves schedule-only responses.
     pub artifact_dir: PathBuf,
     pub atlas: AtlasConfig,
+    /// Batched-admission knobs (`max_batch == 1` is the solo legacy path).
+    pub batch: BatchConfig,
 }
 
 impl Default for PoolConfig {
@@ -62,6 +70,7 @@ impl Default for PoolConfig {
             schedule_cache: 64,
             artifact_dir: ArtifactManifest::default_dir(),
             atlas: AtlasConfig::default(),
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -76,6 +85,10 @@ pub struct InferenceOutcome {
     /// Deadline of the atlas knot that served this request (≤ the requested
     /// deadline; the gap is the lookup's energy pessimism window).
     pub knot_deadline: Time,
+    /// How many requests shared this dispatch (1 = solo). Batch members are
+    /// charged amortized per-member active time/energy shares; deadlines
+    /// and sleep windows are judged against the batch completion time.
+    pub batch_size: usize,
     /// Submission-to-response latency, queue wait included.
     pub host_latency: Duration,
 }
@@ -119,21 +132,91 @@ impl Ticket {
 struct Job {
     window: EegWindow,
     deadline: Time,
+    /// Resolved knot identity (deadline bits), stamped at submit — the
+    /// atlas is fixed for the pool's lifetime, so submit-time resolution is
+    /// definitive and dispatch never re-searches it. `u64::MAX` marks a
+    /// below-floor request (the queue sheds those; the sentinel never
+    /// batches because `grow` refuses it).
+    knot_bits: u64,
+    /// The resolved knot's sim-validated solo active time: the anchor of
+    /// the batch-makespan admission check.
+    unit_time: Time,
     submitted: Instant,
     reply: mpsc::Sender<std::result::Result<InferenceOutcome, ServeError>>,
 }
 
-struct ShardState {
-    queue: EdfQueue<Job>,
-    stopping: bool,
+/// Per-shard admission state. Generic over the job type so the fleet pool
+/// reuses the same shard + batched-dequeue machinery.
+pub(crate) struct ShardState<J> {
+    pub(crate) queue: EdfQueue<J>,
+    pub(crate) stopping: bool,
 }
 
-struct Shard {
-    state: Mutex<ShardState>,
-    cv: Condvar,
+pub(crate) struct Shard<J> {
+    pub(crate) state: Mutex<ShardState<J>>,
+    pub(crate) cv: Condvar,
     /// Queue depth mirror, readable without taking the shard lock: the
     /// dispatcher samples every shard's backlog on each submit.
-    depth: AtomicUsize,
+    pub(crate) depth: AtomicUsize,
+}
+
+impl<J> Shard<J> {
+    pub(crate) fn new(queue: EdfQueue<J>) -> Shard<J> {
+        Shard {
+            state: Mutex::new(ShardState {
+                queue,
+                stopping: false,
+            }),
+            cv: Condvar::new(),
+            depth: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Block until work is available, then pop an EDF-contiguous compatible
+/// group under `key`/`grow` (see [`EdfQueue::pop_compatible`]). Honors the
+/// batch fill window: when the backlog cannot fill a batch, the worker keeps
+/// waiting — re-waiting across wakeups, so one early straggler or a spurious
+/// wakeup cannot cut the window short — until the batch can fill or
+/// `batch.window` elapses, then dispatches whatever is compatible. Returns
+/// `None` when the shard is stopping and drained.
+pub(crate) fn pop_group<J, K: PartialEq>(
+    shard: &Shard<J>,
+    batch: &BatchConfig,
+    key: impl Fn(&J) -> K,
+    grow: impl Fn(&[(Time, J)], Time, &J) -> bool,
+) -> Option<Vec<(Time, J)>> {
+    let mut st = shard.state.lock().expect("shard lock poisoned");
+    loop {
+        if st.queue.is_empty() {
+            if st.stopping {
+                return None;
+            }
+            st = shard.cv.wait(st).expect("shard lock poisoned");
+            continue;
+        }
+        if batch.max_batch > 1 && !batch.window.is_zero() && !st.stopping {
+            // A queue that can never hold `max_batch` entries must not make
+            // every dispatch burn the whole window waiting for a fill that
+            // cannot happen.
+            let fill_target = batch.max_batch.min(st.queue.capacity().max(1));
+            let until = Instant::now() + batch.window;
+            while st.queue.len() < fill_target && !st.stopping {
+                let remaining = until.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break;
+                }
+                st = shard
+                    .cv
+                    .wait_timeout(st, remaining)
+                    .expect("shard lock poisoned")
+                    .0;
+            }
+        }
+        let group = st.queue.pop_compatible(batch.max_batch, key, grow);
+        shard.depth.store(st.queue.len(), Ordering::Relaxed);
+        return Some(group);
+    }
 }
 
 /// Backlog skew (max − min queue depth) beyond which dispatch abandons
@@ -179,7 +262,7 @@ struct ServeContext {
 /// A running pool. Dropping it shuts workers down (discarding metrics);
 /// call [`ServePool::shutdown`] to collect the aggregate instead.
 pub struct ServePool {
-    shards: Vec<Arc<Shard>>,
+    shards: Vec<Arc<Shard<Job>>>,
     workers: Vec<JoinHandle<Metrics>>,
     next: AtomicUsize,
     atlas: Arc<ScheduleAtlas>,
@@ -222,19 +305,15 @@ impl ServePool {
         });
         let atlas = Arc::new(atlas);
         let floor = atlas.floor();
+        let batch = config.batch.clone().sanitized();
 
         let n = config.workers.max(1);
         let mut shards = Vec::with_capacity(n);
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
-            let shard = Arc::new(Shard {
-                state: Mutex::new(ShardState {
-                    queue: EdfQueue::new(config.queue_capacity.max(1)).with_floor(floor),
-                    stopping: false,
-                }),
-                cv: Condvar::new(),
-                depth: AtomicUsize::new(0),
-            });
+            let shard = Arc::new(Shard::new(
+                EdfQueue::new(config.queue_capacity.max(1)).with_floor(floor),
+            ));
             let handle = std::thread::Builder::new()
                 .name(format!("medea-serve-{i}"))
                 .spawn({
@@ -243,7 +322,8 @@ impl ServePool {
                     let atlas = atlas.clone();
                     let dir = config.artifact_dir.clone();
                     let cache = config.schedule_cache.max(1);
-                    move || worker_loop(&shard, &ctx, &atlas, &dir, cache)
+                    let batch = batch.clone();
+                    move || worker_loop(&shard, &ctx, &atlas, &dir, cache, &batch)
                 })
                 .map_err(|e| anyhow!("spawn serve worker {i}: {e}"))?;
             shards.push(shard);
@@ -285,9 +365,15 @@ impl ServePool {
         let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
         let shard = &self.shards[pick_shard(depths, rr)];
         let (tx, rx) = mpsc::channel();
+        let (knot_bits, unit_time) = match self.atlas.lookup(deadline) {
+            Ok(knot) => (knot.deadline.raw().to_bits(), knot.sim_time),
+            Err(_) => (u64::MAX, Time::ZERO),
+        };
         let job = Job {
             window,
             deadline,
+            knot_bits,
+            unit_time,
             submitted: Instant::now(),
             reply: tx,
         };
@@ -375,11 +461,12 @@ impl Drop for ServePool {
 }
 
 fn worker_loop(
-    shard: &Shard,
+    shard: &Shard<Job>,
     ctx: &ServeContext,
     atlas: &ScheduleAtlas,
     artifact_dir: &std::path::Path,
     cache_capacity: usize,
+    batch: &BatchConfig,
 ) -> Metrics {
     let mut metrics = Metrics::default();
     // One PJRT runtime handle per worker, created on the worker thread.
@@ -394,35 +481,131 @@ fn worker_loop(
     // Deadline-stamped schedules, bounded (the pre-atlas coordinator kept
     // an unbounded BTreeMap here).
     let mut schedules: LruCache<u64, (Schedule, Time)> = LruCache::new(cache_capacity);
+    let amort = batch.amortization;
 
     loop {
-        let job = {
-            let mut st = shard.state.lock().expect("shard lock poisoned");
-            loop {
-                if let Some((_, job)) = st.queue.pop() {
-                    shard.depth.store(st.queue.len(), Ordering::Relaxed);
-                    break Some(job);
-                }
-                if st.stopping {
-                    break None;
-                }
-                st = shard.cv.wait(st).expect("shard lock poisoned");
-            }
-        };
-        let Some(job) = job else { break };
-        let outcome = process(&job, ctx, atlas, &mut schedules, runtime.as_mut(), &infer);
-        if let Ok(o) = &outcome {
-            metrics.record(
-                o.prediction.seizure,
-                o.sim.deadline_met,
-                o.sim.total_energy().raw(),
-                o.sim.active_time.raw(),
-                o.host_latency,
-            );
+        let group = pop_group(
+            shard,
+            batch,
+            // Same resolved knot (stamped at submit) ⇒ same schedule ⇒ one
+            // dispatch; no atlas search on the dequeue path.
+            |job: &Job| job.knot_bits,
+            // Admit the candidate only while the sim-anchored batch
+            // makespan fits the *earliest* member deadline; EDF pop order
+            // makes everyone else laxer, so this bounds every member.
+            |group, _cand_deadline, _cand| {
+                let head = &group[0].1;
+                head.knot_bits != u64::MAX
+                    && batch_makespan(head.unit_time, group.len() + 1, amort).raw()
+                        <= group[0].0.raw()
+            },
+        );
+        let Some(group) = group else { break };
+        if group.is_empty() {
+            continue;
         }
-        let _ = job.reply.send(outcome);
+        if group.len() == 1 {
+            // Solo dispatch: the exact legacy path (per-member deadline
+            // stamping + LRU-cached schedules).
+            let (_, job) = group.into_iter().next().expect("len checked");
+            let outcome = process(&job, ctx, atlas, &mut schedules, runtime.as_mut(), &infer);
+            if let Ok(o) = &outcome {
+                metrics.record_batch(1);
+                metrics.record(
+                    o.prediction.seizure,
+                    o.sim.deadline_met,
+                    o.sim.total_energy().raw(),
+                    o.sim.active_time.raw(),
+                    o.host_latency,
+                );
+            }
+            let _ = job.reply.send(outcome);
+        } else {
+            process_batch(group, ctx, atlas, runtime.as_mut(), &infer, batch, &mut metrics);
+        }
     }
     metrics
+}
+
+/// Execute one coalesced dispatch: a single simulated on-device run and a
+/// single amortized inference invocation, fanned back out to every member.
+/// Per-member accounting ([`member_report`]): amortized active time/energy
+/// shares (sums stay equal to the batch totals), deadlines and sleep judged
+/// against the batch *completion* time — all derived from the one fresh
+/// event-level replay, mirroring how the atlas knots were validated.
+fn process_batch(
+    group: Vec<(Time, Job)>,
+    ctx: &ServeContext,
+    atlas: &ScheduleAtlas,
+    runtime: Option<&mut Runtime>,
+    infer: &TsdInference,
+    batch: &BatchConfig,
+    metrics: &mut Metrics,
+) {
+    let n = group.len();
+    let head_deadline = group[0].0;
+    let knot = match atlas.lookup(head_deadline) {
+        Ok(k) => k,
+        Err(miss) => {
+            // Admission floor-checked every member; this only races atlas
+            // swaps. Shed the whole group with the typed reason.
+            for (_, job) in group {
+                let _ = job.reply.send(Err(ServeError::Shed(Rejection::BelowFloor {
+                    requested: miss.requested,
+                    floor: miss.floor,
+                })));
+            }
+            return;
+        }
+    };
+    let mut schedule = knot.schedule.clone();
+    schedule.deadline = head_deadline;
+    let sim = simulate(&ctx.workload, &ctx.platform, &ctx.model, &schedule);
+    let share = batch_share(&sim, n, batch.amortization);
+
+    let predictions: Vec<Prediction> = match runtime {
+        Some(rt) => {
+            let windows: Vec<&EegWindow> = group.iter().map(|(_, j)| &j.window).collect();
+            match infer.infer_staged_batch(rt, &windows) {
+                Ok(p) => p,
+                Err(e) => {
+                    let msg = e.to_string();
+                    for (_, job) in group {
+                        let _ = job.reply.send(Err(ServeError::Internal(msg.clone())));
+                    }
+                    return;
+                }
+            }
+        }
+        None => stub_predictions(n),
+    };
+
+    // Only successful fan-outs count as dispatches (the shed/error paths
+    // above return early), keeping batched + solo == recorded requests.
+    metrics.record_batch(n);
+    for ((deadline, job), prediction) in group.into_iter().zip(predictions) {
+        // Guaranteed by batch admission; recomputed rather than assumed so
+        // the deadline-monotone property tests observe the real outcome.
+        let met = share.batch_time.raw() <= deadline.raw();
+        let member_sim = member_report(&sim, share, deadline, ctx.platform.sleep_power, met);
+        metrics.record(
+            prediction.seizure,
+            member_sim.deadline_met,
+            member_sim.total_energy().raw(),
+            member_sim.active_time.raw(),
+            job.submitted.elapsed(),
+        );
+        let outcome = InferenceOutcome {
+            window_index: job.window.index,
+            prediction,
+            sim: member_sim,
+            scheduler: schedule.scheduler.clone(),
+            knot_deadline: knot.deadline,
+            batch_size: n,
+            host_latency: job.submitted.elapsed(),
+        };
+        let _ = job.reply.send(Ok(outcome));
+    }
 }
 
 fn process(
@@ -468,6 +651,7 @@ fn process(
         sim,
         scheduler: schedule.scheduler.clone(),
         knot_deadline,
+        batch_size: 1,
         host_latency: job.submitted.elapsed(),
     })
 }
@@ -556,6 +740,76 @@ mod tests {
         assert_eq!(pick(&[2, 7, 4], 1), 0);
         // Ties on minimum depth resolve to the first such shard.
         assert_eq!(pick(&[9, 0, 0], 2), 1);
+    }
+
+    #[test]
+    fn backlogged_same_knot_requests_coalesce_into_batches() {
+        // One worker + a burst of identical lax deadlines: the backlog that
+        // builds while the worker simulates must coalesce, and every member
+        // still meets its deadline with the amortized per-member charge.
+        let pool = ServePool::start(PoolConfig {
+            workers: 1,
+            batch: BatchConfig {
+                max_batch: 8,
+                ..BatchConfig::default()
+            },
+            ..test_config()
+        })
+        .unwrap();
+        // Far beyond the sweep ceiling (hi ≤ relax_factor × floor), so the
+        // batch makespan check structurally admits full batches of the
+        // energy-minimal knot: sim_time·scale(8) ≤ 8·floor·6.95 < deadline.
+        let lax = pool.floor() * 64.0;
+        let mut gen = EegGenerator::new(SynthConfig::default(), 21);
+        let tickets: Vec<Ticket> = (0..64)
+            .map(|_| pool.submit(gen.next_window(), lax).unwrap())
+            .collect();
+        let mut max_seen = 0;
+        for t in tickets {
+            let out = t.wait().unwrap();
+            assert!(out.sim.deadline_met);
+            assert!(out.batch_size >= 1 && out.batch_size <= 8);
+            max_seen = max_seen.max(out.batch_size);
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.aggregate.requests, 64);
+        assert_eq!(m.aggregate.deadline_misses, 0);
+        assert_eq!(m.batched_requests() + m.solo_requests(), 64);
+        // The dispatch histogram accounts for every request exactly once.
+        let hist_requests: u64 = m
+            .batch_histogram()
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (i as u64 + 1) * n)
+            .sum();
+        assert_eq!(hist_requests, 64);
+        // The burst outpaces a single worker simulating every dispatch, so
+        // at least one multi-request batch must have formed.
+        assert!(
+            max_seen >= 2,
+            "expected at least one coalesced dispatch, got only solos"
+        );
+    }
+
+    #[test]
+    fn solo_batch_config_is_the_legacy_path() {
+        let pool = ServePool::start(PoolConfig {
+            batch: BatchConfig::solo(),
+            ..test_config()
+        })
+        .unwrap();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 22);
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| pool.submit(gen.next_window(), Time::from_ms(400.0)).unwrap())
+            .collect();
+        for t in tickets {
+            let out = t.wait().unwrap();
+            assert_eq!(out.batch_size, 1);
+            assert!(out.sim.deadline_met);
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.batched_requests(), 0);
+        assert_eq!(m.solo_requests(), 8);
     }
 
     #[test]

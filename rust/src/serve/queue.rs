@@ -214,6 +214,55 @@ impl<T> EdfQueue<T> {
         self.heap.pop().map(|e| (e.deadline, e.item))
     }
 
+    /// Pop the earliest-deadline entry plus up to `max − 1` more entries
+    /// forming an EDF-contiguous compatible group.
+    ///
+    /// The group is a strict *prefix* of EDF order — candidates are examined
+    /// in pop order and the scan stops at the first incompatibility — so
+    /// batching never reorders the queue: a request is dispatched in the
+    /// same batch as, or earlier than, it would have popped solo, and the
+    /// group's first member carries the group's earliest deadline.
+    ///
+    /// A candidate joins when both hold:
+    /// * `key(candidate) == key(head)` — same batchable work (e.g. same
+    ///   resolved atlas knot for the same fleet entry);
+    /// * `grow(&group, candidate_deadline, &candidate)` — the caller's
+    ///   feasibility check (batch makespan fits every member, energy shares
+    ///   fit every cap, …) accepts extending the group by this candidate.
+    ///
+    /// Returns an empty vector when the queue is empty; `max` is clamped to
+    /// at least 1. With `max == 1` this is exactly [`EdfQueue::pop`] (the
+    /// key/grow closures are never called).
+    pub fn pop_compatible<K: PartialEq>(
+        &mut self,
+        max: usize,
+        key: impl Fn(&T) -> K,
+        grow: impl Fn(&[(Time, T)], Time, &T) -> bool,
+    ) -> Vec<(Time, T)> {
+        let Some(head) = self.pop() else {
+            return Vec::new();
+        };
+        let max = max.max(1);
+        let mut group = Vec::with_capacity(max.min(self.len() + 1));
+        // Hoisted: the head is fixed, and `key` may be arbitrarily
+        // expensive for some callers. Skipped entirely when no candidate
+        // could ever join (max 1 or nothing left queued).
+        let head_key = (max > 1 && !self.heap.is_empty()).then(|| key(&head.1));
+        group.push(head);
+        while group.len() < max {
+            let Some(next) = self.heap.peek() else { break };
+            if Some(key(&next.item)) != head_key {
+                break;
+            }
+            if !grow(&group, next.deadline, &next.item) {
+                break;
+            }
+            let e = self.heap.pop().expect("peeked entry exists");
+            group.push((e.deadline, e.item));
+        }
+        group
+    }
+
     /// Deadline of the entry that would pop next.
     pub fn peek_deadline(&self) -> Option<Time> {
         self.heap.peek().map(|e| e.deadline)
@@ -373,6 +422,104 @@ mod tests {
         }
         let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
         assert_eq!(order, vec![99, 0, 1]);
+    }
+
+    // ---- pop_compatible -------------------------------------------------
+
+    /// Key by the item's first character (a stand-in for "same atlas knot /
+    /// fleet entry"); grow while the candidate deadline stays within
+    /// `laxity × head deadline`.
+    fn pop_group<'q>(
+        q: &mut EdfQueue<&'q str>,
+        max: usize,
+        laxity: f64,
+    ) -> Vec<(Time, &'q str)> {
+        q.pop_compatible(
+            max,
+            |item| item.as_bytes()[0],
+            move |group, d, _| d.raw() <= group[0].0.raw() * laxity,
+        )
+    }
+
+    #[test]
+    fn pop_compatible_empty_queue_returns_empty() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(4);
+        assert!(pop_group(&mut q, 8, 10.0).is_empty());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_compatible_singleton_never_calls_closures() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(4);
+        q.push(ms(100.0), "a1");
+        let group = q.pop_compatible(
+            8,
+            |_: &&str| -> u8 { panic!("key must not run on a singleton") },
+            |_, _, _| panic!("grow must not run on a singleton"),
+        );
+        assert_eq!(group.len(), 1);
+        assert_eq!(group[0].1, "a1");
+        assert!(q.is_empty());
+        // max == 1 pops exactly the head even with a full queue.
+        q.push(ms(50.0), "a2");
+        q.push(ms(60.0), "a3");
+        let group = q.pop_compatible(
+            1,
+            |_: &&str| -> u8 { panic!("key must not run at max=1") },
+            |_, _, _| panic!("grow must not run at max=1"),
+        );
+        assert_eq!(group, vec![(ms(50.0), "a2")]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn pop_compatible_groups_same_key_in_edf_order() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(8);
+        q.push(ms(300.0), "a3");
+        q.push(ms(100.0), "a1");
+        q.push(ms(200.0), "a2");
+        let group = pop_group(&mut q, 8, 10.0);
+        assert_eq!(
+            group,
+            vec![(ms(100.0), "a1"), (ms(200.0), "a2"), (ms(300.0), "a3")]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_compatible_mixed_entries_stop_at_the_boundary() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(8);
+        q.push(ms(100.0), "a1");
+        q.push(ms(110.0), "a2");
+        q.push(ms(120.0), "b1"); // different entry: blocks the prefix
+        q.push(ms(130.0), "a4"); // same entry, but queued behind b1
+        let group = pop_group(&mut q, 8, 10.0);
+        assert_eq!(group, vec![(ms(100.0), "a1"), (ms(110.0), "a2")]);
+        // EDF order among the survivors is untouched.
+        assert_eq!(q.pop().unwrap().1, "b1");
+        assert_eq!(q.pop().unwrap().1, "a4");
+    }
+
+    #[test]
+    fn pop_compatible_respects_laxity_boundary_and_max() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(8);
+        q.push(ms(100.0), "a1");
+        q.push(ms(150.0), "a2");
+        q.push(ms(199.9), "a3");
+        q.push(ms(200.1), "a4"); // just past 2× the head deadline
+        let group = pop_group(&mut q, 8, 2.0);
+        assert_eq!(group.len(), 3, "{group:?}");
+        assert_eq!(q.len(), 1);
+        // The rejected candidate still pops normally afterwards.
+        assert_eq!(q.pop().unwrap().1, "a4");
+
+        // `max` caps the group even when everything is compatible.
+        for item in ["a1", "a2", "a3", "a4", "a5"] {
+            q.push(ms(100.0), item);
+        }
+        let group = pop_group(&mut q, 2, 10.0);
+        assert_eq!(group.len(), 2);
+        assert_eq!(q.len(), 3);
     }
 
     #[test]

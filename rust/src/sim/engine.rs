@@ -43,11 +43,13 @@ impl PartialOrd for HeapEntry {
 }
 impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reverse for min-heap; tie-break on sequence for determinism.
+        // Reverse (other vs self) for min-heap semantics under std's
+        // max-heap; tie-break on sequence so simultaneous events pop FIFO.
+        // total_cmp: a NaN duration must not panic the simulator mid-replay
+        // (NaN times sink to the back of the event order instead).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap()
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -259,6 +261,40 @@ mod tests {
         let makespan = e.run();
         assert_eq!(makespan, 0.0);
         let _ = b;
+    }
+
+    #[test]
+    fn heap_pops_min_time_then_fifo_among_equal_times() {
+        // Regression pin for the reversed comparator: the event heap must
+        // behave as a *min*-heap on time, FIFO (ascending seq) among
+        // equal-time events. Batched serving leans on replay determinism,
+        // so a reordering here would silently skew every batch makespan.
+        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+        for (time, seq, job) in [
+            (2.0, 0, 10),
+            (1.0, 1, 11),
+            (1.0, 2, 12), // same instant as seq 1: must pop after it
+            (0.5, 3, 13),
+            (1.0, 4, 14),
+        ] {
+            heap.push(HeapEntry { time, seq, job });
+        }
+        let order: Vec<(f64, usize)> =
+            std::iter::from_fn(|| heap.pop().map(|e| (e.time, e.job))).collect();
+        assert_eq!(
+            order,
+            vec![(0.5, 13), (1.0, 11), (1.0, 12), (1.0, 14), (2.0, 10)]
+        );
+    }
+
+    #[test]
+    fn heap_survives_nan_times() {
+        // A NaN event time orders last (total_cmp) instead of panicking.
+        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+        heap.push(HeapEntry { time: f64::NAN, seq: 0, job: 0 });
+        heap.push(HeapEntry { time: 1.0, seq: 1, job: 1 });
+        assert_eq!(heap.pop().unwrap().job, 1);
+        assert!(heap.pop().unwrap().time.is_nan());
     }
 
     #[test]

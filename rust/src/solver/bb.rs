@@ -190,7 +190,7 @@ impl McKpSolver for BranchBound {
             let items = &inst.groups[g];
             items[h[0]].energy - items[*h.last().unwrap()].energy
         };
-        order.sort_by(|&a, &b| spread(b).partial_cmp(&spread(a)).unwrap());
+        order.sort_by(|&a, &b| spread(b).total_cmp(&spread(a)));
 
         let n = order.len();
         let mut suffix_min_time = vec![0.0; n + 1];
@@ -237,7 +237,7 @@ impl McKpSolver for BranchBound {
         steps_sorted.sort_by(|a, b| {
             let ra = -a.d_energy / a.d_time;
             let rb = -b.d_energy / b.d_time;
-            rb.partial_cmp(&ra).unwrap()
+            rb.total_cmp(&ra)
         });
 
         let mut ctx = SearchCtx {

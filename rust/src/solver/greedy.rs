@@ -27,11 +27,13 @@ pub(crate) fn convex_frontiers(inst: &Instance) -> Vec<Vec<usize>> {
         .iter()
         .map(|g| {
             let mut idx: Vec<usize> = (0..g.len()).collect();
+            // total_cmp: NaN items (corrupt estimates) order totally and
+            // deterministically instead of panicking; NaN energies never
+            // beat a finite `best_e` below, so they drop out of the hull.
             idx.sort_by(|&a, &b| {
                 g[a].time
-                    .partial_cmp(&g[b].time)
-                    .unwrap()
-                    .then(g[a].energy.partial_cmp(&g[b].energy).unwrap())
+                    .total_cmp(&g[b].time)
+                    .then(g[a].energy.total_cmp(&g[b].energy))
             });
             // Pareto filter (strictly decreasing energy with time).
             let mut pareto: Vec<usize> = Vec::new();
@@ -101,7 +103,7 @@ impl GreedySolver {
                 });
             }
         }
-        steps.sort_by(|a, b| b.ratio.partial_cmp(&a.ratio).unwrap());
+        steps.sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
 
         // Apply steps in ratio order; hull convexity guarantees in-group
         // steps appear in position order among applicable ones.

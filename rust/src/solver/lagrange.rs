@@ -30,11 +30,9 @@ impl LagrangeSolver {
                 .iter()
                 .enumerate()
                 .min_by(|(_, a), (_, b)| {
-                    (a.energy + lambda * a.time)
-                        .partial_cmp(&(b.energy + lambda * b.time))
-                        .unwrap()
+                    (a.energy + lambda * a.time).total_cmp(&(b.energy + lambda * b.time))
                 })
-                .unwrap();
+                .expect("MCKP group is non-empty");
             picks.push(j);
             time += item.time;
             energy += item.energy;

@@ -71,9 +71,8 @@ impl Instance {
             let mut idx: Vec<usize> = (0..g.len()).collect();
             idx.sort_by(|&a, &b| {
                 g[a].time
-                    .partial_cmp(&g[b].time)
-                    .unwrap()
-                    .then(g[a].energy.partial_cmp(&g[b].energy).unwrap())
+                    .total_cmp(&g[b].time)
+                    .then(g[a].energy.total_cmp(&g[b].energy))
             });
             let mut kept_items = Vec::new();
             let mut kept_map = Vec::new();

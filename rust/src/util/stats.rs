@@ -83,10 +83,15 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
     assert!(!samples.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&q));
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (poisoned latency) sorts last instead of
+    // panicking mid-aggregation on a serving hot path.
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = q / 100.0 * (v.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
+    // Clamp both neighbours into bounds: for a 1-element sample every
+    // percentile is that element, and floating-point rank can otherwise
+    // round `ceil` one past the end at q = 100.
+    let lo = (rank.floor() as usize).min(v.len() - 1);
+    let hi = (rank.ceil() as usize).min(v.len() - 1);
     if lo == hi {
         v[lo]
     } else {
@@ -174,6 +179,40 @@ mod tests {
         assert_eq!(percentile(&data, 0.0), 1.0);
         assert_eq!(percentile(&data, 100.0), 4.0);
         assert!((percentile(&data, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_of_single_sample_is_that_sample() {
+        // Nearest-rank edge: every percentile of a 1-element set is the
+        // element — p99 in particular must never index out of bounds.
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], q), 7.5);
+        }
+        // Two samples: q=99 interpolates inside the range, q=100 is exact.
+        let two = [1.0, 3.0];
+        assert!(percentile(&two, 99.0) <= 3.0);
+        assert!(percentile(&two, 99.0) >= percentile(&two, 50.0));
+        assert_eq!(percentile(&two, 100.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_q() {
+        let data = [5.0, 1.0, 4.0, 2.0, 8.0, 3.0];
+        let mut prev = f64::NEG_INFINITY;
+        for q in 0..=100 {
+            let p = percentile(&data, q as f64);
+            assert!(p >= prev, "percentile must be monotone: p({q}) = {p} < {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // total_cmp sinks NaNs to the end: low percentiles stay finite
+        // instead of the sort panicking.
+        let data = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&data, 0.0), 1.0);
+        assert_eq!(percentile(&data, 50.0), 2.0);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Batched-admission integration tests.
+//!
+//! The safety property everything here pins: **batch admission is
+//! deadline-monotone** — coalescing requests into one dispatch never
+//! violates a member deadline the solo path would have met. Two layers:
+//!
+//! * a randomized property over [`EdfQueue::pop_compatible`] driven by the
+//!   *production* admission predicate (the sim-anchored batch makespan
+//!   against the earliest member deadline), checked against every member of
+//!   every group it forms;
+//! * an end-to-end pool property: bursts of randomized feasible deadlines
+//!   through a batching [`ServePool`] must complete with zero deadline
+//!   misses and per-member energy charges no worse than solo.
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::serve::{
+    AtlasConfig, BatchConfig, EdfQueue, PoolConfig, ScheduleAtlas, ServePool, Ticket,
+};
+use medea::sim::replay::simulate;
+use medea::util::rng::Rng;
+use medea::util::units::Time;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// One coarse atlas per test binary (correctness is knot-density-free).
+fn shared_atlas() -> &'static ScheduleAtlas {
+    static ATLAS: OnceLock<ScheduleAtlas> = OnceLock::new();
+    ATLAS.get_or_init(|| {
+        let ctx = ExpContext::paper();
+        ScheduleAtlas::build(
+            &ctx.medea(),
+            &ctx.workload,
+            &AtlasConfig {
+                relax_factor: 8.0,
+                growth: 1.5,
+                refine_rel_energy: 0.05,
+                max_knots: 32,
+                ..AtlasConfig::default()
+            },
+        )
+        .unwrap()
+    })
+}
+
+#[test]
+fn pop_compatible_with_production_predicate_is_deadline_monotone() {
+    let atlas = shared_atlas();
+    let floor = atlas.floor().raw();
+    let hi = atlas.knots().last().unwrap().deadline.raw() * 4.0;
+    let amort = BatchConfig::default().amortization;
+
+    let mut rng = Rng::new(0xBA7C4);
+    for case in 0..50 {
+        let mut q: EdfQueue<usize> = EdfQueue::new(256);
+        let n_jobs = rng.usize_below(48) + 2;
+        let mut deadlines = Vec::with_capacity(n_jobs);
+        for i in 0..n_jobs {
+            // Feasible by construction (≥ floor), spread across the whole
+            // range so several land on the same knot while others scatter.
+            let d = Time(rng.range_f64(floor, hi));
+            deadlines.push(d);
+            q.push(d, i);
+        }
+        let max_batch = rng.usize_below(8) + 1;
+        while !q.is_empty() {
+            let group = q.pop_compatible(
+                max_batch,
+                // The production key: the resolved knot's coordinate (the
+                // pools stamp this on the job at submit; same value).
+                |&i| {
+                    atlas
+                        .lookup(deadlines[i])
+                        .map(|k| k.deadline.raw().to_bits())
+                        .unwrap_or(u64::MAX)
+                },
+                // The production grow check: sim-anchored makespan against
+                // the earliest member deadline.
+                |group, _d, _cand| match atlas.lookup(group[0].0) {
+                    Ok(knot) => {
+                        knot.batch_makespan(group.len() + 1, amort).raw() <= group[0].0.raw()
+                    }
+                    Err(_) => false,
+                },
+            );
+            assert!(!group.is_empty());
+            assert!(group.len() <= max_batch);
+            let knot = atlas.lookup(group[0].0).unwrap();
+            let makespan = knot.batch_makespan(group.len(), amort);
+            for &(deadline, job) in &group {
+                // Every member shares the head's knot…
+                let member_knot = atlas.lookup(deadline).unwrap();
+                assert_eq!(
+                    member_knot.deadline.raw().to_bits(),
+                    knot.deadline.raw().to_bits(),
+                    "case {case}: job {job} batched across knots"
+                );
+                // …and the batch completes within *its* deadline, not just
+                // the head's (deadline monotonicity).
+                assert!(
+                    makespan.raw() <= deadline.raw() + 1e-12,
+                    "case {case}: batch of {} finishing at {:.3} ms violates \
+                     member deadline {:.3} ms (solo path met it: knot {:.3} ms)",
+                    group.len(),
+                    makespan.as_ms(),
+                    deadline.as_ms(),
+                    member_knot.deadline.as_ms()
+                );
+                // The solo path would also have met it — so batching
+                // strictly preserved feasibility rather than trading it.
+                assert!(member_knot.sim_time.raw() <= deadline.raw() + 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_pool_meets_every_admitted_deadline() {
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 2,
+            queue_capacity: 256,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            batch: BatchConfig {
+                max_batch: 8,
+                ..BatchConfig::default()
+            },
+            ..PoolConfig::default()
+        },
+        shared_atlas().clone(),
+    )
+    .unwrap();
+    let floor = pool.floor();
+    let ctx = ExpContext::paper();
+    let mut rng = Rng::new(0xD15BA7C4);
+    let mut gen = EegGenerator::new(SynthConfig::default(), 17);
+
+    // Three bursts of randomized feasible deadlines (bursts are what make
+    // batches form); every admitted request must meet the deadline it asked
+    // for, and batch members must never be charged more energy than solo.
+    for _burst in 0..3 {
+        let tickets: Vec<(Time, Ticket)> = (0..96)
+            .map(|_| {
+                let d = floor * (1.0 + rng.f64() * 63.0);
+                (d, pool.submit(gen.next_window(), d).unwrap())
+            })
+            .collect();
+        for (deadline, t) in tickets {
+            let out = t.wait().unwrap();
+            assert!(
+                out.sim.deadline_met,
+                "deadline {:.2} ms missed by a batch of {}",
+                deadline.as_ms(),
+                out.batch_size
+            );
+            assert!(out.sim.active_time.raw() <= deadline.raw() + 1e-12);
+            assert!(out.knot_deadline.raw() <= deadline.raw() + 1e-12);
+            if out.batch_size > 1 {
+                // Amortization: a batch member's active-energy share must
+                // never exceed the solo simulated charge for the same knot
+                // (scale(n)/n < 1 for n ≥ 2).
+                let knot = shared_atlas().lookup(deadline).unwrap();
+                let solo_sim = simulate(&ctx.workload, &ctx.platform, &ctx.model, &knot.schedule);
+                assert!(
+                    out.sim.active_energy.raw() <= solo_sim.active_energy.raw() * (1.0 + 1e-9),
+                    "batch member charged {:.2} uJ vs solo sim {:.2} uJ",
+                    out.sim.active_energy.as_uj(),
+                    solo_sim.active_energy.as_uj()
+                );
+            }
+        }
+    }
+    let m = pool.shutdown();
+    assert_eq!(m.aggregate.requests, 3 * 96);
+    assert_eq!(m.aggregate.deadline_misses, 0, "{}", m.summary());
+    assert_eq!(m.total_shed(), 0);
+    assert_eq!(m.batched_requests() + m.solo_requests(), 3 * 96);
+}

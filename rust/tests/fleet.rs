@@ -58,6 +58,7 @@ fn pool_config(workers: usize) -> FleetPoolConfig {
         queue_capacity: 64,
         // Nonexistent on purpose: exercises the schedule-only path.
         artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+        ..FleetPoolConfig::default()
     }
 }
 
@@ -263,4 +264,92 @@ fn library_round_trips_swaps_and_skips_stale_entries() {
     let partial = load_library(&dir).unwrap();
     assert_eq!(partial.len(), 1);
     assert!(partial.resolve(&e2.key).is_none());
+}
+
+#[test]
+fn fleet_batches_coalesce_per_entry_and_respect_demands() {
+    use medea::serve::BatchConfig;
+    let registry = shared_registry();
+    let pool = FleetPool::start(
+        registry.clone(),
+        FleetPoolConfig {
+            batch: BatchConfig {
+                max_batch: 8,
+                ..BatchConfig::default()
+            },
+            ..pool_config(1)
+        },
+    )
+    .unwrap();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 31);
+
+    // A single-worker burst of lax same-entry deadline demands: batches
+    // must form, and every member must still meet the deadline it asked
+    // for (deadline monotonicity through the fleet path).
+    let floor = registry
+        .resolve_named("heeptimize", "tsd-small")
+        .unwrap()
+        .entry
+        .atlas
+        .floor();
+    let tickets: Vec<_> = (0..48)
+        .map(|_| {
+            pool.submit(
+                "heeptimize",
+                "tsd-small",
+                gen.next_window(),
+                Demand::Deadline(floor * 48.0),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut max_batch_seen = 0;
+    for t in tickets {
+        let out = t.wait().unwrap();
+        assert!(out.sim.deadline_met, "batched member missed its deadline");
+        assert!(out.batch_size >= 1 && out.batch_size <= 8);
+        max_batch_seen = max_batch_seen.max(out.batch_size);
+    }
+
+    // Energy-budget demands batch under the dual check: the amortized
+    // per-member share must fit every member's requested cap.
+    let e_floor = registry
+        .resolve_named("heeptimize", "tsd-small")
+        .unwrap()
+        .entry
+        .energy
+        .floor();
+    let caps = [e_floor * 1.5, e_floor * 2.0, e_floor * 3.0];
+    let tickets: Vec<_> = (0..24)
+        .map(|i| {
+            let cap = caps[i % caps.len()];
+            pool.submit(
+                "heeptimize",
+                "tsd-small",
+                gen.next_window(),
+                Demand::EnergyBudget(cap),
+            )
+            .map(|t| (cap, t))
+            .unwrap()
+        })
+        .collect();
+    for (cap, t) in tickets {
+        let out = t.wait().unwrap();
+        assert!(
+            out.sim.active_energy.raw() <= cap.raw() + 1e-12,
+            "amortized share {:.2} uJ exceeds the requested cap {:.2} uJ",
+            out.sim.active_energy.as_uj(),
+            cap.as_uj()
+        );
+        assert!(out.sim.deadline_met, "energy member marked as missing its demand");
+    }
+
+    let m = pool.shutdown();
+    assert_eq!(m.aggregate.requests, 48 + 24);
+    assert_eq!(m.aggregate.deadline_misses, 0);
+    assert_eq!(m.batched_requests() + m.solo_requests(), 48 + 24);
+    assert!(
+        max_batch_seen >= 2,
+        "single-worker burst formed no batches at all"
+    );
 }

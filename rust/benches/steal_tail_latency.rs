@@ -1,0 +1,182 @@
+//! Bench: cross-shard work stealing vs tail latency under a skewed burst.
+//!
+//! The scenario stealing exists for: one shard's worker is stuck
+//! mid-dispatch on a slow lax request (the "plug") while urgent requests
+//! land in the queue behind it and the sibling worker idles. Without
+//! stealing the urgent tail is served serially by the stuck worker; with
+//! stealing the idle sibling lifts EDF-contiguous groups from the loaded
+//! shard's queue head, so the two workers share the rescue.
+//!
+//! Both runs drive the identical pinned-submission burst (everything lands
+//! on shard 0 via `ServePool::submit_pinned`, shard 1 idle) through pools
+//! that differ only in [`StealConfig`]:
+//!
+//! * **no-steal** — jobs stay on the shard they were dispatched to;
+//! * **steal**   — idle workers rescue the backlog (default policy).
+//!
+//! Acceptance bar: urgent-request p50 and p99 latency with stealing
+//! enabled stay within 10% of the no-steal baseline (the expected signal
+//! is a ~2x win; the headroom absorbs runner noise in a two-run wall-clock
+//! comparison), with at least one steal recorded and zero deadline misses
+//! in either run. Results are printed and written to `BENCH_steal.json`.
+//!
+//! `cargo bench --bench steal_tail_latency` (set MEDEA_BENCH_FAST=1 to trim).
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::json_obj;
+use medea::serve::{
+    AtlasConfig, PoolConfig, ScheduleAtlas, ServeMetrics, ServePool, StealConfig, Ticket,
+};
+use medea::util::stats::percentile;
+use std::path::PathBuf;
+use std::time::Duration;
+
+struct SkewResult {
+    /// Urgent-request host latencies (µs), across all rounds.
+    urgent_us: Vec<f64>,
+    metrics: ServeMetrics,
+}
+
+/// One skewed burst per round: a lax plug pinned to shard 0, a beat for
+/// worker 0 to go heads-down on it, then the urgent burst pinned behind it.
+fn run_skewed(
+    atlas: &ScheduleAtlas,
+    steal: StealConfig,
+    rounds: usize,
+    urgent_per_round: usize,
+) -> SkewResult {
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 2,
+            queue_capacity: 1024,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            steal,
+            ..PoolConfig::default()
+        },
+        atlas.clone(),
+    )
+    .expect("start pool");
+    let plug_deadline = atlas.floor() * 7.9;
+    // Tight enough that the batch-makespan check keeps urgent dispatches
+    // small (mostly solo), so the rescue is genuinely serial work.
+    let urgent_deadline = atlas.floor() * 1.5;
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let mut urgent_us = Vec::with_capacity(rounds * urgent_per_round);
+
+    for _ in 0..rounds {
+        let plug = pool
+            .submit_pinned(0, gen.next_window(), plug_deadline)
+            .expect("admit plug");
+        // Let worker 0 pop the plug so the urgent burst queues behind an
+        // in-flight dispatch rather than racing it.
+        std::thread::sleep(Duration::from_micros(300));
+        let urgent: Vec<Ticket> = (0..urgent_per_round)
+            .map(|_| {
+                pool.submit_pinned(0, gen.next_window(), urgent_deadline)
+                    .expect("admit urgent")
+            })
+            .collect();
+        for t in urgent {
+            let out = t.wait().expect("serve urgent");
+            assert!(out.sim.deadline_met, "urgent deadline violated");
+            urgent_us.push(out.host_latency.as_secs_f64() * 1e6);
+        }
+        let out = plug.wait().expect("serve plug");
+        assert!(out.sim.deadline_met, "plug deadline violated");
+    }
+
+    let metrics = pool.shutdown();
+    assert_eq!(
+        metrics.aggregate.requests as usize,
+        rounds * (urgent_per_round + 1)
+    );
+    assert_eq!(metrics.aggregate.deadline_misses, 0, "no run may miss deadlines");
+    SkewResult { urgent_us, metrics }
+}
+
+fn main() {
+    let fast = std::env::var("MEDEA_BENCH_FAST").is_ok();
+    let rounds = if fast { 15 } else { 40 };
+    let urgent_per_round = 16;
+
+    let ctx = ExpContext::paper();
+    let atlas = ScheduleAtlas::build(
+        &ctx.medea(),
+        &ctx.workload,
+        &AtlasConfig {
+            relax_factor: 8.0,
+            growth: 1.4,
+            refine_rel_energy: 0.02,
+            max_knots: 48,
+            ..AtlasConfig::default()
+        },
+    )
+    .expect("atlas build");
+    println!(
+        "atlas: {} knots, floor {:.1} ms; skewed burst: {} rounds x (1 plug + {} urgent), all pinned to shard 0 of 2\n",
+        atlas.len(),
+        atlas.floor().as_ms(),
+        rounds,
+        urgent_per_round
+    );
+
+    let nosteal = run_skewed(&atlas, StealConfig::disabled(), rounds, urgent_per_round);
+    let ns_p50 = percentile(&nosteal.urgent_us, 50.0);
+    let ns_p99 = percentile(&nosteal.urgent_us, 99.0);
+    println!(
+        "no-steal: urgent p50 {ns_p50:>8.1} us  p99 {ns_p99:>8.1} us  {}",
+        nosteal.metrics.summary()
+    );
+
+    let stealing = run_skewed(&atlas, StealConfig::default(), rounds, urgent_per_round);
+    let st_p50 = percentile(&stealing.urgent_us, 50.0);
+    let st_p99 = percentile(&stealing.urgent_us, 99.0);
+    println!(
+        "steal:    urgent p50 {st_p50:>8.1} us  p99 {st_p99:>8.1} us  {}",
+        stealing.metrics.summary()
+    );
+
+    let speedup = ns_p99 / st_p99.max(1e-9);
+    println!("\nstealing vs pinned tail: {speedup:.2}x lower urgent p99");
+    assert!(
+        stealing.metrics.steals() > 0,
+        "skewed burst triggered no steals — the idle sibling never rescued the loaded shard"
+    );
+    assert_eq!(nosteal.metrics.steals(), 0, "no-steal run must not steal");
+    // The structural win is ~2x (two workers share a rescue one worker did
+    // alone), but both gates carry 10% headroom: they are relative
+    // wall-clock comparisons between two runs on a possibly shared runner,
+    // and a scheduler stall landing on one run's samples must not fail CI
+    // when the signal itself is a multiple, not a margin.
+    assert!(
+        st_p50 <= ns_p50 * 1.10,
+        "urgent p50 with stealing must stay within 10% of the no-steal baseline \
+         (the expected signal is a ~2x win): {st_p50:.1} us vs {ns_p50:.1} us"
+    );
+    assert!(
+        st_p99 <= ns_p99 * 1.10,
+        "urgent p99 with stealing must stay within 10% of the no-steal baseline \
+         (the expected signal is a ~2x win): {st_p99:.1} us vs {ns_p99:.1} us"
+    );
+
+    let out = json_obj! {
+        "rounds" => rounds,
+        "urgent_per_round" => urgent_per_round,
+        "atlas_knots" => atlas.len(),
+        "no_steal" => json_obj! {
+            "urgent_p50_us" => ns_p50,
+            "urgent_p99_us" => ns_p99,
+            "steals" => nosteal.metrics.steals(),
+        },
+        "steal" => json_obj! {
+            "urgent_p50_us" => st_p50,
+            "urgent_p99_us" => st_p99,
+            "steals" => stealing.metrics.steals(),
+            "stolen_requests" => stealing.metrics.stolen_requests(),
+        },
+        "p99_speedup" => speedup,
+    };
+    std::fs::write("BENCH_steal.json", out.to_pretty()).expect("write BENCH_steal.json");
+    println!("\nwrote BENCH_steal.json");
+}

@@ -21,6 +21,12 @@ pub struct Metrics {
     /// Dispatch-batch size histogram: `batch_hist[i]` counts dispatches of
     /// `i + 1` coalesced requests (solo dispatches land in `batch_hist[0]`).
     pub batch_hist: Vec<u64>,
+    /// Steal events: dispatches whose group was lifted from a sibling
+    /// shard's queue by this (otherwise idle) worker.
+    pub steals: u64,
+    /// Requests served through stolen dispatches (each steal event
+    /// contributes its group size).
+    pub stolen_requests: u64,
     host_latency: Running,
     /// Bounded reservoir of latency samples (seconds).
     latencies: Vec<f64>,
@@ -50,6 +56,12 @@ impl Metrics {
             self.batch_hist.resize(size, 0);
         }
         self.batch_hist[size - 1] += 1;
+    }
+
+    /// Record one steal event of `size` coalesced requests (1 = solo).
+    pub fn record_steal(&mut self, size: usize) {
+        self.steals += 1;
+        self.stolen_requests += size.max(1) as u64;
     }
 
     /// Requests served through a multi-request dispatch (batch size ≥ 2).
@@ -104,6 +116,8 @@ impl Metrics {
         for (slot, &n) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
             *slot += n;
         }
+        self.steals += other.steals;
+        self.stolen_requests += other.stolen_requests;
         self.host_latency.merge(&other.host_latency);
         for &x in &other.latencies {
             self.reservoir_push(x);
@@ -201,8 +215,11 @@ mod tests {
         let mut b = Metrics::default();
         b.record_batch(2);
         b.record_batch(6);
+        b.record_steal(6);
         a.merge(&b);
         assert_eq!(a.batch_hist, vec![1, 1, 0, 2, 0, 1]);
+        assert_eq!(a.steals, 1);
+        assert_eq!(a.stolen_requests, 6);
         assert_eq!(a.batched_requests(), 8 + 2 + 6);
         // Merging the longer histogram into the shorter also works.
         let mut c = Metrics::default();

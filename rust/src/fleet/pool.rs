@@ -12,11 +12,14 @@
 //!
 //! Dispatch, admission, and shutdown follow the serve pool: per-worker EDF
 //! queues with typed shedding, [`crate::serve::pool::pick_shard`]'s
-//! EDF-aware dispatch heuristic, graceful drain on shutdown — and batched
-//! dequeue ([`crate::serve::batch`]): jobs sharing one `(entry, resolved
-//! knot)` identity coalesce into a single dispatch, deadline demands gated
-//! by the sim-anchored batch makespan, energy demands by the dual
-//! per-member budget-share check.
+//! EDF-aware dispatch heuristic, cross-shard work stealing
+//! ([`crate::serve::pool::StealConfig`]: idle workers lift compatible
+//! groups — same entry, epoch, and resolved knot — from a backlogged
+//! sibling's queue head), graceful drain on shutdown — and batched dequeue
+//! ([`crate::serve::batch`]): jobs sharing one `(entry, resolved knot)`
+//! identity coalesce into a single dispatch, deadline demands gated by the
+//! sim-anchored batch makespan, energy demands by the dual per-member
+//! budget-share check.
 
 use super::entry::FleetEntry;
 use super::key::FleetKey;
@@ -31,7 +34,7 @@ use crate::serve::batch::{
     batch_energy_share, batch_makespan, batch_share, member_report, stub_predictions, BatchConfig,
 };
 use crate::serve::metrics::ServeMetrics;
-use crate::serve::pool::{pick_shard, pop_group, ServeError, Shard};
+use crate::serve::pool::{head_laxity, pick_shard, pop_group, ServeError, Shard, StealConfig};
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
 use crate::util::error::{anyhow, Result};
@@ -64,6 +67,8 @@ pub struct FleetPoolConfig {
     pub artifact_dir: PathBuf,
     /// Batched-admission knobs (`max_batch == 1` is the solo legacy path).
     pub batch: BatchConfig,
+    /// Cross-shard work-stealing knobs (enabled by default).
+    pub steal: StealConfig,
 }
 
 impl Default for FleetPoolConfig {
@@ -76,6 +81,7 @@ impl Default for FleetPoolConfig {
             queue_capacity: 256,
             artifact_dir: ArtifactManifest::default_dir(),
             batch: BatchConfig::default(),
+            steal: StealConfig::default(),
         }
     }
 }
@@ -168,20 +174,24 @@ impl FleetPool {
     pub fn start(registry: Arc<FleetRegistry>, config: FleetPoolConfig) -> Result<FleetPool> {
         let n = config.workers.max(1);
         let batch = config.batch.clone().sanitized();
-        let mut shards = Vec::with_capacity(n);
+        let steal = config.steal.clone();
+        // Every shard exists before any worker spawns: workers see the full
+        // sibling set, so stealing never races pool construction.
+        let shards: Vec<Arc<Shard<Job>>> = (0..n)
+            .map(|_| Arc::new(Shard::new(EdfQueue::new(config.queue_capacity.max(1)))))
+            .collect();
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
-            let shard = Arc::new(Shard::new(EdfQueue::new(config.queue_capacity.max(1))));
             let handle = std::thread::Builder::new()
                 .name(format!("medea-fleet-{i}"))
                 .spawn({
-                    let shard = shard.clone();
+                    let shards = shards.clone();
                     let dir = config.artifact_dir.clone();
                     let batch = batch.clone();
-                    move || worker_loop(&shard, &dir, &batch)
+                    let steal = steal.clone();
+                    move || worker_loop(&shards, i, &dir, &batch, &steal)
                 })
                 .map_err(|e| anyhow!("spawn fleet worker {i}: {e}"))?;
-            shards.push(shard);
             workers.push(handle);
         }
         Ok(FleetPool {
@@ -365,9 +375,11 @@ impl Drop for FleetPool {
 }
 
 fn worker_loop(
-    shard: &Shard<Job>,
+    shards: &[Arc<Shard<Job>>],
+    me: usize,
     artifact_dir: &std::path::Path,
     batch: &BatchConfig,
+    steal: &StealConfig,
 ) -> Metrics {
     let mut metrics = Metrics::default();
     // One PJRT runtime handle per worker, created on the worker thread.
@@ -381,51 +393,58 @@ fn worker_loop(
     let infer = TsdInference::default();
     let amort = batch.amortization;
 
+    // Same entry + same epoch + same resolved knot ⇒ one coalesced
+    // dispatch. The kind tag keeps deadline- and energy-resolved schedules
+    // apart even when knot coordinates collide bitwise; the epoch keeps
+    // pre- and post-hot-swap jobs apart, since a rebuilt entry (same
+    // content key, different sweep config) can reproduce a knot coordinate
+    // with a different schedule. A thief runs this same key — including
+    // the hot-swap-epoch batch identity — so stolen groups are exactly the
+    // groups the victim's own worker would have formed.
+    let key =
+        |job: &Job| -> (FleetKey, u64, (u8, u64)) { (job.entry.key, job.epoch, job.batch_key) };
+    let grow = |group: &[(Time, Job)], _cand_deadline: Time, cand: &Job| {
+        let head = &group[0].1;
+        let n = group.len() + 1;
+        match head.demand {
+            // Deadline members: the batch makespan must fit the *earliest*
+            // member deadline (everyone else is laxer in EDF pop order).
+            Demand::Deadline(_) => {
+                batch_makespan(head.unit_time, n, amort).raw() <= group[0].0.raw()
+            }
+            // Energy members promise energy, not latency: the dual
+            // EnergyAtlas check admits while the amortized per-member
+            // share fits every member's requested cap (the share is
+            // non-increasing in n, so existing members can only get
+            // cheaper).
+            Demand::EnergyBudget(_) => {
+                let share = batch_energy_share(head.unit_energy, n, amort).raw();
+                group
+                    .iter()
+                    .map(|(_, j)| j)
+                    .chain(std::iter::once(cand))
+                    .all(|j| match j.demand {
+                        Demand::EnergyBudget(cap) => share <= cap.raw(),
+                        Demand::Deadline(_) => false, // distinct batch_key kind
+                    })
+            }
+        }
+    };
+    // Fill-window clamp: the queue priority is the schedule's effective
+    // deadline (the dual solve's for energy demands), so the head's laxity
+    // bounds how long a straggler wait may delay it.
+    let slack = |deadline: Time, job: &Job| head_laxity(deadline, job.unit_time, job.submitted);
+    let queued_for = |job: &Job| job.submitted.elapsed();
+
     loop {
-        let group = pop_group(
-            shard,
-            batch,
-            // Same entry + same epoch + same resolved knot ⇒ one coalesced
-            // dispatch. The kind tag keeps deadline- and energy-resolved
-            // schedules apart even when knot coordinates collide bitwise;
-            // the epoch keeps pre- and post-hot-swap jobs apart, since a
-            // rebuilt entry (same content key, different sweep config) can
-            // reproduce a knot coordinate with a different schedule.
-            |job: &Job| -> (FleetKey, u64, (u8, u64)) {
-                (job.entry.key, job.epoch, job.batch_key)
-            },
-            |group, _cand_deadline, cand| {
-                let head = &group[0].1;
-                let n = group.len() + 1;
-                match head.demand {
-                    // Deadline members: the batch makespan must fit the
-                    // *earliest* member deadline (everyone else is laxer in
-                    // EDF pop order).
-                    Demand::Deadline(_) => {
-                        batch_makespan(head.unit_time, n, amort).raw() <= group[0].0.raw()
-                    }
-                    // Energy members promise energy, not latency: the dual
-                    // EnergyAtlas check admits while the amortized
-                    // per-member share fits every member's requested cap
-                    // (the share is non-increasing in n, so existing
-                    // members can only get cheaper).
-                    Demand::EnergyBudget(_) => {
-                        let share = batch_energy_share(head.unit_energy, n, amort).raw();
-                        group
-                            .iter()
-                            .map(|(_, j)| j)
-                            .chain(std::iter::once(cand))
-                            .all(|j| match j.demand {
-                                Demand::EnergyBudget(cap) => share <= cap.raw(),
-                                Demand::Deadline(_) => false, // distinct batch_key kind
-                            })
-                    }
-                }
-            },
-        );
-        let Some(group) = group else { break };
+        let popped = pop_group(shards, me, batch, steal, &key, &grow, &slack, &queued_for);
+        let Some(popped) = popped else { break };
+        let group = popped.jobs;
         if group.is_empty() {
             continue;
+        }
+        if popped.stolen {
+            metrics.record_steal(group.len());
         }
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path. `process` consumes the

@@ -86,6 +86,7 @@ fn app() -> App {
                 .opt("energy-budgets-uj", "Comma-separated energy caps in uJ (cycled; requests carry an energy budget instead of a deadline; fleet mode only)")
                 .opt_default("max-batch", "Coalesce up to N compatible queued requests into one dispatch (1 = solo)", "8")
                 .opt_default("batch-window-us", "Extra microseconds a worker waits for stragglers when the backlog cannot fill a batch (0 = opportunistic only)", "0")
+                .flag("no-steal", "Disable cross-shard work stealing (idle workers rescuing queued work from a stuck shard)")
                 .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)"),
         )
         .command(
@@ -382,6 +383,15 @@ fn parse_batch(args: &Args) -> Result<medea::serve::BatchConfig, String> {
     })
 }
 
+/// Parse `--no-steal` into a [`medea::serve::StealConfig`].
+fn parse_steal(args: &Args) -> medea::serve::StealConfig {
+    if args.flag("no-steal") {
+        medea::serve::StealConfig::disabled()
+    } else {
+        medea::serve::StealConfig::default()
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     use medea::serve::{PoolConfig, ScheduleAtlas, ServePool, Ticket};
     if args.get("fleet-dir").is_some() {
@@ -406,6 +416,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         queue_capacity: queue_cap,
         artifact_dir: dir,
         batch: parse_batch(args)?,
+        steal: parse_steal(args),
         ..PoolConfig::default()
     };
     let pool = match args.get("atlas").map(Path::new) {
@@ -553,6 +564,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
             queue_capacity: queue_cap,
             artifact_dir,
             batch: parse_batch(args)?,
+            steal: parse_steal(args),
         },
     )
     .map_err(|e| e.to_string())?;

@@ -77,6 +77,17 @@ impl ServeMetrics {
         self.aggregate.solo_requests()
     }
 
+    /// Steal events across all workers (dispatch groups lifted from a
+    /// sibling shard's queue by an otherwise idle worker).
+    pub fn steals(&self) -> u64 {
+        self.aggregate.steals
+    }
+
+    /// Requests served through stolen dispatches.
+    pub fn stolen_requests(&self) -> u64 {
+        self.aggregate.stolen_requests
+    }
+
     pub fn p50(&self) -> Duration {
         self.aggregate.host_latency_p50()
     }
@@ -87,7 +98,7 @@ impl ServeMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "workers={} requests={} [{}] batched={} solo={} misses={} shed={} (floor={} full={} unknown={}) energy={:.1} uJ p50={:?} p99={:?}",
+            "workers={} requests={} [{}] batched={} solo={} steals={} (stolen_reqs={}) misses={} shed={} (floor={} full={} unknown={}) energy={:.1} uJ p50={:?} p99={:?}",
             self.workers,
             self.aggregate.requests,
             self.per_worker_requests
@@ -97,6 +108,8 @@ impl ServeMetrics {
                 .join("/"),
             self.batched_requests(),
             self.solo_requests(),
+            self.steals(),
+            self.stolen_requests(),
             self.aggregate.deadline_misses,
             self.total_shed(),
             self.shed_below_floor,
@@ -123,6 +136,8 @@ impl ServeMetrics {
             "batch_hist",
             Json::Arr(self.batch_histogram().iter().map(|&n| Json::from(n)).collect()),
         );
+        o.insert("steals", self.steals());
+        o.insert("stolen_requests", self.stolen_requests());
         o.insert("shed_below_floor", self.shed_below_floor);
         o.insert("shed_queue_full", self.shed_queue_full);
         o.insert("shed_unknown_entry", self.shed_unknown_entry);
@@ -186,18 +201,24 @@ mod tests {
             w0.record(false, true, 1e-6, 0.01, Duration::from_millis(1));
         }
         w0.record_batch(4); // one dispatch of 4
+        w0.record_steal(4); // ... which was stolen from a sibling shard
         let mut w1 = Metrics::default();
         w1.record(false, true, 1e-6, 0.01, Duration::from_millis(1));
         w1.record_batch(1); // one solo dispatch
         let m = ServeMetrics::aggregate(vec![w0, w1], 0, 0);
         assert_eq!(m.batched_requests(), 4);
         assert_eq!(m.solo_requests(), 1);
+        assert_eq!(m.steals(), 1);
+        assert_eq!(m.stolen_requests(), 4);
         assert_eq!(m.batch_histogram(), &[1, 0, 0, 1]);
         let s = m.summary();
         assert!(s.contains("batched=4") && s.contains("solo=1"), "{s}");
+        assert!(s.contains("steals=1") && s.contains("stolen_reqs=4"), "{s}");
         let j = m.to_json();
         assert_eq!(j.get("batched_requests").unwrap().as_u64(), Some(4));
         assert_eq!(j.get("solo_requests").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("steals").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("stolen_requests").unwrap().as_u64(), Some(4));
         assert_eq!(j.get("batch_hist").unwrap().as_arr().unwrap().len(), 4);
     }
 }

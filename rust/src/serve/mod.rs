@@ -23,7 +23,9 @@
 //! * [`pool`] — the sharded worker pool: N threads, one PJRT runtime handle
 //!   each, sharing the atlas behind an `Arc`, EDF-aware dispatch
 //!   (round-robin while shard backlogs balance, least-backlogged shard when
-//!   they skew), batch-aware dequeue, bounded per-worker schedule LRUs,
+//!   they skew), batch-aware dequeue, cross-shard work stealing (idle
+//!   workers lift EDF-contiguous groups from a backlogged sibling's queue
+//!   head, [`pool::StealConfig`]), bounded per-worker schedule LRUs,
 //!   graceful draining shutdown.
 //! * [`metrics`] — cross-worker aggregation (p50/p99 host latency, energy,
 //!   per-batch-size dispatch histograms, deadline-miss and shed counts)
@@ -49,5 +51,5 @@ pub mod queue;
 pub use atlas::{AtlasConfig, AtlasKnot, BelowFloor, ScheduleAtlas};
 pub use batch::BatchConfig;
 pub use metrics::ServeMetrics;
-pub use pool::{InferenceOutcome, PoolConfig, ServeError, ServePool, Ticket};
+pub use pool::{InferenceOutcome, PoolConfig, ServeError, ServePool, StealConfig, Ticket};
 pub use queue::{Admission, EdfQueue, Rejection};

@@ -9,8 +9,11 @@
 //! solver error. At dequeue time workers pop EDF-contiguous groups of
 //! requests resolving to the same atlas knot and execute each group as one
 //! dispatch ([`crate::serve::batch`]); dispatch routing itself stays
-//! EDF-aware ([`pick_shard`]). Shutdown is graceful: queues drain, then
-//! workers exit and their metrics are merged into a [`ServeMetrics`].
+//! EDF-aware ([`pick_shard`]), and idle workers steal EDF-contiguous
+//! groups from backlogged sibling shards ([`StealConfig`]) so a worker
+//! stuck mid-dispatch cannot strand urgent queued work. Shutdown is
+//! graceful: queues drain, then workers exit and their metrics are merged
+//! into a [`ServeMetrics`].
 
 use crate::coordinator::Metrics;
 use crate::eeg::synth::EegWindow;
@@ -57,6 +60,8 @@ pub struct PoolConfig {
     pub atlas: AtlasConfig,
     /// Batched-admission knobs (`max_batch == 1` is the solo legacy path).
     pub batch: BatchConfig,
+    /// Cross-shard work-stealing knobs (enabled by default).
+    pub steal: StealConfig,
 }
 
 impl Default for PoolConfig {
@@ -71,6 +76,48 @@ impl Default for PoolConfig {
             artifact_dir: ArtifactManifest::default_dir(),
             atlas: AtlasConfig::default(),
             batch: BatchConfig::default(),
+            steal: StealConfig::default(),
+        }
+    }
+}
+
+/// Cross-shard work-stealing knobs, shared by [`ServePool`] and
+/// [`crate::fleet::pool::FleetPool`].
+///
+/// Dispatch routing ([`pick_shard`]) balances queue *depths* at submit
+/// time, but cannot help once a shard's worker is stuck mid-dispatch with
+/// urgent work queued behind it: queued jobs sit idle while sibling workers
+/// starve. Stealing closes that hole at dequeue time — an idle worker scans
+/// sibling depth mirrors and lifts an EDF-contiguous compatible group from
+/// the most-backlogged victim's queue head (the tightest-deadline work the
+/// victim cannot get to), so stealing strictly improves EDF adherence and
+/// never reorders a victim's remaining queue.
+#[derive(Debug, Clone)]
+pub struct StealConfig {
+    /// `false` pins every job to the shard it was dispatched to (the
+    /// pre-stealing behavior; `serve --no-steal`).
+    pub enabled: bool,
+    /// How often an idle worker re-samples sibling depth mirrors while its
+    /// own queue is empty. Only idle workers pay this wakeup; busy workers
+    /// never poll.
+    pub poll: Duration,
+}
+
+impl Default for StealConfig {
+    fn default() -> Self {
+        StealConfig {
+            enabled: true,
+            poll: Duration::from_micros(200),
+        }
+    }
+}
+
+impl StealConfig {
+    /// The no-stealing configuration (jobs stay on their dispatch shard).
+    pub fn disabled() -> StealConfig {
+        StealConfig {
+            enabled: false,
+            ..StealConfig::default()
         }
     }
 }
@@ -173,50 +220,171 @@ impl<J> Shard<J> {
     }
 }
 
-/// Block until work is available, then pop an EDF-contiguous compatible
-/// group under `key`/`grow` (see [`EdfQueue::pop_compatible`]). Honors the
-/// batch fill window: when the backlog cannot fill a batch, the worker keeps
-/// waiting — re-waiting across wakeups, so one early straggler or a spurious
-/// wakeup cannot cut the window short — until the batch can fill or
-/// `batch.window` elapses, then dispatches whatever is compatible. Returns
-/// `None` when the shard is stopping and drained.
+/// One dequeued dispatch group, tagged with where it came from.
+pub(crate) struct PoppedGroup<J> {
+    pub(crate) jobs: Vec<(Time, J)>,
+    /// `true` when the group was lifted from a sibling shard's queue.
+    pub(crate) stolen: bool,
+}
+
+/// Block until work is available on `shards[me]` — or, when stealing is
+/// enabled and the own queue is empty, on the most-backlogged sibling —
+/// then pop an EDF-contiguous compatible group under `key`/`grow` (see
+/// [`EdfQueue::pop_compatible`]). Honors the batch fill window: when the
+/// backlog cannot fill a batch, the worker keeps waiting — re-waiting
+/// across wakeups, so one early straggler or a spurious wakeup cannot cut
+/// the window short — until the batch can fill or `batch.window` elapses,
+/// *clamped to the head's remaining laxity* (`slack`: a configured window
+/// must never consume the slack the head needs to still dispatch in time).
+/// Returns `None` when the own shard is stopping and drained.
+///
+/// Steals never wait: the victim's queued work is stranded (its worker is
+/// stuck mid-dispatch), so the thief lifts whatever compatible prefix
+/// exists right now. A victim head still inside its configured fill window
+/// (`queued_for(head) < batch.window`) is *not* stranded — its worker may
+/// be deliberately holding it for stragglers — so thieves skip it until it
+/// has aged past the window; the age rule is raceless (derived from the
+/// job itself, not from worker state). Pops — own or stolen — happen under
+/// the owning shard's lock, so no job can be dispatched twice; the thief
+/// never holds two shard locks at once, so stealing cannot deadlock
+/// against submit, shutdown, or a symmetric thief.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn pop_group<J, K: PartialEq>(
-    shard: &Shard<J>,
+    shards: &[Arc<Shard<J>>],
+    me: usize,
     batch: &BatchConfig,
-    key: impl Fn(&J) -> K,
-    grow: impl Fn(&[(Time, J)], Time, &J) -> bool,
-) -> Option<Vec<(Time, J)>> {
-    let mut st = shard.state.lock().expect("shard lock poisoned");
+    steal: &StealConfig,
+    key: &impl Fn(&J) -> K,
+    grow: &impl Fn(&[(Time, J)], Time, &J) -> bool,
+    slack: &impl Fn(Time, &J) -> Duration,
+    queued_for: &impl Fn(&J) -> Duration,
+) -> Option<PoppedGroup<J>> {
+    let shard = &shards[me];
+    let can_steal = steal.enabled && shards.len() > 1;
     loop {
-        if st.queue.is_empty() {
-            if st.stopping {
-                return None;
+        let mut st = shard.state.lock().expect("shard lock poisoned");
+        if !st.queue.is_empty() {
+            if batch.max_batch > 1 && !batch.window.is_zero() && !st.stopping {
+                // A queue that can never hold `max_batch` entries must not
+                // make every dispatch burn the whole window waiting for a
+                // fill that cannot happen.
+                let fill_target = batch.max_batch.min(st.queue.capacity().max(1));
+                let until = Instant::now() + batch.window;
+                while st.queue.len() < fill_target && !st.stopping {
+                    // Re-peeked every wakeup: a tighter head may have
+                    // arrived mid-wait, and the head's laxity only shrinks
+                    // as wall time passes.
+                    let head_slack = match st.queue.peek() {
+                        Some((deadline, job)) => slack(deadline, job),
+                        // A sibling stole the whole queue mid-wait.
+                        None => Duration::ZERO,
+                    };
+                    let remaining = until
+                        .saturating_duration_since(Instant::now())
+                        .min(head_slack);
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    st = shard
+                        .cv
+                        .wait_timeout(st, remaining)
+                        .expect("shard lock poisoned")
+                        .0;
+                }
             }
-            st = shard.cv.wait(st).expect("shard lock poisoned");
+            let jobs = st.queue.pop_compatible(batch.max_batch, key, grow);
+            shard.depth.store(st.queue.len(), Ordering::Relaxed);
+            return Some(PoppedGroup { jobs, stolen: false });
+        }
+        if st.stopping {
+            return None;
+        }
+        drop(st);
+        if can_steal {
+            if let Some(jobs) = try_steal(shards, me, batch, key, grow, queued_for) {
+                return Some(PoppedGroup { jobs, stolen: true });
+            }
+        }
+        let st = shard.state.lock().expect("shard lock poisoned");
+        if !st.queue.is_empty() || st.stopping {
             continue;
         }
-        if batch.max_batch > 1 && !batch.window.is_zero() && !st.stopping {
-            // A queue that can never hold `max_batch` entries must not make
-            // every dispatch burn the whole window waiting for a fill that
-            // cannot happen.
-            let fill_target = batch.max_batch.min(st.queue.capacity().max(1));
-            let until = Instant::now() + batch.window;
-            while st.queue.len() < fill_target && !st.stopping {
-                let remaining = until.saturating_duration_since(Instant::now());
-                if remaining.is_zero() {
-                    break;
+        if can_steal {
+            // Idle poll: a victim's worker stuck mid-dispatch never
+            // notifies this shard's condvar, so an idle thief re-samples
+            // sibling depth mirrors on a timeout instead of sleeping
+            // indefinitely.
+            drop(shard.cv.wait_timeout(st, steal.poll).expect("shard lock poisoned"));
+        } else {
+            drop(shard.cv.wait(st).expect("shard lock poisoned"));
+        }
+    }
+}
+
+/// Scan sibling depth mirrors (no locks) and lift an EDF-contiguous
+/// compatible group from the head of the most-backlogged victim's queue,
+/// under the victim's lock and the caller's own `key`/`grow` predicates —
+/// a stolen group is admissible exactly when the victim's own worker would
+/// have formed it. Victims are tried in descending-backlog order until one
+/// yields work.
+fn try_steal<J, K: PartialEq>(
+    shards: &[Arc<Shard<J>>],
+    me: usize,
+    batch: &BatchConfig,
+    key: &impl Fn(&J) -> K,
+    grow: &impl Fn(&[(Time, J)], Time, &J) -> bool,
+    queued_for: &impl Fn(&J) -> Duration,
+) -> Option<Vec<(Time, J)>> {
+    let mut victims: Vec<(usize, usize)> = shards
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != me)
+        .map(|(i, s)| (s.depth.load(Ordering::Relaxed), i))
+        .filter(|&(depth, _)| depth > 0)
+        .collect();
+    victims.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    for (_, v) in victims {
+        let victim = &shards[v];
+        let mut st = victim.state.lock().expect("shard lock poisoned");
+        // A head still inside the configured fill window is being held for
+        // stragglers on purpose, not stranded: its own worker (or a later
+        // thief) will dispatch it once the window has been paid. Stealing
+        // it early would dispatch a partial batch and silently defeat
+        // `--batch-window-us` amortization whenever any sibling idles.
+        // Age is a property of the job itself, so this rule has no race
+        // with the victim's worker entering or leaving its fill wait.
+        if batch.max_batch > 1 && !batch.window.is_zero() {
+            if let Some((_, head)) = st.queue.peek() {
+                if queued_for(head) < batch.window {
+                    continue;
                 }
-                st = shard
-                    .cv
-                    .wait_timeout(st, remaining)
-                    .expect("shard lock poisoned")
-                    .0;
             }
         }
-        let group = st.queue.pop_compatible(batch.max_batch, key, grow);
-        shard.depth.store(st.queue.len(), Ordering::Relaxed);
-        return Some(group);
+        let jobs = st.queue.pop_compatible(batch.max_batch, key, grow);
+        victim.depth.store(st.queue.len(), Ordering::Relaxed);
+        drop(st);
+        if !jobs.is_empty() {
+            return Some(jobs);
+        }
     }
+    None
+}
+
+/// Remaining wall-clock laxity of a queue head: its deadline minus the
+/// resolved knot's sim-anchored unit time (the on-device work it still has
+/// ahead of it), minus the time it has already spent queued. The batch fill
+/// window is clamped to this, so a configured `--batch-window-us` can never
+/// consume the slack a tight-deadline head needs to still dispatch in time.
+pub(crate) fn head_laxity(deadline: Time, unit_time: Time, submitted: Instant) -> Duration {
+    let laxity = deadline.raw() - unit_time.raw();
+    // Non-finite deadlines (admissible in principle) must not poison the
+    // Duration conversion; an hour bounds any sane fill wait anyway.
+    let laxity = if laxity.is_finite() {
+        laxity.clamp(0.0, 3600.0)
+    } else {
+        3600.0
+    };
+    Duration::from_secs_f64(laxity).saturating_sub(submitted.elapsed())
 }
 
 /// Backlog skew (max − min queue depth) beyond which dispatch abandons
@@ -306,27 +474,33 @@ impl ServePool {
         let atlas = Arc::new(atlas);
         let floor = atlas.floor();
         let batch = config.batch.clone().sanitized();
+        let steal = config.steal.clone();
 
         let n = config.workers.max(1);
-        let mut shards = Vec::with_capacity(n);
+        // Every shard exists before any worker spawns: workers see the full
+        // sibling set, so stealing never races pool construction.
+        let shards: Vec<Arc<Shard<Job>>> = (0..n)
+            .map(|_| {
+                Arc::new(Shard::new(
+                    EdfQueue::new(config.queue_capacity.max(1)).with_floor(floor),
+                ))
+            })
+            .collect();
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
-            let shard = Arc::new(Shard::new(
-                EdfQueue::new(config.queue_capacity.max(1)).with_floor(floor),
-            ));
             let handle = std::thread::Builder::new()
                 .name(format!("medea-serve-{i}"))
                 .spawn({
-                    let shard = shard.clone();
+                    let shards = shards.clone();
                     let ctx = ctx.clone();
                     let atlas = atlas.clone();
                     let dir = config.artifact_dir.clone();
                     let cache = config.schedule_cache.max(1);
                     let batch = batch.clone();
-                    move || worker_loop(&shard, &ctx, &atlas, &dir, cache, &batch)
+                    let steal = steal.clone();
+                    move || worker_loop(&shards, i, &ctx, &atlas, &dir, cache, &batch, &steal)
                 })
                 .map_err(|e| anyhow!("spawn serve worker {i}: {e}"))?;
-            shards.push(shard);
             workers.push(handle);
         }
 
@@ -363,7 +537,21 @@ impl ServePool {
     ) -> std::result::Result<Ticket, Rejection> {
         let rr = self.next.fetch_add(1, Ordering::Relaxed);
         let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
-        let shard = &self.shards[pick_shard(depths, rr)];
+        self.submit_pinned(pick_shard(depths, rr), window, deadline)
+    }
+
+    /// Submit pinned to one shard, bypassing [`pick_shard`] routing: a
+    /// load-skew injection hook for benches and tests (deterministically
+    /// loading one shard while its siblings idle is exactly the scenario
+    /// work stealing exists for). Not a serving API.
+    #[doc(hidden)]
+    pub fn submit_pinned(
+        &self,
+        shard: usize,
+        window: EegWindow,
+        deadline: Time,
+    ) -> std::result::Result<Ticket, Rejection> {
+        let shard = &self.shards[shard % self.shards.len()];
         let (tx, rx) = mpsc::channel();
         let (knot_bits, unit_time) = match self.atlas.lookup(deadline) {
             Ok(knot) => (knot.deadline.raw().to_bits(), knot.sim_time),
@@ -460,13 +648,16 @@ impl Drop for ServePool {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    shard: &Shard<Job>,
+    shards: &[Arc<Shard<Job>>],
+    me: usize,
     ctx: &ServeContext,
     atlas: &ScheduleAtlas,
     artifact_dir: &std::path::Path,
     cache_capacity: usize,
     batch: &BatchConfig,
+    steal: &StealConfig,
 ) -> Metrics {
     let mut metrics = Metrics::default();
     // One PJRT runtime handle per worker, created on the worker thread.
@@ -483,26 +674,29 @@ fn worker_loop(
     let mut schedules: LruCache<u64, (Schedule, Time)> = LruCache::new(cache_capacity);
     let amort = batch.amortization;
 
+    // Same resolved knot (stamped at submit) ⇒ same schedule ⇒ one
+    // dispatch; no atlas search on the dequeue path.
+    let key = |job: &Job| job.knot_bits;
+    // Admit the candidate only while the sim-anchored batch makespan fits
+    // the *earliest* member deadline; EDF pop order makes everyone else
+    // laxer, so this bounds every member.
+    let grow = |group: &[(Time, Job)], _cand_deadline: Time, _cand: &Job| {
+        let head = &group[0].1;
+        head.knot_bits != u64::MAX
+            && batch_makespan(head.unit_time, group.len() + 1, amort).raw() <= group[0].0.raw()
+    };
+    let slack = |deadline: Time, job: &Job| head_laxity(deadline, job.unit_time, job.submitted);
+    let queued_for = |job: &Job| job.submitted.elapsed();
+
     loop {
-        let group = pop_group(
-            shard,
-            batch,
-            // Same resolved knot (stamped at submit) ⇒ same schedule ⇒ one
-            // dispatch; no atlas search on the dequeue path.
-            |job: &Job| job.knot_bits,
-            // Admit the candidate only while the sim-anchored batch
-            // makespan fits the *earliest* member deadline; EDF pop order
-            // makes everyone else laxer, so this bounds every member.
-            |group, _cand_deadline, _cand| {
-                let head = &group[0].1;
-                head.knot_bits != u64::MAX
-                    && batch_makespan(head.unit_time, group.len() + 1, amort).raw()
-                        <= group[0].0.raw()
-            },
-        );
-        let Some(group) = group else { break };
+        let popped = pop_group(shards, me, batch, steal, &key, &grow, &slack, &queued_for);
+        let Some(popped) = popped else { break };
+        let group = popped.jobs;
         if group.is_empty() {
             continue;
+        }
+        if popped.stolen {
+            metrics.record_steal(group.len());
         }
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path (per-member deadline
@@ -616,8 +810,11 @@ fn process(
     runtime: Option<&mut Runtime>,
     infer: &TsdInference,
 ) -> std::result::Result<InferenceOutcome, ServeError> {
-    // O(log n) atlas resolution, micro-second-keyed LRU on top.
-    let key = (job.deadline.as_us().round() as u64).max(1);
+    // O(log n) atlas resolution, LRU keyed by the exact deadline bits on
+    // top. (Rounding to whole microseconds aliased distinct deadlines to
+    // one slot, serving a schedule stamped with the *first* requester's
+    // deadline — and collapsed every sub-microsecond deadline to one key.)
+    let key = job.deadline.raw().to_bits();
     if !schedules.contains(&key) {
         let knot = atlas.lookup(job.deadline).map_err(|miss| {
             // Admission already floor-checked; this only races atlas swaps.
@@ -675,6 +872,9 @@ mod tests {
                 max_knots: 32,
                 ..AtlasConfig::default()
             },
+            // Spread, not a full literal: future PoolConfig knobs must not
+            // break the test build again.
+            ..PoolConfig::default()
         }
     }
 
@@ -825,5 +1025,176 @@ mod tests {
         for t in tickets {
             assert!(t.wait().is_ok());
         }
+    }
+
+    #[test]
+    fn head_laxity_bounds_the_fill_wait() {
+        let now = Instant::now();
+        // 100 ms deadline, 40 ms of on-device work left: ~60 ms of slack.
+        let lax = head_laxity(Time::from_ms(100.0), Time::from_ms(40.0), now);
+        assert!(lax <= Duration::from_millis(60));
+        assert!(lax >= Duration::from_millis(40), "{lax:?}");
+        // No slack (or garbage) never goes negative / panics.
+        assert_eq!(
+            head_laxity(Time::from_ms(10.0), Time::from_ms(40.0), now),
+            Duration::ZERO
+        );
+        assert!(head_laxity(Time(f64::INFINITY), Time::ZERO, now) > Duration::from_secs(60));
+        // Queue wait already consumed is subtracted.
+        let lax = head_laxity(Time::from_ms(100.0), Time::from_ms(99.9), now);
+        assert!(lax <= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn fill_window_is_clamped_to_head_laxity() {
+        // Regression (deadline hole): a long --batch-window-us must not
+        // consume a tight head's entire laxity before dispatch. One request
+        // can never fill an 8-batch, so pre-clamp the worker sat out the
+        // whole 2 s window before dispatching.
+        let pool = ServePool::start(PoolConfig {
+            workers: 1,
+            batch: BatchConfig {
+                max_batch: 8,
+                window: Duration::from_secs(2),
+                ..BatchConfig::default()
+            },
+            ..test_config()
+        })
+        .unwrap();
+        let deadline = pool.floor() * 1.1;
+        let mut gen = EegGenerator::new(SynthConfig::default(), 23);
+        let start = Instant::now();
+        let out = pool.infer(gen.next_window(), deadline).unwrap();
+        let elapsed = start.elapsed();
+        assert!(out.sim.deadline_met);
+        // The head's laxity is deadline − sim_time, a few ms at 1.1× the
+        // floor — orders of magnitude under the configured 2 s window.
+        assert!(
+            elapsed < Duration::from_secs(1),
+            "fill window ignored head laxity: dispatch took {elapsed:?}"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn solo_cache_distinguishes_nearby_deadlines() {
+        // Regression (cache-key collision): rounding the LRU key to whole
+        // microseconds aliased distinct deadlines, serving a schedule
+        // stamped with the *first* requester's deadline.
+        let pool = ServePool::start(PoolConfig {
+            workers: 1,
+            batch: BatchConfig::solo(),
+            ..test_config()
+        })
+        .unwrap();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 24);
+        let d1 = Time::from_ms(200.0);
+        let d2 = Time(d1.raw() + 3e-7); // +0.3 µs: same µs-rounded key
+        let out1 = pool.infer(gen.next_window(), d1).unwrap();
+        let out2 = pool.infer(gen.next_window(), d2).unwrap();
+        // Same covering knot ⇒ identical active time; the sleep window is
+        // re-derived from the *stamped* deadline, so it must differ by
+        // exactly the deadline gap.
+        assert_eq!(out1.knot_deadline.raw(), out2.knot_deadline.raw());
+        assert!((out1.sim.active_time.raw() - out2.sim.active_time.raw()).abs() < 1e-15);
+        let gap = out2.sim.sleep_time.raw() - out1.sim.sleep_time.raw();
+        assert!(
+            (gap - 3e-7).abs() < 1e-12,
+            "second request served a schedule stamped with the first's deadline (sleep gap {gap:e})"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn idle_workers_steal_from_a_backlogged_sibling() {
+        // Everything lands on shard 0 while worker 1 idles: exactly the
+        // stuck-shard scenario stealing exists for. Worker 0 alone needs
+        // many multi-ms dispatches to drain 64 jobs; worker 1 re-samples
+        // sibling depths every 200 µs, so it must lift at least one group.
+        let pool = ServePool::start(test_config()).unwrap();
+        let floor = pool.floor();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 25);
+        let tickets: Vec<Ticket> = (0..64)
+            .map(|i| {
+                let deadline = floor * if i % 2 == 0 { 4.0 } else { 6.0 };
+                pool.submit_pinned(0, gen.next_window(), deadline).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().sim.deadline_met);
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.aggregate.requests, 64);
+        assert_eq!(m.aggregate.deadline_misses, 0);
+        assert!(
+            m.aggregate.steals >= 1,
+            "idle sibling never stole from the loaded shard: {}",
+            m.summary()
+        );
+        assert!(m.aggregate.stolen_requests >= m.aggregate.steals);
+    }
+
+    #[test]
+    fn thieves_leave_fill_window_victims_alone() {
+        // A victim mid-fill-window is waiting for stragglers, not stuck:
+        // an idle sibling must not lift the partially-filled group, or a
+        // configured --batch-window-us silently stops amortizing whenever
+        // any worker idles. Four slow trickled submissions must still
+        // coalesce into one batch of 4 with zero steals.
+        let pool = ServePool::start(PoolConfig {
+            workers: 2,
+            batch: BatchConfig {
+                max_batch: 4,
+                window: Duration::from_millis(300),
+                ..BatchConfig::default()
+            },
+            steal: StealConfig {
+                poll: Duration::from_millis(50),
+                ..StealConfig::default()
+            },
+            ..test_config()
+        })
+        .unwrap();
+        let lax = pool.floor() * 64.0;
+        let mut gen = EegGenerator::new(SynthConfig::default(), 27);
+        let mut tickets = Vec::new();
+        for _ in 0..4 {
+            tickets.push(pool.submit_pinned(0, gen.next_window(), lax).unwrap());
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for t in tickets {
+            let out = t.wait().unwrap();
+            assert_eq!(
+                out.batch_size, 4,
+                "fill window was cut short mid-fill (stolen or dispatched early)"
+            );
+            assert!(out.sim.deadline_met);
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.aggregate.steals, 0, "{}", m.summary());
+    }
+
+    #[test]
+    fn no_steal_pins_jobs_to_their_shard() {
+        let pool = ServePool::start(PoolConfig {
+            steal: StealConfig::disabled(),
+            ..test_config()
+        })
+        .unwrap();
+        let floor = pool.floor();
+        let mut gen = EegGenerator::new(SynthConfig::default(), 26);
+        let tickets: Vec<Ticket> = (0..16)
+            .map(|_| pool.submit_pinned(0, gen.next_window(), floor * 4.0).unwrap())
+            .collect();
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        let m = pool.shutdown();
+        assert_eq!(m.aggregate.requests, 16);
+        assert_eq!(m.aggregate.steals, 0);
+        assert_eq!(m.aggregate.stolen_requests, 0);
+        // With stealing disabled every pinned job is served by its own
+        // shard's worker.
+        assert_eq!(m.per_worker_requests, vec![16, 0]);
     }
 }

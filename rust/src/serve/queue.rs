@@ -267,6 +267,13 @@ impl<T> EdfQueue<T> {
     pub fn peek_deadline(&self) -> Option<Time> {
         self.heap.peek().map(|e| e.deadline)
     }
+
+    /// The entry that would pop next, without removing it. Lets dispatch
+    /// layers inspect the head's payload (e.g. its sim-anchored unit time)
+    /// to bound how long a batch fill window may delay it.
+    pub fn peek(&self) -> Option<(Time, &T)> {
+        self.heap.peek().map(|e| (e.deadline, &e.item))
+    }
 }
 
 #[cfg(test)]
@@ -284,6 +291,7 @@ mod tests {
         assert!(matches!(q.push(ms(50.0), "a"), Admission::Accepted));
         assert!(matches!(q.push(ms(1000.0), "c"), Admission::Accepted));
         assert_eq!(q.peek_deadline(), Some(ms(50.0)));
+        assert_eq!(q.peek(), Some((ms(50.0), &"a")));
         assert_eq!(q.pop().unwrap().1, "a");
         assert_eq!(q.pop().unwrap().1, "b");
         assert_eq!(q.pop().unwrap().1, "c");

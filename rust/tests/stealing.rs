@@ -1,0 +1,138 @@
+//! Cross-shard work-stealing integration tests.
+//!
+//! Two properties pinned here:
+//!
+//! * **Outcome preservation** — stealing only changes *where* a queued job
+//!   executes, never what it is judged against: every request that met its
+//!   deadline in the no-steal run still meets it with stealing enabled,
+//!   under the identical pinned skewed burst (all jobs on shard 0, sibling
+//!   workers idle — the scenario that maximizes steal traffic).
+//! * **Drain safety** — shutdown under concurrent steals answers every
+//!   ticket exactly once: nothing lost, nothing double-dispatched (a
+//!   double dispatch would inflate the request counter past the submitted
+//!   total).
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::serve::{
+    AtlasConfig, PoolConfig, ScheduleAtlas, ServeMetrics, ServePool, StealConfig, Ticket,
+};
+use medea::util::rng::Rng;
+use medea::util::units::Time;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// One coarse atlas per test binary (correctness is knot-density-free).
+fn shared_atlas() -> &'static ScheduleAtlas {
+    static ATLAS: OnceLock<ScheduleAtlas> = OnceLock::new();
+    ATLAS.get_or_init(|| {
+        let ctx = ExpContext::paper();
+        ScheduleAtlas::build(
+            &ctx.medea(),
+            &ctx.workload,
+            &AtlasConfig {
+                relax_factor: 8.0,
+                growth: 1.5,
+                refine_rel_energy: 0.05,
+                max_knots: 32,
+                ..AtlasConfig::default()
+            },
+        )
+        .unwrap()
+    })
+}
+
+fn pool_with(steal: StealConfig, workers: usize) -> ServePool {
+    ServePool::start_with_atlas(
+        PoolConfig {
+            workers,
+            queue_capacity: 512,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            steal,
+            ..PoolConfig::default()
+        },
+        shared_atlas().clone(),
+    )
+    .unwrap()
+}
+
+/// Drive an identical randomized burst — every job pinned to shard 0 while
+/// the sibling workers idle — and record each request's deadline outcome
+/// in submission order.
+fn run_pinned_burst(steal: StealConfig, seed: u64, n: usize) -> (Vec<bool>, ServeMetrics) {
+    let pool = pool_with(steal, 3);
+    let atlas = shared_atlas();
+    let floor = atlas.floor().raw();
+    let hi = atlas.knots().last().unwrap().deadline.raw();
+    let mut rng = Rng::new(seed);
+    let mut gen = EegGenerator::new(SynthConfig::default(), seed);
+    let tickets: Vec<Ticket> = (0..n)
+        .map(|_| {
+            // Feasible by construction (≥ floor), spread across the sweep
+            // so some dispatches batch and others stay solo.
+            let deadline = Time(rng.range_f64(floor, hi * 2.0));
+            pool.submit_pinned(0, gen.next_window(), deadline).unwrap()
+        })
+        .collect();
+    let met: Vec<bool> = tickets
+        .into_iter()
+        .map(|t| t.wait().unwrap().sim.deadline_met)
+        .collect();
+    (met, pool.shutdown())
+}
+
+#[test]
+fn stealing_preserves_per_request_deadline_outcomes() {
+    const N: usize = 96;
+    let (base, base_m) = run_pinned_burst(StealConfig::disabled(), 0x5EED, N);
+    let (stolen, steal_m) = run_pinned_burst(StealConfig::default(), 0x5EED, N);
+    assert_eq!(base.len(), stolen.len());
+    for (i, (b, s)) in base.iter().zip(&stolen).enumerate() {
+        assert!(
+            !b || *s,
+            "request {i} met its deadline without stealing but missed with stealing enabled"
+        );
+    }
+    assert_eq!(base_m.steals(), 0);
+    assert_eq!(base_m.aggregate.requests as usize, N);
+    assert_eq!(steal_m.aggregate.requests as usize, N);
+    // A 96-job backlog pinned to one shard of three drains over many
+    // multi-dispatch rounds; two idle pollers must have lifted work.
+    assert!(
+        steal_m.steals() > 0,
+        "pinned burst never triggered a steal: {}",
+        steal_m.summary()
+    );
+    assert!(steal_m.stolen_requests() >= steal_m.steals());
+}
+
+#[test]
+fn shutdown_drains_every_ticket_exactly_once_under_concurrent_steals() {
+    const N: usize = 200;
+    let pool = pool_with(
+        StealConfig {
+            poll: Duration::from_micros(50),
+            ..StealConfig::default()
+        },
+        4,
+    );
+    let floor = shared_atlas().floor();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 7);
+    let tickets: Vec<Ticket> = (0..N)
+        .map(|i| {
+            let deadline = floor * (1.5 + (i % 13) as f64 * 0.45);
+            pool.submit_pinned(0, gen.next_window(), deadline).unwrap()
+        })
+        .collect();
+    // Shut down immediately: the drain races three thieves lifting groups
+    // off shard 0. Every queued job must still be answered exactly once —
+    // a double dispatch would push the request counter past N, a lost job
+    // would surface as a dropped reply channel below.
+    let m = pool.shutdown();
+    assert_eq!(m.aggregate.requests as usize, N);
+    assert_eq!(m.per_worker_requests.iter().sum::<u64>() as usize, N);
+    for t in tickets {
+        assert!(t.wait().is_ok(), "a queued job was dropped during drain");
+    }
+}

@@ -21,6 +21,8 @@ use medea::json_obj;
 use medea::serve::{
     AtlasConfig, BatchConfig, PoolConfig, ScheduleAtlas, ServeMetrics, ServePool, Ticket,
 };
+use medea::util::bench::write_bench_json;
+use medea::util::json::Json;
 use medea::util::units::Time;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -29,6 +31,7 @@ struct LoadResult {
     elapsed: Duration,
     rps: f64,
     metrics: ServeMetrics,
+    snapshot: Json,
 }
 
 fn run_load(
@@ -58,7 +61,9 @@ fn run_load(
         assert!(out.sim.deadline_met, "deadline violated under load");
     }
     let elapsed = start.elapsed();
+    let registry = std::sync::Arc::clone(pool.telemetry());
     let metrics = pool.shutdown();
+    let snapshot = registry.snapshot().to_json();
     assert_eq!(metrics.aggregate.requests as usize, requests);
     assert_eq!(
         metrics.aggregate.deadline_misses, 0,
@@ -68,6 +73,7 @@ fn run_load(
         elapsed,
         rps: requests as f64 / elapsed.as_secs_f64(),
         metrics,
+        snapshot,
     }
 }
 
@@ -153,12 +159,12 @@ fn main() {
             "p99_us" => batched.metrics.p99().as_secs_f64() * 1e6,
             "batched_requests" => batched.metrics.batched_requests(),
             "solo_requests" => batched.metrics.solo_requests(),
-            "batch_hist" => medea::util::json::Json::Arr(
-                hist.iter().map(|&n| medea::util::json::Json::from(n)).collect()
-            ),
+            "batch_hist" => Json::Arr(hist.iter().map(|&n| Json::from(n)).collect()),
         },
         "speedup" => speedup,
     };
-    std::fs::write("BENCH_batch.json", out.to_pretty()).expect("write BENCH_batch.json");
-    println!("\nwrote BENCH_batch.json");
+    // Attach the batched run's registry snapshot so the CI artifact carries
+    // the full telemetry view (histograms included), not just the summary.
+    write_bench_json("BENCH_batch.json", out, Some(batched.snapshot))
+        .expect("write BENCH_batch.json");
 }

@@ -18,12 +18,111 @@
 use medea::eeg::synth::{EegGenerator, SynthConfig};
 use medea::exp::ExpContext;
 use medea::json_obj;
-use medea::serve::{AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServePool, Ticket};
-use medea::util::bench::Bencher;
+use medea::serve::{
+    AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServeMetrics, ServePool, Ticket,
+};
+use medea::telemetry::{scrape, MetricsServer, TelemetryConfig};
+use medea::util::bench::{write_bench_json, Bencher};
+use medea::util::json::Json;
 use medea::util::units::Time;
 use std::cell::Cell;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One pool load run: burst-submit a mixed-deadline profile (1-in-8 requests
+/// below the feasibility floor, which must shed with a typed rejection).
+struct PoolRun {
+    served: usize,
+    shed_floor: u64,
+    elapsed: Duration,
+    rps: f64,
+    metrics: ServeMetrics,
+    snapshot: Json,
+}
+
+/// `observed = true` runs the worst-case "someone is watching" configuration:
+/// a 65536-event trace ring plus a live exposition endpoint with a scraper
+/// thread polling it every 25 ms for the whole burst.
+fn run_pool_load(atlas: &ScheduleAtlas, requests: usize, observed: bool) -> PoolRun {
+    let floor = atlas.floor().as_ms();
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 4,
+            queue_capacity: requests,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            telemetry: TelemetryConfig {
+                trace_events: if observed { 65_536 } else { 0 },
+            },
+            ..PoolConfig::default()
+        },
+        atlas.clone(),
+    )
+    .unwrap();
+
+    let (server, scraper, stop) = if observed {
+        let server = MetricsServer::start("127.0.0.1:0", pool.telemetry().clone()).unwrap();
+        let addr = server.addr().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let scraper = std::thread::spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                let _ = scrape(&addr);
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        });
+        (Some(server), Some(scraper), Some(stop))
+    } else {
+        (None, None, None)
+    };
+
+    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
+    let load_start = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(requests);
+    let mut shed_floor = 0u64;
+    for i in 0..requests {
+        // 1-in-8 requests are below the feasibility floor.
+        let d = if i % 8 == 7 {
+            Time::from_ms(floor * 0.5)
+        } else {
+            Time::from_ms(floor * (1.05 + 2.3 * ((i % 7) as f64)))
+        };
+        match pool.submit(gen.next_window(), d) {
+            Ok(t) => tickets.push(t),
+            Err(Rejection::BelowFloor { .. }) => shed_floor += 1,
+            Err(other) => panic!("unexpected rejection: {other}"),
+        }
+    }
+    let served = tickets.len();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let elapsed = load_start.elapsed();
+
+    if let Some(stop) = &stop {
+        stop.store(true, Ordering::Relaxed);
+    }
+    if let Some(handle) = scraper {
+        handle.join().unwrap();
+    }
+    drop(server);
+
+    let registry = Arc::clone(pool.telemetry());
+    let metrics = pool.shutdown();
+    let snapshot = registry.snapshot().to_json();
+    assert_eq!(metrics.aggregate.requests as usize, served);
+    assert_eq!(metrics.shed_below_floor, shed_floor);
+    assert_eq!(metrics.aggregate.deadline_misses, 0);
+    PoolRun {
+        served,
+        shed_floor,
+        elapsed,
+        rps: served as f64 / elapsed.as_secs_f64(),
+        metrics,
+        snapshot,
+    }
+}
 
 fn main() {
     let ctx = ExpContext::paper();
@@ -77,53 +176,48 @@ fn main() {
         "warm atlas path must be >= 10x faster than the cold DP path, got {speedup:.1}x"
     );
 
-    // Pool load test: burst-submit a mixed-deadline profile; a slice of the
-    // traffic is infeasible and must shed with a typed rejection.
+    // Pool load test, run both dark (telemetry registry only, the always-on
+    // baseline) and observed (trace ring + live scrapes). Best-of-3 each to
+    // shave scheduler noise before gating the overhead ratio.
     let requests = if std::env::var("MEDEA_BENCH_FAST").is_ok() { 128 } else { 512 };
-    let pool = ServePool::start(PoolConfig {
-        workers: 4,
-        queue_capacity: requests,
-        artifact_dir: PathBuf::from("/nonexistent-artifacts"),
-        ..PoolConfig::default()
-    })
-    .unwrap();
-    let mut gen = EegGenerator::new(SynthConfig::default(), 42);
-    let load_start = Instant::now();
-    let mut tickets: Vec<Ticket> = Vec::with_capacity(requests);
-    let mut shed_floor = 0u64;
-    for i in 0..requests {
-        // 1-in-8 requests are below the feasibility floor.
-        let d = if i % 8 == 7 {
-            Time::from_ms(floor * 0.5)
-        } else {
-            Time::from_ms(floor * (1.05 + 2.3 * ((i % 7) as f64)))
-        };
-        match pool.submit(gen.next_window(), d) {
-            Ok(t) => tickets.push(t),
-            Err(Rejection::BelowFloor { .. }) => shed_floor += 1,
-            Err(other) => panic!("unexpected rejection: {other}"),
+    let mut base = run_pool_load(&atlas, requests, false);
+    let mut observed = run_pool_load(&atlas, requests, true);
+    for _ in 0..2 {
+        let run = run_pool_load(&atlas, requests, false);
+        if run.rps > base.rps {
+            base = run;
+        }
+        let run = run_pool_load(&atlas, requests, true);
+        if run.rps > observed.rps {
+            observed = run;
         }
     }
-    let served = tickets.len();
-    for t in tickets {
-        t.wait().unwrap();
-    }
-    let elapsed = load_start.elapsed();
-    let metrics = pool.shutdown();
-    assert_eq!(metrics.aggregate.requests as usize, served);
-    assert_eq!(metrics.shed_below_floor, shed_floor);
-    assert_eq!(metrics.aggregate.deadline_misses, 0);
-    let rps = served as f64 / elapsed.as_secs_f64();
     println!(
         "\npool: {} served + {} shed in {:.1} ms ({:.0} req/s)  {}",
-        served,
-        shed_floor,
-        elapsed.as_secs_f64() * 1e3,
-        rps,
-        metrics.summary()
+        base.served,
+        base.shed_floor,
+        base.elapsed.as_secs_f64() * 1e3,
+        base.rps,
+        base.metrics.summary()
+    );
+    let overhead_ratio = observed.rps / base.rps.max(1e-9);
+    println!(
+        "telemetry overhead: base {:.0} req/s, observed (trace + live scrapes) {:.0} req/s \
+         ({:.1}% delta)",
+        base.rps,
+        observed.rps,
+        (1.0 - overhead_ratio) * 100.0
+    );
+    assert!(
+        overhead_ratio >= 0.97,
+        "observed telemetry (trace ring + scraping) must cost <= 3% rps, \
+         got base {:.0} vs observed {:.0} req/s",
+        base.rps,
+        observed.rps
     );
 
-    // Machine-readable summary.
+    // Machine-readable summary, with the observed run's registry snapshot
+    // attached so the artifact carries the same data a live scrape would.
     let out = json_obj! {
         "atlas_knots" => atlas.len(),
         "atlas_build_ms" => build_ms,
@@ -133,16 +227,21 @@ fn main() {
         "speedup" => speedup,
         "pool" => json_obj! {
             "workers" => 4u64,
-            "served" => served,
-            "shed_below_floor" => shed_floor,
-            "elapsed_ms" => elapsed.as_secs_f64() * 1e3,
-            "reqs_per_sec" => rps,
-            "host_p50_us" => metrics.p50().as_secs_f64() * 1e6,
-            "host_p99_us" => metrics.p99().as_secs_f64() * 1e6,
+            "served" => base.served,
+            "shed_below_floor" => base.shed_floor,
+            "elapsed_ms" => base.elapsed.as_secs_f64() * 1e3,
+            "reqs_per_sec" => base.rps,
+            "host_p50_us" => base.metrics.p50().as_secs_f64() * 1e6,
+            "host_p99_us" => base.metrics.p99().as_secs_f64() * 1e6,
+        },
+        "telemetry_overhead" => json_obj! {
+            "base_reqs_per_sec" => base.rps,
+            "observed_reqs_per_sec" => observed.rps,
+            "ratio" => overhead_ratio,
         },
     };
-    std::fs::write("BENCH_serve.json", out.to_pretty()).expect("write BENCH_serve.json");
-    println!("\nwrote BENCH_serve.json");
+    write_bench_json("BENCH_serve.json", out, Some(observed.snapshot))
+        .expect("write BENCH_serve.json");
 
     b.finish("serve_throughput");
 }

@@ -1,12 +1,15 @@
 //! Service metrics: counters + host-side latency distribution.
+//!
+//! The latency distribution is a [`crate::telemetry::HistData`] — the same
+//! fixed-bucket log-linear histogram the live telemetry registry records
+//! into — so percentiles computed here (shutdown aggregate) and percentiles
+//! computed from a live scrape are identical by construction: same buckets,
+//! same arithmetic, and histogram merge is exact (unlike the sample
+//! reservoir this replaced, which made merged percentiles depend on worker
+//! order and sampling luck).
 
-use crate::util::stats::{percentile, Running};
+use crate::telemetry::hist::HistData;
 use std::time::Duration;
-
-/// Cap on retained latency samples. Mean/min/max stay exact (streaming);
-/// percentiles beyond this many requests come from a uniform reservoir
-/// sample, so long-running serve pools don't grow memory per request.
-const LATENCY_RESERVOIR: usize = 4096;
 
 /// Aggregated service metrics.
 #[derive(Debug, Default)]
@@ -27,11 +30,9 @@ pub struct Metrics {
     /// Requests served through stolen dispatches (each steal event
     /// contributes its group size).
     pub stolen_requests: u64,
-    host_latency: Running,
-    /// Bounded reservoir of latency samples (seconds).
-    latencies: Vec<f64>,
-    /// xorshift64* state for reservoir replacement (0 = not yet seeded).
-    reservoir_rng: u64,
+    /// Host-latency distribution (ns). `pub(crate)` so the telemetry
+    /// registry can rebuild a `Metrics` from a worker-shard snapshot.
+    pub(crate) host: HistData,
 }
 
 impl Metrics {
@@ -45,8 +46,7 @@ impl Metrics {
         }
         self.sim_energy_j += energy_j;
         self.sim_active_s += active_s;
-        self.host_latency.push(host.as_secs_f64());
-        self.reservoir_push(host.as_secs_f64());
+        self.host.record(u64::try_from(host.as_nanos()).unwrap_or(u64::MAX));
     }
 
     /// Record one dispatch of `size` coalesced requests (1 = solo).
@@ -79,31 +79,10 @@ impl Metrics {
         self.batch_hist.first().copied().unwrap_or(0)
     }
 
-    /// Algorithm R: once the buffer is full, each new sample replaces a
-    /// random slot with probability `capacity / samples_seen`.
-    fn reservoir_push(&mut self, x: f64) {
-        if self.latencies.len() < LATENCY_RESERVOIR {
-            self.latencies.push(x);
-            return;
-        }
-        if self.reservoir_rng == 0 {
-            self.reservoir_rng = 0x9E37_79B9_7F4A_7C15;
-        }
-        self.reservoir_rng ^= self.reservoir_rng << 13;
-        self.reservoir_rng ^= self.reservoir_rng >> 7;
-        self.reservoir_rng ^= self.reservoir_rng << 17;
-        let seen = self.host_latency.count().max(1);
-        let j = (self.reservoir_rng.wrapping_mul(0x2545_F491_4F6C_DD1D) % seen) as usize;
-        if j < LATENCY_RESERVOIR {
-            self.latencies[j] = x;
-        }
-    }
-
     /// Fold another worker's metrics into this one (used by the serve
-    /// pool's cross-worker aggregation). Counters and mean/min/max merge
-    /// exactly; the bounded latency reservoir absorbs the other side's
-    /// samples as a stream, so percentiles are approximate once the
-    /// combined sample count exceeds the reservoir size.
+    /// pool's cross-worker aggregation). Every field — counters and the
+    /// latency histogram — merges exactly, so aggregation order never
+    /// changes a percentile.
     pub fn merge(&mut self, other: &Metrics) {
         self.requests += other.requests;
         self.seizures_detected += other.seizures_detected;
@@ -118,22 +97,18 @@ impl Metrics {
         }
         self.steals += other.steals;
         self.stolen_requests += other.stolen_requests;
-        self.host_latency.merge(&other.host_latency);
-        for &x in &other.latencies {
-            self.reservoir_push(x);
-        }
+        self.host.merge(&other.host);
     }
 
     pub fn host_latency_mean(&self) -> Duration {
-        Duration::from_secs_f64(self.host_latency.mean().max(0.0))
+        Duration::from_nanos(self.host.mean().round() as u64)
     }
 
-    /// Host-latency percentile (`q` in `[0, 100]`); zero when empty.
+    /// Host-latency percentile (`q` in `[0, 100]`); zero when empty. Bucket
+    /// resolution is ≤ ~6% relative; p0/p100 and single-sample
+    /// distributions are exact (see [`HistData::percentile`]).
     pub fn host_latency_percentile(&self, q: f64) -> Duration {
-        if self.latencies.is_empty() {
-            return Duration::ZERO;
-        }
-        Duration::from_secs_f64(percentile(&self.latencies, q))
+        Duration::from_nanos(self.host.percentile(q))
     }
 
     pub fn host_latency_p50(&self) -> Duration {
@@ -230,17 +205,43 @@ mod tests {
     }
 
     #[test]
-    fn latency_reservoir_stays_bounded() {
+    fn latency_histogram_stays_bounded_and_in_range() {
         let mut m = Metrics::default();
-        for i in 0..3 * LATENCY_RESERVOIR {
-            m.record(false, true, 0.0, 0.0, Duration::from_micros(100 + (i % 50) as u64));
+        for i in 0..12_288u64 {
+            m.record(false, true, 0.0, 0.0, Duration::from_micros(100 + (i % 50)));
         }
-        assert_eq!(m.requests as usize, 3 * LATENCY_RESERVOIR);
-        assert_eq!(m.latencies.len(), LATENCY_RESERVOIR);
-        // Percentiles still land inside the observed sample range.
+        assert_eq!(m.requests, 12_288);
+        // Percentiles land inside the observed sample range (the histogram
+        // is fixed-size: no per-request memory growth to check).
         let p99 = m.host_latency_p99();
-        assert!(p99 >= Duration::from_micros(99) && p99 <= Duration::from_micros(150));
-        // Mean stays exact (streaming, not sampled).
+        assert!(p99 >= Duration::from_micros(99) && p99 <= Duration::from_micros(150), "{p99:?}");
+        let p50 = m.host_latency_p50();
+        assert!(p50 >= Duration::from_micros(100) && p50 <= Duration::from_micros(150));
+        // Mean stays exact (streaming sum, not sampled).
         assert!(m.host_latency_mean() >= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn merge_order_never_changes_percentiles() {
+        // The reservoir this replaced was order- and luck-sensitive; the
+        // histogram must not be.
+        let mut ab = Metrics::default();
+        let mut ba = Metrics::default();
+        let (mut a, mut b) = (Metrics::default(), Metrics::default());
+        for i in 0..5_000u64 {
+            let d = Duration::from_micros(50 + i % 400);
+            if i % 3 == 0 {
+                a.record(false, true, 0.0, 0.0, d);
+            } else {
+                b.record(false, true, 0.0, 0.0, d);
+            }
+        }
+        ab.merge(&a);
+        ab.merge(&b);
+        ba.merge(&b);
+        ba.merge(&a);
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(ab.host_latency_percentile(q), ba.host_latency_percentile(q), "q={q}");
+        }
     }
 }

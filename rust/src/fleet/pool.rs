@@ -24,7 +24,6 @@
 use super::entry::FleetEntry;
 use super::key::FleetKey;
 use super::registry::FleetRegistry;
-use crate::coordinator::Metrics;
 use crate::eeg::synth::EegWindow;
 use crate::manager::schedule::Schedule;
 use crate::runtime::artifacts::ArtifactManifest;
@@ -34,13 +33,17 @@ use crate::serve::batch::{
     batch_energy_share, batch_makespan, batch_share, member_report, stub_predictions, BatchConfig,
 };
 use crate::serve::metrics::ServeMetrics;
-use crate::serve::pool::{head_laxity, pick_shard, pop_group, ServeError, Shard, StealConfig};
+use crate::serve::pool::{
+    deadline_us, head_laxity, pick_shard, pop_group, ServeError, Shard, StealConfig,
+};
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
+use crate::telemetry::trace::{TraceEventKind, TraceRing};
+use crate::telemetry::{TelemetryConfig, TelemetryRegistry, WorkerShard};
 use crate::util::error::{anyhow, Result};
 use crate::util::units::{Energy, Time};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -69,6 +72,9 @@ pub struct FleetPoolConfig {
     pub batch: BatchConfig,
     /// Cross-shard work-stealing knobs (enabled by default).
     pub steal: StealConfig,
+    /// Telemetry knobs (`trace_events` sizes the dispatch-event ring; the
+    /// metrics registry itself is always on — it *is* the metrics path).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for FleetPoolConfig {
@@ -82,6 +88,7 @@ impl Default for FleetPoolConfig {
             artifact_dir: ArtifactManifest::default_dir(),
             batch: BatchConfig::default(),
             steal: StealConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -132,6 +139,9 @@ impl FleetTicket {
 }
 
 struct Job {
+    /// Pool-unique request id ([`TelemetryRegistry::next_request_id`]),
+    /// threaded through every trace event this request produces.
+    id: u64,
     window: EegWindow,
     schedule: Schedule,
     entry: Arc<FleetEntry>,
@@ -160,11 +170,14 @@ struct Job {
 pub struct FleetPool {
     registry: Arc<FleetRegistry>,
     shards: Vec<Arc<Shard<Job>>>,
-    workers: Vec<JoinHandle<Metrics>>,
+    workers: Vec<JoinHandle<()>>,
     next: AtomicUsize,
-    shed_below_floor: AtomicU64,
-    shed_queue_full: AtomicU64,
-    shed_unknown: AtomicU64,
+    /// The live metrics registry: admission counts sheds here, workers
+    /// record into their shards, and both [`FleetPool::live_metrics`] and
+    /// [`FleetPool::shutdown`] read the same state.
+    telemetry: Arc<TelemetryRegistry>,
+    /// Dispatch-event ring; `None` unless `telemetry.trace_events > 0`.
+    trace: Option<Arc<TraceRing>>,
 }
 
 impl FleetPool {
@@ -175,6 +188,11 @@ impl FleetPool {
         let n = config.workers.max(1);
         let batch = config.batch.clone().sanitized();
         let steal = config.steal.clone();
+        // The fleet pool serves *many* (platform, workload) entries through
+        // one registry, so its telemetry labels are the fleet itself.
+        let telemetry = Arc::new(TelemetryRegistry::new("fleet", "multi", n));
+        let trace = (config.telemetry.trace_events > 0)
+            .then(|| Arc::new(TraceRing::new(config.telemetry.trace_events)));
         // Every shard exists before any worker spawns: workers see the full
         // sibling set, so stealing never races pool construction.
         let shards: Vec<Arc<Shard<Job>>> = (0..n)
@@ -189,7 +207,9 @@ impl FleetPool {
                     let dir = config.artifact_dir.clone();
                     let batch = batch.clone();
                     let steal = steal.clone();
-                    move || worker_loop(&shards, i, &dir, &batch, &steal)
+                    let tel = telemetry.worker(i);
+                    let trace = trace.clone();
+                    move || worker_loop(&shards, i, &dir, &batch, &steal, &tel, trace.as_deref())
                 })
                 .map_err(|e| anyhow!("spawn fleet worker {i}: {e}"))?;
             workers.push(handle);
@@ -199,9 +219,8 @@ impl FleetPool {
             shards,
             workers,
             next: AtomicUsize::new(0),
-            shed_below_floor: AtomicU64::new(0),
-            shed_queue_full: AtomicU64::new(0),
-            shed_unknown: AtomicU64::new(0),
+            telemetry,
+            trace,
         })
     }
 
@@ -223,12 +242,16 @@ impl FleetPool {
         window: EegWindow,
         demand: Demand,
     ) -> std::result::Result<FleetTicket, Rejection> {
+        // Id allocated before resolution so resolve-time sheds carry one
+        // into the trace too.
+        let id = self.telemetry.next_request_id();
         let Some(resolved) = self.registry.resolve_named(platform, workload) else {
-            self.shed_unknown.fetch_add(1, Ordering::Relaxed);
-            return Err(Rejection::UnknownEntry {
+            let reason = Rejection::UnknownEntry {
                 platform: platform.to_string(),
                 workload: workload.to_string(),
-            });
+            };
+            self.shed(0, id, &reason);
+            return Err(reason);
         };
         let entry = resolved.entry;
         let (schedule, knot_deadline, knot_budget, batch_key, unit_time, unit_energy) =
@@ -247,11 +270,12 @@ impl FleetPool {
                         )
                     }
                     Err(miss) => {
-                        self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
-                        return Err(Rejection::BelowFloor {
+                        let reason = Rejection::BelowFloor {
                             requested: miss.requested,
                             floor: miss.floor,
-                        });
+                        };
+                        self.shed(0, id, &reason);
+                        return Err(reason);
                     }
                 },
                 Demand::EnergyBudget(budget) => match entry.energy.lookup(budget) {
@@ -264,23 +288,26 @@ impl FleetPool {
                         knot.sim_energy,
                     ),
                     Err(miss) => {
-                        self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
-                        return Err(Rejection::BelowEnergyFloor {
+                        let reason = Rejection::BelowEnergyFloor {
                             requested: miss.requested,
                             floor: miss.floor,
-                        });
+                        };
+                        self.shed(0, id, &reason);
+                        return Err(reason);
                     }
                 },
             };
 
         let rr = self.next.fetch_add(1, Ordering::Relaxed);
         let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
-        let shard = &self.shards[pick_shard(depths, rr)];
+        let idx = pick_shard(depths, rr);
+        let shard = &self.shards[idx];
         let (tx, rx) = mpsc::channel();
         // EDF priority: the schedule's effective deadline (energy demands
         // queue at the urgency their dual solve converged to).
         let priority = schedule.deadline;
         let job = Job {
+            id,
             window,
             schedule,
             entry,
@@ -296,7 +323,10 @@ impl FleetPool {
         };
         let mut st = shard.state.lock().expect("fleet shard lock poisoned");
         if st.stopping {
-            return Err(Rejection::ShuttingDown);
+            drop(st);
+            let reason = Rejection::ShuttingDown;
+            self.shed(idx, id, &reason);
+            return Err(reason);
         }
         let capacity = st.queue.capacity();
         match st.queue.push(priority, job) {
@@ -304,24 +334,37 @@ impl FleetPool {
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 drop(st);
                 shard.cv.notify_one();
+                if let Some(ring) = &self.trace {
+                    ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(priority));
+                }
                 Ok(FleetTicket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
-                self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
-                let _ = evicted
-                    .reply
-                    .send(Err(ServeError::Shed(Rejection::QueueFull { capacity })));
+                let reason = Rejection::QueueFull { capacity };
+                self.shed(idx, evicted.id, &reason);
+                let _ = evicted.reply.send(Err(ServeError::Shed(reason)));
                 drop(st);
                 shard.cv.notify_one();
+                if let Some(ring) = &self.trace {
+                    ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(priority));
+                }
                 Ok(FleetTicket { rx })
             }
             Admission::Rejected { reason, .. } => {
-                if matches!(reason, Rejection::QueueFull { .. }) {
-                    self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
-                }
+                drop(st);
+                self.shed(idx, id, &reason);
                 Err(reason)
             }
+        }
+    }
+
+    /// Count + trace one shed (`shard` is 0 for resolve-time sheds, which
+    /// happen before a shard is picked).
+    fn shed(&self, shard: usize, id: u64, reason: &Rejection) {
+        self.telemetry.record_shed(reason);
+        if let Some(ring) = &self.trace {
+            ring.record(TraceEventKind::Shed, shard as u32, id, reason.code());
         }
     }
 
@@ -348,20 +391,32 @@ impl FleetPool {
         }
     }
 
-    /// Graceful shutdown: queues drain, workers exit, metrics merge.
+    /// The live telemetry registry: what the Prometheus endpoint, the
+    /// periodic reporter, and [`FleetPool::live_metrics`] all read.
+    pub fn telemetry(&self) -> &Arc<TelemetryRegistry> {
+        &self.telemetry
+    }
+
+    /// The dispatch-event trace ring, when `telemetry.trace_events > 0`.
+    pub fn trace(&self) -> Option<&Arc<TraceRing>> {
+        self.trace.as_ref()
+    }
+
+    /// A [`ServeMetrics`] view of the pool *right now*, without shutting
+    /// anything down — the same registry read [`FleetPool::shutdown`]
+    /// performs, so live and final percentiles share one arithmetic.
+    pub fn live_metrics(&self) -> ServeMetrics {
+        ServeMetrics::from_registry(&self.telemetry)
+    }
+
+    /// Graceful shutdown: queues drain, workers exit, and the final
+    /// aggregate is read from the telemetry registry.
     pub fn shutdown(mut self) -> ServeMetrics {
         self.begin_stop();
-        let per_worker: Vec<Metrics> = self
-            .workers
-            .drain(..)
-            .map(|h| h.join().expect("fleet worker panicked"))
-            .collect();
-        ServeMetrics::aggregate(
-            per_worker,
-            self.shed_below_floor.load(Ordering::Relaxed),
-            self.shed_queue_full.load(Ordering::Relaxed),
-        )
-        .with_unknown_entries(self.shed_unknown.load(Ordering::Relaxed))
+        for h in self.workers.drain(..) {
+            h.join().expect("fleet worker panicked");
+        }
+        ServeMetrics::from_registry(&self.telemetry)
     }
 }
 
@@ -380,8 +435,9 @@ fn worker_loop(
     artifact_dir: &std::path::Path,
     batch: &BatchConfig,
     steal: &StealConfig,
-) -> Metrics {
-    let mut metrics = Metrics::default();
+    tel: &WorkerShard,
+    trace: Option<&TraceRing>,
+) {
     // One PJRT runtime handle per worker, created on the worker thread.
     let mut runtime = match Runtime::new(artifact_dir) {
         Ok(rt) => Some(rt),
@@ -443,8 +499,27 @@ fn worker_loop(
         if group.is_empty() {
             continue;
         }
+        let exec_start = Instant::now();
+        let head_id = group[0].1.id;
+        let size = group.len() as u64;
+        for (_, job) in &group {
+            tel.record_queue_wait(job.submitted.elapsed());
+        }
+        {
+            let (head_deadline, head) = &group[0];
+            tel.record_head_laxity(head_laxity(*head_deadline, head.unit_time, head.submitted));
+        }
         if popped.stolen {
-            metrics.record_steal(group.len());
+            tel.record_steal(group.len());
+            if let Some(ring) = trace {
+                ring.record(TraceEventKind::Steal, me as u32, head_id, size);
+            }
+        }
+        if let Some(ring) = trace {
+            if group.len() > 1 {
+                ring.record(TraceEventKind::BatchForm, me as u32, head_id, size);
+            }
+            ring.record(TraceEventKind::Dispatch, me as u32, head_id, size);
         }
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path. `process` consumes the
@@ -452,9 +527,10 @@ fn worker_loop(
             // reply channel back alongside the outcome.
             let (_, job) = group.into_iter().next().expect("len checked");
             let (reply, outcome) = process(job, runtime.as_mut(), &infer);
+            let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);
             if let Ok(o) = &outcome {
-                metrics.record_batch(1);
-                metrics.record(
+                tel.record_batch(1);
+                tel.record(
                     o.prediction.seizure,
                     o.sim.deadline_met,
                     o.sim.total_energy().raw(),
@@ -462,12 +538,15 @@ fn worker_loop(
                     o.host_latency,
                 );
             }
+            if let Some(ring) = trace {
+                ring.record(TraceEventKind::Retire, me as u32, head_id, u64::from(met));
+            }
             let _ = reply.send(outcome);
         } else {
-            process_batch(group, runtime.as_mut(), &infer, batch, &mut metrics);
+            process_batch(group, runtime.as_mut(), &infer, batch, me, tel, trace);
         }
+        tel.record_dispatch_time(exec_start.elapsed());
     }
-    metrics
 }
 
 /// Execute one coalesced dispatch for a fleet batch: one simulated run of
@@ -482,7 +561,9 @@ fn process_batch(
     runtime: Option<&mut Runtime>,
     infer: &TsdInference,
     batch: &BatchConfig,
-    metrics: &mut Metrics,
+    me: usize,
+    tel: &WorkerShard,
+    trace: Option<&TraceRing>,
 ) {
     let n = group.len();
     let head = &group[0].1;
@@ -499,6 +580,9 @@ fn process_batch(
                 Err(e) => {
                     let msg = e.to_string();
                     for (_, job) in group {
+                        if let Some(ring) = trace {
+                            ring.record(TraceEventKind::Retire, me as u32, job.id, 0);
+                        }
                         let _ = job.reply.send(Err(ServeError::Internal(msg.clone())));
                     }
                     return;
@@ -510,7 +594,7 @@ fn process_batch(
 
     // Only successful fan-outs count as dispatches (the error path above
     // returns early), keeping batched + solo == recorded requests.
-    metrics.record_batch(n);
+    tel.record_batch(n);
     for ((_, job), prediction) in group.into_iter().zip(predictions) {
         // Each member is judged against the demand it actually made.
         let met = match job.demand {
@@ -527,13 +611,17 @@ fn process_batch(
             job.entry.platform.sleep_power,
             met,
         );
-        metrics.record(
+        tel.record(
             prediction.seizure,
             member_sim.deadline_met,
             member_sim.total_energy().raw(),
             member_sim.active_time.raw(),
             job.submitted.elapsed(),
         );
+        if let Some(ring) = trace {
+            let met = u64::from(member_sim.deadline_met);
+            ring.record(TraceEventKind::Retire, me as u32, job.id, met);
+        }
         let outcome = FleetOutcome {
             window_index: job.window.index,
             prediction,
@@ -560,6 +648,7 @@ fn process(
     infer: &TsdInference,
 ) -> (Reply, std::result::Result<FleetOutcome, ServeError>) {
     let Job {
+        id: _,
         window,
         schedule,
         entry,

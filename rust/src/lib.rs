@@ -43,6 +43,10 @@
 //!   atlas** (all MCKP solves moved to startup; requests resolve by binary
 //!   search), an EDF admission queue with typed shedding, a sharded
 //!   multi-worker pool, and cross-worker metrics.
+//! * [`telemetry`] — live observability for the serving layers: a lock-free
+//!   per-worker metrics registry (atomic counters + log-linear histograms),
+//!   Prometheus text exposition over `std::net`, a bounded dispatch-event
+//!   trace ring (chrome://tracing dumps), and a periodic one-line reporter.
 //! * [`fleet`] — the multi-platform atlas **library**: content-keyed entries
 //!   (platform fingerprint × workload hash) each carrying a deadline atlas
 //!   and an energy-budget atlas, an epoch-versioned registry with live
@@ -69,6 +73,7 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod solver;
+pub mod telemetry;
 pub mod tiling;
 pub mod timing;
 pub mod util;

@@ -87,7 +87,16 @@ fn app() -> App {
                 .opt_default("max-batch", "Coalesce up to N compatible queued requests into one dispatch (1 = solo)", "8")
                 .opt_default("batch-window-us", "Extra microseconds a worker waits for stragglers when the backlog cannot fill a batch (0 = opportunistic only)", "0")
                 .flag("no-steal", "Disable cross-shard work stealing (idle workers rescuing queued work from a stuck shard)")
-                .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)"),
+                .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)")
+                .opt("metrics-addr", "Expose live Prometheus metrics on this host:port (e.g. 127.0.0.1:9464); scrape with `medea scrape` or curl")
+                .opt("metrics-out", "Write the final Prometheus exposition to this file before shutdown")
+                .opt("trace-out", "Write a chrome://tracing JSON dump of dispatch events to this file before shutdown")
+                .opt_default("trace-events", "Dispatch-event trace ring capacity (allocated only when --trace-out is set)", "65536")
+                .opt_default("report-every-s", "Log a one-line telemetry rates summary every N seconds (0 = off)", "0"),
+        )
+        .command(
+            CmdSpec::new("scrape", "Fetch one Prometheus exposition from a running `serve --metrics-addr` endpoint")
+                .opt_default("addr", "host:port of the metrics endpoint", "127.0.0.1:9464"),
         )
         .command(
             CmdSpec::new("atlas", "Precompute the schedule atlas and write it to disk")
@@ -192,6 +201,7 @@ fn dispatch(name: &str, args: &Args) -> Result<(), String> {
         }
         "all" => cmd_all(args),
         "serve" => cmd_serve(args),
+        "scrape" => cmd_scrape(args),
         "atlas" => cmd_atlas(args),
         "fleet" => cmd_fleet(args),
         other => Err(format!("unhandled command {other}")),
@@ -392,6 +402,97 @@ fn parse_steal(args: &Args) -> medea::serve::StealConfig {
     }
 }
 
+/// Observability options shared by `serve` and `serve --fleet-dir`.
+struct TelemetryCli {
+    metrics_addr: Option<String>,
+    metrics_out: Option<PathBuf>,
+    trace_out: Option<PathBuf>,
+    trace_events: usize,
+    report_every: Option<std::time::Duration>,
+}
+
+impl TelemetryCli {
+    fn parse(args: &Args) -> Result<TelemetryCli, String> {
+        let trace_events: usize = args.req_parse("trace-events").map_err(|e| e.to_string())?;
+        let report_s: f64 = args.req_parse("report-every-s").map_err(|e| e.to_string())?;
+        Ok(TelemetryCli {
+            metrics_addr: args.get("metrics-addr").map(String::from),
+            metrics_out: args.get("metrics-out").map(PathBuf::from),
+            trace_out: args.get("trace-out").map(PathBuf::from),
+            trace_events,
+            report_every: (report_s > 0.0)
+                .then(|| std::time::Duration::from_secs_f64(report_s)),
+        })
+    }
+
+    /// Pool-side config: the trace ring is only allocated when a dump was
+    /// actually requested.
+    fn pool_config(&self) -> medea::telemetry::TelemetryConfig {
+        medea::telemetry::TelemetryConfig {
+            trace_events: if self.trace_out.is_some() { self.trace_events } else { 0 },
+        }
+    }
+
+    /// Start the Prometheus responder and the periodic reporter, when asked
+    /// for. The returned guards keep both alive until dropped.
+    fn attach(
+        &self,
+        registry: &std::sync::Arc<medea::telemetry::TelemetryRegistry>,
+    ) -> Result<
+        (Option<medea::telemetry::MetricsServer>, Option<medea::telemetry::Reporter>),
+        String,
+    > {
+        let server = match &self.metrics_addr {
+            Some(addr) => {
+                let server = medea::telemetry::MetricsServer::start(addr, registry.clone())
+                    .map_err(|e| e.to_string())?;
+                println!("metrics: serving http://{}/metrics", server.addr());
+                Some(server)
+            }
+            None => None,
+        };
+        let reporter = self
+            .report_every
+            .map(|every| medea::telemetry::Reporter::start(registry.clone(), every));
+        Ok((server, reporter))
+    }
+
+    /// Write the one-shot exposition and trace dumps (called just before
+    /// pool shutdown, once all in-flight requests resolved).
+    fn dump(
+        &self,
+        registry: &medea::telemetry::TelemetryRegistry,
+        trace: Option<&medea::telemetry::TraceRing>,
+    ) -> Result<(), String> {
+        if let Some(path) = &self.metrics_out {
+            let text = medea::telemetry::render_prometheus(&registry.snapshot());
+            std::fs::write(path, text).map_err(|e| e.to_string())?;
+            println!("metrics: exposition written to {}", path.display());
+        }
+        if let Some(path) = &self.trace_out {
+            match trace {
+                Some(ring) => {
+                    std::fs::write(path, ring.to_chrome_json()).map_err(|e| e.to_string())?;
+                    println!(
+                        "trace: {} events written to {} (load in chrome://tracing)",
+                        ring.events().len(),
+                        path.display()
+                    );
+                }
+                None => println!("trace: ring disabled (--trace-events 0), nothing written"),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn cmd_scrape(args: &Args) -> Result<(), String> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:9464");
+    let body = medea::telemetry::scrape(addr).map_err(|e| e.to_string())?;
+    print!("{body}");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     use medea::serve::{PoolConfig, ScheduleAtlas, ServePool, Ticket};
     if args.get("fleet-dir").is_some() {
@@ -411,12 +512,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .map(PathBuf::from)
         .unwrap_or_else(ArtifactManifest::default_dir);
 
+    let tel_cli = TelemetryCli::parse(args)?;
     let config = PoolConfig {
         workers,
         queue_capacity: queue_cap,
         artifact_dir: dir,
         batch: parse_batch(args)?,
         steal: parse_steal(args),
+        telemetry: tel_cli.pool_config(),
         ..PoolConfig::default()
     };
     let pool = match args.get("atlas").map(Path::new) {
@@ -439,6 +542,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             pool
         }
     };
+    let (_metrics_server, _reporter) = tel_cli.attach(pool.telemetry())?;
 
     // Burst-submit everything, then collect: exercises the EDF queues.
     let mut gen = EegGenerator::new(SynthConfig::default(), seed);
@@ -474,6 +578,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Err(e) => println!("window {i:>3}: {e}"),
         }
     }
+    tel_cli.dump(pool.telemetry(), pool.trace().map(|r| r.as_ref()))?;
     let metrics = pool.shutdown();
     println!("---\n{}", metrics.summary());
     Ok(())
@@ -557,6 +662,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
     if registry.is_empty() {
         return Err("fleet library has no servable entries".into());
     }
+    let tel_cli = TelemetryCli::parse(args)?;
     let pool = FleetPool::start(
         registry,
         FleetPoolConfig {
@@ -565,9 +671,11 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
             artifact_dir,
             batch: parse_batch(args)?,
             steal: parse_steal(args),
+            telemetry: tel_cli.pool_config(),
         },
     )
     .map_err(|e| e.to_string())?;
+    let (_metrics_server, _reporter) = tel_cli.attach(pool.telemetry())?;
 
     let mut gen = EegGenerator::new(SynthConfig::default(), seed);
     let mut pending = Vec::with_capacity(windows);
@@ -608,6 +716,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
             Err(e) => println!("window {i:>3}: {e}"),
         }
     }
+    tel_cli.dump(pool.telemetry(), pool.trace().map(|r| r.as_ref()))?;
     let metrics = pool.shutdown();
     println!("---\n{}", metrics.summary());
     Ok(())

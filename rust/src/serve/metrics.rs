@@ -1,11 +1,14 @@
 //! Cross-worker serving metrics.
 //!
-//! Each pool worker keeps an ordinary [`crate::coordinator::Metrics`]; at
-//! shutdown the pool merges them into one [`ServeMetrics`] and attaches the
-//! admission-side shed counters (which live in the pool, not in any worker,
-//! since shed requests never reach a worker).
+//! Workers record into the pool's live [`TelemetryRegistry`];
+//! [`ServeMetrics::from_registry`] derives this aggregated view from a
+//! registry snapshot — the *same* read whether taken mid-run
+//! (`ServePool::live_metrics`, the Prometheus endpoint) or at shutdown, so
+//! live and final numbers can never drift apart. The admission-side shed
+//! counters ride on the registry too (shed requests never reach a worker).
 
 use crate::coordinator::Metrics;
+use crate::telemetry::TelemetryRegistry;
 use crate::util::json::{Json, JsonObj};
 use std::time::Duration;
 
@@ -55,6 +58,15 @@ impl ServeMetrics {
     pub fn with_unknown_entries(mut self, shed_unknown_entry: u64) -> ServeMetrics {
         self.shed_unknown_entry = shed_unknown_entry;
         self
+    }
+
+    /// Derive the aggregated view from a live telemetry registry — the one
+    /// code path behind both `live_metrics()` and shutdown.
+    pub fn from_registry(registry: &TelemetryRegistry) -> ServeMetrics {
+        let snap = registry.snapshot();
+        let per_worker: Vec<Metrics> = snap.workers.iter().map(|w| w.to_metrics()).collect();
+        ServeMetrics::aggregate(per_worker, snap.shed_below_floor, snap.shed_queue_full)
+            .with_unknown_entries(snap.shed_unknown_entry)
     }
 
     pub fn total_shed(&self) -> u64 {
@@ -220,5 +232,76 @@ mod tests {
         assert_eq!(j.get("steals").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("stolen_requests").unwrap().as_u64(), Some(4));
         assert_eq!(j.get("batch_hist").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn from_registry_mirrors_shard_recordings() {
+        use crate::serve::queue::Rejection;
+        use crate::telemetry::TelemetryRegistry;
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 2);
+        reg.worker(0).record(false, true, 100e-6, 0.01, Duration::from_millis(2));
+        reg.worker(0).record_batch(1);
+        reg.worker(1).record(false, false, 200e-6, 0.02, Duration::from_millis(6));
+        reg.worker(1).record_batch(1);
+        reg.record_shed(&Rejection::QueueFull { capacity: 4 });
+        reg.record_shed(&Rejection::UnknownEntry { platform: "x".into(), workload: "y".into() });
+        let m = ServeMetrics::from_registry(&reg);
+        assert_eq!(m.workers, 2);
+        assert_eq!(m.aggregate.requests, 2);
+        assert_eq!(m.per_worker_requests, vec![1, 1]);
+        assert_eq!(m.aggregate.deadline_misses, 1);
+        assert_eq!(m.shed_queue_full, 1);
+        assert_eq!(m.shed_unknown_entry, 1);
+        assert_eq!(m.total_shed(), 2);
+        assert_eq!(m.p99(), Duration::from_millis(6));
+    }
+
+    /// Golden shape test: the exported JSON keys (and their order) are load
+    /// bearing for `BENCH_*.json` consumers — renames must be deliberate.
+    #[test]
+    fn json_shape_is_pinned() {
+        let mut w = Metrics::default();
+        w.record(false, true, 100e-6, 0.01, Duration::from_millis(1));
+        w.record_batch(1);
+        w.record_steal(1);
+        let m = ServeMetrics::aggregate(vec![w], 2, 3).with_unknown_entries(1);
+        let j = m.to_json();
+        let obj = j.as_obj().expect("object");
+        let keys: Vec<String> = obj.iter().map(|(k, _)| k.clone()).collect();
+        let expected = [
+            "workers",
+            "requests",
+            "per_worker_requests",
+            "deadline_misses",
+            "batched_requests",
+            "solo_requests",
+            "batch_hist",
+            "steals",
+            "stolen_requests",
+            "shed_below_floor",
+            "shed_queue_full",
+            "shed_unknown_entry",
+            "sim_energy_uj",
+            "sim_active_ms",
+            "host_p50_us",
+            "host_p99_us",
+        ];
+        assert_eq!(keys, expected.map(String::from).to_vec());
+        // Arrays stay arrays, scalars stay numeric.
+        for (k, v) in obj.iter() {
+            match k.as_str() {
+                "per_worker_requests" | "batch_hist" => {
+                    assert!(v.as_arr().is_some(), "{k} should be an array")
+                }
+                _ => assert!(v.as_f64().is_some(), "{k} should be numeric"),
+            }
+        }
+        assert_eq!(j.get("shed_below_floor").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(j.get("shed_queue_full").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(j.get("steals").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(
+            j.get("per_worker_requests").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
     }
 }

@@ -15,7 +15,6 @@
 //! graceful: queues drain, then workers exit and their metrics are merged
 //! into a [`ServeMetrics`].
 
-use crate::coordinator::Metrics;
 use crate::eeg::synth::EegWindow;
 use crate::ir::tsd::{tsd_core, TsdParams};
 use crate::ir::Workload;
@@ -34,13 +33,15 @@ use crate::serve::batch::{
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
+use crate::telemetry::trace::{TraceEventKind, TraceRing};
+use crate::telemetry::{TelemetryConfig, TelemetryRegistry, WorkerShard};
 use crate::timing::cycle_model::CycleModel;
 use crate::util::error::{anyhow, bail, Result};
 use crate::util::lru::LruCache;
 use crate::util::units::Time;
 use std::fmt;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -62,6 +63,9 @@ pub struct PoolConfig {
     pub batch: BatchConfig,
     /// Cross-shard work-stealing knobs (enabled by default).
     pub steal: StealConfig,
+    /// Telemetry knobs (`trace_events` sizes the dispatch-event ring; the
+    /// metrics registry itself is always on — it *is* the metrics path).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for PoolConfig {
@@ -77,6 +81,7 @@ impl Default for PoolConfig {
             atlas: AtlasConfig::default(),
             batch: BatchConfig::default(),
             steal: StealConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -177,6 +182,9 @@ impl Ticket {
 }
 
 struct Job {
+    /// Pool-unique request id ([`TelemetryRegistry::next_request_id`]),
+    /// threaded through every trace event this request produces.
+    id: u64,
     window: EegWindow,
     deadline: Time,
     /// Resolved knot identity (deadline bits), stamped at submit — the
@@ -431,13 +439,15 @@ struct ServeContext {
 /// call [`ServePool::shutdown`] to collect the aggregate instead.
 pub struct ServePool {
     shards: Vec<Arc<Shard<Job>>>,
-    workers: Vec<JoinHandle<Metrics>>,
+    workers: Vec<JoinHandle<()>>,
     next: AtomicUsize,
     atlas: Arc<ScheduleAtlas>,
-    // Only touched through &self (submit/shutdown) — workers never see
-    // shed requests, so plain atomics suffice.
-    shed_below_floor: AtomicU64,
-    shed_queue_full: AtomicU64,
+    /// The live metrics registry: admission counts sheds here, workers
+    /// record into their shards, and both [`ServePool::live_metrics`] and
+    /// [`ServePool::shutdown`] read the same state.
+    telemetry: Arc<TelemetryRegistry>,
+    /// Dispatch-event ring; `None` unless `telemetry.trace_events > 0`.
+    trace: Option<Arc<TraceRing>>,
 }
 
 impl ServePool {
@@ -477,6 +487,13 @@ impl ServePool {
         let steal = config.steal.clone();
 
         let n = config.workers.max(1);
+        let telemetry = Arc::new(TelemetryRegistry::new(
+            ctx.platform.name.clone(),
+            ctx.workload.name.clone(),
+            n,
+        ));
+        let trace = (config.telemetry.trace_events > 0)
+            .then(|| Arc::new(TraceRing::new(config.telemetry.trace_events)));
         // Every shard exists before any worker spawns: workers see the full
         // sibling set, so stealing never races pool construction.
         let shards: Vec<Arc<Shard<Job>>> = (0..n)
@@ -498,7 +515,22 @@ impl ServePool {
                     let cache = config.schedule_cache.max(1);
                     let batch = batch.clone();
                     let steal = steal.clone();
-                    move || worker_loop(&shards, i, &ctx, &atlas, &dir, cache, &batch, &steal)
+                    let tel = telemetry.worker(i);
+                    let trace = trace.clone();
+                    move || {
+                        worker_loop(
+                            &shards,
+                            i,
+                            &ctx,
+                            &atlas,
+                            &dir,
+                            cache,
+                            &batch,
+                            &steal,
+                            &tel,
+                            trace.as_deref(),
+                        )
+                    }
                 })
                 .map_err(|e| anyhow!("spawn serve worker {i}: {e}"))?;
             workers.push(handle);
@@ -509,8 +541,8 @@ impl ServePool {
             workers,
             next: AtomicUsize::new(0),
             atlas,
-            shed_below_floor: AtomicU64::new(0),
-            shed_queue_full: AtomicU64::new(0),
+            telemetry,
+            trace,
         })
     }
 
@@ -551,13 +583,16 @@ impl ServePool {
         window: EegWindow,
         deadline: Time,
     ) -> std::result::Result<Ticket, Rejection> {
-        let shard = &self.shards[shard % self.shards.len()];
+        let idx = shard % self.shards.len();
+        let shard = &self.shards[idx];
+        let id = self.telemetry.next_request_id();
         let (tx, rx) = mpsc::channel();
         let (knot_bits, unit_time) = match self.atlas.lookup(deadline) {
             Ok(knot) => (knot.deadline.raw().to_bits(), knot.sim_time),
             Err(_) => (u64::MAX, Time::ZERO),
         };
         let job = Job {
+            id,
             window,
             deadline,
             knot_bits,
@@ -567,7 +602,11 @@ impl ServePool {
         };
         let mut st = shard.state.lock().expect("shard lock poisoned");
         if st.stopping {
-            return Err(Rejection::ShuttingDown);
+            drop(st);
+            let reason = Rejection::ShuttingDown;
+            self.telemetry.record_shed(&reason);
+            self.trace_shed(idx, id, &reason);
+            return Err(reason);
         }
         let capacity = st.queue.capacity();
         match st.queue.push(deadline, job) {
@@ -575,30 +614,36 @@ impl ServePool {
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 drop(st);
                 shard.cv.notify_one();
+                if let Some(ring) = &self.trace {
+                    ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(deadline));
+                }
                 Ok(Ticket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
-                self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
-                let _ = evicted
-                    .reply
-                    .send(Err(ServeError::Shed(Rejection::QueueFull { capacity })));
+                let reason = Rejection::QueueFull { capacity };
+                self.telemetry.record_shed(&reason);
+                self.trace_shed(idx, evicted.id, &reason);
+                let _ = evicted.reply.send(Err(ServeError::Shed(reason)));
                 drop(st);
                 shard.cv.notify_one();
+                if let Some(ring) = &self.trace {
+                    ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(deadline));
+                }
                 Ok(Ticket { rx })
             }
             Admission::Rejected { reason, .. } => {
-                match reason {
-                    Rejection::BelowFloor { .. } | Rejection::BelowEnergyFloor { .. } => {
-                        self.shed_below_floor.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Rejection::QueueFull { .. } => {
-                        self.shed_queue_full.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Rejection::UnknownEntry { .. } | Rejection::ShuttingDown => {}
-                }
+                drop(st);
+                self.telemetry.record_shed(&reason);
+                self.trace_shed(idx, id, &reason);
                 Err(reason)
             }
+        }
+    }
+
+    fn trace_shed(&self, shard: usize, id: u64, reason: &Rejection) {
+        if let Some(ring) = &self.trace {
+            ring.record(TraceEventKind::Shed, shard as u32, id, reason.code());
         }
     }
 
@@ -623,20 +668,39 @@ impl ServePool {
         }
     }
 
-    /// Graceful shutdown: queues drain, workers exit, metrics merge.
+    /// The live telemetry registry: what the Prometheus endpoint, the
+    /// periodic reporter, and [`ServePool::live_metrics`] all read.
+    pub fn telemetry(&self) -> &Arc<TelemetryRegistry> {
+        &self.telemetry
+    }
+
+    /// The dispatch-event trace ring, when `telemetry.trace_events > 0`.
+    pub fn trace(&self) -> Option<&Arc<TraceRing>> {
+        self.trace.as_ref()
+    }
+
+    /// A [`ServeMetrics`] view of the pool *right now*, without shutting
+    /// anything down — the same registry read [`ServePool::shutdown`]
+    /// performs, so live and final percentiles share one arithmetic.
+    pub fn live_metrics(&self) -> ServeMetrics {
+        ServeMetrics::from_registry(&self.telemetry)
+    }
+
+    /// Graceful shutdown: queues drain, workers exit, and the final
+    /// aggregate is read from the telemetry registry.
     pub fn shutdown(mut self) -> ServeMetrics {
         self.begin_stop();
-        let per_worker: Vec<Metrics> = self
-            .workers
-            .drain(..)
-            .map(|h| h.join().expect("serve worker panicked"))
-            .collect();
-        ServeMetrics::aggregate(
-            per_worker,
-            self.shed_below_floor.load(Ordering::Relaxed),
-            self.shed_queue_full.load(Ordering::Relaxed),
-        )
+        for h in self.workers.drain(..) {
+            h.join().expect("serve worker panicked");
+        }
+        ServeMetrics::from_registry(&self.telemetry)
     }
+}
+
+/// Requested deadline in whole microseconds (saturating) — the `arg` of an
+/// [`TraceEventKind::Enqueue`] event.
+pub(crate) fn deadline_us(deadline: Time) -> u64 {
+    (deadline.raw() * 1e6) as u64
 }
 
 impl Drop for ServePool {
@@ -658,8 +722,9 @@ fn worker_loop(
     cache_capacity: usize,
     batch: &BatchConfig,
     steal: &StealConfig,
-) -> Metrics {
-    let mut metrics = Metrics::default();
+    tel: &WorkerShard,
+    trace: Option<&TraceRing>,
+) {
     // One PJRT runtime handle per worker, created on the worker thread.
     let mut runtime = match Runtime::new(artifact_dir) {
         Ok(rt) => Some(rt),
@@ -695,17 +760,37 @@ fn worker_loop(
         if group.is_empty() {
             continue;
         }
+        let exec_start = Instant::now();
+        let head_id = group[0].1.id;
+        let size = group.len() as u64;
+        for (_, job) in &group {
+            tel.record_queue_wait(job.submitted.elapsed());
+        }
+        {
+            let (head_deadline, head) = &group[0];
+            tel.record_head_laxity(head_laxity(*head_deadline, head.unit_time, head.submitted));
+        }
         if popped.stolen {
-            metrics.record_steal(group.len());
+            tel.record_steal(group.len());
+            if let Some(ring) = trace {
+                ring.record(TraceEventKind::Steal, me as u32, head_id, size);
+            }
+        }
+        if let Some(ring) = trace {
+            if group.len() > 1 {
+                ring.record(TraceEventKind::BatchForm, me as u32, head_id, size);
+            }
+            ring.record(TraceEventKind::Dispatch, me as u32, head_id, size);
         }
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path (per-member deadline
             // stamping + LRU-cached schedules).
             let (_, job) = group.into_iter().next().expect("len checked");
             let outcome = process(&job, ctx, atlas, &mut schedules, runtime.as_mut(), &infer);
+            let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);
             if let Ok(o) = &outcome {
-                metrics.record_batch(1);
-                metrics.record(
+                tel.record_batch(1);
+                tel.record(
                     o.prediction.seizure,
                     o.sim.deadline_met,
                     o.sim.total_energy().raw(),
@@ -713,12 +798,15 @@ fn worker_loop(
                     o.host_latency,
                 );
             }
+            if let Some(ring) = trace {
+                ring.record(TraceEventKind::Retire, me as u32, job.id, u64::from(met));
+            }
             let _ = job.reply.send(outcome);
         } else {
-            process_batch(group, ctx, atlas, runtime.as_mut(), &infer, batch, &mut metrics);
+            process_batch(group, ctx, atlas, runtime.as_mut(), &infer, batch, me, tel, trace);
         }
+        tel.record_dispatch_time(exec_start.elapsed());
     }
-    metrics
 }
 
 /// Execute one coalesced dispatch: a single simulated on-device run and a
@@ -727,6 +815,7 @@ fn worker_loop(
 /// shares (sums stay equal to the batch totals), deadlines and sleep judged
 /// against the batch *completion* time — all derived from the one fresh
 /// event-level replay, mirroring how the atlas knots were validated.
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     group: Vec<(Time, Job)>,
     ctx: &ServeContext,
@@ -734,7 +823,9 @@ fn process_batch(
     runtime: Option<&mut Runtime>,
     infer: &TsdInference,
     batch: &BatchConfig,
-    metrics: &mut Metrics,
+    me: usize,
+    tel: &WorkerShard,
+    trace: Option<&TraceRing>,
 ) {
     let n = group.len();
     let head_deadline = group[0].0;
@@ -743,11 +834,15 @@ fn process_batch(
         Err(miss) => {
             // Admission floor-checked every member; this only races atlas
             // swaps. Shed the whole group with the typed reason.
+            let reason = Rejection::BelowFloor {
+                requested: miss.requested,
+                floor: miss.floor,
+            };
             for (_, job) in group {
-                let _ = job.reply.send(Err(ServeError::Shed(Rejection::BelowFloor {
-                    requested: miss.requested,
-                    floor: miss.floor,
-                })));
+                if let Some(ring) = trace {
+                    ring.record(TraceEventKind::Shed, me as u32, job.id, reason.code());
+                }
+                let _ = job.reply.send(Err(ServeError::Shed(reason.clone())));
             }
             return;
         }
@@ -765,6 +860,9 @@ fn process_batch(
                 Err(e) => {
                     let msg = e.to_string();
                     for (_, job) in group {
+                        if let Some(ring) = trace {
+                            ring.record(TraceEventKind::Retire, me as u32, job.id, 0);
+                        }
                         let _ = job.reply.send(Err(ServeError::Internal(msg.clone())));
                     }
                     return;
@@ -776,19 +874,23 @@ fn process_batch(
 
     // Only successful fan-outs count as dispatches (the shed/error paths
     // above return early), keeping batched + solo == recorded requests.
-    metrics.record_batch(n);
+    tel.record_batch(n);
     for ((deadline, job), prediction) in group.into_iter().zip(predictions) {
         // Guaranteed by batch admission; recomputed rather than assumed so
         // the deadline-monotone property tests observe the real outcome.
         let met = share.batch_time.raw() <= deadline.raw();
         let member_sim = member_report(&sim, share, deadline, ctx.platform.sleep_power, met);
-        metrics.record(
+        tel.record(
             prediction.seizure,
             member_sim.deadline_met,
             member_sim.total_energy().raw(),
             member_sim.active_time.raw(),
             job.submitted.elapsed(),
         );
+        if let Some(ring) = trace {
+            let met = u64::from(member_sim.deadline_met);
+            ring.record(TraceEventKind::Retire, me as u32, job.id, met);
+        }
         let outcome = InferenceOutcome {
             window_index: job.window.index,
             prediction,

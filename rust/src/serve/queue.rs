@@ -37,6 +37,31 @@ pub enum Rejection {
     ShuttingDown,
 }
 
+impl Rejection {
+    /// Stable snake_case label for metrics (`shed_reason`) and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Rejection::BelowFloor { .. } => "below_floor",
+            Rejection::BelowEnergyFloor { .. } => "below_energy_floor",
+            Rejection::UnknownEntry { .. } => "unknown_entry",
+            Rejection::QueueFull { .. } => "queue_full",
+            Rejection::ShuttingDown => "shutting_down",
+        }
+    }
+
+    /// Compact numeric code carried in trace-ring shed events (decoded by
+    /// [`crate::telemetry::trace::shed_reason_name`]).
+    pub fn code(&self) -> u64 {
+        match self {
+            Rejection::BelowFloor { .. } => 0,
+            Rejection::BelowEnergyFloor { .. } => 1,
+            Rejection::UnknownEntry { .. } => 2,
+            Rejection::QueueFull { .. } => 3,
+            Rejection::ShuttingDown => 4,
+        }
+    }
+}
+
 impl fmt::Display for Rejection {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -549,5 +574,24 @@ mod tests {
             workload: "net-y".into(),
         };
         assert!(u.to_string().contains("soc-x") && u.to_string().contains("net-y"));
+    }
+
+    #[test]
+    fn rejection_labels_match_trace_codes() {
+        let variants = [
+            Rejection::BelowFloor { requested: ms(1.0), floor: ms(2.0) },
+            Rejection::BelowEnergyFloor {
+                requested: crate::util::units::Energy::from_uj(1.0),
+                floor: crate::util::units::Energy::from_uj(2.0),
+            },
+            Rejection::UnknownEntry { platform: "p".into(), workload: "w".into() },
+            Rejection::QueueFull { capacity: 1 },
+            Rejection::ShuttingDown,
+        ];
+        for r in &variants {
+            // The trace ring stores the code; decoding it must round-trip
+            // back to the metrics label.
+            assert_eq!(crate::telemetry::trace::shed_reason_name(r.code()), r.label());
+        }
     }
 }

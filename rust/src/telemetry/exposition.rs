@@ -1,0 +1,446 @@
+//! Prometheus text exposition (format 0.0.4) over a minimal blocking HTTP
+//! responder, plus the matching one-shot scrape client.
+//!
+//! [`render_prometheus`] turns a [`RegistrySnapshot`] into the text format;
+//! [`MetricsServer`] binds a `std::net::TcpListener` and answers every
+//! request with a fresh snapshot (one short-lived thread, no framework, no
+//! dependency); [`scrape`] is the tiny client the CLI (`medea scrape`) and
+//! CI smoke test use to fetch one exposition.
+//!
+//! Histograms are downsampled from the 640 fine log-linear buckets to 15
+//! power-of-4 `le` bounds plus `+Inf` — coarse enough to keep a scrape small,
+//! fine enough for rate/percentile queries. Time series are exported in
+//! seconds, energy in microjoules, batch sizes over linear bounds.
+
+use crate::telemetry::hist::{bucket_upper, HistData};
+use crate::telemetry::registry::{RegistrySnapshot, WorkerSnapshot};
+use crate::telemetry::TelemetryRegistry;
+use crate::util::error::{anyhow, bail, Result};
+use std::fmt::Write as _;
+use std::io::{Read as _, Write as _};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Histogram `le` bounds for nanosecond-valued series: 1 µs · 4^k.
+const TIME_BOUNDS_NS: [u64; 15] = [
+    1_000,
+    4_000,
+    16_000,
+    64_000,
+    256_000,
+    1_024_000,
+    4_096_000,
+    16_384_000,
+    65_536_000,
+    262_144_000,
+    1_048_576_000,
+    4_194_304_000,
+    16_777_216_000,
+    67_108_864_000,
+    268_435_456_000,
+];
+
+/// Histogram `le` bounds for nanojoule-valued series: 1 µJ · 4^k.
+const ENERGY_BOUNDS_NJ: [u64; 15] = TIME_BOUNDS_NS;
+
+/// Render one snapshot in Prometheus text exposition format 0.0.4.
+pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+    let base = format!(
+        "platform=\"{}\",workload=\"{}\"",
+        escape_label(&snap.platform),
+        escape_label(&snap.workload)
+    );
+    let workers: Vec<(String, &WorkerSnapshot)> = snap
+        .workers
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (format!("{base},worker=\"{i}\""), w))
+        .collect();
+
+    family(&mut out, "medea_uptime_seconds", "gauge", "Seconds since the pool registry started.");
+    series(&mut out, "medea_uptime_seconds", &base, snap.uptime.as_secs_f64());
+
+    counter(&mut out, "medea_requests_total", "Requests served.", &workers, |w| w.requests);
+    counter(
+        &mut out,
+        "medea_seizures_detected_total",
+        "Served windows whose prediction flagged a seizure.",
+        &workers,
+        |w| w.seizures,
+    );
+    counter(
+        &mut out,
+        "medea_deadline_misses_total",
+        "Served requests whose simulated schedule missed its deadline.",
+        &workers,
+        |w| w.deadline_misses,
+    );
+    counter(
+        &mut out,
+        "medea_steals_total",
+        "Dispatch groups lifted from a sibling shard by an idle worker.",
+        &workers,
+        |w| w.steals,
+    );
+    counter(
+        &mut out,
+        "medea_stolen_requests_total",
+        "Requests served through stolen dispatches.",
+        &workers,
+        |w| w.stolen_requests,
+    );
+
+    family(
+        &mut out,
+        "medea_sim_energy_joules_total",
+        "counter",
+        "Simulated on-device energy across served windows.",
+    );
+    for (labels, w) in &workers {
+        series(&mut out, "medea_sim_energy_joules_total", labels, w.sim_energy_nj as f64 / 1e9);
+    }
+    family(
+        &mut out,
+        "medea_sim_active_seconds_total",
+        "counter",
+        "Simulated on-device active time across served windows.",
+    );
+    for (labels, w) in &workers {
+        series(&mut out, "medea_sim_active_seconds_total", labels, w.sim_active_ns as f64 / 1e9);
+    }
+
+    family(
+        &mut out,
+        "medea_shed_requests_total",
+        "counter",
+        "Requests shed at admission, by typed rejection reason.",
+    );
+    for (reason, n) in [
+        ("below_floor", snap.shed_below_floor),
+        ("queue_full", snap.shed_queue_full),
+        ("unknown_entry", snap.shed_unknown_entry),
+        ("shutting_down", snap.shed_shutting_down),
+    ] {
+        series(
+            &mut out,
+            "medea_shed_requests_total",
+            &format!("{base},shed_reason=\"{reason}\""),
+            n as f64,
+        );
+    }
+
+    family(
+        &mut out,
+        "medea_batch_size",
+        "histogram",
+        "Coalesced requests per dispatch (1 = solo).",
+    );
+    for (labels, w) in &workers {
+        batch_histogram(&mut out, labels, &w.batch_hist);
+    }
+
+    for (name, help, pick) in [
+        (
+            "medea_host_latency_seconds",
+            "End-to-end host latency, submit to reply.",
+            (|w: &WorkerSnapshot| &w.host) as fn(&WorkerSnapshot) -> &HistData,
+        ),
+        (
+            "medea_queue_wait_seconds",
+            "Time queued before a worker dequeued the request.",
+            |w: &WorkerSnapshot| &w.queue_wait,
+        ),
+        (
+            "medea_head_laxity_seconds",
+            "Dispatch-group head's remaining slack at dequeue.",
+            |w: &WorkerSnapshot| &w.laxity,
+        ),
+        (
+            "medea_dispatch_seconds",
+            "Execution time of one dispatch, dequeue to retire.",
+            |w: &WorkerSnapshot| &w.dispatch,
+        ),
+    ] {
+        family(&mut out, name, "histogram", help);
+        for (labels, w) in &workers {
+            scaled_histogram(&mut out, name, labels, pick(w), &TIME_BOUNDS_NS, 1e9);
+        }
+    }
+
+    family(
+        &mut out,
+        "medea_request_energy_microjoules",
+        "histogram",
+        "Simulated energy per served request.",
+    );
+    for (labels, w) in &workers {
+        scaled_histogram(
+            &mut out,
+            "medea_request_energy_microjoules",
+            labels,
+            &w.energy,
+            &ENERGY_BOUNDS_NJ,
+            1e3,
+        );
+    }
+
+    out
+}
+
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn series(out: &mut String, name: &str, labels: &str, value: f64) {
+    let _ = writeln!(out, "{name}{{{labels}}} {value}");
+}
+
+fn counter(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    workers: &[(String, &WorkerSnapshot)],
+    pick: impl Fn(&WorkerSnapshot) -> u64,
+) {
+    family(out, name, "counter", help);
+    for (labels, w) in workers {
+        series(out, name, labels, pick(w) as f64);
+    }
+}
+
+/// Emit one histogram family member from fine log-linear buckets, mapped
+/// onto `bounds` (raw units) and reported divided by `scale`.
+fn scaled_histogram(
+    out: &mut String,
+    name: &str,
+    labels: &str,
+    h: &HistData,
+    bounds: &[u64],
+    scale: f64,
+) {
+    let mut cum = vec![0u64; bounds.len()];
+    for (i, &c) in h.bucket_counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if let Some(j) = bounds.iter().position(|&b| bucket_upper(i) <= b) {
+            cum[j] += c;
+        }
+    }
+    let mut running = 0u64;
+    for (j, &b) in bounds.iter().enumerate() {
+        running += cum[j];
+        let le = b as f64 / scale;
+        let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {running}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum() as f64 / scale);
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count());
+}
+
+/// Emit the linear batch-size histogram (`le` = 1, 2, 4, ... 64, +Inf).
+fn batch_histogram(out: &mut String, labels: &str, hist: &[u64]) {
+    let name = "medea_batch_size";
+    let total: u64 = hist.iter().sum();
+    let weighted: u64 = hist.iter().enumerate().map(|(i, &n)| (i as u64 + 1) * n).sum();
+    for le in [1usize, 2, 4, 8, 16, 32, 64] {
+        let running: u64 = hist.iter().take(le).sum();
+        let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {running}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {total}");
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {weighted}");
+    let _ = writeln!(out, "{name}_count{{{labels}}} {total}");
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// A blocking single-threaded scrape endpoint over `std::net`.
+///
+/// Every connection gets a fresh snapshot rendered with
+/// [`render_prometheus`] regardless of the request line, so `curl
+/// http://addr/metrics` and a Prometheus scraper both work. Dropping the
+/// server stops the thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks a free port) and
+    /// start answering scrapes.
+    pub fn start(addr: &str, registry: Arc<TelemetryRegistry>) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow!("metrics-addr `{addr}`: {e}"))?;
+        let local = listener.local_addr().map_err(|e| anyhow!("metrics-addr `{addr}`: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = std::thread::Builder::new()
+            .name("medea-metrics".into())
+            .spawn({
+                let stop = stop.clone();
+                move || serve_loop(&listener, &registry, &stop)
+            })
+            .map_err(|e| anyhow!("spawning metrics server: {e}"))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the accept loop by connecting to it once ourselves.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+        }
+        if TcpStream::connect_timeout(&wake, Duration::from_millis(500)).is_ok() {
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn serve_loop(listener: &TcpListener, registry: &TelemetryRegistry, stop: &AtomicBool) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+        // Drain the request head; the response is the same either way.
+        let mut head = Vec::new();
+        let mut buf = [0u8; 1024];
+        loop {
+            match stream.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    head.extend_from_slice(&buf[..n]);
+                    if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let body = render_prometheus(&registry.snapshot());
+        let response = format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let _ = stream.write_all(response.as_bytes());
+    }
+}
+
+/// Fetch one exposition from a running [`MetricsServer`]; returns the body.
+pub fn scrape(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| anyhow!("connect `{addr}`: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    stream
+        .write_all(format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())
+        .map_err(|e| anyhow!("scrape `{addr}`: {e}"))?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .map_err(|e| anyhow!("scrape `{addr}`: {e}"))?;
+    let Some((head, body)) = raw.split_once("\r\n\r\n") else {
+        bail!("scrape `{addr}`: malformed HTTP response");
+    };
+    let status = head.lines().next().unwrap_or_default();
+    if !status.starts_with("HTTP/1.0 200") && !status.starts_with("HTTP/1.1 200") {
+        bail!("scrape `{addr}`: {status}");
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> Arc<TelemetryRegistry> {
+        let reg = Arc::new(TelemetryRegistry::new("heeptimize", "tsd-core", 2));
+        let w0 = reg.worker(0);
+        w0.record(false, true, 120e-6, 0.01, Duration::from_millis(2));
+        w0.record(true, false, 90e-6, 0.02, Duration::from_millis(5));
+        w0.record_batch(2);
+        w0.record_queue_wait(Duration::from_micros(40));
+        w0.record_head_laxity(Duration::from_millis(80));
+        w0.record_dispatch_time(Duration::from_millis(4));
+        reg.worker(1).record(false, true, 50e-6, 0.01, Duration::from_micros(700));
+        reg.record_shed(&crate::serve::queue::Rejection::QueueFull { capacity: 8 });
+        reg
+    }
+
+    #[test]
+    fn exposition_is_well_formed() {
+        let body = render_prometheus(&sample_registry().snapshot());
+        assert!(body.contains("# TYPE medea_requests_total counter"));
+        assert!(body.contains("# TYPE medea_host_latency_seconds histogram"));
+        assert!(body.contains(
+            "medea_requests_total{platform=\"heeptimize\",workload=\"tsd-core\",worker=\"0\"} 2"
+        ));
+        assert!(body.contains("shed_reason=\"queue_full\"} 1"));
+        assert!(body.contains("medea_batch_size_bucket{"));
+        // Every non-comment line is `name{labels} value` with a float value.
+        for line in body.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert!(line.starts_with("medea_"), "bad metric line: {line}");
+            let (_, value) = line.rsplit_once(' ').expect("value separator");
+            assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+        }
+        // Histogram invariants: count series match the +Inf bucket.
+        let inf = body
+            .lines()
+            .filter(|l| l.contains("medea_host_latency_seconds_bucket") && l.contains("+Inf"))
+            .count();
+        assert_eq!(inf, 2, "one +Inf bucket per worker");
+    }
+
+    #[test]
+    fn server_answers_a_live_scrape() {
+        let reg = sample_registry();
+        let server = MetricsServer::start("127.0.0.1:0", reg.clone()).expect("bind");
+        let addr = server.addr().to_string();
+        let body = scrape(&addr).expect("scrape");
+        assert!(body.contains("medea_requests_total{"));
+        // New samples show up on the next scrape: it is live, not cached.
+        reg.worker(1).record(false, true, 10e-6, 0.001, Duration::from_micros(300));
+        let body2 = scrape(&addr).expect("second scrape");
+        assert!(body2.contains(
+            "medea_requests_total{platform=\"heeptimize\",workload=\"tsd-core\",worker=\"1\"} 2"
+        ));
+        // Dropping the server stops the accept loop; scrapes then fail.
+        drop(server);
+        assert!(scrape(&addr).is_err(), "server still answering after drop");
+    }
+
+    #[test]
+    fn scrape_rejects_nothing_listening() {
+        assert!(scrape("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn labels_escape_cleanly() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

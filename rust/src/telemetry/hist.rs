@@ -1,0 +1,318 @@
+//! Fixed-bucket log-linear histograms for hot-path telemetry.
+//!
+//! Values `0..32` get exact unit buckets; above that, every power-of-two
+//! octave splits into 16 linear sub-buckets, so the relative quantization
+//! error stays under ~6% all the way to `2^43 − 1` (about 2.4 hours when the
+//! unit is nanoseconds) with a fixed 640-slot table and no allocation on the
+//! record path.
+//!
+//! Two forms share the bucket layout: [`AtomicHist`] is the wait-free
+//! per-worker recording surface (plain `fetch_add`/`fetch_min`/`fetch_max`,
+//! never a lock), and [`HistData`] is its mergeable snapshot — also the
+//! store behind [`crate::coordinator::Metrics`] percentiles, so live scrapes
+//! and the shutdown aggregate run the same arithmetic over the same buckets.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per octave; values below `2 * SUB` are exact.
+const SUB: u64 = 16;
+
+/// Total bucket count; the last bucket absorbs everything ≥ `2^43`.
+pub const NBUCKETS: usize = 640;
+
+/// Map a value to its bucket index (monotone non-decreasing in `v`).
+pub fn bucket_index(v: u64) -> usize {
+    if v < 2 * SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - 4;
+    let sub = (v >> shift) - SUB;
+    ((u64::from(shift) + 1) * SUB + sub).min(NBUCKETS as u64 - 1) as usize
+}
+
+/// Inclusive upper bound of bucket `idx` (the value a percentile reports).
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx < (2 * SUB) as usize {
+        idx as u64
+    } else {
+        let shift = (idx as u64 / SUB - 1) as u32;
+        let sub = idx as u64 % SUB;
+        ((SUB + sub + 1) << shift) - 1
+    }
+}
+
+/// A plain (single-threaded) histogram: the snapshot/merge/query form.
+///
+/// `counts` stays empty until the first sample so unused histograms inside a
+/// [`crate::coordinator::Metrics`] value cost nothing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistData {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl HistData {
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; NBUCKETS];
+        }
+        self.counts[bucket_index(v)] += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Assemble from already-accumulated parts (atomic snapshot path).
+    /// Callers guarantee `min <= max` whenever `count > 0`.
+    pub(crate) fn from_parts(counts: Vec<u64>, count: u64, sum: u64, min: u64, max: u64) -> Self {
+        HistData { counts, count, sum, min, max }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of all recorded values (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Raw per-bucket counts (empty slice until the first sample); index
+    /// with [`bucket_upper`] for bounds.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn merge(&mut self, other: &HistData) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        for (slot, &n) in self.counts.iter_mut().zip(&other.counts) {
+            *slot += n;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Percentile (`q` in `[0, 100]`): the upper bound of the bucket holding
+    /// the rank-`ceil(q/100 · count)` sample, clamped into `[min, max]` so
+    /// p0/p100 and single-sample distributions are exact. Zero when empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min;
+        }
+        if q >= 100.0 {
+            return self.max;
+        }
+        let target = ((q / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// The wait-free recording surface: one per worker per tracked distribution.
+///
+/// Every operation is a relaxed atomic RMW on a fixed-size table — the hot
+/// path never locks, allocates, or contends beyond cacheline traffic.
+#[derive(Debug)]
+pub struct AtomicHist {
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> AtomicHist {
+        AtomicHist {
+            counts: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Copy into a queryable [`HistData`]. Concurrent records may straddle
+    /// the field reads, but every field is monotone, so the result is a
+    /// valid histogram of a prefix-plus-some of the stream (normalized so
+    /// `min ≤ max` even mid-first-record).
+    pub fn snapshot(&self) -> HistData {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return HistData::default();
+        }
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let sum = self.sum.load(Ordering::Relaxed);
+        let max = self.max.load(Ordering::Relaxed);
+        let min = self.min.load(Ordering::Relaxed).min(max);
+        HistData::from_parts(counts, count, sum, min, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_consistent() {
+        let mut prev = 0usize;
+        for v in (0..4096u64).chain((12..44).map(|p| (1u64 << p) - 1)) {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "index regressed at v={v}");
+            assert!(v <= bucket_upper(idx), "v={v} above its bucket upper");
+            prev = idx;
+        }
+        // Exact region: identity below 32.
+        for v in 0..32u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_upper(v as usize), v);
+        }
+        // Top bucket absorbs the extreme.
+        assert_eq!(bucket_index(u64::MAX), NBUCKETS - 1);
+        assert_eq!(bucket_upper(NBUCKETS - 1), (1u64 << 43) - 1);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for v in [100u64, 999, 5_000, 123_456, 9_999_999, 4_000_000_000] {
+            let upper = bucket_upper(bucket_index(v));
+            assert!(upper >= v);
+            let err = (upper - v) as f64 / v as f64;
+            assert!(err < 1.0 / 16.0, "error {err} too large at v={v}");
+        }
+    }
+
+    #[test]
+    fn percentiles_clamp_to_observed_range() {
+        let mut h = HistData::default();
+        h.record(7_000_000);
+        // Single sample: every percentile is that sample, exactly.
+        assert_eq!(h.percentile(0.0), 7_000_000);
+        assert_eq!(h.percentile(50.0), 7_000_000);
+        assert_eq!(h.percentile(99.0), 7_000_000);
+        assert_eq!(h.percentile(100.0), 7_000_000);
+        h.record(2_000_000);
+        h.record(4_000_000);
+        assert_eq!(h.percentile(0.0), 2_000_000);
+        assert_eq!(h.percentile(100.0), 7_000_000);
+        let p50 = h.percentile(50.0);
+        assert!((4_000_000..=4_300_000).contains(&p50), "p50={p50}");
+        // Monotone in q.
+        let mut last = 0;
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let p = h.percentile(q);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = HistData::default();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let mut a = HistData::default();
+        let mut b = HistData::default();
+        let mut whole = HistData::default();
+        for i in 0..1000u64 {
+            let v = 100 + i * 17;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        // Merge into empty clones the source.
+        let mut fresh = HistData::default();
+        fresh.merge(&whole);
+        assert_eq!(fresh, whole);
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain() {
+        let ah = AtomicHist::new();
+        let mut plain = HistData::default();
+        for v in [0u64, 1, 31, 32, 1_000, 65_536, 10_000_000] {
+            ah.record(v);
+            plain.record(v);
+        }
+        assert_eq!(ah.snapshot(), plain);
+        // Empty atomic snapshots normalize to the default.
+        assert_eq!(AtomicHist::new().snapshot(), HistData::default());
+    }
+}

@@ -1,0 +1,58 @@
+//! Live observability for the serving layers: lock-free metrics, Prometheus
+//! exposition, and dispatch-event tracing.
+//!
+//! MEDEA's claims — energy reduction while meeting every timing constraint —
+//! were only checkable at shutdown before this module: per-worker
+//! [`crate::coordinator::Metrics`] merged once after the pool drained. Here
+//! both pools publish continuously instead:
+//!
+//! * [`hist`] — fixed-bucket log-linear histograms: a wait-free atomic
+//!   recording form and a mergeable snapshot form sharing one bucket layout,
+//!   so live and shutdown percentiles are the same arithmetic.
+//! * [`registry`] — the per-pool [`TelemetryRegistry`]: one
+//!   [`registry::WorkerShard`] of atomic counters + histograms per worker
+//!   (queue wait, dispatch latency, head laxity, batch size, per-request
+//!   energy), admission-side shed counters, and whole-registry snapshots.
+//!   `ServeMetrics` is now *derived from* this registry — there is no
+//!   separate shutdown bookkeeping path.
+//! * [`exposition`] — Prometheus text format 0.0.4 over a minimal blocking
+//!   `std::net` responder (`serve --metrics-addr`), plus the one-shot
+//!   [`scrape`] client behind `medea scrape`.
+//! * [`trace`] — a bounded lock-free ring of typed dispatch events
+//!   (enqueue, shed, steal, batch-form, dispatch, retire) with request ids
+//!   and monotonic timestamps, dumpable as chrome://tracing JSON
+//!   (`serve --trace-out`).
+//! * [`report`] — a periodic reporter logging a one-line rates summary
+//!   through [`crate::util::log`] (`serve --report-every-s`).
+//!
+//! Everything is `std`-only and allocation-free on the hot path: counters
+//! are relaxed atomics, histograms are fixed tables, the trace ring is
+//! seqlock-published fixed slots.
+
+// Telemetry rides the serving hot path: a panicking `.unwrap()` here takes
+// a pool worker down with it. Carry errors or degrade instead (`.expect`
+// with an invariant message is allowed for real invariants).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+pub mod exposition;
+pub mod hist;
+pub mod registry;
+pub mod report;
+pub mod trace;
+
+pub use exposition::{render_prometheus, scrape, MetricsServer};
+pub use hist::HistData;
+pub use registry::{RegistrySnapshot, TelemetryRegistry, WorkerShard, WorkerSnapshot};
+pub use report::{report_line, Reporter};
+pub use trace::{TraceEvent, TraceEventKind, TraceRing};
+
+/// Pool-side telemetry knobs (embedded in `PoolConfig` / `FleetPoolConfig`).
+///
+/// The metrics registry itself has no switch: it *is* the pool's metrics
+/// path, on whether or not anyone scrapes it.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryConfig {
+    /// Capacity (in events) of the dispatch-event trace ring; 0 disables
+    /// tracing entirely (no ring is allocated, no events are recorded).
+    pub trace_events: usize,
+}

@@ -1,0 +1,450 @@
+//! The lock-free live metrics registry both pools publish into.
+//!
+//! One [`TelemetryRegistry`] per pool; one [`WorkerShard`] per worker so the
+//! hot path touches only thread-local cachelines (atomic counters plus
+//! [`AtomicHist`] buckets — never a lock). Admission-side shed counters live
+//! on the registry itself, since shed requests never reach a worker.
+//!
+//! Readers — the Prometheus endpoint, the periodic reporter, the shutdown
+//! aggregate — call [`TelemetryRegistry::snapshot`] and work on plain data.
+//! [`WorkerSnapshot::to_metrics`] rebuilds a per-worker
+//! [`crate::coordinator::Metrics`] from the same histograms, which is what
+//! makes live and shutdown percentiles identical by construction.
+
+use crate::coordinator::Metrics;
+use crate::serve::queue::Rejection;
+use crate::telemetry::hist::{AtomicHist, HistData};
+use crate::util::json::{Json, JsonObj};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Linear batch-size slots: sizes `1..=BATCH_SLOTS` (larger clamps to last).
+pub const BATCH_SLOTS: usize = 64;
+
+/// Convert a [`Duration`] to whole nanoseconds (saturating).
+pub(crate) fn dur_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Convert joules to whole nanojoules (saturating; NaN records as 0).
+fn joules_nj(j: f64) -> u64 {
+    (j.max(0.0) * 1e9).round() as u64
+}
+
+/// Convert seconds to whole nanoseconds (saturating; NaN records as 0).
+fn secs_ns(s: f64) -> u64 {
+    (s.max(0.0) * 1e9).round() as u64
+}
+
+/// Per-worker recording surface. All methods take `&self` and are wait-free.
+#[derive(Debug)]
+pub struct WorkerShard {
+    requests: AtomicU64,
+    seizures: AtomicU64,
+    deadline_misses: AtomicU64,
+    steals: AtomicU64,
+    stolen_requests: AtomicU64,
+    sim_energy_nj: AtomicU64,
+    sim_active_ns: AtomicU64,
+    batch_hist: [AtomicU64; BATCH_SLOTS],
+    /// End-to-end host latency (submit → reply ready), ns.
+    host: AtomicHist,
+    /// Queue wait (submit → dequeued by a worker), ns.
+    queue_wait: AtomicHist,
+    /// Head-of-group laxity at dispatch (remaining slack), ns.
+    laxity: AtomicHist,
+    /// Dispatch execution time (dequeue → group fully retired), ns.
+    dispatch: AtomicHist,
+    /// Per-request simulated energy, nJ.
+    energy: AtomicHist,
+}
+
+impl Default for WorkerShard {
+    fn default() -> Self {
+        WorkerShard {
+            requests: AtomicU64::new(0),
+            seizures: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            stolen_requests: AtomicU64::new(0),
+            sim_energy_nj: AtomicU64::new(0),
+            sim_active_ns: AtomicU64::new(0),
+            batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            host: AtomicHist::new(),
+            queue_wait: AtomicHist::new(),
+            laxity: AtomicHist::new(),
+            dispatch: AtomicHist::new(),
+            energy: AtomicHist::new(),
+        }
+    }
+}
+
+impl WorkerShard {
+    /// Record one served request (mirrors [`Metrics::record`]).
+    pub fn record(
+        &self,
+        seizure: bool,
+        deadline_met: bool,
+        energy_j: f64,
+        active_s: f64,
+        host: Duration,
+    ) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if seizure {
+            self.seizures.fetch_add(1, Ordering::Relaxed);
+        }
+        if !deadline_met {
+            self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let nj = joules_nj(energy_j);
+        self.sim_energy_nj.fetch_add(nj, Ordering::Relaxed);
+        self.sim_active_ns.fetch_add(secs_ns(active_s), Ordering::Relaxed);
+        self.energy.record(nj);
+        self.host.record(dur_ns(host));
+    }
+
+    /// Record one dispatch of `size` coalesced requests (1 = solo).
+    pub fn record_batch(&self, size: usize) {
+        let slot = size.clamp(1, BATCH_SLOTS) - 1;
+        self.batch_hist[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one steal event of `size` coalesced requests.
+    pub fn record_steal(&self, size: usize) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+        self.stolen_requests.fetch_add(size.max(1) as u64, Ordering::Relaxed);
+    }
+
+    /// Record how long a request sat queued before a worker picked it up.
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.queue_wait.record(dur_ns(wait));
+    }
+
+    /// Record the dispatch group head's remaining laxity.
+    pub fn record_head_laxity(&self, laxity: Duration) {
+        self.laxity.record(dur_ns(laxity));
+    }
+
+    /// Record how long one dispatch (solo or batch) took end to end.
+    pub fn record_dispatch_time(&self, took: Duration) {
+        self.dispatch.record(dur_ns(took));
+    }
+
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        let mut batch_hist: Vec<u64> =
+            self.batch_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        while batch_hist.last() == Some(&0) {
+            batch_hist.pop();
+        }
+        WorkerSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            seizures: self.seizures.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            stolen_requests: self.stolen_requests.load(Ordering::Relaxed),
+            sim_energy_nj: self.sim_energy_nj.load(Ordering::Relaxed),
+            sim_active_ns: self.sim_active_ns.load(Ordering::Relaxed),
+            batch_hist,
+            host: self.host.snapshot(),
+            queue_wait: self.queue_wait.snapshot(),
+            laxity: self.laxity.snapshot(),
+            dispatch: self.dispatch.snapshot(),
+            energy: self.energy.snapshot(),
+        }
+    }
+}
+
+/// Plain-data copy of one worker's shard.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerSnapshot {
+    pub requests: u64,
+    pub seizures: u64,
+    pub deadline_misses: u64,
+    pub steals: u64,
+    pub stolen_requests: u64,
+    pub sim_energy_nj: u64,
+    pub sim_active_ns: u64,
+    /// Trailing-zero-trimmed linear slots: `[i]` counts dispatches of `i+1`.
+    pub batch_hist: Vec<u64>,
+    pub host: HistData,
+    pub queue_wait: HistData,
+    pub laxity: HistData,
+    pub dispatch: HistData,
+    pub energy: HistData,
+}
+
+impl WorkerSnapshot {
+    pub fn merge(&mut self, other: &WorkerSnapshot) {
+        self.requests += other.requests;
+        self.seizures += other.seizures;
+        self.deadline_misses += other.deadline_misses;
+        self.steals += other.steals;
+        self.stolen_requests += other.stolen_requests;
+        self.sim_energy_nj += other.sim_energy_nj;
+        self.sim_active_ns += other.sim_active_ns;
+        if self.batch_hist.len() < other.batch_hist.len() {
+            self.batch_hist.resize(other.batch_hist.len(), 0);
+        }
+        for (slot, &n) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
+            *slot += n;
+        }
+        self.host.merge(&other.host);
+        self.queue_wait.merge(&other.queue_wait);
+        self.laxity.merge(&other.laxity);
+        self.dispatch.merge(&other.dispatch);
+        self.energy.merge(&other.energy);
+    }
+
+    /// Total dispatches (solo + batched).
+    pub fn dispatches(&self) -> u64 {
+        self.batch_hist.iter().sum()
+    }
+
+    /// Rebuild a [`Metrics`] from this snapshot — the bridge that lets
+    /// `ServeMetrics` read the live registry instead of a shutdown-only
+    /// merge path.
+    pub fn to_metrics(&self) -> Metrics {
+        Metrics {
+            requests: self.requests,
+            seizures_detected: self.seizures,
+            deadline_misses: self.deadline_misses,
+            sim_energy_j: self.sim_energy_nj as f64 / 1e9,
+            sim_active_s: self.sim_active_ns as f64 / 1e9,
+            batch_hist: self.batch_hist.clone(),
+            steals: self.steals,
+            stolen_requests: self.stolen_requests,
+            host: self.host.clone(),
+        }
+    }
+}
+
+/// One pool's registry: per-worker shards plus admission-side counters.
+#[derive(Debug)]
+pub struct TelemetryRegistry {
+    platform: String,
+    workload: String,
+    started: Instant,
+    req_seq: AtomicU64,
+    shed_below_floor: AtomicU64,
+    shed_queue_full: AtomicU64,
+    shed_unknown_entry: AtomicU64,
+    shed_shutting_down: AtomicU64,
+    workers: Vec<Arc<WorkerShard>>,
+}
+
+impl TelemetryRegistry {
+    pub fn new(
+        platform: impl Into<String>,
+        workload: impl Into<String>,
+        workers: usize,
+    ) -> TelemetryRegistry {
+        TelemetryRegistry {
+            platform: platform.into(),
+            workload: workload.into(),
+            started: Instant::now(),
+            req_seq: AtomicU64::new(0),
+            shed_below_floor: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+            shed_unknown_entry: AtomicU64::new(0),
+            shed_shutting_down: AtomicU64::new(0),
+            workers: (0..workers).map(|_| Arc::new(WorkerShard::default())).collect(),
+        }
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn workload(&self) -> &str {
+        &self.workload
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The shard worker `i` records into (shared, cheap to clone).
+    pub fn worker(&self, i: usize) -> Arc<WorkerShard> {
+        self.workers[i].clone()
+    }
+
+    /// Allocate the next request id (1-based, threaded through traces).
+    pub fn next_request_id(&self) -> u64 {
+        self.req_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Count one admission-side shed, keyed by the typed rejection. Both
+    /// floor variants fold into the `below_floor` counter, matching the
+    /// `ServeMetrics` shed taxonomy.
+    pub fn record_shed(&self, reason: &Rejection) {
+        let counter = match reason {
+            Rejection::BelowFloor { .. } | Rejection::BelowEnergyFloor { .. } => {
+                &self.shed_below_floor
+            }
+            Rejection::QueueFull { .. } => &self.shed_queue_full,
+            Rejection::UnknownEntry { .. } => &self.shed_unknown_entry,
+            Rejection::ShuttingDown => &self.shed_shutting_down,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            platform: self.platform.clone(),
+            workload: self.workload.clone(),
+            uptime: self.started.elapsed(),
+            shed_below_floor: self.shed_below_floor.load(Ordering::Relaxed),
+            shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
+            shed_unknown_entry: self.shed_unknown_entry.load(Ordering::Relaxed),
+            shed_shutting_down: self.shed_shutting_down.load(Ordering::Relaxed),
+            workers: self.workers.iter().map(|w| w.snapshot()).collect(),
+        }
+    }
+}
+
+/// Plain-data copy of a whole registry at one instant.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub platform: String,
+    pub workload: String,
+    pub uptime: Duration,
+    pub shed_below_floor: u64,
+    pub shed_queue_full: u64,
+    pub shed_unknown_entry: u64,
+    pub shed_shutting_down: u64,
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// All worker shards merged into one.
+    pub fn totals(&self) -> WorkerSnapshot {
+        let mut t = WorkerSnapshot::default();
+        for w in &self.workers {
+            t.merge(w);
+        }
+        t
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.shed_below_floor
+            + self.shed_queue_full
+            + self.shed_unknown_entry
+            + self.shed_shutting_down
+    }
+
+    /// Compact JSON summary (attached to bench artifacts).
+    pub fn to_json(&self) -> Json {
+        let t = self.totals();
+        let mut shed = JsonObj::new();
+        shed.insert("below_floor", self.shed_below_floor);
+        shed.insert("queue_full", self.shed_queue_full);
+        shed.insert("unknown_entry", self.shed_unknown_entry);
+        shed.insert("shutting_down", self.shed_shutting_down);
+        let mut o = JsonObj::new();
+        o.insert("platform", self.platform.as_str());
+        o.insert("workload", self.workload.as_str());
+        o.insert("uptime_s", self.uptime.as_secs_f64());
+        o.insert("requests", t.requests);
+        o.insert("deadline_misses", t.deadline_misses);
+        o.insert("shed", shed);
+        o.insert("steals", t.steals);
+        o.insert("stolen_requests", t.stolen_requests);
+        o.insert("dispatches", t.dispatches());
+        o.insert(
+            "batch_hist",
+            Json::Arr(t.batch_hist.iter().map(|&n| Json::from(n)).collect()),
+        );
+        o.insert("sim_energy_uj", t.sim_energy_nj as f64 / 1e3);
+        o.insert("energy_per_request_uj", t.energy.mean() / 1e3);
+        o.insert("host_p50_us", t.host.percentile(50.0) as f64 / 1e3);
+        o.insert("host_p99_us", t.host.percentile(99.0) as f64 / 1e3);
+        o.insert("queue_wait_p99_us", t.queue_wait.percentile(99.0) as f64 / 1e3);
+        o.insert("dispatch_p99_us", t.dispatch.percentile(99.0) as f64 / 1e3);
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{Energy, Time};
+
+    #[test]
+    fn shard_snapshot_round_trips_into_metrics() {
+        let shard = WorkerShard::default();
+        shard.record(true, true, 500e-6, 0.05, Duration::from_millis(2));
+        shard.record(false, false, 400e-6, 0.20, Duration::from_millis(4));
+        shard.record_batch(2);
+        shard.record_steal(2);
+        shard.record_queue_wait(Duration::from_micros(30));
+        shard.record_head_laxity(Duration::from_millis(90));
+        shard.record_dispatch_time(Duration::from_millis(3));
+        let snap = shard.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.batch_hist, vec![0, 1]);
+        assert_eq!(snap.dispatches(), 1);
+        let m = snap.to_metrics();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.seizures_detected, 1);
+        assert_eq!(m.deadline_misses, 1);
+        assert!((m.sim_energy_j - 900e-6).abs() < 1e-9);
+        assert_eq!(m.steals, 1);
+        assert_eq!(m.stolen_requests, 2);
+        assert_eq!(m.host_latency_percentile(0.0), Duration::from_millis(2));
+        assert_eq!(m.host_latency_percentile(100.0), Duration::from_millis(4));
+    }
+
+    #[test]
+    fn registry_sheds_and_totals() {
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 2);
+        assert_eq!(reg.worker_count(), 2);
+        assert_eq!(reg.next_request_id(), 1);
+        assert_eq!(reg.next_request_id(), 2);
+        reg.record_shed(&Rejection::BelowFloor {
+            requested: Time::from_ms(1.0),
+            floor: Time::from_ms(2.0),
+        });
+        reg.record_shed(&Rejection::BelowEnergyFloor {
+            requested: Energy::from_uj(1.0),
+            floor: Energy::from_uj(2.0),
+        });
+        reg.record_shed(&Rejection::QueueFull { capacity: 4 });
+        reg.record_shed(&Rejection::UnknownEntry {
+            platform: "x".into(),
+            workload: "y".into(),
+        });
+        reg.record_shed(&Rejection::ShuttingDown);
+        reg.worker(0).record(false, true, 1e-6, 0.01, Duration::from_millis(1));
+        reg.worker(1).record(false, true, 1e-6, 0.01, Duration::from_millis(3));
+        let snap = reg.snapshot();
+        assert_eq!(snap.shed_below_floor, 2);
+        assert_eq!(snap.shed_queue_full, 1);
+        assert_eq!(snap.shed_unknown_entry, 1);
+        assert_eq!(snap.shed_shutting_down, 1);
+        assert_eq!(snap.total_shed(), 5);
+        let t = snap.totals();
+        assert_eq!(t.requests, 2);
+        assert_eq!(t.host.count(), 2);
+        assert_eq!(t.host.percentile(100.0), 3_000_000);
+        let j = snap.to_json();
+        assert_eq!(j.get("requests").and_then(|v| v.as_u64()), Some(2));
+        let shed = j.get("shed").expect("shed key");
+        assert_eq!(shed.get("below_floor").and_then(|v| v.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn oversized_batches_clamp_to_last_slot() {
+        let shard = WorkerShard::default();
+        shard.record_batch(BATCH_SLOTS + 10);
+        shard.record_batch(0); // treated as solo
+        let snap = shard.snapshot();
+        assert_eq!(snap.batch_hist.len(), BATCH_SLOTS);
+        assert_eq!(snap.batch_hist[BATCH_SLOTS - 1], 1);
+        assert_eq!(snap.batch_hist[0], 1);
+    }
+}

@@ -1,0 +1,136 @@
+//! A periodic one-line telemetry reporter.
+//!
+//! Every interval, snapshot the registry, diff against the previous
+//! snapshot, and log one INFO line through [`crate::util::log`]: request
+//! rate, cumulative p50/p99 host latency, shed and steal rates, mean batch
+//! size, and mean energy per request over the interval. Enable with
+//! `MEDEA_LOG=info` (see [`crate::util::log::init_from_env`]).
+
+use crate::telemetry::registry::{RegistrySnapshot, TelemetryRegistry};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Background reporter thread; stops (and joins) on drop.
+pub struct Reporter {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Reporter {
+    /// Log one summary line every `every` (clamped to ≥ 10 ms).
+    pub fn start(registry: Arc<TelemetryRegistry>, every: Duration) -> Reporter {
+        let every = every.max(Duration::from_millis(10));
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let handle = std::thread::Builder::new()
+            .name("medea-telemetry-report".into())
+            .spawn({
+                let stop = stop.clone();
+                move || report_loop(&registry, every, &stop)
+            })
+            .ok();
+        Reporter { stop, handle }
+    }
+}
+
+impl Drop for Reporter {
+    fn drop(&mut self) {
+        let (lock, cv) = (&self.stop.0, &self.stop.1);
+        if let Ok(mut stopped) = lock.lock() {
+            *stopped = true;
+        }
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn report_loop(registry: &TelemetryRegistry, every: Duration, stop: &(Mutex<bool>, Condvar)) {
+    let (lock, cv) = (&stop.0, &stop.1);
+    let mut prev = registry.snapshot();
+    let mut prev_at = Instant::now();
+    loop {
+        {
+            let Ok(mut stopped) = lock.lock() else { return };
+            while !*stopped {
+                let Ok((guard, timeout)) = cv.wait_timeout(stopped, every) else { return };
+                stopped = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if *stopped {
+                return;
+            }
+        }
+        let snap = registry.snapshot();
+        let now = Instant::now();
+        crate::log_info!("{}", report_line(&prev, &snap, now.duration_since(prev_at)));
+        prev = snap;
+        prev_at = now;
+    }
+}
+
+/// Format one interval summary (`prev` → `now` over `dt`). Public so tests
+/// (and other frontends) can exercise the format without a thread.
+pub fn report_line(prev: &RegistrySnapshot, now: &RegistrySnapshot, dt: Duration) -> String {
+    let p = prev.totals();
+    let t = now.totals();
+    let dt_s = dt.as_secs_f64().max(1e-9);
+    let d_req = t.requests.saturating_sub(p.requests);
+    let d_shed = now.total_shed().saturating_sub(prev.total_shed());
+    let d_steal = t.steals.saturating_sub(p.steals);
+    let d_disp = t.dispatches().saturating_sub(p.dispatches());
+    let d_energy_nj = t.sim_energy_nj.saturating_sub(p.sim_energy_nj);
+    let mean_batch = if d_disp > 0 { d_req as f64 / d_disp as f64 } else { 0.0 };
+    let uj_per_req = if d_req > 0 { d_energy_nj as f64 / 1e3 / d_req as f64 } else { 0.0 };
+    format!(
+        "telemetry[{}/{}]: {:.1} req/s p50={:?} p99={:?} shed/s={:.1} steal/s={:.2} \
+         mean_batch={:.2} energy/req={:.1} uJ",
+        now.platform,
+        now.workload,
+        d_req as f64 / dt_s,
+        Duration::from_nanos(t.host.percentile(50.0)),
+        Duration::from_nanos(t.host.percentile(99.0)),
+        d_shed as f64 / dt_s,
+        d_steal as f64 / dt_s,
+        mean_batch,
+        uj_per_req,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::queue::Rejection;
+
+    #[test]
+    fn report_line_diffs_intervals() {
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 1);
+        let before = reg.snapshot();
+        let w = reg.worker(0);
+        for _ in 0..10 {
+            w.record(false, true, 100e-6, 0.01, Duration::from_millis(2));
+        }
+        w.record_batch(8);
+        w.record_batch(2);
+        reg.record_shed(&Rejection::QueueFull { capacity: 4 });
+        let after = reg.snapshot();
+        let line = report_line(&before, &after, Duration::from_secs(2));
+        assert!(line.contains("5.0 req/s"), "{line}");
+        assert!(line.contains("shed/s=0.5"), "{line}");
+        assert!(line.contains("mean_batch=5.00"), "{line}");
+        assert!(line.contains("energy/req=100.0 uJ"), "{line}");
+        assert!(line.contains("telemetry[heeptimize/tsd-core]"), "{line}");
+    }
+
+    #[test]
+    fn reporter_thread_starts_and_stops() {
+        let reg = Arc::new(TelemetryRegistry::new("heeptimize", "tsd-core", 1));
+        let reporter = Reporter::start(reg.clone(), Duration::from_millis(10));
+        reg.worker(0).record(false, true, 1e-6, 0.0, Duration::from_micros(100));
+        std::thread::sleep(Duration::from_millis(30));
+        drop(reporter); // must not hang
+    }
+}

@@ -1,0 +1,294 @@
+//! A bounded lock-free ring of typed dispatch events.
+//!
+//! Both pools thread a request id from admission through dequeue to retire;
+//! each step drops one fixed-size event into the ring — a few relaxed atomic
+//! stores, no lock, no allocation. The ring overwrites oldest-first, so a
+//! long-running pool keeps the most recent `capacity` events.
+//!
+//! Publication uses a per-slot sequence word (seqlock style): the writer
+//! zeroes it, writes the payload, then stores the new nonzero sequence with
+//! `Release`; a reader that sees the same nonzero sequence (`Acquire`)
+//! before and after its payload reads observed a consistent event, and drops
+//! the slot otherwise. Reads are best-effort by design — tracing must never
+//! stall the dispatch path.
+//!
+//! [`TraceRing::to_chrome_json`] renders the surviving events as a
+//! chrome://tracing (about://tracing, Perfetto) loadable JSON document with
+//! one track per worker.
+
+use crate::util::json::{Json, JsonObj};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// What happened to a request at one point of the dispatch path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceEventKind {
+    /// Admitted into a shard's EDF queue (`arg` = deadline, µs).
+    Enqueue = 0,
+    /// Shed at admission or dispatch (`arg` = rejection code).
+    Shed = 1,
+    /// Group lifted from a sibling shard by an idle worker (`arg` = size).
+    Steal = 2,
+    /// Multiple queued requests coalesced into one dispatch (`arg` = size).
+    BatchForm = 3,
+    /// Group handed to the execution path (`arg` = size).
+    Dispatch = 4,
+    /// Request finished and its reply was readied (`arg` = deadline met).
+    Retire = 5,
+}
+
+impl TraceEventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceEventKind::Enqueue => "enqueue",
+            TraceEventKind::Shed => "shed",
+            TraceEventKind::Steal => "steal",
+            TraceEventKind::BatchForm => "batch_form",
+            TraceEventKind::Dispatch => "dispatch",
+            TraceEventKind::Retire => "retire",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<TraceEventKind> {
+        match v {
+            0 => Some(TraceEventKind::Enqueue),
+            1 => Some(TraceEventKind::Shed),
+            2 => Some(TraceEventKind::Steal),
+            3 => Some(TraceEventKind::BatchForm),
+            4 => Some(TraceEventKind::Dispatch),
+            5 => Some(TraceEventKind::Retire),
+            _ => None,
+        }
+    }
+}
+
+/// Rejection code carried in a [`TraceEventKind::Shed`] event's `arg`
+/// (mirrors [`crate::serve::queue::Rejection::code`]).
+pub fn shed_reason_name(code: u64) -> &'static str {
+    match code {
+        0 => "below_floor",
+        1 => "below_energy_floor",
+        2 => "unknown_entry",
+        3 => "queue_full",
+        4 => "shutting_down",
+        _ => "unknown",
+    }
+}
+
+/// One decoded trace event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Global record ordinal (0-based; ties broken by this in the dump).
+    pub seq: u64,
+    pub kind: TraceEventKind,
+    /// Worker (shard) index; 0 for admission-side events.
+    pub worker: u32,
+    /// Nanoseconds since the ring was created (monotonic clock).
+    pub ts_ns: u64,
+    /// Request id from [`crate::telemetry::TelemetryRegistry`]; for group
+    /// events, the id of the group head.
+    pub req: u64,
+    /// Kind-specific payload (see [`TraceEventKind`] docs).
+    pub arg: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    ts_ns: AtomicU64,
+    meta: AtomicU64,
+    req: AtomicU64,
+    arg: AtomicU64,
+}
+
+/// The bounded ring. `record` is wait-free; `events` is a best-effort scan.
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    cursor: AtomicU64,
+    epoch: Instant,
+}
+
+impl TraceRing {
+    /// `capacity` is clamped to at least 16 events.
+    pub fn new(capacity: usize) -> TraceRing {
+        let capacity = capacity.max(16);
+        TraceRing {
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+            cursor: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (recorded − capacity ≈ overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    pub fn record(&self, kind: TraceEventKind, worker: u32, req: u64, arg: u64) {
+        let n = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        let ts = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        // Invalidate, write payload, publish: see the module docs.
+        slot.seq.store(0, Ordering::Release);
+        slot.ts_ns.store(ts, Ordering::Relaxed);
+        slot.meta.store(kind as u64 | (u64::from(worker) << 8), Ordering::Relaxed);
+        slot.req.store(req, Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+        slot.seq.store(n + 1, Ordering::Release);
+    }
+
+    /// Decode every currently-consistent slot, sorted by timestamp.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 {
+                continue;
+            }
+            let ts_ns = slot.ts_ns.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let req = slot.req.load(Ordering::Relaxed);
+            let arg = slot.arg.load(Ordering::Relaxed);
+            let s2 = slot.seq.load(Ordering::Acquire);
+            if s1 != s2 {
+                continue; // torn by a concurrent wrap-around write
+            }
+            let Some(kind) = TraceEventKind::from_u64(meta & 0xff) else {
+                continue;
+            };
+            out.push(TraceEvent {
+                seq: s1 - 1,
+                kind,
+                worker: (meta >> 8) as u32,
+                ts_ns,
+                req,
+                arg,
+            });
+        }
+        out.sort_by_key(|e| (e.ts_ns, e.seq));
+        out
+    }
+
+    /// Render as a chrome://tracing JSON document (instant events, one
+    /// `tid` track per worker, timestamps in µs).
+    pub fn to_chrome_json(&self) -> String {
+        let events: Vec<Json> = self
+            .events()
+            .into_iter()
+            .map(|e| {
+                let mut args = JsonObj::new();
+                args.insert("req", e.req);
+                match e.kind {
+                    TraceEventKind::Enqueue => args.insert("deadline_us", e.arg),
+                    TraceEventKind::Shed => args.insert("reason", shed_reason_name(e.arg)),
+                    TraceEventKind::Retire => args.insert("met", e.arg == 1),
+                    TraceEventKind::Steal
+                    | TraceEventKind::BatchForm
+                    | TraceEventKind::Dispatch => args.insert("size", e.arg),
+                }
+                let mut o = JsonObj::new();
+                o.insert("name", e.kind.name());
+                o.insert("cat", "medea");
+                o.insert("ph", "i");
+                o.insert("s", "t");
+                o.insert("pid", 1u64);
+                o.insert("tid", u64::from(e.worker));
+                o.insert("ts", e.ts_ns as f64 / 1e3);
+                o.insert("args", args);
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = JsonObj::new();
+        root.insert("traceEvents", Json::Arr(events));
+        root.insert("displayTimeUnit", "ms");
+        Json::Obj(root).to_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_decode_in_order() {
+        let ring = TraceRing::new(64);
+        ring.record(TraceEventKind::Enqueue, 0, 1, 100_000);
+        ring.record(TraceEventKind::Dispatch, 1, 1, 1);
+        ring.record(TraceEventKind::Retire, 1, 1, 1);
+        let events = ring.events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].kind, TraceEventKind::Enqueue);
+        assert_eq!(events[2].kind, TraceEventKind::Retire);
+        assert_eq!(events[1].worker, 1);
+        assert!(events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+        assert_eq!(ring.recorded(), 3);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let ring = TraceRing::new(16);
+        for i in 0..40u64 {
+            ring.record(TraceEventKind::Retire, 0, i, 1);
+        }
+        let events = ring.events();
+        assert_eq!(events.len(), 16);
+        // Only the newest capacity-many survive.
+        assert!(events.iter().all(|e| e.req >= 24));
+        assert_eq!(ring.recorded(), 40);
+    }
+
+    #[test]
+    fn chrome_dump_parses_as_json() {
+        let ring = TraceRing::new(32);
+        ring.record(TraceEventKind::Enqueue, 0, 7, 250_000);
+        ring.record(TraceEventKind::Shed, 0, 8, 3);
+        ring.record(TraceEventKind::BatchForm, 2, 7, 4);
+        let doc = ring.to_chrome_json();
+        let v = crate::util::json::parse(&doc).expect("dump parses");
+        let evs = v.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        assert_eq!(evs.len(), 3);
+        for e in evs {
+            assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("i"));
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        }
+        // The shed event carries its decoded reason.
+        let shed = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("shed"))
+            .expect("shed event");
+        let reason = shed.get("args").and_then(|a| a.get("reason")).and_then(|r| r.as_str());
+        assert_eq!(reason, Some("queue_full"));
+    }
+
+    #[test]
+    fn concurrent_writers_never_corrupt_readers() {
+        use std::sync::Arc;
+        let ring = Arc::new(TraceRing::new(128));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let ring = ring.clone();
+                std::thread::spawn(move || {
+                    for i in 0..2_000u64 {
+                        ring.record(TraceEventKind::Dispatch, w, i, 1);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            for e in ring.events() {
+                assert_eq!(e.kind, TraceEventKind::Dispatch);
+                assert!(e.worker < 4 && e.arg == 1);
+            }
+        }
+        for t in writers {
+            t.join().expect("writer thread");
+        }
+        assert_eq!(ring.recorded(), 8_000);
+        assert_eq!(ring.events().len(), 128);
+    }
+}

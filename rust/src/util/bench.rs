@@ -8,6 +8,7 @@
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Running;
 
 /// One benchmark measurement.
@@ -130,6 +131,23 @@ impl Bencher {
     }
 }
 
+/// Write a machine-readable bench report to `path`, attaching an optional
+/// telemetry registry snapshot (see `telemetry::RegistrySnapshot::to_json`)
+/// under a top-level `"telemetry"` key so bench artifacts carry the same
+/// counters and histograms a live scrape would.
+pub fn write_bench_json(
+    path: &str,
+    mut result: Json,
+    telemetry: Option<Json>,
+) -> std::io::Result<()> {
+    if let (Json::Obj(obj), Some(snapshot)) = (&mut result, telemetry) {
+        obj.insert("telemetry", snapshot);
+    }
+    std::fs::write(path, result.to_pretty())?;
+    println!("\nwrote {path}");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +167,31 @@ mod tests {
         });
         assert!(m.iters >= 1);
         assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_json_attaches_telemetry_key() {
+        let dir = std::env::temp_dir().join("medea_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let path = path.to_str().unwrap();
+
+        let result = crate::json_obj! { "reqs_per_sec" => 123.0 };
+        let snap = crate::json_obj! { "requests" => 7u64 };
+        write_bench_json(path, result, Some(snap)).unwrap();
+
+        let parsed = crate::util::json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(parsed.get("reqs_per_sec").unwrap().as_f64(), Some(123.0));
+        assert_eq!(
+            parsed.get("telemetry").unwrap().get("requests").unwrap().as_u64(),
+            Some(7)
+        );
+
+        // Without a snapshot the payload passes through untouched.
+        write_bench_json(path, crate::json_obj! { "a" => 1u64 }, None).unwrap();
+        let parsed = crate::util::json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert!(parsed.get("telemetry").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -49,6 +49,7 @@ pub fn init_from_env() {
     let level = match std::env::var("MEDEA_LOG").as_deref() {
         Ok("off") => Level::Off,
         Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
         Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
@@ -57,10 +58,44 @@ pub fn init_from_env() {
     set_max_level(level);
 }
 
+/// Render milliseconds since the Unix epoch as `YYYY-MM-DDTHH:MM:SS.mmmZ`.
+///
+/// Uses the days-to-civil-date algorithm (era/400-year cycles) so no calendar
+/// dependency is needed; valid for any date the serving layer will ever emit.
+pub fn format_utc_ms(unix_ms: u64) -> String {
+    let secs = unix_ms / 1000;
+    let millis = unix_ms % 1000;
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (hh, mm, ss) = (rem / 3600, (rem / 60) % 60, rem % 60);
+
+    // Howard Hinnant's civil_from_days: shift the epoch to 0000-03-01 so each
+    // 400-year era is a fixed 146097 days and leap handling becomes division.
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097); // day-of-era [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // March-based month [0, 11]
+    let day = doy - (153 * mp + 2) / 5 + 1; // [1, 31]
+    let month = if mp < 10 { mp + 3 } else { mp - 9 };
+    let year = yoe + era * 400 + i64::from(month <= 2);
+
+    format!("{year:04}-{month:02}-{day:02}T{hh:02}:{mm:02}:{ss:02}.{millis:03}Z")
+}
+
+fn now_utc() -> String {
+    let unix_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    format_utc_ms(unix_ms)
+}
+
 /// Emit one record (used by the macros; prefer those at call sites).
 pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
-        eprintln!("[{}] {}", level.name(), args);
+        eprintln!("[{} {}] {}", now_utc(), level.name(), args);
     }
 }
 
@@ -110,5 +145,25 @@ mod tests {
     fn names_render() {
         assert_eq!(Level::Warn.name(), "WARN");
         assert_eq!(Level::Trace.name(), "TRACE");
+    }
+
+    #[test]
+    fn utc_formatting_matches_known_instants() {
+        // Pinned against `datetime.datetime.fromtimestamp(ms/1000, tz=utc)`.
+        assert_eq!(format_utc_ms(0), "1970-01-01T00:00:00.000Z");
+        // Leap day in a century year that *is* a leap year (divisible by 400).
+        assert_eq!(format_utc_ms(951_867_296_789), "2000-02-29T23:34:56.789Z");
+        assert_eq!(format_utc_ms(1_754_653_000_123), "2025-08-08T11:36:40.123Z");
+        // Century year that is *not* a leap year: 2100-01-01 boundary.
+        assert_eq!(format_utc_ms(4_102_444_800_000), "2100-01-01T00:00:00.000Z");
+    }
+
+    #[test]
+    fn now_utc_is_well_formed() {
+        let ts = now_utc();
+        assert_eq!(ts.len(), 24, "unexpected timestamp {ts}");
+        assert!(ts.ends_with('Z'));
+        assert_eq!(&ts[4..5], "-");
+        assert_eq!(&ts[10..11], "T");
     }
 }

@@ -1,0 +1,215 @@
+//! Telemetry integration tests.
+//!
+//! Three properties pinned here:
+//!
+//! * **Liveness** — the Prometheus endpoint answers while a burst is still
+//!   draining (no quiesce, no lock on the serving path), and once every
+//!   ticket has its reply a scrape accounts for the whole burst.
+//! * **Fidelity** — `live_metrics()` mid-flight and the `shutdown()` report
+//!   read the same registry: after the burst drains they are byte-identical,
+//!   percentiles included (no more "live approximation vs exact shutdown").
+//! * **Traceability** — the dispatch-event ring renders a chrome://tracing
+//!   document that parses with the crate's own JSON codec and retires every
+//!   admitted request exactly once; the fleet pool publishes under its own
+//!   `platform="fleet"` labels with typed shed reasons.
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::fleet::{
+    Demand, EnergyAtlasConfig, FleetConfig, FleetEntry, FleetPool, FleetPoolConfig, FleetRegistry,
+};
+use medea::serve::{AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServePool};
+use medea::telemetry::{render_prometheus, scrape, MetricsServer, TelemetryConfig};
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+/// One coarse atlas per test binary (correctness is knot-density-free).
+fn shared_atlas() -> &'static ScheduleAtlas {
+    static ATLAS: OnceLock<ScheduleAtlas> = OnceLock::new();
+    ATLAS.get_or_init(|| {
+        let ctx = ExpContext::paper();
+        ScheduleAtlas::build(
+            &ctx.medea(),
+            &ctx.workload,
+            &AtlasConfig {
+                relax_factor: 8.0,
+                growth: 1.5,
+                refine_rel_energy: 0.05,
+                max_knots: 32,
+                ..AtlasConfig::default()
+            },
+        )
+        .unwrap()
+    })
+}
+
+fn observed_pool(workers: usize) -> ServePool {
+    ServePool::start_with_atlas(
+        PoolConfig {
+            workers,
+            queue_capacity: 256,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            telemetry: TelemetryConfig { trace_events: 4096 },
+            ..PoolConfig::default()
+        },
+        shared_atlas().clone(),
+    )
+    .unwrap()
+}
+
+/// Sum one counter family's samples across its per-worker series.
+fn family_sum(body: &str, family: &str) -> f64 {
+    let prefix = format!("{family}{{");
+    body.lines()
+        .filter(|l| l.starts_with(&prefix))
+        .map(|l| l.rsplit(' ').next().unwrap().parse::<f64>().unwrap())
+        .sum()
+}
+
+#[test]
+fn live_scrape_answers_under_load_and_matches_shutdown() {
+    const N: usize = 64;
+    let pool = observed_pool(2);
+    let server = MetricsServer::start("127.0.0.1:0", Arc::clone(pool.telemetry())).unwrap();
+    let addr = server.addr().to_string();
+
+    let floor = shared_atlas().floor();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 9);
+    let tickets: Vec<_> = (0..N)
+        .map(|i| {
+            // Feasible by construction (≥ floor), spread so some dispatches
+            // batch and others stay solo.
+            let d = floor * (1.05 + (i % 5) as f64);
+            pool.submit(gen.next_window(), d).unwrap()
+        })
+        .collect();
+
+    // Scrape immediately, while the burst is still draining: the endpoint
+    // must answer without waiting for the pool to go idle.
+    let mid = scrape(&addr).unwrap();
+    assert!(
+        mid.contains("# TYPE medea_requests_total counter"),
+        "mid-flight scrape is not a well-formed exposition:\n{mid}"
+    );
+    assert!(mid.contains("platform=\"heeptimize\""));
+
+    for t in tickets {
+        t.wait().unwrap();
+    }
+
+    // Every reply delivered ⇒ every per-request counter is recorded; a
+    // second scrape must account for the whole burst.
+    let done = scrape(&addr).unwrap();
+    assert_eq!(family_sum(&done, "medea_requests_total"), N as f64);
+    assert!(done.contains("workload=\"tsd-core\""));
+    assert!(done.contains("medea_host_latency_seconds_bucket"));
+    drop(server);
+
+    let live = pool.live_metrics();
+    let ring = Arc::clone(pool.trace().expect("trace ring was enabled"));
+    let shut = pool.shutdown();
+    assert_eq!(live.aggregate.requests, N as u64);
+    assert_eq!(
+        live.to_json().to_compact(),
+        shut.to_json().to_compact(),
+        "live metrics must equal the shutdown report once the burst drained"
+    );
+
+    // The trace dump parses with the crate's own codec and retires every
+    // admitted request exactly once.
+    let doc = medea::util::json::parse(&ring.to_chrome_json()).unwrap();
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    let count = |name: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+            .count()
+    };
+    assert_eq!(count("enqueue"), N);
+    assert_eq!(count("retire"), N);
+    assert!(count("dispatch") >= 1, "no dispatch events recorded");
+}
+
+/// Coarse sweeps keep the entry build affordable; label correctness does
+/// not depend on knot density.
+fn fleet_fast_cfg() -> FleetConfig {
+    FleetConfig {
+        atlas: AtlasConfig {
+            relax_factor: 6.0,
+            growth: 1.7,
+            refine_rel_energy: 0.0,
+            max_knots: 12,
+            ..AtlasConfig::default()
+        },
+        energy: EnergyAtlasConfig {
+            growth: 1.7,
+            max_knots: 6,
+            bisect_iters: 10,
+            ..EnergyAtlasConfig::default()
+        },
+    }
+}
+
+#[test]
+fn fleet_pool_publishes_fleet_labelled_telemetry() {
+    let registry = FleetRegistry::new();
+    registry.publish(FleetEntry::build("heeptimize", "tsd-small", &fleet_fast_cfg()).unwrap());
+    let registry = Arc::new(registry);
+    let floor = registry
+        .resolve_named("heeptimize", "tsd-small")
+        .unwrap()
+        .entry
+        .atlas
+        .floor();
+
+    let pool = FleetPool::start(
+        registry,
+        FleetPoolConfig {
+            workers: 1,
+            queue_capacity: 16,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            telemetry: TelemetryConfig { trace_events: 256 },
+            ..FleetPoolConfig::default()
+        },
+    )
+    .unwrap();
+
+    let mut gen = EegGenerator::new(SynthConfig::default(), 3);
+    let tickets: Vec<_> = (0..3)
+        .map(|_| {
+            pool.submit(
+                "heeptimize",
+                "tsd-small",
+                gen.next_window(),
+                Demand::Deadline(floor * 4.0),
+            )
+            .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().sim.deadline_met);
+    }
+
+    // An unrouteable tag sheds with a typed rejection and must surface in
+    // the exposition under its own reason label.
+    let err = pool
+        .submit(
+            "no-such-soc",
+            "tsd-small",
+            gen.next_window(),
+            Demand::Deadline(floor),
+        )
+        .unwrap_err();
+    assert!(matches!(err, Rejection::UnknownEntry { .. }), "got {err:?}");
+
+    let body = render_prometheus(&pool.telemetry().snapshot());
+    assert!(body.contains("platform=\"fleet\""), "fleet label missing:\n{body}");
+    assert!(body.contains("workload=\"multi\""));
+    assert!(body.contains("shed_reason=\"unknown_entry\""));
+
+    let live = pool.live_metrics();
+    let shut = pool.shutdown();
+    assert_eq!(live.to_json().to_compact(), shut.to_json().to_compact());
+    assert_eq!(shut.aggregate.requests, 3);
+    assert_eq!(shut.shed_unknown_entry, 1);
+}

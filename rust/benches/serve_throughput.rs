@@ -21,7 +21,10 @@ use medea::json_obj;
 use medea::serve::{
     AtlasConfig, PoolConfig, Rejection, ScheduleAtlas, ServeMetrics, ServePool, Ticket,
 };
-use medea::telemetry::{scrape, MetricsServer, TelemetryConfig};
+use medea::telemetry::{
+    scrape, FlightConfig, FlightRecorder, MetricsServer, SloEngine, SloSpec, SloTicker,
+    TelemetryConfig,
+};
 use medea::util::bench::{write_bench_json, Bencher};
 use medea::util::json::Json;
 use medea::util::units::Time;
@@ -43,7 +46,8 @@ struct PoolRun {
 }
 
 /// `observed = true` runs the worst-case "someone is watching" configuration:
-/// a 65536-event trace ring plus a live exposition endpoint with a scraper
+/// a 65536-event trace ring, the SLO evaluator on a 250 ms tick with an
+/// armed flight recorder, and a live exposition endpoint with a scraper
 /// thread polling it every 25 ms for the whole burst.
 fn run_pool_load(atlas: &ScheduleAtlas, requests: usize, observed: bool) -> PoolRun {
     let floor = atlas.floor().as_ms();
@@ -61,8 +65,28 @@ fn run_pool_load(atlas: &ScheduleAtlas, requests: usize, observed: bool) -> Pool
     )
     .unwrap();
 
-    let (server, scraper, stop) = if observed {
-        let server = MetricsServer::start("127.0.0.1:0", pool.telemetry().clone()).unwrap();
+    let (server, _ticker, scraper, stop) = if observed {
+        let postmortem_dir = std::env::temp_dir()
+            .join(format!("medea-bench-postmortems-{}", std::process::id()));
+        let flight = FlightRecorder::new(FlightConfig {
+            dir: postmortem_dir,
+            ..FlightConfig::default()
+        })
+        .unwrap();
+        let engine = SloEngine::new(
+            SloSpec::default(),
+            Arc::clone(pool.telemetry()),
+            pool.trace().map(Arc::clone),
+            Some(Arc::new(flight)),
+        );
+        let ticker = SloTicker::start(engine.clone(), Duration::from_millis(250));
+        let server = MetricsServer::start_with(
+            "127.0.0.1:0",
+            pool.telemetry().clone(),
+            Some(engine),
+            Some(pool.readiness_probe()),
+        )
+        .unwrap();
         let addr = server.addr().to_string();
         let stop = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&stop);
@@ -72,9 +96,9 @@ fn run_pool_load(atlas: &ScheduleAtlas, requests: usize, observed: bool) -> Pool
                 std::thread::sleep(Duration::from_millis(25));
             }
         });
-        (Some(server), Some(scraper), Some(stop))
+        (Some(server), Some(ticker), Some(scraper), Some(stop))
     } else {
-        (None, None, None)
+        (None, None, None, None)
     };
 
     let mut gen = EegGenerator::new(SynthConfig::default(), 42);
@@ -202,7 +226,7 @@ fn main() {
     );
     let overhead_ratio = observed.rps / base.rps.max(1e-9);
     println!(
-        "telemetry overhead: base {:.0} req/s, observed (trace + live scrapes) {:.0} req/s \
+        "telemetry overhead: base {:.0} req/s, observed (trace + SLO + live scrapes) {:.0} req/s \
          ({:.1}% delta)",
         base.rps,
         observed.rps,
@@ -210,7 +234,7 @@ fn main() {
     );
     assert!(
         overhead_ratio >= 0.97,
-        "observed telemetry (trace ring + scraping) must cost <= 3% rps, \
+        "observed telemetry (trace ring + SLO evaluator + scraping) must cost <= 3% rps, \
          got base {:.0} vs observed {:.0} req/s",
         base.rps,
         observed.rps

@@ -34,7 +34,8 @@ use crate::serve::batch::{
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::pool::{
-    deadline_us, head_laxity, pick_shard, pop_group, ServeError, Shard, StealConfig,
+    deadline_us, head_laxity, pick_shard, pop_group, readiness_probe_over, ServeError, Shard,
+    StealConfig,
 };
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
@@ -400,6 +401,13 @@ impl FleetPool {
     /// The dispatch-event trace ring, when `telemetry.trace_events > 0`.
     pub fn trace(&self) -> Option<&Arc<TraceRing>> {
         self.trace.as_ref()
+    }
+
+    /// A `/readyz` probe over this pool's shards: ready while no shard is
+    /// stopping and total queued admissions sit below the 90 % saturation
+    /// watermark (see `ServePool::readiness_probe`).
+    pub fn readiness_probe(&self) -> crate::telemetry::ReadinessProbe {
+        readiness_probe_over(&self.shards)
     }
 
     /// A [`ServeMetrics`] view of the pool *right now*, without shutting

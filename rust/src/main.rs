@@ -91,12 +91,32 @@ fn app() -> App {
                 .opt("metrics-addr", "Expose live Prometheus metrics on this host:port (e.g. 127.0.0.1:9464); scrape with `medea scrape` or curl")
                 .opt("metrics-out", "Write the final Prometheus exposition to this file before shutdown")
                 .opt("trace-out", "Write a chrome://tracing JSON dump of dispatch events to this file before shutdown")
-                .opt_default("trace-events", "Dispatch-event trace ring capacity (allocated only when --trace-out is set)", "65536")
-                .opt_default("report-every-s", "Log a one-line telemetry rates summary every N seconds (0 = off)", "0"),
+                .opt_default("trace-events", "Dispatch-event trace ring capacity (allocated when --trace-out or --postmortem-dir is set)", "65536")
+                .opt_default("report-every-s", "Log a one-line telemetry rates summary every N seconds (0 = off)", "0")
+                .flag("slo", "Enable the SLO burn-rate engine with default objectives (any --slo-* target or --postmortem-dir also enables it)")
+                .opt("slo-deadline-hit", "Deadline hit-rate target in [0,1] (default 0.999)")
+                .opt("slo-shed-ceiling", "Shed-rate ceiling in [0,1] (default 0.05)")
+                .opt("slo-dispatch-p99-ms", "p99 dispatch-latency bound in ms (default 250)")
+                .opt("slo-energy-uj", "Mean energy-per-request budget in uJ (default: unbounded)")
+                .opt("slo-fast-s", "Fast burn-rate window in seconds (default 5)")
+                .opt("slo-slow-s", "Slow burn-rate window in seconds (default 60)")
+                .opt("slo-warn-burn", "Burn rate at which an objective degrades to Warn (default 1)")
+                .opt("slo-critical-burn", "Fast-window burn rate at which an objective degrades to Critical (default 2)")
+                .opt_default("slo-every-s", "SLO evaluation period in seconds", "1")
+                .opt("postmortem-dir", "Arm the flight recorder: write rate-limited post-mortem bundles here on Critical transitions and burn-rate spikes")
+                .opt_default("postmortem-keep", "Oldest bundles beyond this count are pruned", "8")
+                .opt_default("postmortem-min-interval-s", "Minimum seconds between bundles (a storm produces a handful, not thousands)", "30"),
         )
         .command(
             CmdSpec::new("scrape", "Fetch one Prometheus exposition from a running `serve --metrics-addr` endpoint")
-                .opt_default("addr", "host:port of the metrics endpoint", "127.0.0.1:9464"),
+                .opt_default("addr", "host:port of the metrics endpoint", "127.0.0.1:9464")
+                .opt_default("timeout-ms", "Connect + read deadline per attempt, in ms", "5000")
+                .opt_default("retries", "Retry this many times on failure (exponential backoff from 50 ms)", "0"),
+        )
+        .command(
+            CmdSpec::new("health", "Probe /healthz, /readyz, and /slo on a running `serve --metrics-addr` endpoint")
+                .positional("addr", "host:port of the metrics endpoint")
+                .opt_default("timeout-ms", "Connect + read deadline per request, in ms", "2000"),
         )
         .command(
             CmdSpec::new("atlas", "Precompute the schedule atlas and write it to disk")
@@ -202,6 +222,7 @@ fn dispatch(name: &str, args: &Args) -> Result<(), String> {
         "all" => cmd_all(args),
         "serve" => cmd_serve(args),
         "scrape" => cmd_scrape(args),
+        "health" => cmd_health(args),
         "atlas" => cmd_atlas(args),
         "fleet" => cmd_fleet(args),
         other => Err(format!("unhandled command {other}")),
@@ -425,35 +446,47 @@ impl TelemetryCli {
         })
     }
 
-    /// Pool-side config: the trace ring is only allocated when a dump was
-    /// actually requested.
-    fn pool_config(&self) -> medea::telemetry::TelemetryConfig {
+    /// Pool-side config: the trace ring is only allocated when something
+    /// consumes it — a `--trace-out` dump or the flight recorder's bundles.
+    fn pool_config(&self, slo: &SloCli) -> medea::telemetry::TelemetryConfig {
+        let traced = self.trace_out.is_some() || slo.flight.is_some();
         medea::telemetry::TelemetryConfig {
-            trace_events: if self.trace_out.is_some() { self.trace_events } else { 0 },
+            trace_events: if traced { self.trace_events } else { 0 },
         }
     }
 
-    /// Start the Prometheus responder and the periodic reporter, when asked
-    /// for. The returned guards keep both alive until dropped.
+    /// Start the HTTP responder (metrics + health surface) and the periodic
+    /// reporter, when asked for. The returned guards keep both alive until
+    /// dropped.
     fn attach(
         &self,
         registry: &std::sync::Arc<medea::telemetry::TelemetryRegistry>,
+        slo: Option<std::sync::Arc<medea::telemetry::SloEngine>>,
+        ready: medea::telemetry::ReadinessProbe,
     ) -> Result<
         (Option<medea::telemetry::MetricsServer>, Option<medea::telemetry::Reporter>),
         String,
     > {
         let server = match &self.metrics_addr {
             Some(addr) => {
-                let server = medea::telemetry::MetricsServer::start(addr, registry.clone())
-                    .map_err(|e| e.to_string())?;
-                println!("metrics: serving http://{}/metrics", server.addr());
+                let server = medea::telemetry::MetricsServer::start_with(
+                    addr,
+                    registry.clone(),
+                    slo.clone(),
+                    Some(ready),
+                )
+                .map_err(|e| e.to_string())?;
+                println!(
+                    "metrics: serving http://{}/metrics (also /healthz, /readyz, /slo)",
+                    server.addr()
+                );
                 Some(server)
             }
             None => None,
         };
         let reporter = self
             .report_every
-            .map(|every| medea::telemetry::Reporter::start(registry.clone(), every));
+            .map(|every| medea::telemetry::Reporter::start_with_slo(registry.clone(), every, slo));
         Ok((server, reporter))
     }
 
@@ -486,11 +519,176 @@ impl TelemetryCli {
     }
 }
 
+/// SLO + flight-recorder options for `serve` (`--slo-*`, `--postmortem-*`).
+struct SloCli {
+    /// Set when `--slo`, any `--slo-*` target, or `--postmortem-dir` was
+    /// given; otherwise the engine is not built at all.
+    enabled: bool,
+    spec: medea::telemetry::SloSpec,
+    every: std::time::Duration,
+    flight: Option<medea::telemetry::FlightConfig>,
+}
+
+/// Overlay an optional f64 CLI value onto a spec slot, recording that an
+/// SLO option was given.
+fn slo_opt(args: &Args, name: &str, slot: &mut f64, given: &mut bool) -> Result<(), String> {
+    if let Some(v) = args.get_parse::<f64>(name).map_err(|e| e.to_string())? {
+        *slot = v;
+        *given = true;
+    }
+    Ok(())
+}
+
+impl SloCli {
+    fn parse(args: &Args) -> Result<SloCli, String> {
+        let mut spec = medea::telemetry::SloSpec::default();
+        let mut given = args.flag("slo");
+        slo_opt(args, "slo-deadline-hit", &mut spec.deadline_hit_target, &mut given)?;
+        slo_opt(args, "slo-shed-ceiling", &mut spec.shed_ceiling, &mut given)?;
+        slo_opt(args, "slo-energy-uj", &mut spec.energy_per_request_uj, &mut given)?;
+        slo_opt(args, "slo-warn-burn", &mut spec.warn_burn, &mut given)?;
+        slo_opt(args, "slo-critical-burn", &mut spec.critical_burn, &mut given)?;
+        let mut p99_ms = spec.dispatch_p99_bound.as_secs_f64() * 1e3;
+        let mut fast_s = spec.fast_window.as_secs_f64();
+        let mut slow_s = spec.slow_window.as_secs_f64();
+        slo_opt(args, "slo-dispatch-p99-ms", &mut p99_ms, &mut given)?;
+        slo_opt(args, "slo-fast-s", &mut fast_s, &mut given)?;
+        slo_opt(args, "slo-slow-s", &mut slow_s, &mut given)?;
+        if !(p99_ms > 0.0 && fast_s > 0.0 && slow_s >= fast_s) {
+            return Err(
+                "--slo-dispatch-p99-ms and --slo-fast-s must be > 0, --slo-slow-s >= --slo-fast-s"
+                    .into(),
+            );
+        }
+        spec.dispatch_p99_bound = std::time::Duration::from_secs_f64(p99_ms / 1e3);
+        spec.fast_window = std::time::Duration::from_secs_f64(fast_s);
+        spec.slow_window = std::time::Duration::from_secs_f64(slow_s);
+
+        let every_s: f64 = args.req_parse("slo-every-s").map_err(|e| e.to_string())?;
+        if every_s.is_nan() || every_s <= 0.0 {
+            return Err("--slo-every-s must be > 0".into());
+        }
+        let flight = match args.get("postmortem-dir") {
+            Some(dir) => {
+                given = true;
+                let keep: usize = args.req_parse("postmortem-keep").map_err(|e| e.to_string())?;
+                let min_s: f64 =
+                    args.req_parse("postmortem-min-interval-s").map_err(|e| e.to_string())?;
+                Some(medea::telemetry::FlightConfig {
+                    dir: PathBuf::from(dir),
+                    max_bundles: keep.max(1),
+                    min_interval: std::time::Duration::from_secs_f64(min_s.max(0.0)),
+                    ..medea::telemetry::FlightConfig::default()
+                })
+            }
+            None => None,
+        };
+        Ok(SloCli {
+            enabled: given,
+            spec,
+            every: std::time::Duration::from_secs_f64(every_s),
+            flight,
+        })
+    }
+
+    /// Build the engine (and its flight recorder) when any SLO option was
+    /// given; `None` keeps the serve path SLO-free.
+    fn engine(
+        &self,
+        registry: &std::sync::Arc<medea::telemetry::TelemetryRegistry>,
+        trace: Option<&std::sync::Arc<medea::telemetry::TraceRing>>,
+    ) -> Result<Option<std::sync::Arc<medea::telemetry::SloEngine>>, String> {
+        if !self.enabled {
+            return Ok(None);
+        }
+        let flight = match &self.flight {
+            Some(cfg) => {
+                let rec =
+                    medea::telemetry::FlightRecorder::new(cfg.clone()).map_err(|e| e.to_string())?;
+                println!(
+                    "postmortems: armed at {} (keep {}, min interval {:?})",
+                    cfg.dir.display(),
+                    cfg.max_bundles,
+                    cfg.min_interval
+                );
+                Some(std::sync::Arc::new(rec))
+            }
+            None => None,
+        };
+        let engine = medea::telemetry::SloEngine::new(
+            self.spec.clone(),
+            registry.clone(),
+            trace.cloned(),
+            flight,
+        );
+        // Seed a start-of-run baseline sample so the final evaluation in
+        // `finish` diffs against pool start even when the run outpaces the
+        // first ticker fire (a burst that sheds everything can finish in
+        // well under one tick interval).
+        engine.evaluate_now();
+        Ok(Some(engine))
+    }
+
+    /// Final evaluation + recorder tally, printed just before shutdown (so
+    /// an overloaded run always leaves a verdict and its bundles behind).
+    fn finish(&self, engine: &Option<std::sync::Arc<medea::telemetry::SloEngine>>) {
+        let Some(engine) = engine else { return };
+        println!("{}", medea::telemetry::slo_line(&engine.evaluate_now()));
+        if let Some(flight) = engine.flight() {
+            println!(
+                "postmortems: {} written, {} suppressed -> {}",
+                flight.bundles_written(),
+                flight.suppressed(),
+                flight.dir().display()
+            );
+        }
+    }
+}
+
 fn cmd_scrape(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:9464");
-    let body = medea::telemetry::scrape(addr).map_err(|e| e.to_string())?;
+    let timeout_ms: u64 = args.req_parse("timeout-ms").map_err(|e| e.to_string())?;
+    let retries: u32 = args.req_parse("retries").map_err(|e| e.to_string())?;
+    let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let body = medea::telemetry::scrape_with(addr, timeout, retries).map_err(|e| e.to_string())?;
     print!("{body}");
     Ok(())
+}
+
+fn cmd_health(args: &Args) -> Result<(), String> {
+    let addr = args.positional(0).ok_or("health needs an <addr> (host:port)")?;
+    let timeout_ms: u64 = args.req_parse("timeout-ms").map_err(|e| e.to_string())?;
+    let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let mut healthy = true;
+    for path in ["/healthz", "/readyz"] {
+        match medea::telemetry::http_get(addr, path, timeout) {
+            Ok((code, body)) => {
+                println!("{path}: {code} {}", body.trim());
+                healthy &= code == 200;
+            }
+            Err(e) => {
+                println!("{path}: {e}");
+                healthy = false;
+            }
+        }
+    }
+    match medea::telemetry::http_get(addr, "/slo", timeout) {
+        Ok((200, body)) => println!("/slo: 200\n{body}"),
+        Ok((404, _)) => println!("/slo: 404 (no SLO engine attached)"),
+        Ok((code, body)) => {
+            println!("/slo: {code} {}", body.trim());
+            healthy = false;
+        }
+        Err(e) => {
+            println!("/slo: {e}");
+            healthy = false;
+        }
+    }
+    if healthy {
+        Ok(())
+    } else {
+        Err(format!("`{addr}` is unhealthy"))
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -513,13 +711,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .unwrap_or_else(ArtifactManifest::default_dir);
 
     let tel_cli = TelemetryCli::parse(args)?;
+    let slo_cli = SloCli::parse(args)?;
     let config = PoolConfig {
         workers,
         queue_capacity: queue_cap,
         artifact_dir: dir,
         batch: parse_batch(args)?,
         steal: parse_steal(args),
-        telemetry: tel_cli.pool_config(),
+        telemetry: tel_cli.pool_config(&slo_cli),
         ..PoolConfig::default()
     };
     let pool = match args.get("atlas").map(Path::new) {
@@ -542,7 +741,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             pool
         }
     };
-    let (_metrics_server, _reporter) = tel_cli.attach(pool.telemetry())?;
+    let slo_engine = slo_cli.engine(pool.telemetry(), pool.trace())?;
+    let _slo_ticker = slo_engine
+        .as_ref()
+        .map(|engine| medea::telemetry::SloTicker::start(engine.clone(), slo_cli.every));
+    let (_metrics_server, _reporter) =
+        tel_cli.attach(pool.telemetry(), slo_engine.clone(), pool.readiness_probe())?;
 
     // Burst-submit everything, then collect: exercises the EDF queues.
     let mut gen = EegGenerator::new(SynthConfig::default(), seed);
@@ -578,6 +782,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Err(e) => println!("window {i:>3}: {e}"),
         }
     }
+    slo_cli.finish(&slo_engine);
     tel_cli.dump(pool.telemetry(), pool.trace().map(|r| r.as_ref()))?;
     let metrics = pool.shutdown();
     println!("---\n{}", metrics.summary());
@@ -663,6 +868,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
         return Err("fleet library has no servable entries".into());
     }
     let tel_cli = TelemetryCli::parse(args)?;
+    let slo_cli = SloCli::parse(args)?;
     let pool = FleetPool::start(
         registry,
         FleetPoolConfig {
@@ -671,11 +877,16 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
             artifact_dir,
             batch: parse_batch(args)?,
             steal: parse_steal(args),
-            telemetry: tel_cli.pool_config(),
+            telemetry: tel_cli.pool_config(&slo_cli),
         },
     )
     .map_err(|e| e.to_string())?;
-    let (_metrics_server, _reporter) = tel_cli.attach(pool.telemetry())?;
+    let slo_engine = slo_cli.engine(pool.telemetry(), pool.trace())?;
+    let _slo_ticker = slo_engine
+        .as_ref()
+        .map(|engine| medea::telemetry::SloTicker::start(engine.clone(), slo_cli.every));
+    let (_metrics_server, _reporter) =
+        tel_cli.attach(pool.telemetry(), slo_engine.clone(), pool.readiness_probe())?;
 
     let mut gen = EegGenerator::new(SynthConfig::default(), seed);
     let mut pending = Vec::with_capacity(windows);
@@ -716,6 +927,7 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
             Err(e) => println!("window {i:>3}: {e}"),
         }
     }
+    slo_cli.finish(&slo_engine);
     tel_cli.dump(pool.telemetry(), pool.trace().map(|r| r.as_ref()))?;
     let metrics = pool.shutdown();
     println!("---\n{}", metrics.summary());

@@ -679,6 +679,15 @@ impl ServePool {
         self.trace.as_ref()
     }
 
+    /// A `/readyz` probe over this pool's shards: ready while no shard is
+    /// stopping and total queued admissions sit below a 90 % saturation
+    /// watermark of total capacity. The probe holds only shard handles
+    /// (one brief shard lock each to answer), so it stays valid for the
+    /// pool's lifetime.
+    pub fn readiness_probe(&self) -> crate::telemetry::ReadinessProbe {
+        readiness_probe_over(&self.shards)
+    }
+
     /// A [`ServeMetrics`] view of the pool *right now*, without shutting
     /// anything down — the same registry read [`ServePool::shutdown`]
     /// performs, so live and final percentiles share one arithmetic.
@@ -701,6 +710,37 @@ impl ServePool {
 /// [`TraceEventKind::Enqueue`] event.
 pub(crate) fn deadline_us(deadline: Time) -> u64 {
     (deadline.raw() * 1e6) as u64
+}
+
+/// Shared `/readyz` arithmetic for both pools: unready when any shard is
+/// stopping or total depth reaches `max(1, 90 % of total capacity)` — the
+/// watermark leaves headroom so a scheduler can stop routing *before* the
+/// pool starts shedding.
+pub(crate) fn readiness_probe_over<J: Send + 'static>(
+    shards: &[Arc<Shard<J>>],
+) -> crate::telemetry::ReadinessProbe {
+    let shards: Vec<Arc<Shard<J>>> = shards.to_vec();
+    Arc::new(move || {
+        let mut depth = 0usize;
+        let mut cap = 0usize;
+        for shard in &shards {
+            let st = shard.state.lock().expect("shard lock poisoned");
+            if st.stopping {
+                return crate::telemetry::Readiness::unready("pool stopping");
+            }
+            cap += st.queue.capacity();
+            drop(st);
+            depth += shard.depth.load(Ordering::Relaxed);
+        }
+        let watermark = (cap * 9 / 10).max(1);
+        if depth < watermark {
+            crate::telemetry::Readiness::ready(format!("queue {depth}/{cap}"))
+        } else {
+            crate::telemetry::Readiness::unready(format!(
+                "queue {depth}/{cap} at watermark {watermark}"
+            ))
+        }
+    })
 }
 
 impl Drop for ServePool {

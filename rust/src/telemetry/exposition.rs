@@ -1,11 +1,23 @@
-//! Prometheus text exposition (format 0.0.4) over a minimal blocking HTTP
-//! responder, plus the matching one-shot scrape client.
+//! Prometheus text exposition (format 0.0.4) over a minimal multi-endpoint
+//! blocking HTTP responder, plus the matching bounded GET client.
 //!
 //! [`render_prometheus`] turns a [`RegistrySnapshot`] into the text format;
-//! [`MetricsServer`] binds a `std::net::TcpListener` and answers every
-//! request with a fresh snapshot (one short-lived thread, no framework, no
-//! dependency); [`scrape`] is the tiny client the CLI (`medea scrape`) and
-//! CI smoke test use to fetch one exposition.
+//! [`MetricsServer`] binds a `std::net::TcpListener` (one short-lived
+//! thread, no framework, no dependency) and routes:
+//!
+//! * `GET /metrics` — a fresh exposition, with the SLO gauges appended when
+//!   a [`SloEngine`] is attached;
+//! * `GET /healthz` — liveness (the responder thread is up);
+//! * `GET /readyz` — readiness through the pool's [`ReadinessProbe`]
+//!   (accepting, admission queues below the saturation watermark), `503`
+//!   when the pool is stopping or saturated;
+//! * `GET /slo` — the latest SLO evaluation as JSON.
+//!
+//! Unknown paths get `404`, non-GET methods `405` — a scraper typo no
+//! longer silently receives a well-formed exposition. [`scrape`] /
+//! [`scrape_with`] ([`http_get`] underneath) are the tiny clients behind
+//! `medea scrape` and `medea health`, with explicit connect/read deadlines
+//! and bounded retries so CI needs no shell retry loops.
 //!
 //! Histograms are downsampled from the 640 fine log-linear buckets to 15
 //! power-of-4 `le` bounds plus `+Inf` — coarse enough to keep a scrape small,
@@ -14,6 +26,7 @@
 
 use crate::telemetry::hist::{bucket_upper, HistData};
 use crate::telemetry::registry::{RegistrySnapshot, WorkerSnapshot};
+use crate::telemetry::slo::SloEngine;
 use crate::telemetry::TelemetryRegistry;
 use crate::util::error::{anyhow, bail, Result};
 use std::fmt::Write as _;
@@ -257,15 +270,48 @@ fn batch_histogram(out: &mut String, labels: &str, hist: &[u64]) {
     let _ = writeln!(out, "{name}_count{{{labels}}} {total}");
 }
 
-fn escape_label(v: &str) -> String {
+pub(crate) fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
-/// A blocking single-threaded scrape endpoint over `std::net`.
+/// A `/readyz` verdict: whether the pool is accepting work, plus a
+/// human-readable reason (queue depth vs capacity, stopping, …).
+#[derive(Debug, Clone)]
+pub struct Readiness {
+    pub ready: bool,
+    pub detail: String,
+}
+
+impl Readiness {
+    pub fn ready(detail: impl Into<String>) -> Readiness {
+        Readiness { ready: true, detail: detail.into() }
+    }
+
+    pub fn unready(detail: impl Into<String>) -> Readiness {
+        Readiness { ready: false, detail: detail.into() }
+    }
+}
+
+/// How a pool reports readiness to the `/readyz` endpoint (see
+/// `ServePool::readiness_probe` / `FleetPool::readiness_probe`).
+pub type ReadinessProbe = Arc<dyn Fn() -> Readiness + Send + Sync>;
+
+/// What the responder thread serves: the registry plus optional SLO and
+/// readiness surfaces.
+struct Routes {
+    registry: Arc<TelemetryRegistry>,
+    slo: Option<Arc<SloEngine>>,
+    ready: Option<ReadinessProbe>,
+}
+
+const CT_TEXT: &str = "text/plain; charset=utf-8";
+const CT_PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+const CT_JSON: &str = "application/json";
+
+/// A blocking single-threaded observability endpoint over `std::net`.
 ///
-/// Every connection gets a fresh snapshot rendered with
-/// [`render_prometheus`] regardless of the request line, so `curl
-/// http://addr/metrics` and a Prometheus scraper both work. Dropping the
+/// Routes `/metrics`, `/healthz`, `/readyz`, and `/slo` (see the module
+/// docs); every response reads fresh state, nothing is cached. Dropping the
 /// server stops the thread.
 pub struct MetricsServer {
     addr: SocketAddr,
@@ -275,17 +321,31 @@ pub struct MetricsServer {
 
 impl MetricsServer {
     /// Bind `addr` (e.g. `127.0.0.1:9464`; port 0 picks a free port) and
-    /// start answering scrapes.
+    /// start answering scrapes. Metrics-only: no SLO engine, no readiness
+    /// probe ( `/readyz` then only proves the responder is up).
     pub fn start(addr: &str, registry: Arc<TelemetryRegistry>) -> Result<MetricsServer> {
+        Self::start_with(addr, registry, None, None)
+    }
+
+    /// [`MetricsServer::start`] with the full health surface: an SLO engine
+    /// behind `/slo` (and its gauges on `/metrics`) and a pool readiness
+    /// probe behind `/readyz`.
+    pub fn start_with(
+        addr: &str,
+        registry: Arc<TelemetryRegistry>,
+        slo: Option<Arc<SloEngine>>,
+        ready: Option<ReadinessProbe>,
+    ) -> Result<MetricsServer> {
         let listener =
             TcpListener::bind(addr).map_err(|e| anyhow!("metrics-addr `{addr}`: {e}"))?;
         let local = listener.local_addr().map_err(|e| anyhow!("metrics-addr `{addr}`: {e}"))?;
         let stop = Arc::new(AtomicBool::new(false));
+        let routes = Routes { registry, slo, ready };
         let handle = std::thread::Builder::new()
             .name("medea-metrics".into())
             .spawn({
                 let stop = stop.clone();
-                move || serve_loop(&listener, &registry, &stop)
+                move || serve_loop(&listener, &routes, &stop)
             })
             .map_err(|e| anyhow!("spawning metrics server: {e}"))?;
         Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
@@ -313,7 +373,7 @@ impl Drop for MetricsServer {
     }
 }
 
-fn serve_loop(listener: &TcpListener, registry: &TelemetryRegistry, stop: &AtomicBool) {
+fn serve_loop(listener: &TcpListener, routes: &Routes, stop: &AtomicBool) {
     for conn in listener.incoming() {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -324,7 +384,7 @@ fn serve_loop(listener: &TcpListener, registry: &TelemetryRegistry, stop: &Atomi
         };
         let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
         let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
-        // Drain the request head; the response is the same either way.
+        // Drain the request head, then route on the request line.
         let mut head = Vec::new();
         let mut buf = [0u8; 1024];
         loop {
@@ -339,36 +399,119 @@ fn serve_loop(listener: &TcpListener, registry: &TelemetryRegistry, stop: &Atomi
                 Err(_) => break,
             }
         }
-        let body = render_prometheus(&registry.snapshot());
+        let head = String::from_utf8_lossy(&head);
+        let (status, content_type, body) = route(routes, &head);
         let response = format!(
-            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
             body.len()
         );
         let _ = stream.write_all(response.as_bytes());
     }
 }
 
-/// Fetch one exposition from a running [`MetricsServer`]; returns the body.
-pub fn scrape(addr: &str) -> Result<String> {
-    let mut stream = TcpStream::connect(addr).map_err(|e| anyhow!("connect `{addr}`: {e}"))?;
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+/// Dispatch one request head to a response: `(status line, content type,
+/// body)`. Only GET is served; unknown paths are a `404`, not a silent
+/// exposition.
+fn route(routes: &Routes, head: &str) -> (&'static str, &'static str, String) {
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (Some(method), Some(target)) = (parts.next(), parts.next()) else {
+        return ("400 Bad Request", CT_TEXT, "malformed request line\n".into());
+    };
+    if method != "GET" {
+        let body = format!("method {method} not allowed; use GET\n");
+        return ("405 Method Not Allowed", CT_TEXT, body);
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    match path {
+        "/metrics" => {
+            let mut body = render_prometheus(&routes.registry.snapshot());
+            if let Some(engine) = &routes.slo {
+                body.push_str(&engine.render_gauges());
+            }
+            ("200 OK", CT_PROM, body)
+        }
+        "/healthz" => ("200 OK", CT_TEXT, "ok\n".into()),
+        "/readyz" => match &routes.ready {
+            Some(probe) => {
+                let r = probe();
+                if r.ready {
+                    ("200 OK", CT_TEXT, format!("ready: {}\n", r.detail))
+                } else {
+                    ("503 Service Unavailable", CT_TEXT, format!("unready: {}\n", r.detail))
+                }
+            }
+            // No probe attached: the responder being up is all the
+            // readiness there is.
+            None => ("200 OK", CT_TEXT, "ready\n".into()),
+        },
+        "/slo" => match &routes.slo {
+            Some(engine) => ("200 OK", CT_JSON, engine.status_json().to_pretty()),
+            None => ("404 Not Found", CT_TEXT, "no SLO engine configured\n".into()),
+        },
+        other => ("404 Not Found", CT_TEXT, format!("no route for {other}\n")),
+    }
+}
+
+/// One bounded HTTP GET against a [`MetricsServer`]-style responder:
+/// connect, write, and read each run under `timeout`. Returns the status
+/// code and body (including non-2xx bodies — callers decide what a failure
+/// is).
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
+    use std::net::ToSocketAddrs as _;
+    let timeout = timeout.max(Duration::from_millis(1));
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow!("resolve `{addr}`: {e}"))?
+        .next()
+        .ok_or_else(|| anyhow!("resolve `{addr}`: no address"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)
+        .map_err(|e| anyhow!("connect `{addr}`: {e}"))?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
     stream
-        .write_all(format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())
-        .map_err(|e| anyhow!("scrape `{addr}`: {e}"))?;
+        .write_all(format!("GET {path} HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())
+        .map_err(|e| anyhow!("request `{addr}{path}`: {e}"))?;
     let mut raw = String::new();
     stream
         .read_to_string(&mut raw)
-        .map_err(|e| anyhow!("scrape `{addr}`: {e}"))?;
+        .map_err(|e| anyhow!("read `{addr}{path}`: {e}"))?;
     let Some((head, body)) = raw.split_once("\r\n\r\n") else {
-        bail!("scrape `{addr}`: malformed HTTP response");
+        bail!("`{addr}{path}`: malformed HTTP response");
     };
     let status = head.lines().next().unwrap_or_default();
-    if !status.starts_with("HTTP/1.0 200") && !status.starts_with("HTTP/1.1 200") {
-        bail!("scrape `{addr}`: {status}");
+    let code = status
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| anyhow!("`{addr}{path}`: bad status line `{status}`"))?;
+    Ok((code, body.to_string()))
+}
+
+/// Fetch one exposition from a running [`MetricsServer`]; returns the body.
+pub fn scrape(addr: &str) -> Result<String> {
+    scrape_with(addr, Duration::from_secs(5), 0)
+}
+
+/// [`scrape`] with explicit connect/read deadlines and bounded retries
+/// (exponential backoff from 50 ms, capped at 1 s) — what `medea scrape
+/// --timeout-ms --retries` runs, so CI needs no shell retry loop.
+pub fn scrape_with(addr: &str, timeout: Duration, retries: u32) -> Result<String> {
+    let mut backoff = Duration::from_millis(50);
+    let mut attempt = 0;
+    loop {
+        let err = match http_get(addr, "/metrics", timeout) {
+            Ok((200, body)) => return Ok(body),
+            Ok((code, _)) => anyhow!("scrape `{addr}`: HTTP {code}"),
+            Err(e) => e,
+        };
+        if attempt >= retries {
+            return Err(err);
+        }
+        attempt += 1;
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_secs(1));
     }
-    Ok(body.to_string())
 }
 
 #[cfg(test)]
@@ -437,6 +580,80 @@ mod tests {
     #[test]
     fn scrape_rejects_nothing_listening() {
         assert!(scrape("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn routes_reject_unknown_paths_and_methods() {
+        let reg = sample_registry();
+        let server = MetricsServer::start("127.0.0.1:0", reg).expect("bind");
+        let addr = server.addr().to_string();
+        // Unknown path: 404, not a silent exposition.
+        let (code, body) = http_get(&addr, "/nope", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 404, "body: {body}");
+        assert!(!body.contains("medea_requests_total"), "404 must not carry the exposition");
+        // Non-GET method: 405.
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        stream
+            .write_all(format!("POST /metrics HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())
+            .expect("write");
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).expect("read");
+        assert!(raw.starts_with("HTTP/1.0 405"), "{raw}");
+        // Liveness; readiness with no probe attached means "server is up".
+        let (code, body) = http_get(&addr, "/healthz", Duration::from_secs(2)).expect("http");
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+        let (code, _) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 200);
+        // /slo without an engine: 404.
+        let (code, _) = http_get(&addr, "/slo", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 404);
+        // /metrics is still the exposition, query strings ignored.
+        let (code, body) = http_get(&addr, "/metrics?x=1", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 200);
+        assert!(body.contains("# TYPE medea_requests_total counter"));
+    }
+
+    #[test]
+    fn readiness_probe_and_slo_endpoints_answer() {
+        use crate::telemetry::slo::{SloEngine, SloSpec};
+        let reg = sample_registry();
+        let engine = SloEngine::new(SloSpec::default(), reg.clone(), None, None);
+        let saturated = Arc::new(AtomicBool::new(false));
+        let probe: ReadinessProbe = {
+            let saturated = saturated.clone();
+            Arc::new(move || {
+                if saturated.load(Ordering::Relaxed) {
+                    Readiness::unready("queue 256/256")
+                } else {
+                    Readiness::ready("queue 0/256")
+                }
+            })
+        };
+        let server = MetricsServer::start_with("127.0.0.1:0", reg, Some(engine), Some(probe))
+            .expect("bind");
+        let addr = server.addr().to_string();
+        let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 200);
+        assert!(body.contains("queue 0/256"), "{body}");
+        saturated.store(true, Ordering::Relaxed);
+        let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 503);
+        assert!(body.contains("queue 256/256"), "{body}");
+        let (code, body) = http_get(&addr, "/slo", Duration::from_secs(2)).expect("http");
+        assert_eq!(code, 200);
+        let doc = crate::util::json::parse(&body).expect("slo json");
+        assert_eq!(doc.get("state").and_then(|v| v.as_str()), Some("ok"));
+        // The SLO gauges ride the exposition when an engine is attached.
+        let metrics = scrape(&addr).expect("scrape");
+        assert!(metrics.contains("# TYPE medea_slo_state gauge"), "{metrics}");
+    }
+
+    #[test]
+    fn scrape_with_retries_back_off_then_error() {
+        let t0 = std::time::Instant::now();
+        assert!(scrape_with("127.0.0.1:1", Duration::from_millis(100), 2).is_err());
+        // Two retries sleep 50 ms + 100 ms between attempts.
+        assert!(t0.elapsed() >= Duration::from_millis(100), "retries must back off");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! The anomaly-triggered flight recorder: bounded, rate-limited post-mortem
+//! bundles.
+//!
+//! Counters tell you *that* the pool degraded; this module captures *what it
+//! looked like* at that moment. When the SLO engine sees a `Critical`
+//! transition or a burn-rate spike (see [`crate::telemetry::slo`]), it hands
+//! the recorder the evaluation that fired, and the recorder atomically
+//! writes one JSON bundle — the full registry snapshot, the drained
+//! trace-ring tail, and the firing SLO status — into a bounded directory.
+//!
+//! Two guards keep a sustained storm from producing thousands of files:
+//!
+//! * **rate limit** — at most one bundle per `min_interval` (a storm that
+//!   lasts minutes produces a handful of bundles, each a fresh snapshot);
+//! * **bounded directory** — after every write the oldest bundles beyond
+//!   `max_bundles` are pruned, so the post-mortem dir never grows without
+//!   bound.
+//!
+//! Bundles are written tmp-then-rename so a reader (or a crash mid-write)
+//! never sees a torn file.
+
+use crate::telemetry::registry::RegistrySnapshot;
+use crate::telemetry::trace::TraceEvent;
+use crate::util::error::{anyhow, Result};
+use crate::util::json::{Json, JsonObj};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Flight-recorder knobs (`serve --postmortem-*`).
+#[derive(Debug, Clone)]
+pub struct FlightConfig {
+    /// Directory bundles are written into (created if missing).
+    pub dir: PathBuf,
+    /// Oldest bundles beyond this count are pruned after each write.
+    pub max_bundles: usize,
+    /// Minimum spacing between bundles; triggers inside the window are
+    /// counted ([`FlightRecorder::suppressed`]) but write nothing.
+    pub min_interval: Duration,
+    /// At most this many trace events (the newest) go into one bundle.
+    pub max_trace_events: usize,
+}
+
+impl Default for FlightConfig {
+    fn default() -> Self {
+        FlightConfig {
+            dir: PathBuf::from("postmortems"),
+            max_bundles: 8,
+            min_interval: Duration::from_secs(30),
+            max_trace_events: 4096,
+        }
+    }
+}
+
+struct FlightState {
+    last_write: Option<Instant>,
+    seq: u64,
+}
+
+/// Always-on post-mortem bundle writer. All methods take `&self`; the write
+/// path serializes under one mutex (it runs off the serving hot path).
+pub struct FlightRecorder {
+    cfg: FlightConfig,
+    state: Mutex<FlightState>,
+    written: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl FlightRecorder {
+    /// Create the bundle directory and the recorder.
+    pub fn new(cfg: FlightConfig) -> Result<FlightRecorder> {
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| anyhow!("postmortem dir `{}`: {e}", cfg.dir.display()))?;
+        Ok(FlightRecorder {
+            cfg,
+            state: Mutex::new(FlightState { last_write: None, seq: 0 }),
+            written: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    /// Bundles written so far.
+    pub fn bundles_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    /// Triggers swallowed by the rate limiter so far.
+    pub fn suppressed(&self) -> u64 {
+        self.suppressed.load(Ordering::Relaxed)
+    }
+
+    /// Write one post-mortem bundle, unless the rate limiter is in its
+    /// holdoff window. Returns the bundle path when one was written. Write
+    /// errors are logged and swallowed — the recorder must never take the
+    /// pool down with it.
+    pub fn record(
+        &self,
+        trigger: &str,
+        slo: Json,
+        snap: &RegistrySnapshot,
+        trace: &[TraceEvent],
+    ) -> Option<PathBuf> {
+        let seq = {
+            let mut st = self.state.lock().expect("flight state lock poisoned");
+            if let Some(last) = st.last_write {
+                if last.elapsed() < self.cfg.min_interval {
+                    self.suppressed.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            }
+            st.last_write = Some(Instant::now());
+            st.seq += 1;
+            st.seq
+        };
+        let bundle = self.bundle_json(trigger, slo, snap, trace);
+        let wall_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let name = format!("postmortem-{wall_ms}-{seq:04}.json");
+        let path = self.cfg.dir.join(&name);
+        let tmp = self.cfg.dir.join(format!(".tmp-{name}"));
+        let write = std::fs::write(&tmp, bundle.to_pretty())
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        if let Err(e) = write {
+            crate::log_warn!("flight recorder: writing {}: {e}", path.display());
+            let _ = std::fs::remove_file(&tmp);
+            return None;
+        }
+        self.written.fetch_add(1, Ordering::Relaxed);
+        crate::log_info!("flight recorder: {trigger} -> {}", path.display());
+        self.prune();
+        Some(path)
+    }
+
+    fn bundle_json(
+        &self,
+        trigger: &str,
+        slo: Json,
+        snap: &RegistrySnapshot,
+        trace: &[TraceEvent],
+    ) -> Json {
+        let skipped = trace.len().saturating_sub(self.cfg.max_trace_events);
+        let events: Vec<Json> = trace[skipped..]
+            .iter()
+            .map(|e| {
+                let mut o = JsonObj::new();
+                o.insert("seq", e.seq);
+                o.insert("name", e.kind.name());
+                o.insert("worker", u64::from(e.worker));
+                o.insert("ts_ns", e.ts_ns);
+                o.insert("req", e.req);
+                o.insert("arg", e.arg);
+                Json::Obj(o)
+            })
+            .collect();
+        let wall_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut o = JsonObj::new();
+        o.insert("schema", "medea.postmortem.v1");
+        o.insert("trigger", trigger);
+        o.insert("wall_unix_ms", wall_ms);
+        o.insert("uptime_s", snap.uptime.as_secs_f64());
+        o.insert("slo", slo);
+        o.insert("registry", snap.to_json());
+        o.insert("trace_events_skipped", skipped);
+        o.insert("trace", Json::Arr(events));
+        Json::Obj(o)
+    }
+
+    /// Drop the oldest bundles beyond `max_bundles` (name order is write
+    /// order: names embed wall-clock millis then a sequence number).
+    fn prune(&self) {
+        let Ok(entries) = std::fs::read_dir(&self.cfg.dir) else { return };
+        let mut bundles: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("postmortem-") && n.ends_with(".json"))
+            })
+            .collect();
+        if bundles.len() <= self.cfg.max_bundles.max(1) {
+            return;
+        }
+        bundles.sort();
+        let excess = bundles.len() - self.cfg.max_bundles.max(1);
+        for stale in &bundles[..excess] {
+            let _ = std::fs::remove_file(stale);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::TelemetryRegistry;
+    use crate::telemetry::trace::{TraceEventKind, TraceRing};
+    use crate::util::json::parse;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("medea-flight-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_snapshot() -> RegistrySnapshot {
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 1);
+        reg.worker(0).record(false, false, 100e-6, 0.01, Duration::from_millis(3));
+        reg.snapshot()
+    }
+
+    #[test]
+    fn bundle_round_trips_and_rate_limits() {
+        let dir = temp_dir("roundtrip");
+        let rec = FlightRecorder::new(FlightConfig {
+            dir: dir.clone(),
+            min_interval: Duration::from_secs(3600),
+            ..FlightConfig::default()
+        })
+        .expect("recorder");
+        let ring = TraceRing::new(64);
+        ring.record(TraceEventKind::Enqueue, 0, 1, 42);
+        ring.record(TraceEventKind::Retire, 0, 1, 0);
+        let snap = sample_snapshot();
+        let path = rec
+            .record(
+                "deadline critical (burn 9.00x/3.00x)",
+                Json::from("evaluation"),
+                &snap,
+                &ring.events(),
+            )
+            .expect("first bundle written");
+        assert!(path.exists());
+        assert_eq!(rec.bundles_written(), 1);
+
+        // Inside the holdoff window: suppressed, not written.
+        assert!(rec.record("again", Json::from("x"), &snap, &[]).is_none());
+        assert_eq!(rec.bundles_written(), 1);
+        assert_eq!(rec.suppressed(), 1);
+
+        let doc = parse(&std::fs::read_to_string(&path).expect("read bundle")).expect("json");
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("medea.postmortem.v1"));
+        assert_eq!(
+            doc.get("trigger").and_then(|v| v.as_str()),
+            Some("deadline critical (burn 9.00x/3.00x)")
+        );
+        assert_eq!(doc.get("slo").and_then(|v| v.as_str()), Some("evaluation"));
+        let registry = doc.get("registry").expect("registry snapshot embedded");
+        assert_eq!(registry.get("requests").and_then(|v| v.as_u64()), Some(1));
+        let trace = doc.get("trace").and_then(|v| v.as_arr()).expect("trace array");
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[0].get("name").and_then(|v| v.as_str()), Some("enqueue"));
+        assert_eq!(trace[0].get("arg").and_then(|v| v.as_u64()), Some(42));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn directory_stays_bounded() {
+        let dir = temp_dir("bounded");
+        let rec = FlightRecorder::new(FlightConfig {
+            dir: dir.clone(),
+            max_bundles: 3,
+            min_interval: Duration::ZERO,
+            ..FlightConfig::default()
+        })
+        .expect("recorder");
+        let snap = sample_snapshot();
+        for i in 0..7 {
+            assert!(
+                rec.record(&format!("storm {i}"), Json::from(i as u64), &snap, &[]).is_some(),
+                "bundle {i} suppressed unexpectedly"
+            );
+        }
+        assert_eq!(rec.bundles_written(), 7);
+        let left = std::fs::read_dir(&dir)
+            .expect("read dir")
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("postmortem-"))
+            .count();
+        assert_eq!(left, 3, "prune must keep only max_bundles files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_tail_is_capped() {
+        let dir = temp_dir("cap");
+        let rec = FlightRecorder::new(FlightConfig {
+            dir: dir.clone(),
+            max_trace_events: 4,
+            min_interval: Duration::ZERO,
+            ..FlightConfig::default()
+        })
+        .expect("recorder");
+        let ring = TraceRing::new(64);
+        for i in 0..10u64 {
+            ring.record(TraceEventKind::Dispatch, 0, i, 0);
+        }
+        let path = rec
+            .record("cap", Json::from("x"), &sample_snapshot(), &ring.events())
+            .expect("bundle");
+        let doc = parse(&std::fs::read_to_string(&path).expect("read")).expect("json");
+        let trace = doc.get("trace").and_then(|v| v.as_arr()).expect("trace");
+        assert_eq!(trace.len(), 4);
+        // The *newest* events survive the cap.
+        assert_eq!(trace[3].get("req").and_then(|v| v.as_u64()), Some(9));
+        assert_eq!(doc.get("trace_events_skipped").and_then(|v| v.as_u64()), Some(6));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

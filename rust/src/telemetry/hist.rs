@@ -134,6 +134,45 @@ impl HistData {
         self.max = self.max.max(other.max);
     }
 
+    /// Per-bucket saturating difference against an `earlier` snapshot of the
+    /// same stream — the windowed-histogram primitive behind the SLO
+    /// engine's burn-rate math. Counter skew from relaxed-ordering atomic
+    /// snapshots cannot underflow: every field saturates at zero. `min`/`max`
+    /// are rebuilt from the surviving buckets (bucket bounds, not exact
+    /// sample values), which keeps percentile clamping within the bucket
+    /// quantization error.
+    pub fn delta(&self, earlier: &HistData) -> HistData {
+        let count = self.count.saturating_sub(earlier.count);
+        if count == 0 {
+            return HistData::default();
+        }
+        let mut counts = vec![0u64; NBUCKETS];
+        for (i, slot) in counts.iter_mut().enumerate() {
+            let later = self.counts.get(i).copied().unwrap_or(0);
+            let before = earlier.counts.get(i).copied().unwrap_or(0);
+            *slot = later.saturating_sub(before);
+        }
+        let first = counts.iter().position(|&c| c > 0);
+        let last = counts.iter().rposition(|&c| c > 0);
+        let (min, max) = match (first, last) {
+            // Bucket lower bound for min, upper bound for max: the true
+            // window extrema lie inside these buckets.
+            (Some(f), Some(l)) => {
+                let lower = if f == 0 { 0 } else { bucket_upper(f - 1) + 1 };
+                (lower, bucket_upper(l))
+            }
+            // Skewed snapshot pair: count moved but no bucket did.
+            _ => (0, 0),
+        };
+        HistData {
+            counts,
+            count,
+            sum: self.sum.saturating_sub(earlier.sum),
+            min,
+            max,
+        }
+    }
+
     /// Percentile (`q` in `[0, 100]`): the upper bound of the bucket holding
     /// the rank-`ceil(q/100 · count)` sample, clamped into `[min, max]` so
     /// p0/p100 and single-sample distributions are exact. Zero when empty.
@@ -301,6 +340,143 @@ mod tests {
         let mut fresh = HistData::default();
         fresh.merge(&whole);
         assert_eq!(fresh, whole);
+    }
+
+    /// Deterministic xorshift64* stream for the property tests (no rand
+    /// dependency).
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Property: for every in-range value stream and every quantile, the
+    /// reported percentile `r` and the true ceil-rank sample `t` satisfy
+    /// `t <= r <= bucket_upper(bucket_index(t))`, so the relative error is
+    /// below 1/16 (exact below 32). Overflow values (>= 2^43) land in the
+    /// absorbing top bucket, where only clamping and monotonicity hold.
+    #[test]
+    fn quantile_relative_error_bound_over_random_streams() {
+        const OVERFLOW: u64 = 1 << 43;
+        let quantiles = [1.0, 5.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9];
+        for seed in [3u64, 77, 4242, 987_654_321] {
+            let mut rng = seed;
+            for (len, spread) in [(33usize, 31u64), (500, 100_000), (2000, u64::MAX)] {
+                let mut h = AtomicHist::new();
+                let mut sorted: Vec<u64> = (0..len)
+                    .map(|_| {
+                        let raw = xorshift(&mut rng);
+                        // Mix exact-region, mid-range, and overflow values.
+                        let v = raw % spread.max(1);
+                        h.record(v);
+                        v
+                    })
+                    .collect();
+                sorted.sort_unstable();
+                let snap = h.snapshot();
+                assert_eq!(snap.count(), len as u64);
+                let mut prev = 0u64;
+                for q in quantiles {
+                    let r = snap.percentile(q);
+                    assert!(r >= prev, "percentile not monotone in q at q={q}");
+                    prev = r;
+                    assert!(r >= snap.min() && r <= snap.max(), "q={q} outside range");
+                    let rank = ((q / 100.0) * len as f64).ceil().max(1.0) as usize;
+                    let t = sorted[rank - 1];
+                    if t >= OVERFLOW {
+                        // Absorbing bucket: no error bound, clamp only.
+                        continue;
+                    }
+                    assert!(r >= t, "seed {seed} q={q}: reported {r} < true {t}");
+                    let upper = bucket_upper(bucket_index(t));
+                    assert!(
+                        r <= upper.max(snap.min()),
+                        "seed {seed} q={q}: reported {r} above bucket bound {upper}"
+                    );
+                    if t > 0 {
+                        let err = (r.saturating_sub(t)) as f64 / t as f64;
+                        assert!(
+                            err < 1.0 / 16.0,
+                            "seed {seed} q={q}: relative error {err} at t={t}"
+                        );
+                    } else {
+                        assert_eq!(r, 0, "exact region must be exact at t=0");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_values_clamp_and_stay_monotone() {
+        let mut h = HistData::default();
+        h.record(5);
+        h.record((1 << 43) + 12345);
+        h.record(u64::MAX);
+        assert_eq!(h.min(), 5);
+        assert_eq!(h.max(), u64::MAX);
+        let mut prev = 0u64;
+        for q in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            let p = h.percentile(q);
+            assert!(p >= prev, "not monotone at q={q}");
+            assert!(p >= h.min() && p <= h.max(), "q={q} escaped [min, max]");
+            prev = p;
+        }
+        assert_eq!(h.percentile(100.0), u64::MAX);
+    }
+
+    #[test]
+    fn delta_recovers_the_suffix_stream() {
+        // Exact-region suffix: bucket width 1, so delta min/max/counts are
+        // exactly the suffix histogram's.
+        let mut earlier = HistData::default();
+        for v in [3u64, 9, 14, 30] {
+            earlier.record(v);
+        }
+        let mut later = earlier.clone();
+        let mut suffix = HistData::default();
+        for v in [6u64, 6, 21, 31, 2] {
+            later.record(v);
+            suffix.record(v);
+        }
+        let d = later.delta(&earlier);
+        assert_eq!(d.count(), suffix.count());
+        assert_eq!(d.sum(), suffix.sum());
+        assert_eq!(d.min(), suffix.min());
+        assert_eq!(d.max(), suffix.max());
+        assert_eq!(d.bucket_counts(), suffix.bucket_counts());
+        // Wide-range suffix: counts still exact, extrema within one bucket.
+        let mut later2 = later.clone();
+        later2.record(1_000_000);
+        later2.record(40);
+        let d2 = later2.delta(&later);
+        assert_eq!(d2.count(), 2);
+        assert!(d2.min() <= 40 && d2.max() >= 1_000_000);
+        assert!(d2.max() <= bucket_upper(bucket_index(1_000_000)));
+    }
+
+    #[test]
+    fn delta_is_underflow_safe() {
+        let mut earlier = HistData::default();
+        let mut later = HistData::default();
+        for v in [10u64, 20, 500] {
+            earlier.record(v);
+            later.record(v);
+        }
+        later.record(7);
+        // Same stream: zero delta.
+        assert_eq!(later.delta(&later), HistData::default());
+        // Reversed arguments (skewed snapshot pair) saturate, never panic.
+        let reversed = earlier.delta(&later);
+        assert_eq!(reversed, HistData::default());
+        // Empty sides.
+        assert_eq!(HistData::default().delta(&earlier), HistData::default());
+        let from_empty = later.delta(&HistData::default());
+        assert_eq!(from_empty.count(), later.count());
+        assert_eq!(from_empty.bucket_counts(), later.bucket_counts());
     }
 
     #[test]

@@ -16,14 +16,24 @@
 //!   `ServeMetrics` is now *derived from* this registry — there is no
 //!   separate shutdown bookkeeping path.
 //! * [`exposition`] — Prometheus text format 0.0.4 over a minimal blocking
-//!   `std::net` responder (`serve --metrics-addr`), plus the one-shot
-//!   [`scrape`] client behind `medea scrape`.
+//!   `std::net` responder (`serve --metrics-addr`) that also routes
+//!   `/healthz`, `/readyz` (pool [`ReadinessProbe`]), and `/slo`; plus the
+//!   bounded [`scrape`] / [`http_get`] clients behind `medea scrape` and
+//!   `medea health`.
 //! * [`trace`] — a bounded lock-free ring of typed dispatch events
 //!   (enqueue, shed, steal, batch-form, dispatch, retire) with request ids
 //!   and monotonic timestamps, dumpable as chrome://tracing JSON
 //!   (`serve --trace-out`).
 //! * [`report`] — a periodic reporter logging a one-line rates summary
 //!   through [`crate::util::log`] (`serve --report-every-s`).
+//! * [`slo`] — the declarative [`SloSpec`] judged against registry deltas
+//!   over rolling fast/slow windows (SRE multi-window burn rates), exported
+//!   as `Ok`/`Warn`/`Critical` gauges, `/slo` JSON, and a reporter line
+//!   (`serve --slo-*`).
+//! * [`flight`] — the anomaly-triggered flight recorder: on a `Critical`
+//!   transition or burn-rate spike, one rate-limited post-mortem bundle
+//!   (registry snapshot + trace tail + the firing evaluation) lands in a
+//!   bounded `--postmortem-dir`.
 //!
 //! Everything is `std`-only and allocation-free on the hot path: counters
 //! are relaxed atomics, histograms are fixed tables, the trace ring is
@@ -35,15 +45,21 @@
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod exposition;
+pub mod flight;
 pub mod hist;
 pub mod registry;
 pub mod report;
+pub mod slo;
 pub mod trace;
 
-pub use exposition::{render_prometheus, scrape, MetricsServer};
+pub use exposition::{
+    http_get, render_prometheus, scrape, scrape_with, MetricsServer, Readiness, ReadinessProbe,
+};
+pub use flight::{FlightConfig, FlightRecorder};
 pub use hist::HistData;
 pub use registry::{RegistrySnapshot, TelemetryRegistry, WorkerShard, WorkerSnapshot};
 pub use report::{report_line, Reporter};
+pub use slo::{slo_line, SloEngine, SloSpec, SloState, SloStatus, SloTicker};
 pub use trace::{TraceEvent, TraceEventKind, TraceRing};
 
 /// Pool-side telemetry knobs (embedded in `PoolConfig` / `FleetPoolConfig`).

@@ -447,4 +447,74 @@ mod tests {
         assert_eq!(snap.batch_hist[BATCH_SLOTS - 1], 1);
         assert_eq!(snap.batch_hist[0], 1);
     }
+
+    /// The SLO engine's input arithmetic: successive snapshots taken while
+    /// workers record concurrently must yield monotone, underflow-safe
+    /// window deltas — every counter non-decreasing across snapshots, and
+    /// saturating subtraction of any earlier snapshot from any later one
+    /// never wrapping.
+    #[test]
+    fn snapshot_deltas_stay_monotone_under_concurrent_recording() {
+        let reg = std::sync::Arc::new(TelemetryRegistry::new("heeptimize", "tsd-core", 4));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let workers: Vec<_> = (0..4)
+            .map(|w| {
+                let reg = reg.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        reg.worker(w).record(
+                            n % 7 == 0,
+                            n % 5 != 0,
+                            1e-6,
+                            1e-5,
+                            Duration::from_micros(50 + n % 300),
+                        );
+                        reg.worker(w).record_dispatch_time(Duration::from_micros(10 + n % 90));
+                        if n % 11 == 0 {
+                            reg.record_shed(&Rejection::QueueFull { capacity: 4 });
+                        }
+                        n += 1;
+                    }
+                })
+            })
+            .collect();
+
+        let mut snaps = Vec::with_capacity(32);
+        for _ in 0..32 {
+            snaps.push(reg.snapshot());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in workers {
+            h.join().expect("recorder thread panicked");
+        }
+
+        for pair in snaps.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert!(b.uptime >= a.uptime, "uptime went backwards");
+            let (ta, tb) = (a.totals(), b.totals());
+            assert!(tb.requests >= ta.requests, "requests regressed");
+            assert!(tb.deadline_misses >= ta.deadline_misses, "misses regressed");
+            assert!(tb.sim_energy_nj >= ta.sim_energy_nj, "energy regressed");
+            assert!(b.total_shed() >= a.total_shed(), "shed regressed");
+            assert!(tb.dispatch.count() >= ta.dispatch.count(), "dispatch count regressed");
+            // The forward delta is exactly what plain subtraction gives;
+            // the reversed (mis-ordered) delta must clamp to zero, not wrap.
+            assert_eq!(tb.requests.saturating_sub(ta.requests), tb.requests - ta.requests);
+            assert_eq!(ta.requests.saturating_sub(tb.requests).min(1), 0);
+            let d = tb.dispatch.delta(&ta.dispatch);
+            assert_eq!(d.count(), tb.dispatch.count() - ta.dispatch.count());
+            assert_eq!(ta.dispatch.delta(&tb.dispatch).count(), 0, "reversed delta must clamp");
+        }
+        // And per worker too: a torn per-shard view would show up here.
+        for pair in snaps.windows(2) {
+            for (wa, wb) in pair[0].workers.iter().zip(&pair[1].workers) {
+                assert!(wb.requests >= wa.requests);
+                assert!(wb.deadline_misses >= wa.deadline_misses);
+                assert!(wb.dispatch.count() >= wa.dispatch.count());
+            }
+        }
+    }
 }

@@ -7,6 +7,7 @@
 //! `MEDEA_LOG=info` (see [`crate::util::log::init_from_env`]).
 
 use crate::telemetry::registry::{RegistrySnapshot, TelemetryRegistry};
+use crate::telemetry::slo::{slo_line, SloEngine};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -20,13 +21,23 @@ pub struct Reporter {
 impl Reporter {
     /// Log one summary line every `every` (clamped to ≥ 10 ms).
     pub fn start(registry: Arc<TelemetryRegistry>, every: Duration) -> Reporter {
+        Self::start_with_slo(registry, every, None)
+    }
+
+    /// [`Reporter::start`], additionally logging the latest SLO verdict
+    /// (one `slo[...]` line per interval) when an engine is attached.
+    pub fn start_with_slo(
+        registry: Arc<TelemetryRegistry>,
+        every: Duration,
+        slo: Option<Arc<SloEngine>>,
+    ) -> Reporter {
         let every = every.max(Duration::from_millis(10));
         let stop = Arc::new((Mutex::new(false), Condvar::new()));
         let handle = std::thread::Builder::new()
             .name("medea-telemetry-report".into())
             .spawn({
                 let stop = stop.clone();
-                move || report_loop(&registry, every, &stop)
+                move || report_loop(&registry, slo.as_deref(), every, &stop)
             })
             .ok();
         Reporter { stop, handle }
@@ -46,7 +57,12 @@ impl Drop for Reporter {
     }
 }
 
-fn report_loop(registry: &TelemetryRegistry, every: Duration, stop: &(Mutex<bool>, Condvar)) {
+fn report_loop(
+    registry: &TelemetryRegistry,
+    slo: Option<&SloEngine>,
+    every: Duration,
+    stop: &(Mutex<bool>, Condvar),
+) {
     let (lock, cv) = (&stop.0, &stop.1);
     let mut prev = registry.snapshot();
     let mut prev_at = Instant::now();
@@ -67,6 +83,11 @@ fn report_loop(registry: &TelemetryRegistry, every: Duration, stop: &(Mutex<bool
         let snap = registry.snapshot();
         let now = Instant::now();
         crate::log_info!("{}", report_line(&prev, &snap, now.duration_since(prev_at)));
+        if let Some(engine) = slo {
+            if let Some(status) = engine.latest() {
+                crate::log_info!("{}", slo_line(&status));
+            }
+        }
         prev = snap;
         prev_at = now;
     }

@@ -1,0 +1,716 @@
+//! SRE-style multi-window burn-rate SLO evaluation over registry snapshots.
+//!
+//! A [`SloSpec`] declares the serving objectives MEDEA's paper claims —
+//! deadlines met, admission sheds bounded, dispatch p99 bounded, energy per
+//! request budgeted — and the [`SloEngine`] judges the live
+//! [`RegistrySnapshot`] stream against them. Each objective is scored as a
+//! *burn rate*: the fraction of the error budget consumed per unit budget
+//! over a rolling window, so `1.0` means "exactly on target" and `2.0`
+//! means "burning budget twice as fast as allowed". Two windows are
+//! evaluated per objective (fast, e.g. 5 s, and slow, e.g. 60 s) and
+//! combined the standard multi-window way: a short spike alone pages nobody,
+//! a sustained burn does.
+//!
+//! States per objective:
+//!
+//! * `Critical` — fast burn ≥ `critical_burn` *and* slow burn ≥ `warn_burn`
+//!   (the burst is real and it has lasted).
+//! * `Warn` — both windows ≥ `warn_burn`.
+//! * `Ok` — otherwise.
+//!
+//! A transition into `Critical` (or a fast-window spike at
+//! `SPIKE_FACTOR × critical_burn`) arms the flight recorder
+//! ([`crate::telemetry::flight`]), which dumps a post-mortem bundle. The
+//! engine's latest evaluation is exported as Prometheus gauges
+//! (`medea_slo_state`, `medea_slo_burn_rate`) appended to `/metrics`, as
+//! JSON on `/slo`, and as a one-line entry in the periodic reporter.
+//!
+//! All window arithmetic runs on `RegistrySnapshot` deltas keyed by the
+//! snapshot's own `uptime` — counters are monotone, so deltas saturate to
+//! zero under relaxed-ordering skew rather than underflowing.
+
+use crate::telemetry::flight::FlightRecorder;
+use crate::telemetry::hist::{bucket_upper, HistData};
+use crate::telemetry::registry::{RegistrySnapshot, TelemetryRegistry, WorkerSnapshot};
+use crate::telemetry::trace::TraceRing;
+use crate::util::json::{Json, JsonObj};
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Fast-window burn at which a spike fires the flight recorder even before
+/// the slow window confirms (a multiple of `critical_burn`).
+pub const SPIKE_FACTOR: f64 = 4.0;
+
+/// One objective's verdict, worst first when ordering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloState {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl SloState {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloState::Ok => "ok",
+            SloState::Warn => "warn",
+            SloState::Critical => "critical",
+        }
+    }
+
+    /// Gauge value for the Prometheus export (0 / 1 / 2).
+    pub fn code(self) -> u64 {
+        match self {
+            SloState::Ok => 0,
+            SloState::Warn => 1,
+            SloState::Critical => 2,
+        }
+    }
+}
+
+/// Declarative serving objectives, evaluated per (platform, workload) pool.
+#[derive(Debug, Clone)]
+pub struct SloSpec {
+    /// Minimum fraction of served requests that must meet their deadline
+    /// (error budget = `1 - target`).
+    pub deadline_hit_target: f64,
+    /// Maximum fraction of admissions (served + shed) that may shed.
+    pub shed_ceiling: f64,
+    /// Dispatch-latency bound that at least 99% of dispatches must meet
+    /// over the window (error budget = 1%).
+    pub dispatch_p99_bound: Duration,
+    /// Mean simulated energy per served request budget, in µJ
+    /// (non-finite disables the objective).
+    pub energy_per_request_uj: f64,
+    /// Fast burn-rate window (catches bursts).
+    pub fast_window: Duration,
+    /// Slow burn-rate window (confirms the burst is sustained).
+    pub slow_window: Duration,
+    /// Burn rate at which an objective degrades to `Warn`.
+    pub warn_burn: f64,
+    /// Fast-window burn rate at which an objective degrades to `Critical`.
+    pub critical_burn: f64,
+    /// Minimum events in a window before it can fire (startup noise guard).
+    pub min_events: u64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            deadline_hit_target: 0.999,
+            shed_ceiling: 0.05,
+            dispatch_p99_bound: Duration::from_millis(250),
+            energy_per_request_uj: f64::INFINITY,
+            fast_window: Duration::from_secs(5),
+            slow_window: Duration::from_secs(60),
+            warn_burn: 1.0,
+            critical_burn: 2.0,
+            min_events: 8,
+        }
+    }
+}
+
+/// One retained window sample: merged worker totals at a given uptime.
+struct Sample {
+    at: Duration,
+    totals: WorkerSnapshot,
+    shed: u64,
+}
+
+/// Counter deltas between a window-start sample and the newest one.
+struct WindowDelta {
+    requests: u64,
+    misses: u64,
+    shed: u64,
+    dispatch: HistData,
+    energy_nj: u64,
+}
+
+impl WindowDelta {
+    fn between(earlier: &Sample, later: &Sample) -> WindowDelta {
+        WindowDelta {
+            requests: later.totals.requests.saturating_sub(earlier.totals.requests),
+            misses: later
+                .totals
+                .deadline_misses
+                .saturating_sub(earlier.totals.deadline_misses),
+            shed: later.shed.saturating_sub(earlier.shed),
+            dispatch: later.totals.dispatch.delta(&earlier.totals.dispatch),
+            energy_nj: later
+                .totals
+                .sim_energy_nj
+                .saturating_sub(earlier.totals.sim_energy_nj),
+        }
+    }
+}
+
+/// One objective's burn rates and derived state at one evaluation.
+#[derive(Debug, Clone)]
+pub struct ObjectiveStatus {
+    /// Stable objective key: `deadline`, `shed`, `dispatch_p99`, `energy`.
+    pub objective: &'static str,
+    pub state: SloState,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+    /// Fast-window burn crossed `SPIKE_FACTOR × critical_burn`.
+    pub spike: bool,
+}
+
+impl ObjectiveStatus {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("objective", self.objective);
+        o.insert("state", self.state.name());
+        o.insert("burn_fast", self.burn_fast);
+        o.insert("burn_slow", self.burn_slow);
+        o.insert("spike", self.spike);
+        Json::Obj(o)
+    }
+}
+
+/// The full result of one evaluation pass.
+#[derive(Debug, Clone)]
+pub struct SloStatus {
+    pub platform: String,
+    pub workload: String,
+    /// Registry uptime at evaluation.
+    pub at: Duration,
+    pub objectives: Vec<ObjectiveStatus>,
+    /// Objectives that *newly* entered `Critical` on this evaluation.
+    pub transitions: Vec<&'static str>,
+}
+
+impl SloStatus {
+    /// The worst objective state (the pool's headline verdict).
+    pub fn worst(&self) -> SloState {
+        self.objectives.iter().map(|o| o.state).max().unwrap_or(SloState::Ok)
+    }
+
+    /// Whether this evaluation should arm the flight recorder: a fresh
+    /// `Critical` transition or a fast-window spike.
+    pub fn should_record(&self) -> bool {
+        !self.transitions.is_empty() || self.objectives.iter().any(|o| o.spike)
+    }
+
+    /// One-line trigger description for the post-mortem bundle.
+    pub fn trigger(&self) -> String {
+        let firing: Vec<String> = self
+            .objectives
+            .iter()
+            .filter(|o| self.transitions.contains(&o.objective) || o.spike)
+            .map(|o| {
+                format!(
+                    "{} {} (burn {:.2}x/{:.2}x{})",
+                    o.objective,
+                    o.state.name(),
+                    o.burn_fast,
+                    o.burn_slow,
+                    if o.spike { ", spike" } else { "" }
+                )
+            })
+            .collect();
+        if firing.is_empty() {
+            format!("manual ({})", self.worst().name())
+        } else {
+            firing.join("; ")
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("platform", self.platform.as_str());
+        o.insert("workload", self.workload.as_str());
+        o.insert("uptime_s", self.at.as_secs_f64());
+        o.insert("state", self.worst().name());
+        o.insert(
+            "objectives",
+            Json::Arr(self.objectives.iter().map(|obj| obj.to_json()).collect()),
+        );
+        o.insert(
+            "transitions",
+            Json::Arr(self.transitions.iter().map(|&t| Json::from(t)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Format the reporter's one-line SLO entry.
+pub fn slo_line(status: &SloStatus) -> String {
+    let mut line = format!(
+        "slo[{}/{}]: {}",
+        status.platform,
+        status.workload,
+        status.worst().name()
+    );
+    for o in &status.objectives {
+        let _ = write!(
+            line,
+            " {}={}({:.2}x/{:.2}x)",
+            o.objective,
+            o.state.name(),
+            o.burn_fast,
+            o.burn_slow
+        );
+    }
+    line
+}
+
+/// The pure window-arithmetic state machine (no threads, no clocks of its
+/// own — time is whatever `RegistrySnapshot::uptime` says).
+struct SloEvaluator {
+    spec: SloSpec,
+    samples: VecDeque<Sample>,
+    /// Last observed state per objective, in [`OBJECTIVES`] order.
+    last: [SloState; 4],
+}
+
+const OBJECTIVES: [&str; 4] = ["deadline", "shed", "dispatch_p99", "energy"];
+
+impl SloEvaluator {
+    fn new(spec: SloSpec) -> SloEvaluator {
+        SloEvaluator { spec, samples: VecDeque::new(), last: [SloState::Ok; 4] }
+    }
+
+    /// Fold one snapshot in and judge every objective against both windows.
+    fn observe(&mut self, snap: &RegistrySnapshot) -> SloStatus {
+        let now = Sample { at: snap.uptime, totals: snap.totals(), shed: snap.total_shed() };
+
+        // Retain one sample at-or-before the slow-window start so the slow
+        // baseline stays resolvable; prune everything older than that.
+        let slow_start = now.at.saturating_sub(self.spec.slow_window);
+        while self.samples.len() >= 2 && self.samples[1].at <= slow_start {
+            self.samples.pop_front();
+        }
+
+        let fast = self.window_delta(&now, self.spec.fast_window);
+        let slow = self.window_delta(&now, self.spec.slow_window);
+        let at = now.at;
+        self.samples.push_back(now);
+
+        let mut objectives = Vec::with_capacity(OBJECTIVES.len());
+        let mut transitions = Vec::new();
+        for (i, name) in OBJECTIVES.iter().enumerate() {
+            let burn_fast = self.burn(name, &fast);
+            let burn_slow = self.burn(name, &slow);
+            let state = if burn_fast >= self.spec.critical_burn && burn_slow >= self.spec.warn_burn
+            {
+                SloState::Critical
+            } else if burn_fast >= self.spec.warn_burn && burn_slow >= self.spec.warn_burn {
+                SloState::Warn
+            } else {
+                SloState::Ok
+            };
+            if state == SloState::Critical && self.last[i] != SloState::Critical {
+                transitions.push(*name);
+            }
+            self.last[i] = state;
+            objectives.push(ObjectiveStatus {
+                objective: name,
+                state,
+                burn_fast,
+                burn_slow,
+                spike: burn_fast >= SPIKE_FACTOR * self.spec.critical_burn,
+            });
+        }
+        SloStatus {
+            platform: snap.platform.clone(),
+            workload: snap.workload.clone(),
+            at,
+            objectives,
+            transitions,
+        }
+    }
+
+    /// Deltas between the newest sample and the youngest retained sample
+    /// at-or-before `now - window` (the oldest sample when the pool is
+    /// younger than the window).
+    fn window_delta(&self, now: &Sample, window: Duration) -> WindowDelta {
+        let start = now.at.saturating_sub(window);
+        let baseline = self
+            .samples
+            .iter()
+            .rev()
+            .find(|s| s.at <= start)
+            .or_else(|| self.samples.front());
+        match baseline {
+            Some(base) => WindowDelta::between(base, now),
+            // First-ever observation: nothing to diff against yet.
+            None => WindowDelta::between(now, now),
+        }
+    }
+
+    /// Burn rate for one objective over one window's deltas. Zero when the
+    /// window holds fewer than `min_events` relevant events.
+    fn burn(&self, objective: &str, d: &WindowDelta) -> f64 {
+        const MAX_BURN: f64 = 1e6;
+        let spec = &self.spec;
+        let burn = match objective {
+            "deadline" => {
+                if d.requests < spec.min_events {
+                    0.0
+                } else {
+                    let bad = d.misses as f64 / d.requests as f64;
+                    bad / (1.0 - spec.deadline_hit_target).max(1e-9)
+                }
+            }
+            "shed" => {
+                let admissions = d.requests + d.shed;
+                if admissions < spec.min_events {
+                    0.0
+                } else {
+                    let bad = d.shed as f64 / admissions as f64;
+                    bad / spec.shed_ceiling.max(1e-9)
+                }
+            }
+            "dispatch_p99" => {
+                if d.dispatch.count() < spec.min_events {
+                    0.0
+                } else {
+                    let bound_ns = u64::try_from(spec.dispatch_p99_bound.as_nanos())
+                        .unwrap_or(u64::MAX);
+                    let over: u64 = d
+                        .dispatch
+                        .bucket_counts()
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| bucket_upper(i) > bound_ns)
+                        .map(|(_, &c)| c)
+                        .sum();
+                    let bad = over as f64 / d.dispatch.count() as f64;
+                    bad / 0.01
+                }
+            }
+            "energy" => {
+                if d.requests < spec.min_events || !spec.energy_per_request_uj.is_finite() {
+                    0.0
+                } else {
+                    let mean_uj = d.energy_nj as f64 / 1e3 / d.requests as f64;
+                    mean_uj / spec.energy_per_request_uj.max(1e-9)
+                }
+            }
+            _ => 0.0,
+        };
+        burn.min(MAX_BURN)
+    }
+}
+
+/// Shared SLO engine handle: evaluates on demand (or from a [`SloTicker`]),
+/// keeps the latest status for `/slo` and the gauge export, and arms the
+/// flight recorder on critical transitions and spikes.
+pub struct SloEngine {
+    registry: Arc<TelemetryRegistry>,
+    trace: Option<Arc<TraceRing>>,
+    flight: Option<Arc<FlightRecorder>>,
+    evaluator: Mutex<SloEvaluator>,
+    latest: Mutex<Option<SloStatus>>,
+}
+
+impl SloEngine {
+    pub fn new(
+        spec: SloSpec,
+        registry: Arc<TelemetryRegistry>,
+        trace: Option<Arc<TraceRing>>,
+        flight: Option<Arc<FlightRecorder>>,
+    ) -> Arc<SloEngine> {
+        Arc::new(SloEngine {
+            registry,
+            trace,
+            flight,
+            evaluator: Mutex::new(SloEvaluator::new(spec)),
+            latest: Mutex::new(None),
+        })
+    }
+
+    /// The flight recorder this engine arms, when one is attached.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
+    }
+
+    /// Evaluate a fresh registry snapshot now (also what the ticker calls).
+    pub fn evaluate_now(&self) -> SloStatus {
+        self.observe(&self.registry.snapshot())
+    }
+
+    /// Evaluate one explicit snapshot (tests drive synthetic timelines
+    /// through this; [`SloEngine::evaluate_now`] is this over a live
+    /// snapshot).
+    pub fn observe(&self, snap: &RegistrySnapshot) -> SloStatus {
+        let status = {
+            let mut ev = self.evaluator.lock().expect("slo evaluator lock poisoned");
+            ev.observe(snap)
+        };
+        if status.should_record() {
+            if let Some(flight) = &self.flight {
+                let events = self.trace.as_ref().map(|r| r.events()).unwrap_or_default();
+                flight.record(&status.trigger(), status.to_json(), snap, &events);
+            }
+        }
+        *self.latest.lock().expect("slo latest lock poisoned") = Some(status.clone());
+        status
+    }
+
+    /// The most recent evaluation, if any ran yet.
+    pub fn latest(&self) -> Option<SloStatus> {
+        self.latest.lock().expect("slo latest lock poisoned").clone()
+    }
+
+    /// JSON for the `/slo` endpoint: the latest evaluation (running one
+    /// first if none has happened yet).
+    pub fn status_json(&self) -> Json {
+        match self.latest() {
+            Some(status) => status.to_json(),
+            None => self.evaluate_now().to_json(),
+        }
+    }
+
+    /// Render `medea_slo_state` / `medea_slo_burn_rate` gauges from the
+    /// latest evaluation (empty until one ran). Appended to `/metrics`.
+    pub fn render_gauges(&self) -> String {
+        let Some(status) = self.latest() else { return String::new() };
+        let mut out = String::with_capacity(1024);
+        let base = format!(
+            "platform=\"{}\",workload=\"{}\"",
+            super::exposition::escape_label(&status.platform),
+            super::exposition::escape_label(&status.workload)
+        );
+        let _ = writeln!(
+            out,
+            "# HELP medea_slo_state Per-objective SLO state (0 = ok, 1 = warn, 2 = critical)."
+        );
+        let _ = writeln!(out, "# TYPE medea_slo_state gauge");
+        for o in &status.objectives {
+            let _ = writeln!(
+                out,
+                "medea_slo_state{{{base},objective=\"{}\"}} {}",
+                o.objective,
+                o.state.code()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP medea_slo_burn_rate Error-budget burn rate per objective and window."
+        );
+        let _ = writeln!(out, "# TYPE medea_slo_burn_rate gauge");
+        for o in &status.objectives {
+            let _ = writeln!(
+                out,
+                "medea_slo_burn_rate{{{base},objective=\"{}\",window=\"fast\"}} {}",
+                o.objective,
+                o.burn_fast
+            );
+            let _ = writeln!(
+                out,
+                "medea_slo_burn_rate{{{base},objective=\"{}\",window=\"slow\"}} {}",
+                o.objective,
+                o.burn_slow
+            );
+        }
+        out
+    }
+}
+
+/// Background evaluation cadence; stops (and joins) on drop.
+pub struct SloTicker {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SloTicker {
+    /// Evaluate `engine` every `every` (clamped to ≥ 10 ms).
+    pub fn start(engine: Arc<SloEngine>, every: Duration) -> SloTicker {
+        let every = every.max(Duration::from_millis(10));
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let handle = std::thread::Builder::new()
+            .name("medea-slo".into())
+            .spawn({
+                let stop = stop.clone();
+                move || tick_loop(&engine, every, &stop)
+            })
+            .ok();
+        SloTicker { stop, handle }
+    }
+}
+
+impl Drop for SloTicker {
+    fn drop(&mut self) {
+        let (lock, cv) = (&self.stop.0, &self.stop.1);
+        if let Ok(mut stopped) = lock.lock() {
+            *stopped = true;
+        }
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn tick_loop(engine: &SloEngine, every: Duration, stop: &(Mutex<bool>, Condvar)) {
+    let (lock, cv) = (&stop.0, &stop.1);
+    loop {
+        {
+            let Ok(mut stopped) = lock.lock() else { return };
+            while !*stopped {
+                let Ok((guard, timeout)) = cv.wait_timeout(stopped, every) else { return };
+                stopped = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if *stopped {
+                return;
+            }
+        }
+        let status = engine.evaluate_now();
+        if status.worst() != SloState::Ok {
+            crate::log_info!("{}", slo_line(&status));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fabricate a snapshot at a synthetic uptime with given totals.
+    fn snap(at_s: f64, requests: u64, misses: u64, shed: u64) -> RegistrySnapshot {
+        let mut w = WorkerSnapshot {
+            requests,
+            deadline_misses: misses,
+            ..WorkerSnapshot::default()
+        };
+        for _ in 0..requests.min(64) {
+            w.dispatch.record(1_000_000); // 1 ms, comfortably in bound
+        }
+        RegistrySnapshot {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            uptime: Duration::from_secs_f64(at_s),
+            shed_queue_full: shed,
+            workers: vec![w],
+            ..RegistrySnapshot::default()
+        }
+    }
+
+    #[test]
+    fn healthy_stream_stays_ok() {
+        let mut ev = SloEvaluator::new(SloSpec::default());
+        for t in 1..=10 {
+            let status = ev.observe(&snap(t as f64, t * 100, 0, 0));
+            assert_eq!(status.worst(), SloState::Ok, "at t={t}: {status:?}");
+            assert!(status.transitions.is_empty());
+        }
+    }
+
+    #[test]
+    fn miss_storm_transitions_to_critical_once() {
+        let mut ev = SloEvaluator::new(SloSpec::default());
+        for t in 1..=5 {
+            ev.observe(&snap(t as f64, t * 200, 0, 0));
+        }
+        // 400 of the next 500 requests miss their deadline.
+        let status = ev.observe(&snap(6.0, 1500, 400, 0));
+        assert_eq!(status.worst(), SloState::Critical);
+        assert_eq!(status.transitions, vec!["deadline"]);
+        let deadline = &status.objectives[0];
+        assert_eq!(deadline.objective, "deadline");
+        assert!(deadline.burn_fast > 100.0, "burn {}", deadline.burn_fast);
+        assert!(deadline.spike);
+        // Still critical, but no *new* transition.
+        let again = ev.observe(&snap(7.0, 1500, 400, 0));
+        assert_eq!(again.worst(), SloState::Critical);
+        assert!(again.transitions.is_empty());
+    }
+
+    #[test]
+    fn brief_spike_without_slow_confirmation_stays_subcritical() {
+        // A long healthy history dilutes the slow window below warn while
+        // the fast window burns hot: multi-window says not critical.
+        let spec = SloSpec { min_events: 1, ..SloSpec::default() };
+        let mut ev = SloEvaluator::new(spec);
+        for t in 1..=60 {
+            ev.observe(&snap(t as f64, t * 10_000, 0, 0));
+        }
+        // 100 misses in the last 2 s of a 60 s window of ~600k requests:
+        // the fast burn runs hot, the slow burn stays well below warn.
+        ev.observe(&snap(61.0, 610_000, 0, 0));
+        let status = ev.observe(&snap(62.0, 610_100, 100, 0));
+        let deadline = &status.objectives[0];
+        assert!(deadline.burn_fast >= 1.0, "fast burn {}", deadline.burn_fast);
+        assert!(deadline.burn_slow < 1.0, "slow burn {}", deadline.burn_slow);
+        assert_eq!(deadline.state, SloState::Ok);
+    }
+
+    #[test]
+    fn shed_storm_fires_the_shed_objective() {
+        let mut ev = SloEvaluator::new(SloSpec::default());
+        ev.observe(&snap(1.0, 100, 0, 0));
+        let status = ev.observe(&snap(2.0, 150, 0, 500));
+        let shed = status
+            .objectives
+            .iter()
+            .find(|o| o.objective == "shed")
+            .expect("shed objective present");
+        assert_eq!(shed.state, SloState::Critical);
+        assert!(status.transitions.contains(&"shed"));
+    }
+
+    #[test]
+    fn min_events_guards_startup_noise() {
+        let mut ev = SloEvaluator::new(SloSpec::default());
+        ev.observe(&snap(0.1, 0, 0, 0));
+        // 2 requests, 1 miss: catastrophic ratio, but below min_events.
+        let status = ev.observe(&snap(0.2, 2, 1, 0));
+        assert_eq!(status.worst(), SloState::Ok);
+    }
+
+    #[test]
+    fn status_json_and_line_render() {
+        let mut ev = SloEvaluator::new(SloSpec::default());
+        ev.observe(&snap(1.0, 100, 0, 0));
+        let status = ev.observe(&snap(2.0, 300, 150, 0));
+        let j = status.to_json();
+        assert_eq!(j.get("state").and_then(|v| v.as_str()), Some("critical"));
+        let objectives = j.get("objectives").and_then(|v| v.as_arr()).expect("objectives");
+        assert_eq!(objectives.len(), 4);
+        assert_eq!(
+            objectives[0].get("objective").and_then(|v| v.as_str()),
+            Some("deadline")
+        );
+        let line = slo_line(&status);
+        assert!(line.starts_with("slo[heeptimize/tsd-core]: critical"), "{line}");
+        assert!(line.contains("deadline=critical("), "{line}");
+        assert!(status.trigger().contains("deadline"), "{}", status.trigger());
+    }
+
+    #[test]
+    fn engine_latest_and_gauges_agree() {
+        let registry = Arc::new(TelemetryRegistry::new("heeptimize", "tsd-core", 1));
+        let engine = SloEngine::new(SloSpec::default(), registry, None, None);
+        assert!(engine.latest().is_none());
+        assert_eq!(engine.render_gauges(), "");
+        engine.observe(&snap(1.0, 100, 0, 0));
+        engine.observe(&snap(2.0, 300, 150, 0));
+        let latest = engine.latest().expect("latest status");
+        assert_eq!(latest.worst(), SloState::Critical);
+        let gauges = engine.render_gauges();
+        assert!(
+            gauges.contains("medea_slo_state{platform=\"heeptimize\",workload=\"tsd-core\",objective=\"deadline\"} 2"),
+            "{gauges}"
+        );
+        assert!(gauges.contains("window=\"fast\""), "{gauges}");
+        // Every non-comment line parses like the main exposition.
+        for line in gauges.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert!(line.starts_with("medea_slo_"), "bad line: {line}");
+            let (_, value) = line.rsplit_once(' ').expect("value separator");
+            assert!(value.parse::<f64>().is_ok(), "bad value in: {line}");
+        }
+        let j = engine.status_json();
+        assert_eq!(j.get("state").and_then(|v| v.as_str()), Some("critical"));
+    }
+}

@@ -1,0 +1,260 @@
+//! SLO engine + flight recorder integration tests.
+//!
+//! Two scenarios pinned here:
+//!
+//! * **Synthetic deadline storm** — a deterministic snapshot timeline flips
+//!   the deadline objective to `Critical`, emits exactly one rate-limited
+//!   post-mortem bundle (registry snapshot + trace events + the firing
+//!   evaluation), and `/slo` + the Prometheus gauges report the same state.
+//! * **Real overload** — a burst into a tiny admission queue sheds far past
+//!   the ceiling on a live `ServePool`; the engine sees it through real
+//!   registry snapshots, the recorder captures it, and the pool's readiness
+//!   probe still answers once the burst drains.
+
+use medea::eeg::synth::{EegGenerator, SynthConfig};
+use medea::exp::ExpContext;
+use medea::serve::{AtlasConfig, PoolConfig, ScheduleAtlas, ServePool};
+use medea::telemetry::{
+    http_get, scrape, FlightConfig, FlightRecorder, MetricsServer, RegistrySnapshot, SloEngine,
+    SloSpec, SloState, TelemetryConfig, TelemetryRegistry, TraceEventKind, TraceRing,
+    WorkerSnapshot,
+};
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("medea-slo-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn bundle_paths(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+        .expect("postmortem dir readable")
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("postmortem-") && n.ends_with(".json"))
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// A deterministic cumulative-counter timeline, snapshotted at chosen
+/// uptimes — the evaluator sees exactly the windows the test intends.
+struct SyntheticTimeline {
+    totals: WorkerSnapshot,
+}
+
+impl SyntheticTimeline {
+    fn new() -> SyntheticTimeline {
+        SyntheticTimeline { totals: WorkerSnapshot::default() }
+    }
+
+    fn advance(&mut self, add_requests: u64, add_misses: u64) {
+        self.totals.requests += add_requests;
+        self.totals.deadline_misses += add_misses;
+        for _ in 0..add_requests.min(64) {
+            self.totals.dispatch.record(1_000_000); // 1 ms, comfortably in bound
+        }
+    }
+
+    fn at(&self, uptime_s: u64) -> RegistrySnapshot {
+        RegistrySnapshot {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            uptime: Duration::from_secs(uptime_s),
+            workers: vec![self.totals.clone()],
+            ..RegistrySnapshot::default()
+        }
+    }
+}
+
+#[test]
+fn deadline_storm_flips_critical_and_leaves_one_bundle() {
+    let dir = temp_dir("deadline-storm");
+    let flight = Arc::new(
+        FlightRecorder::new(FlightConfig {
+            dir: dir.clone(),
+            min_interval: Duration::from_secs(3600),
+            ..FlightConfig::default()
+        })
+        .expect("recorder"),
+    );
+    let ring = Arc::new(TraceRing::new(64));
+    ring.record(TraceEventKind::Enqueue, 0, 1, 200_000);
+    ring.record(TraceEventKind::Dispatch, 0, 1, 0);
+    let live = Arc::new(TelemetryRegistry::new("heeptimize", "tsd-core", 1));
+    let engine =
+        SloEngine::new(SloSpec::default(), live, Some(ring.clone()), Some(flight.clone()));
+
+    // Five healthy seconds, then one second where 400 of 500 new requests
+    // miss their deadline: burn explodes in both windows.
+    let mut tl = SyntheticTimeline::new();
+    for t in 1..=5u64 {
+        tl.advance(200, 0);
+        let status = engine.observe(&tl.at(t));
+        assert_eq!(status.worst(), SloState::Ok, "healthy at t={t}: {status:?}");
+    }
+    tl.advance(500, 400);
+    let status = engine.observe(&tl.at(6));
+    assert_eq!(status.worst(), SloState::Critical, "{status:?}");
+    assert!(status.transitions.contains(&"deadline"), "{status:?}");
+    assert_eq!(flight.bundles_written(), 1, "the Critical transition must write a bundle");
+
+    // Still burning at t=7: no new transition, and the rate limiter holds
+    // the recorder to the one bundle it already wrote.
+    tl.advance(100, 80);
+    let again = engine.observe(&tl.at(7));
+    assert_eq!(again.worst(), SloState::Critical);
+    assert_eq!(flight.bundles_written(), 1, "rate limiter must suppress the repeat trigger");
+    assert!(flight.suppressed() >= 1);
+    let bundles = bundle_paths(&dir);
+    assert_eq!(bundles.len(), 1, "exactly one bundle on disk: {bundles:?}");
+
+    // The bundle carries all three parts: the firing evaluation, the
+    // registry snapshot, and the trace tail.
+    let doc = medea::util::json::parse(&std::fs::read_to_string(&bundles[0]).expect("read"))
+        .expect("bundle json");
+    assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("medea.postmortem.v1"));
+    assert!(
+        doc.get("trigger").and_then(|v| v.as_str()).expect("trigger").contains("deadline"),
+        "{doc:?}"
+    );
+    let slo = doc.get("slo").expect("firing evaluation embedded");
+    assert_eq!(slo.get("state").and_then(|v| v.as_str()), Some("critical"));
+    let registry = doc.get("registry").expect("registry snapshot embedded");
+    assert_eq!(registry.get("requests").and_then(|v| v.as_u64()), Some(1500));
+    let trace = doc.get("trace").and_then(|v| v.as_arr()).expect("trace events embedded");
+    assert_eq!(trace.len(), 2);
+
+    // `/slo` and the Prometheus gauges report the same Critical state.
+    let server_reg = Arc::new(TelemetryRegistry::new("heeptimize", "tsd-core", 1));
+    let server = MetricsServer::start_with("127.0.0.1:0", server_reg, Some(engine.clone()), None)
+        .expect("bind");
+    let addr = server.addr().to_string();
+    let (code, body) = http_get(&addr, "/slo", Duration::from_secs(2)).expect("GET /slo");
+    assert_eq!(code, 200);
+    let json = medea::util::json::parse(&body).expect("/slo json");
+    assert_eq!(json.get("state").and_then(|v| v.as_str()), Some("critical"));
+    let deadline = json
+        .get("objectives")
+        .and_then(|v| v.as_arr())
+        .and_then(|objs| {
+            objs.iter().find(|o| o.get("objective").and_then(|v| v.as_str()) == Some("deadline"))
+        })
+        .expect("deadline objective in /slo");
+    assert_eq!(deadline.get("state").and_then(|v| v.as_str()), Some("critical"));
+    let metrics = scrape(&addr).expect("scrape");
+    assert!(
+        metrics.contains(
+            "medea_slo_state{platform=\"heeptimize\",workload=\"tsd-core\",objective=\"deadline\"} 2"
+        ),
+        "gauges disagree with /slo:\n{metrics}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One coarse atlas per test binary (correctness is knot-density-free).
+fn shared_atlas() -> &'static ScheduleAtlas {
+    static ATLAS: OnceLock<ScheduleAtlas> = OnceLock::new();
+    ATLAS.get_or_init(|| {
+        let ctx = ExpContext::paper();
+        ScheduleAtlas::build(
+            &ctx.medea(),
+            &ctx.workload,
+            &AtlasConfig {
+                relax_factor: 8.0,
+                growth: 1.5,
+                refine_rel_energy: 0.05,
+                max_knots: 32,
+                ..AtlasConfig::default()
+            },
+        )
+        .unwrap()
+    })
+}
+
+#[test]
+fn real_overload_sheds_past_the_ceiling_and_records() {
+    let dir = temp_dir("overload");
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 1,
+            queue_capacity: 4,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            telemetry: TelemetryConfig { trace_events: 4096 },
+            ..PoolConfig::default()
+        },
+        shared_atlas().clone(),
+    )
+    .unwrap();
+    let flight = Arc::new(
+        FlightRecorder::new(FlightConfig { dir: dir.clone(), ..FlightConfig::default() })
+            .expect("recorder"),
+    );
+    let engine = SloEngine::new(
+        SloSpec::default(),
+        Arc::clone(pool.telemetry()),
+        pool.trace().map(Arc::clone),
+        Some(flight.clone()),
+    );
+    let probe = pool.readiness_probe();
+    assert!(probe().ready, "fresh pool must be ready");
+
+    // Baseline evaluation, then a burst far past the 4-deep queue: most
+    // submissions shed, blowing through the 5% ceiling.
+    assert_eq!(engine.evaluate_now().worst(), SloState::Ok);
+    let floor = shared_atlas().floor();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 17);
+    let mut shed = 0u64;
+    let mut tickets = Vec::new();
+    for _ in 0..200 {
+        match pool.submit(gen.next_window(), floor * 1.5) {
+            Ok(t) => tickets.push(t),
+            Err(_) => shed += 1,
+        }
+    }
+    assert!(shed > 10, "burst did not overload the queue (shed {shed})");
+    for t in tickets {
+        let _ = t.wait();
+    }
+
+    let status = engine.evaluate_now();
+    assert_eq!(status.worst(), SloState::Critical, "{status:?}");
+    let shed_obj = status
+        .objectives
+        .iter()
+        .find(|o| o.objective == "shed")
+        .expect("shed objective evaluated");
+    assert_eq!(shed_obj.state, SloState::Critical, "{status:?}");
+    assert_eq!(flight.bundles_written(), 1);
+    assert_eq!(bundle_paths(&dir).len(), 1);
+
+    // The health surface agrees: /slo critical, shed gauge at 2, and the
+    // drained pool reports ready again.
+    let server = MetricsServer::start_with(
+        "127.0.0.1:0",
+        Arc::clone(pool.telemetry()),
+        Some(engine.clone()),
+        Some(pool.readiness_probe()),
+    )
+    .expect("bind");
+    let addr = server.addr().to_string();
+    let (code, body) = http_get(&addr, "/slo", Duration::from_secs(2)).expect("GET /slo");
+    assert_eq!(code, 200);
+    let json = medea::util::json::parse(&body).expect("/slo json");
+    assert_eq!(json.get("state").and_then(|v| v.as_str()), Some("critical"));
+    let metrics = scrape(&addr).expect("scrape");
+    assert!(
+        metrics.contains("objective=\"shed\"} 2"),
+        "shed gauge must be critical:\n{metrics}"
+    );
+    let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("GET /readyz");
+    assert_eq!(code, 200, "drained pool must be ready again: {body}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

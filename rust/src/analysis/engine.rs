@@ -1,0 +1,668 @@
+//! The lint engine: path scoping, `#[cfg(test)]` tracking, suppression
+//! directives, lock-guard liveness, and the per-line rule checks.
+//!
+//! The engine is deliberately line-oriented (see the caveats on
+//! [`crate::analysis::lexer`]): every check is a substring test over the
+//! lexer's blanked code channel, plus three pieces of file-level state —
+//! brace depth (scopes + `#[cfg(test)]` regions), live lock guards, and the
+//! suppression map. That is enough to machine-check the invariants listed in
+//! [`crate::analysis::rules`] over rustfmt-formatted source, which CI
+//! guarantees this repo is.
+
+use crate::analysis::lexer::{lex, LexedLine};
+use crate::analysis::rules;
+use crate::util::json::{Json, JsonObj};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint violation at a file:line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Display path, `/`-separated, exactly as the lint was invoked.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id from [`rules::ALL`].
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    /// The human-readable one-liner printed by `medea lint`.
+    pub fn display(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Render findings as the stable machine-readable document behind
+/// `medea lint --json`. Key order is fixed (`schema`, `count`, `findings`;
+/// each finding `file`, `line`, `rule`, `message`) so two runs diff cleanly.
+pub fn findings_to_json(findings: &[Finding]) -> String {
+    let mut root = JsonObj::new();
+    root.insert("schema", "medea.lint.v1");
+    root.insert("count", findings.len());
+    let arr: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut o = JsonObj::new();
+            o.insert("file", f.file.as_str());
+            o.insert("line", f.line);
+            o.insert("rule", f.rule);
+            o.insert("message", f.message.as_str());
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("findings", Json::Arr(arr));
+    Json::Obj(root).to_pretty()
+}
+
+/// Lint every `.rs` file under each of `paths` (files or directories).
+///
+/// Directory walks skip `target/`, dot-directories, and `lint_fixtures/`
+/// corpora (which are intentionally dirty) — unless such a directory is the
+/// explicitly given root. Findings come back sorted by (file, line, rule).
+pub fn lint_paths(paths: &[PathBuf]) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut out = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let display = f.to_string_lossy().replace('\\', "/");
+        out.extend(lint_source(&display, &src));
+    }
+    sort_findings(&mut out);
+    Ok(out)
+}
+
+fn sort_findings(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in fs::read_dir(path)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy().into_owned();
+        if entry.file_type()?.is_dir() {
+            if name == "target" || name == "lint_fixtures" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&entry.path(), out)?;
+        } else if name.ends_with(".rs") {
+            out.push(entry.path());
+        }
+    }
+    Ok(())
+}
+
+/// Which rules apply to this file, derived from its display path.
+struct Scope {
+    /// serve/, fleet/, telemetry/ and not under a tests/ directory.
+    no_unwrap: bool,
+    /// serve/pool.rs or fleet/pool.rs.
+    lock_discipline: bool,
+    /// sim/, solver/, manager/, timing/ and not under a tests/ directory.
+    no_wall_clock: bool,
+    /// Not under a tests/ directory (integration tests sleep and lock as
+    /// they please; the unit-test regions inside src files are handled by
+    /// the `#[cfg(test)]` tracker instead).
+    sleep_under_lock: bool,
+}
+
+impl Scope {
+    fn of(display: &str) -> Scope {
+        // Fixture corpora replicate the source layout under a
+        // `lint_fixtures/` root; scope them as if that root were `src/`.
+        let comps: Vec<&str> = match display.rfind("lint_fixtures/") {
+            Some(pos) => display[pos + "lint_fixtures/".len()..].split('/').collect(),
+            None => display.split('/').collect(),
+        };
+        let has = |dir: &str| comps.iter().rev().skip(1).any(|c| *c == dir);
+        let tests_dir = has("tests");
+        let file = comps.last().copied().unwrap_or("");
+        let parent = comps.len().checked_sub(2).map(|i| comps[i]).unwrap_or("");
+        Scope {
+            no_unwrap: !tests_dir && (has("serve") || has("fleet") || has("telemetry")),
+            lock_discipline: file == "pool.rs" && (parent == "serve" || parent == "fleet"),
+            no_wall_clock: !tests_dir
+                && (has("sim") || has("solver") || has("manager") || has("timing")),
+            sleep_under_lock: !tests_dir,
+        }
+    }
+}
+
+const ORDERING_TOKENS: [&str; 5] = [
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+/// Per-line structural facts from the brace/cfg(test) pass.
+struct LineInfo {
+    /// Inside a `#[cfg(test)] { … }` region (including the opening line).
+    test: bool,
+    /// Brace depth at the start of the line.
+    start_depth: usize,
+    /// Minimum depth reached while scanning the line (leading `}`s).
+    min_depth: usize,
+}
+
+/// A live `let`-bound lock guard.
+struct Guard {
+    name: String,
+    /// `start_depth` of the acquiring line: the guard dies when the
+    /// enclosing block closes (depth falls below this).
+    depth: usize,
+    line: usize,
+}
+
+/// Lint one file's source. `display` is the path used in findings *and* for
+/// rule scoping (see [`Scope`]) — callers with synthetic sources pass a
+/// layout-shaped path like `"serve/pool.rs"`.
+pub fn lint_source(display: &str, source: &str) -> Vec<Finding> {
+    let lines = lex(source);
+    let scope = Scope::of(display);
+    let info = structure_pass(&lines);
+    let mut findings = Vec::new();
+    let allow = suppression_pass(display, &lines, &mut findings);
+    let allowed =
+        |idx: usize, rule: &str| allow.get(&idx).is_some_and(|set| set.contains(rule));
+
+    let mut guards: Vec<Guard> = Vec::new();
+    // Memo for ordering-comment run propagation: was line idx an
+    // ordering-bearing line whose justification requirement is satisfied?
+    let mut ordering_ok = vec![false; lines.len()];
+
+    for (idx, line) in lines.iter().enumerate() {
+        let li = &info[idx];
+        let code = line.code.as_str();
+
+        // Guards whose block closed on an earlier line.
+        guards.retain(|g| g.depth <= li.start_depth);
+
+        if !li.test {
+            for name in dropped_names(code) {
+                guards.retain(|g| g.name != name);
+            }
+
+            if scope.sleep_under_lock
+                && code.contains("thread::sleep")
+                && !allowed(idx, rules::SLEEP_UNDER_LOCK)
+            {
+                if let Some(g) = guards.first() {
+                    findings.push(Finding {
+                        file: display.to_string(),
+                        line: line.number,
+                        rule: rules::SLEEP_UNDER_LOCK,
+                        message: format!(
+                            "`thread::sleep` while guard `{}` (line {}) is live",
+                            g.name, g.line
+                        ),
+                    });
+                }
+            }
+
+            let locks = code.matches(".lock(").count();
+            if locks > 0 {
+                if scope.lock_discipline && !allowed(idx, rules::LOCK_DISCIPLINE) {
+                    if let Some(g) = guards.first() {
+                        findings.push(Finding {
+                            file: display.to_string(),
+                            line: line.number,
+                            rule: rules::LOCK_DISCIPLINE,
+                            message: format!(
+                                "`.lock()` while guard `{}` (line {}) is still live — \
+                                 shard locks must never nest",
+                                g.name, g.line
+                            ),
+                        });
+                    } else if locks > 1 {
+                        findings.push(Finding {
+                            file: display.to_string(),
+                            line: line.number,
+                            rule: rules::LOCK_DISCIPLINE,
+                            message: "two lock acquisitions in one statement".to_string(),
+                        });
+                    }
+                }
+                if let Some(name) = let_binding(code) {
+                    // Same-name rebind replaces the tracked guard (the old
+                    // binding is shadowed or was consumed; either way the
+                    // name now refers to the fresh guard).
+                    guards.retain(|g| g.name != name);
+                    guards.push(Guard {
+                        name,
+                        depth: li.start_depth,
+                        line: line.number,
+                    });
+                }
+            }
+        }
+
+        if code.contains("partial_cmp") && !allowed(idx, rules::NO_PARTIAL_CMP) {
+            findings.push(Finding {
+                file: display.to_string(),
+                line: line.number,
+                rule: rules::NO_PARTIAL_CMP,
+                message: "`partial_cmp` is NaN-unsafe; use `total_cmp` \
+                          (a PartialOrd impl delegating to Ord may be suppressed)"
+                    .to_string(),
+            });
+        }
+
+        if scope.no_unwrap && !li.test && !allowed(idx, rules::NO_UNWRAP) {
+            if code.contains(".unwrap()") {
+                findings.push(Finding {
+                    file: display.to_string(),
+                    line: line.number,
+                    rule: rules::NO_UNWRAP,
+                    message: "`.unwrap()` on the serving path can take a worker down; \
+                              bubble the error instead"
+                        .to_string(),
+                });
+            } else if code.contains(".expect(") {
+                findings.push(Finding {
+                    file: display.to_string(),
+                    line: line.number,
+                    rule: rules::NO_UNWRAP,
+                    message: "`.expect(…)` on the serving path; if this is a real \
+                              invariant, add `// lint: allow(no-unwrap): <why>`"
+                        .to_string(),
+                });
+            }
+        }
+
+        if scope.no_wall_clock
+            && !li.test
+            && (code.contains("Instant::now(") || code.contains("SystemTime::now("))
+            && !allowed(idx, rules::NO_WALL_CLOCK)
+        {
+            findings.push(Finding {
+                file: display.to_string(),
+                line: line.number,
+                rule: rules::NO_WALL_CLOCK,
+                message: "wall-clock read in design-time code; thread a simulated \
+                          clock through instead"
+                    .to_string(),
+            });
+        }
+
+        if ORDERING_TOKENS.iter().any(|t| code.contains(t)) {
+            let satisfied = line.comment.contains("ordering:")
+                || comment_block_above_has_ordering(&lines, idx)
+                || (idx > 0 && ordering_ok[idx - 1]);
+            ordering_ok[idx] = satisfied;
+            if !satisfied && !allowed(idx, rules::ORDERING_COMMENT) {
+                findings.push(Finding {
+                    file: display.to_string(),
+                    line: line.number,
+                    rule: rules::ORDERING_COMMENT,
+                    message: "atomic ordering choice without an adjacent \
+                              `// ordering:` justification"
+                        .to_string(),
+                });
+            }
+        }
+
+        // Guards whose block closed *on* this line (trailing `}`s).
+        guards.retain(|g| g.depth <= li.min_depth);
+    }
+
+    sort_findings(&mut findings);
+    findings
+}
+
+/// Brace-depth scan: start/min depth per line plus `#[cfg(test)]` regions.
+fn structure_pass(lines: &[LexedLine]) -> Vec<LineInfo> {
+    let mut depth = 0usize;
+    let mut pending_test_attr = false;
+    // Depth at which the current `#[cfg(test)]` block closes, if inside one.
+    let mut test_until: Option<usize> = None;
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        let start_depth = depth;
+        let mut test = test_until.is_some();
+        if line.code.contains("#[") && line.code.contains("cfg(test)") {
+            pending_test_attr = true;
+        }
+        let mut min_depth = depth;
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    if pending_test_attr {
+                        if test_until.is_none() {
+                            test_until = Some(depth);
+                            test = true;
+                        }
+                        pending_test_attr = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    min_depth = min_depth.min(depth);
+                    if test_until == Some(depth) {
+                        test_until = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push(LineInfo {
+            test,
+            start_depth,
+            min_depth,
+        });
+    }
+    out
+}
+
+/// Parse suppression directives: a comment *beginning* with
+/// `lint: allow(<rule>): <reason>` (after the `//`/`/*` decoration).
+/// Requiring the leading position lets prose *mention* the syntax — as this
+/// doc comment just did — without being parsed as a directive. Well-formed
+/// directives land in the returned line→rules map (a directive on a
+/// comment-only line attaches to the next code line); malformed ones become
+/// [`rules::BAD_SUPPRESSION`] findings.
+fn suppression_pass(
+    display: &str,
+    lines: &[LexedLine],
+    findings: &mut Vec<Finding>,
+) -> BTreeMap<usize, BTreeSet<&'static str>> {
+    let mut allow: BTreeMap<usize, BTreeSet<&'static str>> = BTreeMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let stripped = line
+            .comment
+            .trim_start_matches(|c: char| c == '/' || c == '*' || c == '!' || c.is_whitespace());
+        if !stripped.starts_with("lint: allow(") {
+            continue;
+        }
+        let mut rest = stripped;
+        while let Some(pos) = rest.find("lint: allow(") {
+            rest = &rest[pos + "lint: allow(".len()..];
+            let Some(close) = rest.find(')') else {
+                findings.push(bad_suppression(display, line, "unterminated `allow(`"));
+                break;
+            };
+            let rule_name = rest[..close].trim();
+            rest = &rest[close + 1..];
+            let Some(rule) = rules::ALL.iter().find(|r| r.id == rule_name) else {
+                findings.push(bad_suppression(
+                    display,
+                    line,
+                    &format!("unknown rule `{rule_name}`"),
+                ));
+                continue;
+            };
+            let reason = rest
+                .trim_start()
+                .strip_prefix(':')
+                .map(|r| {
+                    // The reason runs to the next directive on the same
+                    // comment, or to end of comment.
+                    let end = r.find("lint: allow(").unwrap_or(r.len());
+                    r[..end].trim()
+                })
+                .unwrap_or("");
+            if reason.is_empty() {
+                findings.push(bad_suppression(
+                    display,
+                    line,
+                    &format!("suppression of `{}` needs a `: <reason>`", rule.id),
+                ));
+                continue;
+            }
+            if let Some(target) = attach_line(lines, idx) {
+                allow.entry(target).or_default().insert(rule.id);
+            }
+        }
+    }
+    allow
+}
+
+fn bad_suppression(display: &str, line: &LexedLine, why: &str) -> Finding {
+    Finding {
+        file: display.to_string(),
+        line: line.number,
+        rule: rules::BAD_SUPPRESSION,
+        message: why.to_string(),
+    }
+}
+
+/// A directive on a code line guards that line; on a comment-only line it
+/// guards the next code line (skipping the rest of the comment block).
+fn attach_line(lines: &[LexedLine], idx: usize) -> Option<usize> {
+    if lines[idx].has_code() {
+        return Some(idx);
+    }
+    for (j, line) in lines.iter().enumerate().skip(idx + 1) {
+        if line.has_code() {
+            return Some(j);
+        }
+        if !line.has_comment() {
+            return None; // blank line: the directive dangles
+        }
+    }
+    None
+}
+
+/// Does the contiguous comment block directly above line `idx` carry an
+/// `ordering:` justification?
+fn comment_block_above_has_ordering(lines: &[LexedLine], idx: usize) -> bool {
+    for j in (0..idx).rev() {
+        let l = &lines[j];
+        if l.has_code() || !l.has_comment() {
+            return false;
+        }
+        if l.comment.contains("ordering:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Names consumed by a bare `drop(name)` on this line.
+fn dropped_names(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = code;
+    while let Some(pos) = rest.find("drop(") {
+        rest = &rest[pos + "drop(".len()..];
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        // Only a *bare* identifier counts: `drop(guard)` kills the guard,
+        // `drop(cv.wait_timeout(g, d))` does not (the move is visible to a
+        // human, not to a line lexer — rebind or scope-close handles those).
+        if !name.is_empty() && rest[name.len()..].starts_with(')') {
+            out.push(name);
+        }
+    }
+    out
+}
+
+/// The identifier bound by a leading `let [mut] name =`, if any.
+fn let_binding(code: &str) -> Option<String> {
+    let t = code.trim_start().strip_prefix("let ")?.trim_start();
+    let t = t.strip_prefix("mut ").map(str::trim_start).unwrap_or(t);
+    let name: String = t
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(findings: &[Finding]) -> Vec<(usize, &'static str)> {
+        findings.iter().map(|f| (f.line, f.rule)).collect()
+    }
+
+    #[test]
+    fn nan_unsafe_cmp_flagged_everywhere_and_suppressible() {
+        let src = "fn f(a: f64, b: f64) {\n\
+                   let _ = a.partial_cmp(&b);\n\
+                   // lint: allow(no-partial-cmp): trait impl must exist\n\
+                   let _ = a.partial_cmp(&b);\n\
+                   }\n";
+        let f = lint_source("util/x.rs", src);
+        assert_eq!(rules_at(&f), vec![(2, rules::NO_PARTIAL_CMP)]);
+    }
+
+    #[test]
+    fn unwrap_scope_and_test_regions() {
+        let src = "fn f() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn g() { y.unwrap(); z.expect(\"boom\"); }\n\
+                   }\n\
+                   fn h() { w.expect(\"msg\"); }\n";
+        let f = lint_source("serve/pool.rs", src);
+        assert_eq!(
+            rules_at(&f)
+                .into_iter()
+                .filter(|(_, r)| *r == rules::NO_UNWRAP)
+                .collect::<Vec<_>>(),
+            vec![(1, rules::NO_UNWRAP), (6, rules::NO_UNWRAP)]
+        );
+        // Same file outside the scoped directories: no findings.
+        assert!(lint_source("util/x.rs", src)
+            .iter()
+            .all(|f| f.rule != rules::NO_UNWRAP));
+    }
+
+    #[test]
+    fn ordering_comment_adjacency_and_runs() {
+        let src = "fn f(a: &AtomicU64) {\n\
+                   a.load(Ordering::Relaxed); // ordering: counter, no sync\n\
+                   a.load(Ordering::Acquire);\n\
+                   // ordering: the block below publishes the payload\n\
+                   a.store(1, Ordering::Release);\n\
+                   a.store(2, Ordering::Relaxed);\n\
+                   \n\
+                   a.store(3, Ordering::SeqCst);\n\
+                   }\n";
+        let f = lint_source("util/x.rs", src);
+        // Line 3 has no justification and does NOT inherit line 2's
+        // same-line comment? It does: contiguous run propagation.
+        // Lines 5-6 are covered by the block comment; line 8 (after the
+        // blank) is bare.
+        assert_eq!(rules_at(&f), vec![(8, rules::ORDERING_COMMENT)]);
+    }
+
+    #[test]
+    fn lock_discipline_and_sleep() {
+        let src = "fn f(&self) {\n\
+                   let mut st = self.shards[0].queue.lock().unwrap();\n\
+                   std::thread::sleep(d);\n\
+                   let sib = self.shards[1].queue.lock().unwrap();\n\
+                   drop(st);\n\
+                   let ok = self.shards[2].queue.lock().unwrap();\n\
+                   }\n\
+                   fn g(&self) {\n\
+                   let solo = self.state.lock().unwrap();\n\
+                   }\n";
+        let f = lint_source("fleet/pool.rs", src);
+        let got = rules_at(&f);
+        assert!(got.contains(&(3, rules::SLEEP_UNDER_LOCK)));
+        assert!(got.contains(&(4, rules::LOCK_DISCIPLINE)));
+        // Line 6: `st` was dropped, `sib` still live -> still a finding.
+        assert!(got.contains(&(6, rules::LOCK_DISCIPLINE)));
+        // Line 9: fresh scope, no live guard.
+        assert!(!got.contains(&(9, rules::LOCK_DISCIPLINE)));
+    }
+
+    #[test]
+    fn guard_dies_with_its_block() {
+        let src = "fn f(&self) {\n\
+                   {\n\
+                   let st = self.a.lock().unwrap();\n\
+                   }\n\
+                   let other = self.b.lock().unwrap();\n\
+                   }\n";
+        let f = lint_source("serve/pool.rs", src);
+        assert!(f.iter().all(|f| f.rule != rules::LOCK_DISCIPLINE));
+    }
+
+    #[test]
+    fn wall_clock_scoping() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(
+            rules_at(&lint_source("sim/engine.rs", src)),
+            vec![(1, rules::NO_WALL_CLOCK)]
+        );
+        assert!(lint_source("serve/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bad_suppressions_are_findings() {
+        let src = "// lint: allow(not-a-rule): whatever\n\
+                   // lint: allow(no-unwrap)\n\
+                   fn f() {}\n";
+        let f = lint_source("util/x.rs", src);
+        assert_eq!(
+            rules_at(&f),
+            vec![(1, rules::BAD_SUPPRESSION), (2, rules::BAD_SUPPRESSION)]
+        );
+    }
+
+    #[test]
+    fn standalone_suppression_attaches_to_next_code_line() {
+        let src = "fn f(a: f64, b: f64) {\n\
+                   // lint: allow(no-partial-cmp): testing attachment\n\
+                   // (continuation of the comment block)\n\
+                   let _ = a.partial_cmp(&b);\n\
+                   }\n";
+        assert!(lint_source("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_never_trigger() {
+        let src = "fn f() {\n\
+                   let s = \"x.unwrap() partial_cmp Instant::now()\";\n\
+                   // x.unwrap() partial_cmp thread::sleep\n\
+                   }\n";
+        assert!(lint_source("serve/pool.rs", src).is_empty());
+        assert!(lint_source("sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn json_output_is_stable() {
+        let findings = vec![Finding {
+            file: "serve/pool.rs".to_string(),
+            line: 7,
+            rule: rules::NO_UNWRAP,
+            message: "msg".to_string(),
+        }];
+        let doc = findings_to_json(&findings);
+        let schema_pos = doc.find("\"schema\"").expect("schema key");
+        let count_pos = doc.find("\"count\"").expect("count key");
+        let findings_pos = doc.find("\"findings\"").expect("findings key");
+        assert!(schema_pos < count_pos && count_pos < findings_pos);
+        let v = crate::util::json::parse(&doc).expect("parses");
+        assert_eq!(v.get("count").and_then(|c| c.as_usize()), Some(1));
+    }
+}

@@ -1,0 +1,340 @@
+//! A minimal line lexer for Rust source, built for the lint engine.
+//!
+//! The rules in [`crate::analysis::engine`] are substring checks over *code*
+//! text, so the lexer's one job is separating code from everything that
+//! merely looks like code: line comments, (nested) block comments, string
+//! literals, raw strings, byte strings, and character literals. No `syn`, no
+//! grammar — a file-wide state machine that emits, per physical line, the
+//! code text with literal contents blanked to spaces (columns preserved) and
+//! the comment text found on that line.
+//!
+//! Deliberate scope limits, documented because the engine inherits them:
+//! the lexer is line-oriented (a `let g = m.lock()` split across lines by
+//! hand would evade the lock-discipline rule — rustfmt keeps such statements
+//! on one line, and `cargo fmt --check` is enforced in CI), and macro bodies
+//! are treated as ordinary code.
+
+/// One physical source line, split into code and comment channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexedLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code text: literal contents blanked with spaces, comments removed.
+    /// Delimiters (`"`, `'`) survive so the text stays recognizably shaped.
+    pub code: String,
+    /// Comment text on this line (both `//` rest-of-line and the in-line
+    /// slice of a `/* */` block), concatenated in order of appearance.
+    pub comment: String,
+}
+
+impl LexedLine {
+    /// True when the code channel holds anything but whitespace.
+    pub fn has_code(&self) -> bool {
+        !self.code.trim().is_empty()
+    }
+
+    /// True when the comment channel holds anything but whitespace.
+    pub fn has_comment(&self) -> bool {
+        !self.comment.trim().is_empty()
+    }
+}
+
+/// Lexer state carried across physical lines.
+enum State {
+    Normal,
+    /// Inside a block comment; Rust block comments nest, so track depth.
+    BlockComment(u32),
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string `r##"…"##` with this many `#` marks.
+    RawStr(u32),
+}
+
+/// Split `source` into [`LexedLine`]s.
+pub fn lex(source: &str) -> Vec<LexedLine> {
+    let mut state = State::Normal;
+    let mut out = Vec::with_capacity(source.lines().count());
+    for (idx, raw) in source.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            match state {
+                State::BlockComment(depth) => {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::BlockComment(depth + 1);
+                        comment.push_str("/*");
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth <= 1 {
+                            State::Normal
+                        } else {
+                            State::BlockComment(depth - 1)
+                        };
+                        comment.push_str("*/");
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if chars[i] == '\\' {
+                        code.push(' ');
+                        if i + 1 < chars.len() {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    } else if chars[i] == '"' {
+                        code.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    let h = hashes as usize;
+                    let closes = chars[i] == '"'
+                        && (1..=h).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closes {
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        state = State::Normal;
+                        i += 1 + h;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::Normal => {
+                    let c = chars[i];
+                    let prev_ident = i
+                        .checked_sub(1)
+                        .and_then(|p| chars.get(p))
+                        .is_some_and(|p| p.is_alphanumeric() || *p == '_');
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        for &ch in &chars[i..] {
+                            comment.push(ch);
+                        }
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::BlockComment(1);
+                        comment.push_str("/*");
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if (c == 'r' || c == 'b') && !prev_ident {
+                        if let Some(consumed) = raw_or_byte_prefix(&chars, i) {
+                            match consumed {
+                                Prefix::RawStr { skip, hashes } => {
+                                    for &ch in &chars[i..i + skip] {
+                                        code.push(ch);
+                                    }
+                                    state = State::RawStr(hashes);
+                                    i += skip;
+                                }
+                                Prefix::ByteStr { skip } => {
+                                    for &ch in &chars[i..i + skip] {
+                                        code.push(ch);
+                                    }
+                                    state = State::Str;
+                                    i += skip;
+                                }
+                                Prefix::ByteChar => {
+                                    code.push('b');
+                                    i += 1;
+                                    i = consume_char_literal(&chars, i, &mut code);
+                                }
+                            }
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        i = consume_char_literal(&chars, i, &mut code);
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // A line comment or char literal never spans lines; an unterminated
+        // string at end-of-line is malformed input we simply carry forward.
+        out.push(LexedLine {
+            number: idx + 1,
+            code,
+            comment,
+        });
+    }
+    out
+}
+
+enum Prefix {
+    /// `r"`, `r#"`, `br##"`, … — skip the prefix chars, then raw-string mode.
+    RawStr { skip: usize, hashes: u32 },
+    /// `b"` — byte string, same escaping as an ordinary string.
+    ByteStr { skip: usize },
+    /// `b'x'` — byte char literal.
+    ByteChar,
+}
+
+/// Classify a possible raw/byte literal prefix starting at `chars[i]`
+/// (which is `r` or `b`). Returns `None` when it is just an identifier char.
+fn raw_or_byte_prefix(chars: &[char], i: usize) -> Option<Prefix> {
+    let c = chars[i];
+    if c == 'b' {
+        match chars.get(i + 1) {
+            Some('\'') => return Some(Prefix::ByteChar),
+            Some('"') => return Some(Prefix::ByteStr { skip: 2 }),
+            Some('r') => {
+                let mut h = 0usize;
+                while chars.get(i + 2 + h) == Some(&'#') {
+                    h += 1;
+                }
+                if chars.get(i + 2 + h) == Some(&'"') {
+                    return Some(Prefix::RawStr {
+                        skip: 3 + h,
+                        hashes: h as u32,
+                    });
+                }
+                return None;
+            }
+            _ => return None,
+        }
+    }
+    // c == 'r'
+    let mut h = 0usize;
+    while chars.get(i + 1 + h) == Some(&'#') {
+        h += 1;
+    }
+    if chars.get(i + 1 + h) == Some(&'"') {
+        // `r#ident` (raw identifier) has no quote and falls through to None.
+        return Some(Prefix::RawStr {
+            skip: 2 + h,
+            hashes: h as u32,
+        });
+    }
+    None
+}
+
+/// Consume a `'…'` char literal (or decide it is a lifetime) starting at the
+/// opening `'` at `chars[i]`. Pushes blanked text to `code`, returns the new
+/// index.
+fn consume_char_literal(chars: &[char], i: usize, code: &mut String) -> usize {
+    debug_assert_eq!(chars[i], '\'');
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Escaped literal: `'\n'`, `'\''`, `'\u{1F600}'` — skip the
+            // escape head, then blank to the terminating quote.
+            code.push('\'');
+            code.push(' ');
+            code.push(' ');
+            let mut j = i + 3; // opening quote, backslash, escape head
+            while j < chars.len() && chars[j] != '\'' {
+                code.push(' ');
+                j += 1;
+            }
+            if j < chars.len() {
+                code.push('\'');
+                j += 1;
+            }
+            j
+        }
+        Some(_) if chars.get(i + 2) == Some(&'\'') => {
+            // Simple `'x'`.
+            code.push('\'');
+            code.push(' ');
+            code.push('\'');
+            i + 3
+        }
+        _ => {
+            // A lifetime (`'a`) or loop label (`'outer:`) — keep the quote,
+            // the identifier chars flow through the normal path.
+            code.push('\'');
+            i + 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_leave_code_channel() {
+        let lines = lex("let x = 1; // partial_cmp here is commentary\n");
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert!(lines[0].comment.contains("partial_cmp"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let lines = lex("let s = \"call .unwrap() /* not a comment */\";\n");
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(!lines[0].comment.contains("not a comment"));
+        assert!(lines[0].code.starts_with("let s = \""));
+        assert!(lines[0].code.ends_with("\";"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let lines = lex(r#"let s = "a\"b.unwrap()"; let t = 1;"#);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].code.contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_ignore_escapes_and_quotes() {
+        let src = "let s = r#\"no \\ escape \" .unwrap() \"# ; let u = 2;";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].code.contains("let u = 2;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a /* one /* two */ still */ b\nc /* open\nstill comment .unwrap()\n*/ d\n";
+        let codes = code_of(src);
+        assert!(codes[0].contains('a') && codes[0].contains('b'));
+        assert!(codes[1].contains('c') && !codes[1].contains("open"));
+        assert!(codes[2].trim().is_empty());
+        assert!(codes[3].contains('d'));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let lines = lex("fn f<'a>(x: &'a str) -> char { if x == \"y\" { '{' } else { '\\'' } }");
+        // The brace inside the char literal must not leak into code.
+        let opens = lines[0].code.matches('{').count();
+        let closes = lines[0].code.matches('}').count();
+        assert_eq!(opens, closes);
+        assert!(lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn byte_literals() {
+        let lines = lex(r##"let a = b"x.unwrap()"; let c = b'"'; let d = br#"y"#;"##);
+        assert!(!lines[0].code.contains("unwrap"));
+        assert!(lines[0].code.contains("let c ="));
+        assert!(lines[0].code.contains("let d ="));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        let lines = lex("let var = 3; for x in y {}");
+        assert_eq!(lines[0].code, "let var = 3; for x in y {}");
+    }
+}

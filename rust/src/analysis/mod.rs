@@ -1,0 +1,30 @@
+//! Self-hosted static analysis: the `medea lint` engine.
+//!
+//! The serving stack's correctness rests on a handful of invariants that
+//! used to live only in reviewer memory: `total_cmp` everywhere floats are
+//! ordered (the PR-3 NaN sweep), no panicking extractors on the serving
+//! path, a justification next to every atomic-ordering choice, the PR-4
+//! "never hold two shard locks" rule, deterministic design-time code, and
+//! no sleeping under a lock. This module machine-checks all of them — the
+//! same design-time-guarantees philosophy MEDEA applies to timing and
+//! memory constraints, turned on the codebase itself.
+//!
+//! Layout:
+//!
+//! * [`lexer`] — a comment/string/raw-string/char-literal-aware line lexer
+//!   (no `syn`, zero dependencies) that separates code text from comments.
+//! * [`rules`] — the stable rule catalog ([`rules::ALL`]).
+//! * [`engine`] — path scoping, `#[cfg(test)]` and lock-guard tracking,
+//!   `// lint: allow(<rule>): <reason>` suppressions, findings and their
+//!   `--json` rendering.
+//!
+//! The binary front end is `medea lint [--json] [paths…]` (non-zero exit on
+//! findings); `tests/lint_clean.rs` runs the same engine over `src/` in
+//! plain `cargo test`, so tier-1 CI self-gates the repo.
+
+pub mod engine;
+pub mod lexer;
+pub mod rules;
+
+pub use engine::{findings_to_json, lint_paths, lint_source, Finding};
+pub use rules::Rule;

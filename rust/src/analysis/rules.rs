@@ -1,0 +1,96 @@
+//! The lint rule catalog.
+//!
+//! Each rule is a named invariant the serving stack has already been burned
+//! by (see `CHANGES.md` PRs 3–5): the ids are stable — they appear in
+//! findings, in `// lint: allow(<rule>): <reason>` suppressions, and in the
+//! `--json` output that future CI tooling diffs across commits.
+
+/// One lint rule: a stable id plus the sentence shown in `--help`/README.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+    /// Where the rule applies, as prose (the engine encodes the real check).
+    pub scope: &'static str,
+}
+
+/// NaN-unsafe float comparison: `partial_cmp` silently reorders under NaN;
+/// the PR-3 sweep replaced every call site with `total_cmp`.
+pub const NO_PARTIAL_CMP: &str = "no-partial-cmp";
+/// Panicking extractors on the serving path take a pool worker down.
+pub const NO_UNWRAP: &str = "no-unwrap";
+/// Every atomic ordering choice must carry an adjacent `// ordering:`
+/// justification so reviewers inherit the proof, not just the code.
+pub const ORDERING_COMMENT: &str = "ordering-comment";
+/// The PR-4 deadlock-freedom invariant: never a second `.lock()` while a
+/// shard guard is live in the same scope.
+pub const LOCK_DISCIPLINE: &str = "lock-discipline";
+/// Design-time code must be deterministic: no wall-clock reads in the
+/// simulator, solvers, manager, or timing models.
+pub const NO_WALL_CLOCK: &str = "no-wall-clock";
+/// Sleeping while holding a lock turns a pause into a pile-up.
+pub const SLEEP_UNDER_LOCK: &str = "sleep-under-lock";
+/// Meta-rule: a malformed suppression (unknown rule id, or no reason) is
+/// itself a finding — silent blanket allows defeat the audit trail.
+pub const BAD_SUPPRESSION: &str = "bad-suppression";
+
+/// Every rule the engine can emit, in reporting order.
+pub const ALL: [Rule; 7] = [
+    Rule {
+        id: NO_PARTIAL_CMP,
+        summary: "use `total_cmp`, not NaN-unsafe `partial_cmp`",
+        scope: "all source",
+    },
+    Rule {
+        id: NO_UNWRAP,
+        summary: "no `.unwrap()` / `.expect(` on the serving path",
+        scope: "serve/, fleet/, telemetry/ outside tests",
+    },
+    Rule {
+        id: ORDERING_COMMENT,
+        summary: "atomic `Ordering::*` sites need an adjacent `// ordering:` justification",
+        scope: "all source",
+    },
+    Rule {
+        id: LOCK_DISCIPLINE,
+        summary: "no second `.lock()` while a shard guard is live in the same scope",
+        scope: "serve/pool.rs, fleet/pool.rs outside tests",
+    },
+    Rule {
+        id: NO_WALL_CLOCK,
+        summary: "no `Instant::now()` / `SystemTime::now()` in design-time code",
+        scope: "sim/, solver/, manager/, timing/ outside tests",
+    },
+    Rule {
+        id: SLEEP_UNDER_LOCK,
+        summary: "no `thread::sleep` while a lock guard is live",
+        scope: "all source outside tests",
+    },
+    Rule {
+        id: BAD_SUPPRESSION,
+        summary: "`// lint: allow(<rule>): <reason>` needs a known rule and a non-empty reason",
+        scope: "all source",
+    },
+];
+
+/// Is `id` a rule the engine knows (and can therefore be suppressed)?
+pub fn is_known(id: &str) -> bool {
+    ALL.iter().any(|r| r.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_known_and_unique() {
+        for r in &ALL {
+            assert!(is_known(r.id));
+        }
+        let mut ids: Vec<_> = ALL.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), ALL.len());
+        assert!(!is_known("bogus-rule"));
+    }
+}

@@ -299,6 +299,9 @@ impl FleetPool {
                 },
             };
 
+        // ordering: round-robin ticket and depth hints are heuristics for
+        // shard choice only — stale reads just pick a slightly busier
+        // shard; the queue itself is protected by the shard mutex.
         let rr = self.next.fetch_add(1, Ordering::Relaxed);
         let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
         let idx = pick_shard(depths, rr);
@@ -322,6 +325,8 @@ impl FleetPool {
             submitted: Instant::now(),
             reply: tx,
         };
+        // lint: allow(no-unwrap): a poisoned shard means a worker panicked
+        // with the queue in an unknown state; crashing is the safe option.
         let mut st = shard.state.lock().expect("fleet shard lock poisoned");
         if st.stopping {
             drop(st);
@@ -332,6 +337,7 @@ impl FleetPool {
         let capacity = st.queue.capacity();
         match st.queue.push(priority, job) {
             Admission::Accepted => {
+                // ordering: relaxed depth hint, see the shard pick above.
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 drop(st);
                 shard.cv.notify_one();
@@ -341,6 +347,7 @@ impl FleetPool {
                 Ok(FleetTicket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
+                // ordering: relaxed depth hint, see the shard pick above.
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 let reason = Rejection::QueueFull { capacity };
                 self.shed(idx, evicted.id, &reason);
@@ -385,6 +392,7 @@ impl FleetPool {
 
     fn begin_stop(&self) {
         for shard in &self.shards {
+            // lint: allow(no-unwrap): same poisoning rationale as `submit`.
             let mut st = shard.state.lock().expect("fleet shard lock poisoned");
             st.stopping = true;
             drop(st);
@@ -422,6 +430,8 @@ impl FleetPool {
     pub fn shutdown(mut self) -> ServeMetrics {
         self.begin_stop();
         for h in self.workers.drain(..) {
+            // lint: allow(no-unwrap): a panicked worker already lost jobs;
+            // surfacing the panic at shutdown is deliberate.
             h.join().expect("fleet worker panicked");
         }
         ServeMetrics::from_registry(&self.telemetry)
@@ -533,6 +543,7 @@ fn worker_loop(
             // Solo dispatch: the exact legacy path. `process` consumes the
             // job (the entry `Arc` and schedule ride in it) and hands the
             // reply channel back alongside the outcome.
+            // lint: allow(no-unwrap): guarded by the len() == 1 check above.
             let (_, job) = group.into_iter().next().expect("len checked");
             let (reply, outcome) = process(job, runtime.as_mut(), &infer);
             let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);

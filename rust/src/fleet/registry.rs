@@ -63,11 +63,17 @@ impl FleetRegistry {
         // Slot before alias: a name must never resolve to a missing slot.
         let epoch;
         {
+            // lint: allow(no-unwrap): a poisoned registry lock means a
+            // publisher panicked mid-commit; crashing is the safe option.
             let mut slots = self.slots.write().expect("fleet slot lock poisoned");
+            // ordering: SeqCst so the bare `epoch()` read (taken without
+            // the lock) observes allocations in the single global commit
+            // order the write lock establishes for the slots themselves.
             epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
             slots.insert(key, Slot { epoch, entry });
         }
         {
+            // lint: allow(no-unwrap): same poisoning rationale as above.
             let mut names = self.names.write().expect("fleet name lock poisoned");
             names.insert(name, key);
         }
@@ -76,6 +82,7 @@ impl FleetRegistry {
 
     /// Resolve by content key.
     pub fn resolve(&self, key: &FleetKey) -> Option<Resolved> {
+        // lint: allow(no-unwrap): same poisoning rationale as `publish`.
         let slots = self.slots.read().expect("fleet slot lock poisoned");
         slots.get(key).map(|slot| Resolved {
             entry: slot.entry.clone(),
@@ -86,6 +93,7 @@ impl FleetRegistry {
     /// Resolve by (platform preset, workload preset) request tags.
     pub fn resolve_named(&self, platform: &str, workload: &str) -> Option<Resolved> {
         let key = {
+            // lint: allow(no-unwrap): same poisoning rationale as `publish`.
             let names = self.names.read().expect("fleet name lock poisoned");
             *names.get(&alias(platform, workload))?
         };
@@ -94,12 +102,14 @@ impl FleetRegistry {
 
     /// Keys currently published, in order.
     pub fn keys(&self) -> Vec<FleetKey> {
+        // lint: allow(no-unwrap): same poisoning rationale as `publish`.
         let slots = self.slots.read().expect("fleet slot lock poisoned");
         slots.keys().copied().collect()
     }
 
     /// Snapshot of every published entry (arc clones, cheap).
     pub fn entries(&self) -> Vec<Resolved> {
+        // lint: allow(no-unwrap): same poisoning rationale as `publish`.
         let slots = self.slots.read().expect("fleet slot lock poisoned");
         slots
             .values()
@@ -111,6 +121,7 @@ impl FleetRegistry {
     }
 
     pub fn len(&self) -> usize {
+        // lint: allow(no-unwrap): same poisoning rationale as `publish`.
         self.slots.read().expect("fleet slot lock poisoned").len()
     }
 
@@ -120,12 +131,15 @@ impl FleetRegistry {
 
     /// The epoch of the most recent publish (0 when nothing was published).
     pub fn epoch(&self) -> u64 {
+        // ordering: SeqCst pairs with the allocation in `publish` — see
+        // the comment there for the global-order contract.
         self.epoch.load(Ordering::SeqCst)
     }
 
     /// Advance the publish counter to at least `epoch` (used when loading a
     /// persisted library so future publishes continue its epoch sequence).
     pub fn advance_epoch_to(&self, epoch: u64) {
+        // ordering: SeqCst to stay in the same total order as `publish`.
         self.epoch.fetch_max(epoch, Ordering::SeqCst);
     }
 }

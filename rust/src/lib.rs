@@ -56,7 +56,13 @@
 //!   single-worker compatibility wrapper over [`serve`].
 //! * [`exp`] / [`report`] — drivers that regenerate every table and figure of
 //!   the paper's evaluation, and their formatting helpers.
+//! * [`analysis`] — self-hosted static analysis (`medea lint`): a line lexer
+//!   plus rule engine that machine-checks the serving stack's concurrency
+//!   and determinism invariants (NaN-safe comparisons, no panicking
+//!   extractors on the serving path, justified atomic orderings, shard-lock
+//!   discipline, deterministic design-time code).
 
+pub mod analysis;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;

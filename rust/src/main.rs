@@ -141,6 +141,12 @@ fn app() -> App {
                 .opt_default("energy-knots", "Knot cap per energy atlas", "48")
                 .flag("verbose", "Print every entry's knots"),
         )
+        .command(
+            CmdSpec::new("lint", "Run the self-hosted concurrency/determinism lint over Rust sources")
+                .flag("json", "Emit machine-readable findings (stable key order) instead of text")
+                .flag("rules", "List the rule catalog and exit")
+                .variadic("paths", "Files or directories to lint (default: src)"),
+        )
 }
 
 fn main() {
@@ -225,6 +231,7 @@ fn dispatch(name: &str, args: &Args) -> Result<(), String> {
         "health" => cmd_health(args),
         "atlas" => cmd_atlas(args),
         "fleet" => cmd_fleet(args),
+        "lint" => cmd_lint(args),
         other => Err(format!("unhandled command {other}")),
     }
 }
@@ -688,6 +695,37 @@ fn cmd_health(args: &Args) -> Result<(), String> {
         Ok(())
     } else {
         Err(format!("`{addr}` is unhealthy"))
+    }
+}
+
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use medea::analysis::{findings_to_json, lint_paths, rules};
+    if args.flag("rules") {
+        for r in &rules::ALL {
+            println!("{:<18} {}  [{}]", r.id, r.summary, r.scope);
+        }
+        return Ok(());
+    }
+    let paths: Vec<PathBuf> = if args.positionals().is_empty() {
+        vec![PathBuf::from("src")]
+    } else {
+        args.positionals().iter().map(PathBuf::from).collect()
+    };
+    let findings = lint_paths(&paths).map_err(|e| format!("lint: {e}"))?;
+    if args.flag("json") {
+        println!("{}", findings_to_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}", f.display());
+        }
+    }
+    if findings.is_empty() {
+        if !args.flag("json") {
+            println!("lint: clean");
+        }
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s)", findings.len()))
     }
 }
 

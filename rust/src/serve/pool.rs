@@ -270,6 +270,8 @@ pub(crate) fn pop_group<J, K: PartialEq>(
     let shard = &shards[me];
     let can_steal = steal.enabled && shards.len() > 1;
     loop {
+        // lint: allow(no-unwrap): a poisoned shard means a worker panicked
+        // with the queue in an unknown state; crashing is the safe option.
         let mut st = shard.state.lock().expect("shard lock poisoned");
         if !st.queue.is_empty() {
             if batch.max_batch > 1 && !batch.window.is_zero() && !st.stopping {
@@ -296,11 +298,16 @@ pub(crate) fn pop_group<J, K: PartialEq>(
                     st = shard
                         .cv
                         .wait_timeout(st, remaining)
+                        // lint: allow(no-unwrap): same poisoning rationale
+                        // as the acquisition above.
                         .expect("shard lock poisoned")
                         .0;
                 }
             }
             let jobs = st.queue.pop_compatible(batch.max_batch, key, grow);
+            // ordering: the depth mirror is a lock-free steal heuristic;
+            // stale values only misrank victims, the steal itself re-reads
+            // the queue under the victim's lock.
             shard.depth.store(st.queue.len(), Ordering::Relaxed);
             return Some(PoppedGroup { jobs, stolen: false });
         }
@@ -313,6 +320,7 @@ pub(crate) fn pop_group<J, K: PartialEq>(
                 return Some(PoppedGroup { jobs, stolen: true });
             }
         }
+        // lint: allow(no-unwrap): same poisoning rationale as above.
         let st = shard.state.lock().expect("shard lock poisoned");
         if !st.queue.is_empty() || st.stopping {
             continue;
@@ -322,8 +330,10 @@ pub(crate) fn pop_group<J, K: PartialEq>(
             // notifies this shard's condvar, so an idle thief re-samples
             // sibling depth mirrors on a timeout instead of sleeping
             // indefinitely.
+            // lint: allow(no-unwrap): same poisoning rationale as above.
             drop(shard.cv.wait_timeout(st, steal.poll).expect("shard lock poisoned"));
         } else {
+            // lint: allow(no-unwrap): same poisoning rationale as above.
             drop(shard.cv.wait(st).expect("shard lock poisoned"));
         }
     }
@@ -347,12 +357,15 @@ fn try_steal<J, K: PartialEq>(
         .iter()
         .enumerate()
         .filter(|(i, _)| *i != me)
+        // ordering: depth mirrors are victim-ranking heuristics; the
+        // actual steal re-reads the queue under the victim's lock below.
         .map(|(i, s)| (s.depth.load(Ordering::Relaxed), i))
         .filter(|&(depth, _)| depth > 0)
         .collect();
     victims.sort_unstable_by(|a, b| b.0.cmp(&a.0));
     for (_, v) in victims {
         let victim = &shards[v];
+        // lint: allow(no-unwrap): same poisoning rationale as `pop_group`.
         let mut st = victim.state.lock().expect("shard lock poisoned");
         // A head still inside the configured fill window is being held for
         // stragglers on purpose, not stranded: its own worker (or a later
@@ -369,6 +382,7 @@ fn try_steal<J, K: PartialEq>(
             }
         }
         let jobs = st.queue.pop_compatible(batch.max_batch, key, grow);
+        // ordering: relaxed depth mirror refresh, see the victim scan.
         victim.depth.store(st.queue.len(), Ordering::Relaxed);
         drop(st);
         if !jobs.is_empty() {
@@ -567,6 +581,9 @@ impl ServePool {
         window: EegWindow,
         deadline: Time,
     ) -> std::result::Result<Ticket, Rejection> {
+        // ordering: round-robin ticket and depth hints are heuristics for
+        // shard choice only — stale reads just pick a slightly busier
+        // shard; the queue itself is protected by the shard mutex.
         let rr = self.next.fetch_add(1, Ordering::Relaxed);
         let depths = self.shards.iter().map(|s| s.depth.load(Ordering::Relaxed));
         self.submit_pinned(pick_shard(depths, rr), window, deadline)
@@ -600,6 +617,7 @@ impl ServePool {
             submitted: Instant::now(),
             reply: tx,
         };
+        // lint: allow(no-unwrap): same poisoning rationale as `pop_group`.
         let mut st = shard.state.lock().expect("shard lock poisoned");
         if st.stopping {
             drop(st);
@@ -611,6 +629,7 @@ impl ServePool {
         let capacity = st.queue.capacity();
         match st.queue.push(deadline, job) {
             Admission::Accepted => {
+                // ordering: relaxed depth hint, see `submit`.
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 drop(st);
                 shard.cv.notify_one();
@@ -620,6 +639,7 @@ impl ServePool {
                 Ok(Ticket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
+                // ordering: relaxed depth hint, see `submit`.
                 shard.depth.store(st.queue.len(), Ordering::Relaxed);
                 let reason = Rejection::QueueFull { capacity };
                 self.telemetry.record_shed(&reason);
@@ -661,6 +681,8 @@ impl ServePool {
 
     fn begin_stop(&self) {
         for shard in &self.shards {
+            // lint: allow(no-unwrap): same poisoning rationale as
+            // `pop_group`.
             let mut st = shard.state.lock().expect("shard lock poisoned");
             st.stopping = true;
             drop(st);
@@ -700,6 +722,8 @@ impl ServePool {
     pub fn shutdown(mut self) -> ServeMetrics {
         self.begin_stop();
         for h in self.workers.drain(..) {
+            // lint: allow(no-unwrap): a panicked worker already lost jobs;
+            // surfacing the panic at shutdown is deliberate.
             h.join().expect("serve worker panicked");
         }
         ServeMetrics::from_registry(&self.telemetry)
@@ -724,12 +748,16 @@ pub(crate) fn readiness_probe_over<J: Send + 'static>(
         let mut depth = 0usize;
         let mut cap = 0usize;
         for shard in &shards {
+            // lint: allow(no-unwrap): same poisoning rationale as
+            // `pop_group`.
             let st = shard.state.lock().expect("shard lock poisoned");
             if st.stopping {
                 return crate::telemetry::Readiness::unready("pool stopping");
             }
             cap += st.queue.capacity();
             drop(st);
+            // ordering: relaxed depth hint; readiness is advisory and a
+            // slightly stale total is fine.
             depth += shard.depth.load(Ordering::Relaxed);
         }
         let watermark = (cap * 9 / 10).max(1);
@@ -825,6 +853,8 @@ fn worker_loop(
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path (per-member deadline
             // stamping + LRU-cached schedules).
+            // lint: allow(no-unwrap): guarded by the len() == 1 check
+            // above.
             let (_, job) = group.into_iter().next().expect("len checked");
             let outcome = process(&job, ctx, atlas, &mut schedules, runtime.as_mut(), &infer);
             let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);
@@ -969,6 +999,7 @@ fn process(
         schedule.deadline = job.deadline;
         schedules.insert(key, (schedule, knot.deadline));
     }
+    // lint: allow(no-unwrap): the branch above inserts the key when absent.
     let (schedule, knot_deadline) = schedules.get(&key).expect("just inserted");
     let knot_deadline = *knot_deadline;
 

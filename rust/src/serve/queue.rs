@@ -121,6 +121,8 @@ impl<T> Ord for Entry<T> {
 }
 
 impl<T> PartialOrd for Entry<T> {
+    // lint: allow(no-partial-cmp): canonical PartialOrd delegating to the
+    // total `Ord` above (which uses total_cmp); never NaN-lossy.
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
@@ -215,6 +217,8 @@ impl<T> EdfQueue<T> {
                         .then_with(|| a.seq.cmp(&b.seq))
                 })
                 .map(|(i, _)| i)
+                // lint: allow(no-unwrap): the enclosing branch only runs
+                // when the queue is full, so `entries` is non-empty.
                 .expect("full queue has entries");
             let evicted = entries.swap_remove(drop_pos);
             self.heap = BinaryHeap::from(entries);
@@ -282,6 +286,8 @@ impl<T> EdfQueue<T> {
             if !grow(&group, next.deadline, &next.item) {
                 break;
             }
+            // lint: allow(no-unwrap): peek above returned Some and the
+            // heap is not touched in between.
             let e = self.heap.pop().expect("peeked entry exists");
             group.push((e.deadline, e.item));
         }

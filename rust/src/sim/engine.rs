@@ -37,6 +37,8 @@ struct HeapEntry {
 }
 impl Eq for HeapEntry {}
 impl PartialOrd for HeapEntry {
+    // lint: allow(no-partial-cmp): canonical PartialOrd delegating to the
+    // total `Ord` below (which uses total_cmp); never NaN-lossy.
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }

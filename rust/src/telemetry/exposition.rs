@@ -359,6 +359,9 @@ impl MetricsServer {
 
 impl Drop for MetricsServer {
     fn drop(&mut self) {
+        // ordering: plain shutdown flag with no payload protocol — the
+        // accept loop only polls it, and the wake-up connection below is
+        // what actually delivers the signal promptly.
         self.stop.store(true, Ordering::Relaxed);
         // Unblock the accept loop by connecting to it once ourselves.
         let mut wake = self.addr;
@@ -375,6 +378,7 @@ impl Drop for MetricsServer {
 
 fn serve_loop(listener: &TcpListener, routes: &Routes, stop: &AtomicBool) {
     for conn in listener.incoming() {
+        // ordering: relaxed shutdown poll, see `MetricsServer::drop`.
         if stop.load(Ordering::Relaxed) {
             break;
         }
@@ -622,6 +626,7 @@ mod tests {
         let probe: ReadinessProbe = {
             let saturated = saturated.clone();
             Arc::new(move || {
+                // ordering: independent test flag, no publication needed.
                 if saturated.load(Ordering::Relaxed) {
                     Readiness::unready("queue 256/256")
                 } else {
@@ -635,6 +640,7 @@ mod tests {
         let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("http");
         assert_eq!(code, 200);
         assert!(body.contains("queue 0/256"), "{body}");
+        // ordering: independent test flag, see the probe closure above.
         saturated.store(true, Ordering::Relaxed);
         let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("http");
         assert_eq!(code, 503);

@@ -86,11 +86,13 @@ impl FlightRecorder {
 
     /// Bundles written so far.
     pub fn bundles_written(&self) -> u64 {
+        // ordering: relaxed monotone diagnostic counter, no payload.
         self.written.load(Ordering::Relaxed)
     }
 
     /// Triggers swallowed by the rate limiter so far.
     pub fn suppressed(&self) -> u64 {
+        // ordering: relaxed monotone diagnostic counter, no payload.
         self.suppressed.load(Ordering::Relaxed)
     }
 
@@ -106,9 +108,12 @@ impl FlightRecorder {
         trace: &[TraceEvent],
     ) -> Option<PathBuf> {
         let seq = {
+            // lint: allow(no-unwrap): poisoned state lock means a panic
+            // mid-bundle; propagating the panic is the correct response.
             let mut st = self.state.lock().expect("flight state lock poisoned");
             if let Some(last) = st.last_write {
                 if last.elapsed() < self.cfg.min_interval {
+                    // ordering: relaxed counter, see `suppressed`.
                     self.suppressed.fetch_add(1, Ordering::Relaxed);
                     return None;
                 }
@@ -132,6 +137,7 @@ impl FlightRecorder {
             let _ = std::fs::remove_file(&tmp);
             return None;
         }
+        // ordering: relaxed counter, see `bundles_written`.
         self.written.fetch_add(1, Ordering::Relaxed);
         crate::log_info!("flight recorder: {trigger} -> {}", path.display());
         self.prune();

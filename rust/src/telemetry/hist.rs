@@ -229,6 +229,10 @@ impl AtomicHist {
     }
 
     pub fn record(&self, v: u64) {
+        // ordering: each field is an independent monotone accumulator and
+        // readers (`snapshot`) are explicitly tolerant of straddled,
+        // non-linearizable views, so relaxed RMWs are sufficient — there
+        // is no cross-field invariant a stronger ordering would protect.
         self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
@@ -241,10 +245,13 @@ impl AtomicHist {
     /// valid histogram of a prefix-plus-some of the stream (normalized so
     /// `min ≤ max` even mid-first-record).
     pub fn snapshot(&self) -> HistData {
+        // ordering: relaxed statistical reads, mirroring `record` — see
+        // the doc comment above for why a straddled view is acceptable.
         let count = self.count.load(Ordering::Relaxed);
         if count == 0 {
             return HistData::default();
         }
+        // ordering: relaxed snapshot reads, see above.
         let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         let sum = self.sum.load(Ordering::Relaxed);
         let max = self.max.load(Ordering::Relaxed);
@@ -362,9 +369,21 @@ mod tests {
     fn quantile_relative_error_bound_over_random_streams() {
         const OVERFLOW: u64 = 1 << 43;
         let quantiles = [1.0, 5.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9];
-        for seed in [3u64, 77, 4242, 987_654_321] {
+        // Miri executes each recorded sample ~1000x slower; one seed and
+        // shorter streams still exercise every bucket region.
+        let seeds: &[u64] = if cfg!(miri) {
+            &[3]
+        } else {
+            &[3, 77, 4242, 987_654_321]
+        };
+        let shapes: &[(usize, u64)] = if cfg!(miri) {
+            &[(33, 31), (200, u64::MAX)]
+        } else {
+            &[(33, 31), (500, 100_000), (2000, u64::MAX)]
+        };
+        for &seed in seeds {
             let mut rng = seed;
-            for (len, spread) in [(33usize, 31u64), (500, 100_000), (2000, u64::MAX)] {
+            for &(len, spread) in shapes {
                 let mut h = AtomicHist::new();
                 let mut sorted: Vec<u64> = (0..len)
                     .map(|_| {

@@ -90,14 +90,21 @@ impl WorkerShard {
         active_s: f64,
         host: Duration,
     ) {
+        // ordering: every counter in this impl is an independent relaxed
+        // monotone count. Snapshot readers tolerate cross-counter skew by
+        // design (deltas saturate, hit rates are ratios of large counts),
+        // so no release/acquire pairing is needed anywhere in this shard.
         self.requests.fetch_add(1, Ordering::Relaxed);
         if seizure {
+            // ordering: relaxed counter, see `record`.
             self.seizures.fetch_add(1, Ordering::Relaxed);
         }
         if !deadline_met {
+            // ordering: relaxed counter, see `record`.
             self.deadline_misses.fetch_add(1, Ordering::Relaxed);
         }
         let nj = joules_nj(energy_j);
+        // ordering: relaxed counters, see `record`.
         self.sim_energy_nj.fetch_add(nj, Ordering::Relaxed);
         self.sim_active_ns.fetch_add(secs_ns(active_s), Ordering::Relaxed);
         self.energy.record(nj);
@@ -107,11 +114,13 @@ impl WorkerShard {
     /// Record one dispatch of `size` coalesced requests (1 = solo).
     pub fn record_batch(&self, size: usize) {
         let slot = size.clamp(1, BATCH_SLOTS) - 1;
+        // ordering: relaxed counter, see `record`.
         self.batch_hist[slot].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one steal event of `size` coalesced requests.
     pub fn record_steal(&self, size: usize) {
+        // ordering: relaxed counters, see `record`.
         self.steals.fetch_add(1, Ordering::Relaxed);
         self.stolen_requests.fetch_add(size.max(1) as u64, Ordering::Relaxed);
     }
@@ -132,12 +141,17 @@ impl WorkerShard {
     }
 
     pub fn snapshot(&self) -> WorkerSnapshot {
-        let mut batch_hist: Vec<u64> =
-            self.batch_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        // ordering: relaxed reads of relaxed counters, see `record` — the
+        // snapshot is a statistically consistent view, not a linearizable
+        // one; each counter is individually monotone, which is all the
+        // delta arithmetic downstream (SLO windows, rates) relies on.
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mut batch_hist: Vec<u64> = self.batch_hist.iter().map(load).collect();
         while batch_hist.last() == Some(&0) {
             batch_hist.pop();
         }
         WorkerSnapshot {
+            // ordering: relaxed snapshot reads, see above.
             requests: self.requests.load(Ordering::Relaxed),
             seizures: self.seizures.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
@@ -271,6 +285,8 @@ impl TelemetryRegistry {
 
     /// Allocate the next request id (1-based, threaded through traces).
     pub fn next_request_id(&self) -> u64 {
+        // ordering: fetch_add is atomic regardless of ordering, so every
+        // caller still gets a unique id; ids carry no payload protocol.
         self.req_seq.fetch_add(1, Ordering::Relaxed) + 1
     }
 
@@ -286,6 +302,7 @@ impl TelemetryRegistry {
             Rejection::UnknownEntry { .. } => &self.shed_unknown_entry,
             Rejection::ShuttingDown => &self.shed_shutting_down,
         };
+        // ordering: relaxed monotone counter, same contract as WorkerShard.
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -298,6 +315,8 @@ impl TelemetryRegistry {
             platform: self.platform.clone(),
             workload: self.workload.clone(),
             uptime: self.started.elapsed(),
+            // ordering: relaxed statistical snapshot reads, same contract
+            // as `WorkerShard::snapshot`.
             shed_below_floor: self.shed_below_floor.load(Ordering::Relaxed),
             shed_queue_full: self.shed_queue_full.load(Ordering::Relaxed),
             shed_unknown_entry: self.shed_unknown_entry.load(Ordering::Relaxed),
@@ -463,6 +482,8 @@ mod tests {
                 let stop = stop.clone();
                 std::thread::spawn(move || {
                     let mut n = 0u64;
+                    // ordering: plain shutdown flag; no data is published
+                    // through it, so relaxed polling is enough.
                     while !stop.load(std::sync::atomic::Ordering::Relaxed) {
                         reg.worker(w).record(
                             n % 7 == 0,
@@ -481,11 +502,16 @@ mod tests {
             })
             .collect();
 
-        let mut snaps = Vec::with_capacity(32);
-        for _ in 0..32 {
+        // Under Miri every snapshot/sleep round-trip is orders of magnitude
+        // slower, so take far fewer snapshots there (requires
+        // `-Zmiri-disable-isolation` for `thread::sleep` / `Instant`).
+        const SNAPS: usize = if cfg!(miri) { 6 } else { 32 };
+        let mut snaps = Vec::with_capacity(SNAPS);
+        for _ in 0..SNAPS {
             snaps.push(reg.snapshot());
             std::thread::sleep(Duration::from_millis(1));
         }
+        // ordering: relaxed shutdown flag, see the recorder loop above.
         stop.store(true, std::sync::atomic::Ordering::Relaxed);
         for h in workers {
             h.join().expect("recorder thread panicked");

@@ -439,6 +439,8 @@ impl SloEngine {
     /// snapshot).
     pub fn observe(&self, snap: &RegistrySnapshot) -> SloStatus {
         let status = {
+            // lint: allow(no-unwrap): poisoning means an evaluator panicked
+            // mid-update; SLO state is then untrustworthy, so propagate.
             let mut ev = self.evaluator.lock().expect("slo evaluator lock poisoned");
             ev.observe(snap)
         };
@@ -448,12 +450,14 @@ impl SloEngine {
                 flight.record(&status.trigger(), status.to_json(), snap, &events);
             }
         }
+        // lint: allow(no-unwrap): same poisoning rationale as above.
         *self.latest.lock().expect("slo latest lock poisoned") = Some(status.clone());
         status
     }
 
     /// The most recent evaluation, if any ran yet.
     pub fn latest(&self) -> Option<SloStatus> {
+        // lint: allow(no-unwrap): same poisoning rationale as `observe`.
         self.latest.lock().expect("slo latest lock poisoned").clone()
     }
 

@@ -6,11 +6,15 @@
 //! long-running pool keeps the most recent `capacity` events.
 //!
 //! Publication uses a per-slot sequence word (seqlock style): the writer
-//! zeroes it, writes the payload, then stores the new nonzero sequence with
-//! `Release`; a reader that sees the same nonzero sequence (`Acquire`)
-//! before and after its payload reads observed a consistent event, and drops
-//! the slot otherwise. Reads are best-effort by design — tracing must never
-//! stall the dispatch path.
+//! zeroes it, writes the payload with `Release` stores, then stores the new
+//! nonzero sequence with `Release`; a reader that sees the same nonzero
+//! sequence before and after its `Acquire` payload loads observed a
+//! consistent event, and drops the slot otherwise. The payload accesses
+//! themselves carry `Release`/`Acquire` (not `Relaxed`): that is what makes
+//! the zeroed sequence word visible to any reader that observes a torn
+//! payload value, so the re-check catches it — see the `ordering:` notes in
+//! [`TraceRing::record`] and [`TraceRing::events`]. Reads are best-effort by
+//! design — tracing must never stall the dispatch path.
 //!
 //! [`TraceRing::to_chrome_json`] renders the surviving events as a
 //! chrome://tracing (about://tracing, Perfetto) loadable JSON document with
@@ -126,19 +130,36 @@ impl TraceRing {
 
     /// Total events ever recorded (recorded − capacity ≈ overwritten).
     pub fn recorded(&self) -> u64 {
+        // ordering: monotone statistic — no payload is read through this
+        // value, so no synchronization is needed.
         self.cursor.load(Ordering::Relaxed)
     }
 
     pub fn record(&self, kind: TraceEventKind, worker: u32, req: u64, arg: u64) {
+        // ordering: the cursor is only a ticket dispenser; slot publication
+        // below carries all reader-visible ordering.
         let n = self.cursor.fetch_add(1, Ordering::Relaxed);
         let slot = &self.slots[(n % self.slots.len() as u64) as usize];
         let ts = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
         // Invalidate, write payload, publish: see the module docs.
-        slot.seq.store(0, Ordering::Release);
-        slot.ts_ns.store(ts, Ordering::Relaxed);
-        slot.meta.store(kind as u64 | (u64::from(worker) << 8), Ordering::Relaxed);
-        slot.req.store(req, Ordering::Relaxed);
-        slot.arg.store(arg, Ordering::Relaxed);
+        //
+        // ordering: seqlock write side. The zero-store needs no ordering of
+        // its own (Relaxed): each payload store below is Release, which
+        // keeps the invalidation ordered before the payload value any
+        // reader can observe — a reader that Acquire-loads a torn payload
+        // value synchronizes with that store, sees seq = 0 (or a later
+        // seq) on its re-check, and discards the slot. (The earlier scheme
+        // — Release zero-store, Relaxed payload stores — did NOT give this:
+        // a Release store only orders *prior* accesses, so the payload
+        // stores could become visible before the invalidation and a reader
+        // could pass both seq checks around a torn read.) The final
+        // nonzero-seq store is Release so a reader whose first seq load
+        // acquires it also observes the complete payload.
+        slot.seq.store(0, Ordering::Relaxed);
+        slot.ts_ns.store(ts, Ordering::Release);
+        slot.meta.store(kind as u64 | (u64::from(worker) << 8), Ordering::Release);
+        slot.req.store(req, Ordering::Release);
+        slot.arg.store(arg, Ordering::Release);
         slot.seq.store(n + 1, Ordering::Release);
     }
 
@@ -146,14 +167,24 @@ impl TraceRing {
     pub fn events(&self) -> Vec<TraceEvent> {
         let mut out = Vec::with_capacity(self.slots.len());
         for slot in self.slots.iter() {
+            // ordering: seqlock read side — see `record`. Acquiring the
+            // first seq load pairs with the writer's publishing store: a
+            // nonzero value here means the matching payload is visible.
             let s1 = slot.seq.load(Ordering::Acquire);
             if s1 == 0 {
                 continue;
             }
-            let ts_ns = slot.ts_ns.load(Ordering::Relaxed);
-            let meta = slot.meta.load(Ordering::Relaxed);
-            let req = slot.req.load(Ordering::Relaxed);
-            let arg = slot.arg.load(Ordering::Relaxed);
+            // ordering: Acquire payload loads pair with the writer's
+            // Release payload stores; observing any in-progress value makes
+            // that writer's seq = 0 invalidation visible to the re-check
+            // below, which then fails s1 == s2. They also pin the re-check:
+            // an Acquire load forbids later operations from hoisting above
+            // it, so s2 cannot be read before the payload.
+            let ts_ns = slot.ts_ns.load(Ordering::Acquire);
+            let meta = slot.meta.load(Ordering::Acquire);
+            let req = slot.req.load(Ordering::Acquire);
+            let arg = slot.arg.load(Ordering::Acquire);
+            // ordering: re-check — see the notes on the loads above.
             let s2 = slot.seq.load(Ordering::Acquire);
             if s1 != s2 {
                 continue; // torn by a concurrent wrap-around write
@@ -268,18 +299,23 @@ mod tests {
     #[test]
     fn concurrent_writers_never_corrupt_readers() {
         use std::sync::Arc;
+        // Under Miri the interpreter costs ~3 orders of magnitude; keep the
+        // shape (4 writers, concurrent scans, several wrap-arounds of the
+        // 128-slot ring) but shrink the volume so the job finishes.
+        const WRITES: u64 = if cfg!(miri) { 200 } else { 2_000 };
+        const SCANS: usize = if cfg!(miri) { 8 } else { 50 };
         let ring = Arc::new(TraceRing::new(128));
         let writers: Vec<_> = (0..4)
             .map(|w| {
                 let ring = ring.clone();
                 std::thread::spawn(move || {
-                    for i in 0..2_000u64 {
+                    for i in 0..WRITES {
                         ring.record(TraceEventKind::Dispatch, w, i, 1);
                     }
                 })
             })
             .collect();
-        for _ in 0..50 {
+        for _ in 0..SCANS {
             for e in ring.events() {
                 assert_eq!(e.kind, TraceEventKind::Dispatch);
                 assert!(e.worker < 4 && e.arg == 1);
@@ -288,7 +324,7 @@ mod tests {
         for t in writers {
             t.join().expect("writer thread");
         }
-        assert_eq!(ring.recorded(), 8_000);
+        assert_eq!(ring.recorded(), 4 * WRITES);
         assert_eq!(ring.events().len(), 128);
     }
 }

@@ -23,6 +23,10 @@ pub struct CmdSpec {
     pub about: &'static str,
     pub opts: Vec<OptSpec>,
     pub positionals: Vec<(&'static str, &'static str)>,
+    /// A trailing repeatable positional (`medea lint [paths…]`): extra
+    /// positionals beyond the declared ones are collected instead of
+    /// rejected.
+    pub variadic: Option<(&'static str, &'static str)>,
 }
 
 impl CmdSpec {
@@ -75,6 +79,12 @@ impl CmdSpec {
         self
     }
 
+    /// Accept any number of trailing positionals under one name.
+    pub fn variadic(mut self, name: &'static str, help: &'static str) -> Self {
+        self.variadic = Some((name, help));
+        self
+    }
+
     fn find(&self, name: &str) -> Option<&OptSpec> {
         self.opts.iter().find(|o| o.name == name)
     }
@@ -88,11 +98,17 @@ impl CmdSpec {
         for (p, _) in &self.positionals {
             s.push_str(&format!(" <{p}>"));
         }
+        if let Some((p, _)) = self.variadic {
+            s.push_str(&format!(" [{p}…]"));
+        }
         s.push('\n');
-        if !self.positionals.is_empty() {
+        if !self.positionals.is_empty() || self.variadic.is_some() {
             s.push_str("\nArguments:\n");
             for (p, h) in &self.positionals {
                 s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+            if let Some((p, h)) = self.variadic {
+                s.push_str(&format!("  [{p}…]  {h}\n"));
             }
         }
         if !self.opts.is_empty() {
@@ -155,6 +171,12 @@ impl Args {
 
     pub fn positional(&self, idx: usize) -> Option<&str> {
         self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    /// Every positional in order (declared ones first, then the variadic
+    /// tail).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
     }
 
     /// Parse a comma-separated list of f64 (e.g. `--deadlines 50,200,1000`).
@@ -292,7 +314,7 @@ impl App {
             i += 1;
         }
 
-        if args.positionals.len() > spec.positionals.len() {
+        if spec.variadic.is_none() && args.positionals.len() > spec.positionals.len() {
             return Err(CliError {
                 msg: format!(
                     "too many positional arguments for `{cmd_name}` (expected {})",
@@ -379,6 +401,34 @@ mod tests {
             panic!()
         };
         assert!(h.contains("schedule"));
+    }
+
+    #[test]
+    fn variadic_collects_trailing_positionals() {
+        let app = App::new("medea", "m").command(
+            CmdSpec::new("lint", "Lint")
+                .flag("json", "JSON output")
+                .variadic("paths", "Files or directories"),
+        );
+        let Parsed::Command(_, args) = app
+            .parse(&sv(&["lint", "--json", "src", "tests", "benches"]))
+            .unwrap()
+        else {
+            panic!()
+        };
+        assert!(args.flag("json"));
+        let got: Vec<&str> = args.positionals().iter().map(|s| s.as_str()).collect();
+        assert_eq!(got, vec!["src", "tests", "benches"]);
+        // Zero trailing positionals is fine too.
+        let Parsed::Command(_, args) = app.parse(&sv(&["lint"])).unwrap() else {
+            panic!()
+        };
+        assert!(args.positionals().is_empty());
+        // Help renders the variadic argument.
+        let Parsed::Help(h) = app.parse(&sv(&["lint", "--help"])).unwrap() else {
+            panic!()
+        };
+        assert!(h.contains("[paths…]"));
     }
 
     #[test]

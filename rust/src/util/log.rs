@@ -35,11 +35,15 @@ static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 
 /// Set the maximum emitted level.
 pub fn set_max_level(level: Level) {
+    // ordering: the level is a single self-contained u8 — readers that
+    // race with a change may emit (or skip) one message at the old level,
+    // which is harmless, so no release/acquire pairing is needed.
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
 /// Whether a message at `level` would be emitted.
 pub fn enabled(level: Level) -> bool {
+    // ordering: relaxed read of the standalone level, see `set_max_level`.
     level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 

@@ -1,0 +1,20 @@
+//! The repo-wide gate behind the `medea lint` tentpole: the entire `src/`
+//! tree must lint clean in every plain `cargo test` run, so a new
+//! unjustified atomic ordering, serving-path `.unwrap()`, nested shard
+//! lock, or design-time wall-clock read fails CI without anyone having to
+//! remember to run the linter.
+
+use medea::analysis::lint_paths;
+use std::path::PathBuf;
+
+#[test]
+fn repo_sources_lint_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_paths(&[src]).expect("walking rust/src");
+    let rendered: Vec<String> = findings.iter().map(|f| f.display()).collect();
+    assert!(
+        findings.is_empty(),
+        "`medea lint` must be clean over src/ — fix or justify:\n{}",
+        rendered.join("\n")
+    );
+}

@@ -1,0 +1,126 @@
+//! Golden tests for the lint rules over the seeded corpus in
+//! `tests/lint_fixtures/` — every rule must catch its seeded violation at
+//! the exact file:line, well-formed suppressions must silence theirs, and
+//! malformed suppressions must themselves be findings (and suppress
+//! nothing). The corpus replicates the source layout (`serve/`, `sim/`,
+//! `telemetry/`, `util/`) so path scoping is exercised too; the engine's
+//! directory walker skips `lint_fixtures/` during normal descent, which is
+//! why `cargo test lint_clean` and this file can coexist.
+
+use medea::analysis::{findings_to_json, lint_paths, lint_source};
+use std::path::PathBuf;
+
+/// Findings over the corpus, reduced to (path-inside-corpus, line, rule).
+fn fixture_findings() -> Vec<(String, usize, &'static str)> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures");
+    lint_paths(&[dir])
+        .expect("walking tests/lint_fixtures")
+        .into_iter()
+        .map(|f| {
+            let pos = f.file.rfind("lint_fixtures/").expect("fixture display path");
+            let rel = f.file[pos + "lint_fixtures/".len()..].to_string();
+            (rel, f.line, f.rule)
+        })
+        .collect()
+}
+
+#[test]
+fn every_rule_catches_its_seeded_fixture_at_the_exact_line() {
+    let got = fixture_findings();
+    let want: Vec<(String, usize, &'static str)> = [
+        ("serve/pool.rs", 5, "no-unwrap"),
+        ("serve/pool.rs", 6, "sleep-under-lock"),
+        ("serve/pool.rs", 7, "lock-discipline"),
+        ("serve/pool.rs", 7, "no-unwrap"),
+        ("sim/engine.rs", 4, "no-wall-clock"),
+        ("sim/engine.rs", 5, "no-wall-clock"),
+        ("telemetry/hist.rs", 5, "ordering-comment"),
+        ("telemetry/hist.rs", 8, "ordering-comment"),
+        ("telemetry/hist.rs", 13, "ordering-comment"),
+        ("telemetry/hist.rs", 16, "bad-suppression"),
+        ("telemetry/hist.rs", 19, "bad-suppression"),
+        ("telemetry/hist.rs", 21, "ordering-comment"),
+        ("util/misc.rs", 5, "no-partial-cmp"),
+    ]
+    .into_iter()
+    .map(|(f, l, r)| (f.to_string(), l, r))
+    .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn well_formed_suppressions_silence_their_rule() {
+    // The corpus seeds suppressed twins next to each flagged site; none of
+    // those lines may appear among the findings.
+    let got = fixture_findings();
+    let suppressed = [
+        ("serve/pool.rs", 14),     // lock().expect under allow(no-unwrap)
+        ("serve/pool.rs", 17),     // nested lock + unwrap, both allowed
+        ("sim/engine.rs", 10),     // Instant::now under allow(no-wall-clock)
+        ("telemetry/hist.rs", 26), // SeqCst under allow(ordering-comment)
+    ];
+    for (file, line) in suppressed {
+        assert!(
+            !got.iter().any(|(f, l, _)| f == file && *l == line),
+            "{file}:{line} should be suppressed, got {got:?}"
+        );
+    }
+}
+
+#[test]
+fn suppression_without_reason_is_a_finding_and_suppresses_nothing() {
+    let got = fixture_findings();
+    // The bare `// lint: allow(ordering-comment)` at hist.rs:19 ...
+    assert!(got.contains(&("telemetry/hist.rs".to_string(), 19, "bad-suppression")));
+    // ... and the SeqCst load it sits above still fires.
+    assert!(got.contains(&("telemetry/hist.rs".to_string(), 21, "ordering-comment")));
+}
+
+#[test]
+fn test_regions_and_out_of_scope_paths_stay_quiet() {
+    let got = fixture_findings();
+    // serve/pool.rs lines 22-28 are a #[cfg(test)] module full of unwraps
+    // and sleeps; util/misc.rs unwraps and reads the clock outside the
+    // scoped directories. Only the partial_cmp in util/ may fire.
+    assert!(got.iter().all(|(f, l, _)| !(f == "serve/pool.rs" && *l >= 22)));
+    assert_eq!(got.iter().filter(|(f, _, _)| f == "util/misc.rs").count(), 1);
+}
+
+#[test]
+fn json_exposition_is_byte_stable() {
+    // Machine-independent: lint an in-memory source under a fixed display
+    // path instead of a filesystem walk.
+    let src = "fn f(x: Option<u32>, c: &AtomicU64) {\n\
+               let v = x.unwrap();\n\
+               c.load(Ordering::SeqCst);\n\
+               }\n";
+    let findings = lint_source("serve/pool.rs", src);
+    let golden = "{\n\
+                  \x20 \"schema\": \"medea.lint.v1\",\n\
+                  \x20 \"count\": 2,\n\
+                  \x20 \"findings\": [\n\
+                  \x20   {\n\
+                  \x20     \"file\": \"serve/pool.rs\",\n\
+                  \x20     \"line\": 2,\n\
+                  \x20     \"rule\": \"no-unwrap\",\n\
+                  \x20     \"message\": \"`.unwrap()` on the serving path can take a worker down; bubble the error instead\"\n\
+                  \x20   },\n\
+                  \x20   {\n\
+                  \x20     \"file\": \"serve/pool.rs\",\n\
+                  \x20     \"line\": 3,\n\
+                  \x20     \"rule\": \"ordering-comment\",\n\
+                  \x20     \"message\": \"atomic ordering choice without an adjacent `// ordering:` justification\"\n\
+                  \x20   }\n\
+                  \x20 ]\n\
+                  }\n";
+    assert_eq!(findings_to_json(&findings), golden);
+}
+
+#[test]
+fn empty_findings_render_an_empty_document() {
+    let doc = findings_to_json(&[]);
+    assert_eq!(
+        doc,
+        "{\n  \"schema\": \"medea.lint.v1\",\n  \"count\": 0,\n  \"findings\": []\n}\n"
+    );
+}

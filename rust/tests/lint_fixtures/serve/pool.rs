@@ -1,0 +1,28 @@
+//! Seeded fixture: serving-path rules (no-unwrap, lock-discipline,
+//! sleep-under-lock) plus suppression behavior. Never compiled.
+
+fn dirty(&self) {
+    let mut st = self.shards[0].state.lock().unwrap();
+    std::thread::sleep(poll);
+    let sib = self.shards[1].state.lock().unwrap();
+    drop(st);
+    drop(sib);
+}
+
+fn suppressed(&self) {
+    // lint: allow(no-unwrap): fixture invariant holds by construction
+    let st = self.state.lock().expect("poisoned");
+    // lint: allow(lock-discipline): fixture nests on purpose
+    // lint: allow(no-unwrap): fixture invariant holds by construction
+    let nested = self.other.lock().unwrap();
+    drop(nested);
+    drop(st);
+}
+
+#[cfg(test)]
+mod tests {
+    fn free_for_all() {
+        let st = lock().unwrap();
+        std::thread::sleep(d);
+    }
+}

@@ -1,0 +1,11 @@
+//! Seeded fixture: wall-clock reads in design-time code. Never compiled.
+
+fn tick() {
+    let t = Instant::now();
+    let w = SystemTime::now();
+}
+
+fn justified() {
+    // lint: allow(no-wall-clock): fixture measures host overhead only
+    let t = Instant::now();
+}

@@ -1,0 +1,27 @@
+//! Seeded fixture: ordering-comment adjacency plus malformed suppression
+//! directives. Never compiled.
+
+fn orderings(c: &AtomicU64) {
+    c.load(Ordering::Relaxed);
+    c.store(1, Ordering::Release); // ordering: publishes the payload
+    let gap = 1;
+    c.load(Ordering::Acquire);
+    // ordering: the block comment covers the contiguous run below
+    c.fetch_add(1, Ordering::Relaxed);
+    c.fetch_add(2, Ordering::Relaxed);
+
+    c.store(3, Ordering::SeqCst);
+}
+
+// lint: allow(not-a-rule): unknown rules must be findings
+fn bad_unknown_rule() {}
+
+// lint: allow(ordering-comment)
+fn bad_missing_reason(c: &AtomicU64) {
+    c.load(Ordering::SeqCst);
+}
+
+fn suppressed(c: &AtomicU64) {
+    // lint: allow(ordering-comment): fixture suppression with a reason
+    c.load(Ordering::SeqCst);
+}

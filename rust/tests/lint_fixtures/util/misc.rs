@@ -1,0 +1,8 @@
+//! Seeded fixture: out-of-scope directory — no-unwrap and no-wall-clock
+//! do not apply under util/, but no-partial-cmp fires everywhere.
+
+fn anywhere(a: f64, b: f64) {
+    let _ = a.partial_cmp(&b);
+    let x = opt.unwrap();
+    let t = Instant::now();
+}

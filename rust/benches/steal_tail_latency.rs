@@ -18,7 +18,10 @@
 //! enabled stay within 10% of the no-steal baseline (the expected signal
 //! is a ~2x win; the headroom absorbs runner noise in a two-run wall-clock
 //! comparison), with at least one steal recorded and zero deadline misses
-//! in either run. Results are printed and written to `BENCH_steal.json`.
+//! in either run. The event-driven steal notifier must also deliver at
+//! least one wake with p99 delivery latency under the retired 200 us poll
+//! floor (`wakeup_p99_us`). Results are printed and written to
+//! `BENCH_steal.json`.
 //!
 //! `cargo bench --bench steal_tail_latency` (set MEDEA_BENCH_FAST=1 to trim).
 
@@ -36,6 +39,11 @@ struct SkewResult {
     /// Urgent-request host latencies (µs), across all rounds.
     urgent_us: Vec<f64>,
     metrics: ServeMetrics,
+    /// p99 of steal-wakeup delivery latency (µs): posted-wake to woken
+    /// thief, across every event-driven wake the run delivered.
+    wakeup_p99_us: f64,
+    wakeups: u64,
+    spurious_wakeups: u64,
 }
 
 /// One skewed burst per round: a lax plug pinned to shard 0, a beat for
@@ -86,13 +94,20 @@ fn run_skewed(
         assert!(out.sim.deadline_met, "plug deadline violated");
     }
 
+    let totals = pool.telemetry().snapshot().totals();
     let metrics = pool.shutdown();
     assert_eq!(
         metrics.aggregate.requests as usize,
         rounds * (urgent_per_round + 1)
     );
     assert_eq!(metrics.aggregate.deadline_misses, 0, "no run may miss deadlines");
-    SkewResult { urgent_us, metrics }
+    SkewResult {
+        urgent_us,
+        metrics,
+        wakeup_p99_us: totals.wake.percentile(99.0) as f64 / 1e3,
+        wakeups: totals.wake.count(),
+        spurious_wakeups: totals.spurious_wakeups,
+    }
 }
 
 fn main() {
@@ -139,9 +154,24 @@ fn main() {
 
     let speedup = ns_p99 / st_p99.max(1e-9);
     println!("\nstealing vs pinned tail: {speedup:.2}x lower urgent p99");
+    println!(
+        "steal wakeups: {} delivered, p99 {:.1} us ({} spurious)",
+        stealing.wakeups, stealing.wakeup_p99_us, stealing.spurious_wakeups
+    );
     assert!(
         stealing.metrics.steals() > 0,
         "skewed burst triggered no steals — the idle sibling never rescued the loaded shard"
+    );
+    assert!(
+        stealing.wakeups >= 1,
+        "steal run delivered no event-driven wakeups — the backlog notifier never fired"
+    );
+    // The retired polling loop rediscovered backlog only at the 200 us poll
+    // cadence; event-driven wakes must beat that floor outright.
+    assert!(
+        stealing.wakeup_p99_us < 200.0,
+        "steal wakeup p99 must beat the old 200 us poll floor: {:.1} us",
+        stealing.wakeup_p99_us
     );
     assert_eq!(nosteal.metrics.steals(), 0, "no-steal run must not steal");
     // The structural win is ~2x (two workers share a rescue one worker did
@@ -174,6 +204,9 @@ fn main() {
             "urgent_p99_us" => st_p99,
             "steals" => stealing.metrics.steals(),
             "stolen_requests" => stealing.metrics.stolen_requests(),
+            "wakeup_p99_us" => stealing.wakeup_p99_us,
+            "wakeups" => stealing.wakeups,
+            "spurious_wakeups" => stealing.spurious_wakeups,
         },
         "p99_speedup" => speedup,
     };

@@ -47,4 +47,7 @@ pub use entry::{FleetConfig, FleetEntry};
 pub use key::{FleetKey, PlatformFingerprint, WorkloadHash};
 pub use pool::{Demand, FleetOutcome, FleetPool, FleetPoolConfig, FleetTicket};
 pub use registry::{FleetRegistry, Resolved};
-pub use store::{load_library, save_library, swap_entry};
+pub use store::{
+    index_epoch, load_library, reload_library_into, save_library, swap_entry, watch_library,
+    LibraryWatcher,
+};

@@ -31,11 +31,12 @@ use crate::runtime::client::Runtime;
 use crate::runtime::infer::{Prediction, TsdInference};
 use crate::serve::batch::{
     batch_energy_share, batch_makespan, batch_share, member_report, stub_predictions, BatchConfig,
+    WindowAutotuner,
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::pool::{
     deadline_us, head_laxity, pick_shard, pop_group, readiness_probe_over, ServeError, Shard,
-    StealConfig,
+    StealConfig, StealMesh,
 };
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
@@ -171,6 +172,10 @@ struct Job {
 pub struct FleetPool {
     registry: Arc<FleetRegistry>,
     shards: Vec<Arc<Shard<Job>>>,
+    /// Steal-wake notifier shared with the workers: submit posts wakes to
+    /// idle siblings through it when a shard's backlog crosses the
+    /// threshold.
+    mesh: Arc<StealMesh>,
     workers: Vec<JoinHandle<()>>,
     next: AtomicUsize,
     /// The live metrics registry: admission counts sheds here, workers
@@ -199,18 +204,22 @@ impl FleetPool {
         let shards: Vec<Arc<Shard<Job>>> = (0..n)
             .map(|_| Arc::new(Shard::new(EdfQueue::new(config.queue_capacity.max(1)))))
             .collect();
+        let mesh = Arc::new(StealMesh::new(n, &steal));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let handle = std::thread::Builder::new()
                 .name(format!("medea-fleet-{i}"))
                 .spawn({
                     let shards = shards.clone();
+                    let mesh = mesh.clone();
                     let dir = config.artifact_dir.clone();
                     let batch = batch.clone();
                     let steal = steal.clone();
                     let tel = telemetry.worker(i);
                     let trace = trace.clone();
-                    move || worker_loop(&shards, i, &dir, &batch, &steal, &tel, trace.as_deref())
+                    move || {
+                        worker_loop(&shards, i, &dir, &batch, &steal, &mesh, &tel, trace.as_deref())
+                    }
                 })
                 .map_err(|e| anyhow!("spawn fleet worker {i}: {e}"))?;
             workers.push(handle);
@@ -218,6 +227,7 @@ impl FleetPool {
         Ok(FleetPool {
             registry,
             shards,
+            mesh,
             workers,
             next: AtomicUsize::new(0),
             telemetry,
@@ -337,23 +347,27 @@ impl FleetPool {
         let capacity = st.queue.capacity();
         match st.queue.push(priority, job) {
             Admission::Accepted => {
+                let depth = st.queue.len();
                 // ordering: relaxed depth hint, see the shard pick above.
-                shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                shard.depth.store(depth, Ordering::Relaxed);
                 drop(st);
-                shard.cv.notify_one();
+                shard.ring();
+                self.mesh.wake_for_backlog(idx, depth, &self.shards);
                 if let Some(ring) = &self.trace {
                     ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(priority));
                 }
                 Ok(FleetTicket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
+                let depth = st.queue.len();
                 // ordering: relaxed depth hint, see the shard pick above.
-                shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                shard.depth.store(depth, Ordering::Relaxed);
                 let reason = Rejection::QueueFull { capacity };
                 self.shed(idx, evicted.id, &reason);
                 let _ = evicted.reply.send(Err(ServeError::Shed(reason)));
                 drop(st);
-                shard.cv.notify_one();
+                shard.ring();
+                self.mesh.wake_for_backlog(idx, depth, &self.shards);
                 if let Some(ring) = &self.trace {
                     ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(priority));
                 }
@@ -396,7 +410,9 @@ impl FleetPool {
             let mut st = shard.state.lock().expect("fleet shard lock poisoned");
             st.stopping = true;
             drop(st);
-            shard.cv.notify_all();
+            // One waiter per gate (the shard's own worker), so a single
+            // token wake reaches everyone affected.
+            shard.ring();
         }
     }
 
@@ -447,12 +463,14 @@ impl Drop for FleetPool {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     shards: &[Arc<Shard<Job>>],
     me: usize,
     artifact_dir: &std::path::Path,
     batch: &BatchConfig,
     steal: &StealConfig,
+    mesh: &StealMesh,
     tel: &WorkerShard,
     trace: Option<&TraceRing>,
 ) {
@@ -510,13 +528,33 @@ fn worker_loop(
     let slack = |deadline: Time, job: &Job| head_laxity(deadline, job.unit_time, job.submitted);
     let queued_for = |job: &Job| job.submitted.elapsed();
 
+    // The reusable dispatch-group buffer: sized once for the largest legal
+    // batch, so steady-state group formation allocates nothing.
+    let mut group: Vec<(Time, Job)> = Vec::with_capacity(batch.max_batch.max(1));
+    let mut tuner = WindowAutotuner::new(batch);
     loop {
-        let popped = pop_group(shards, me, batch, steal, &key, &grow, &slack, &queued_for);
+        group.clear();
+        let fill_window = tuner.effective();
+        tel.set_batch_window(fill_window);
+        let popped = pop_group(
+            shards,
+            me,
+            batch,
+            fill_window,
+            steal,
+            mesh,
+            tel,
+            &key,
+            &grow,
+            &slack,
+            &queued_for,
+            &mut group,
+        );
         let Some(popped) = popped else { break };
-        let group = popped.jobs;
         if group.is_empty() {
             continue;
         }
+        tuner.observe(group.len());
         let exec_start = Instant::now();
         let head_id = group[0].1.id;
         let size = group.len() as u64;
@@ -542,9 +580,9 @@ fn worker_loop(
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path. `process` consumes the
             // job (the entry `Arc` and schedule ride in it) and hands the
-            // reply channel back alongside the outcome.
-            // lint: allow(no-unwrap): guarded by the len() == 1 check above.
-            let (_, job) = group.into_iter().next().expect("len checked");
+            // reply channel back alongside the outcome. `swap_remove`
+            // keeps the buffer's capacity for the next dispatch.
+            let (_, job) = group.swap_remove(0);
             let (reply, outcome) = process(job, runtime.as_mut(), &infer);
             let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);
             if let Ok(o) = &outcome {
@@ -562,7 +600,7 @@ fn worker_loop(
             }
             let _ = reply.send(outcome);
         } else {
-            process_batch(group, runtime.as_mut(), &infer, batch, me, tel, trace);
+            process_batch(&mut group, runtime.as_mut(), &infer, batch, me, tel, trace);
         }
         tel.record_dispatch_time(exec_start.elapsed());
     }
@@ -575,8 +613,9 @@ fn worker_loop(
 /// Deadline members get `deadline_met = makespan ≤ their deadline`; energy
 /// members get `deadline_met = amortized share ≤ their cap` — each member is
 /// judged against the demand it actually made.
+/// Drains the caller's reusable group buffer (capacity is retained).
 fn process_batch(
-    group: Vec<(Time, Job)>,
+    group: &mut Vec<(Time, Job)>,
     runtime: Option<&mut Runtime>,
     infer: &TsdInference,
     batch: &BatchConfig,
@@ -598,7 +637,7 @@ fn process_batch(
                 Ok(p) => p,
                 Err(e) => {
                     let msg = e.to_string();
-                    for (_, job) in group {
+                    for (_, job) in group.drain(..) {
                         if let Some(ring) = trace {
                             ring.record(TraceEventKind::Retire, me as u32, job.id, 0);
                         }
@@ -614,7 +653,7 @@ fn process_batch(
     // Only successful fan-outs count as dispatches (the error path above
     // returns early), keeping batched + solo == recorded requests.
     tel.record_batch(n);
-    for ((_, job), prediction) in group.into_iter().zip(predictions) {
+    for ((_, job), prediction) in group.drain(..).zip(predictions) {
         // Each member is judged against the demand it actually made.
         let met = match job.demand {
             Demand::Deadline(d) => share.batch_time.raw() <= d.raw(),

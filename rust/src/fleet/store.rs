@@ -15,9 +15,13 @@
 //! so a library survives preset drift by serving what is still valid.
 
 use super::entry::FleetEntry;
+use super::key::FleetKey;
 use super::registry::FleetRegistry;
 use crate::util::json::{parse, Json, JsonObj};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Index manifest file name.
 pub const INDEX_FILE: &str = "index.json";
@@ -161,4 +165,156 @@ pub fn swap_entry(dir: &Path, entry: &FleetEntry) -> Result<u64, String> {
     let epoch = epoch + 1;
     atomic_write(&index_path, &index_json(metas, epoch).to_pretty())?;
     Ok(epoch)
+}
+
+/// Read just the index epoch — the cheap probe a reload watcher polls.
+pub fn index_epoch(dir: &Path) -> Result<u64, String> {
+    let index_path = dir.join(INDEX_FILE);
+    let text = std::fs::read_to_string(&index_path)
+        .map_err(|e| format!("read {}: {e}", index_path.display()))?;
+    let index = parse(&text).map_err(|e| e.to_string())?;
+    let epoch = index.req("epoch")?.as_u64().ok_or("epoch")?;
+    Ok(epoch)
+}
+
+/// Re-read a library's `index.json` and republish new or rebuilt entries
+/// into a *running* registry — the bridge between an on-disk [`swap_entry`]
+/// and a live [`crate::fleet::pool::FleetPool`]. Entries are content-keyed,
+/// so an index row whose key the registry already resolves is skipped
+/// without touching its slot; unknown keys are parsed and published exactly
+/// as a restart-time [`load_library`] would, while queued and executing
+/// jobs keep the entry `Arc` they were admitted under either way. Finally
+/// the registry epoch advances to the index epoch (monotone, so a stale
+/// index can never roll a live registry back). Returns how many entries
+/// were published.
+pub fn reload_library_into(dir: &Path, registry: &FleetRegistry) -> Result<usize, String> {
+    let index_path = dir.join(INDEX_FILE);
+    let text = std::fs::read_to_string(&index_path)
+        .map_err(|e| format!("read {}: {e}", index_path.display()))?;
+    let index = parse(&text).map_err(|e| e.to_string())?;
+    let version = index.req("version")?.as_u64().ok_or("version")?;
+    if version != VERSION {
+        return Err(format!("unsupported fleet library version {version}"));
+    }
+    let epoch = index.req("epoch")?.as_u64().ok_or("epoch")?;
+
+    let mut published = 0;
+    for meta in index.req("entries")?.as_arr().ok_or("entries")? {
+        let key = meta.req("key")?.as_str().ok_or("key")?;
+        // Content keys are immutable: a key the registry already resolves
+        // is this exact entry, live — skip without re-reading its file.
+        let known = match FleetKey::parse(key) {
+            Some(k) => registry.resolve(&k).is_some(),
+            None => false,
+        };
+        if known {
+            continue;
+        }
+        let file = meta.req("file")?.as_str().ok_or("file")?;
+        let path = dir.join(file);
+        let loaded = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))
+            .and_then(|t| parse(&t).map_err(|e| e.to_string()))
+            .and_then(|v| FleetEntry::from_json(&v));
+        match loaded {
+            Ok(entry) => {
+                registry.publish(entry);
+                published += 1;
+            }
+            Err(e) => {
+                crate::log_warn!("fleet reload: skipping {}: {e}", path.display());
+            }
+        }
+    }
+    registry.advance_epoch_to(epoch);
+    Ok(published)
+}
+
+/// Handle for a running [`watch_library`] thread. Dropping it (or calling
+/// [`LibraryWatcher::stop`]) signals the watcher and joins it.
+pub struct LibraryWatcher {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl LibraryWatcher {
+    /// Signal the watcher to stop and join its thread.
+    pub fn stop(mut self) {
+        self.shut_down();
+    }
+
+    fn shut_down(&mut self) {
+        // ordering: relaxed stop flag — the watcher re-reads it at least
+        // once per sleep chunk, and the join below is the real barrier.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for LibraryWatcher {
+    fn drop(&mut self) {
+        self.shut_down();
+    }
+}
+
+/// Sleep up to `total`, waking early when `stop` is raised. Chunked so a
+/// long watch interval never delays shutdown by more than ~200 ms.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
+    let mut remaining = total;
+    while !remaining.is_zero() {
+        // ordering: relaxed stop flag, see `LibraryWatcher::shut_down`.
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let chunk = remaining.min(Duration::from_millis(200));
+        std::thread::sleep(chunk);
+        remaining = remaining.saturating_sub(chunk);
+    }
+}
+
+/// Spawn a polling watcher bridging on-disk [`swap_entry`] writes into a
+/// running registry: every `interval` it re-reads the index epoch and, when
+/// the index has advanced past the registry, runs [`reload_library_into`].
+/// Polling (not inotify) keeps it portable and dependency-free; the index
+/// is written atomically, so a torn mid-write read is impossible. An
+/// unreadable or stale index is logged and retried on the next tick — a
+/// watcher never takes down serving.
+pub fn watch_library(
+    dir: &Path,
+    registry: Arc<FleetRegistry>,
+    interval: Duration,
+) -> LibraryWatcher {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = stop.clone();
+    let dir = dir.to_path_buf();
+    let interval = interval.max(Duration::from_millis(10));
+    let handle = std::thread::Builder::new()
+        .name("medea-fleet-watch".into())
+        .spawn(move || {
+            // ordering: relaxed stop flag, see `LibraryWatcher::shut_down`.
+            while !flag.load(Ordering::Relaxed) {
+                match index_epoch(&dir) {
+                    Ok(epoch) if epoch > registry.epoch() => {
+                        match reload_library_into(&dir, &registry) {
+                            Ok(published) => {
+                                crate::log_info!(
+                                    "fleet watch: index epoch {epoch}, republished \
+                                     {published} entr{}",
+                                    if published == 1 { "y" } else { "ies" }
+                                );
+                            }
+                            Err(e) => crate::log_warn!("fleet watch: reload failed: {e}"),
+                        }
+                    }
+                    Ok(_) => {}
+                    Err(e) => crate::log_warn!("fleet watch: {e}"),
+                }
+                sleep_unless_stopped(&flag, interval);
+            }
+        })
+        .map_err(|e| crate::log_warn!("fleet watch: spawn failed: {e}"))
+        .ok();
+    LibraryWatcher { stop, handle }
 }

@@ -86,7 +86,11 @@ fn app() -> App {
                 .opt("energy-budgets-uj", "Comma-separated energy caps in uJ (cycled; requests carry an energy budget instead of a deadline; fleet mode only)")
                 .opt_default("max-batch", "Coalesce up to N compatible queued requests into one dispatch (1 = solo)", "8")
                 .opt_default("batch-window-us", "Extra microseconds a worker waits for stragglers when the backlog cannot fill a batch (0 = opportunistic only)", "0")
+                .flag("batch-window-auto", "Autotune each worker's effective fill window from observed batch occupancy (published as the medea_batch_window_seconds gauge)")
                 .flag("no-steal", "Disable cross-shard work stealing (idle workers rescuing queued work from a stuck shard)")
+                .opt_default("steal-poll-us", "Fallback heartbeat period in microseconds for idle workers; event wakeups deliver steals, this only bounds worst-case discovery", "5000")
+                .opt_default("steal-wake-threshold", "Queue depth at which a submit wakes the longest-idle sibling worker", "2")
+                .opt("fleet-watch-s", "Re-read the fleet library index every N seconds and republish on-disk swaps into the running pool (fleet mode only)")
                 .opt("artifacts", "Artifacts directory (default: ./artifacts or $MEDEA_ARTIFACTS)")
                 .opt("metrics-addr", "Expose live Prometheus metrics on this host:port (e.g. 127.0.0.1:9464); scrape with `medea scrape` or curl")
                 .opt("metrics-out", "Write the final Prometheus exposition to this file before shutdown")
@@ -407,7 +411,8 @@ fn cmd_all(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Parse `--max-batch` / `--batch-window-us` into a [`BatchConfig`].
+/// Parse `--max-batch` / `--batch-window-us` / `--batch-window-auto` into a
+/// [`BatchConfig`].
 fn parse_batch(args: &Args) -> Result<medea::serve::BatchConfig, String> {
     let max_batch: usize = args.req_parse("max-batch").map_err(|e| e.to_string())?;
     let window_us: u64 = args.req_parse("batch-window-us").map_err(|e| e.to_string())?;
@@ -417,17 +422,40 @@ fn parse_batch(args: &Args) -> Result<medea::serve::BatchConfig, String> {
     Ok(medea::serve::BatchConfig {
         max_batch,
         window: std::time::Duration::from_micros(window_us),
+        auto: args.flag("batch-window-auto"),
         ..medea::serve::BatchConfig::default()
     })
 }
 
-/// Parse `--no-steal` into a [`medea::serve::StealConfig`].
-fn parse_steal(args: &Args) -> medea::serve::StealConfig {
+/// Parse `--no-steal` / `--steal-poll-us` / `--steal-wake-threshold` into a
+/// [`medea::serve::StealConfig`]. Degenerate values are rejected at the CLI
+/// boundary with a typed error: a zero or sub-50 us heartbeat is a
+/// busy-wait in disguise, a multi-second one defeats its watchdog role,
+/// and a zero wake threshold would make every submit ring a sibling.
+fn parse_steal(args: &Args) -> Result<medea::serve::StealConfig, String> {
     if args.flag("no-steal") {
-        medea::serve::StealConfig::disabled()
-    } else {
-        medea::serve::StealConfig::default()
+        return Ok(medea::serve::StealConfig::disabled());
     }
+    let poll_us: u64 = args.req_parse("steal-poll-us").map_err(|e| e.to_string())?;
+    let wake_threshold: usize = args
+        .req_parse("steal-wake-threshold")
+        .map_err(|e| e.to_string())?;
+    if !(50..=10_000_000).contains(&poll_us) {
+        return Err(format!(
+            "--steal-poll-us must be in [50, 10000000] us (a fallback heartbeat, \
+             not a busy-wait or a stall): got {poll_us}"
+        ));
+    }
+    if !(1..=4096).contains(&wake_threshold) {
+        return Err(format!(
+            "--steal-wake-threshold must be in [1, 4096]: got {wake_threshold}"
+        ));
+    }
+    Ok(medea::serve::StealConfig {
+        poll: std::time::Duration::from_micros(poll_us),
+        wake_threshold,
+        ..medea::serve::StealConfig::default()
+    })
 }
 
 /// Observability options shared by `serve` and `serve --fleet-dir`.
@@ -755,7 +783,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         queue_capacity: queue_cap,
         artifact_dir: dir,
         batch: parse_batch(args)?,
-        steal: parse_steal(args),
+        steal: parse_steal(args)?,
         telemetry: tel_cli.pool_config(&slo_cli),
         ..PoolConfig::default()
     };
@@ -873,7 +901,7 @@ fn cmd_atlas(args: &Args) -> Result<(), String> {
 
 /// Serve through the multi-platform fleet pool (`serve --fleet-dir …`).
 fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
-    use medea::fleet::{load_library, Demand, FleetPool, FleetPoolConfig};
+    use medea::fleet::{load_library, watch_library, Demand, FleetPool, FleetPoolConfig};
     use medea::util::units::Energy;
     use std::sync::Arc;
 
@@ -895,6 +923,13 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
         .map(PathBuf::from)
         .unwrap_or_else(ArtifactManifest::default_dir);
 
+    let watch_s: Option<f64> = args.get_parse("fleet-watch-s").map_err(|e| e.to_string())?;
+    if let Some(s) = watch_s {
+        if !s.is_finite() || s <= 0.0 {
+            return Err(format!("--fleet-watch-s must be a positive number of seconds: got {s}"));
+        }
+    }
+
     let registry = Arc::new(load_library(&dir)?);
     println!(
         "fleet: loaded {} entries (epoch {}) from {}",
@@ -908,17 +943,23 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
     let tel_cli = TelemetryCli::parse(args)?;
     let slo_cli = SloCli::parse(args)?;
     let pool = FleetPool::start(
-        registry,
+        registry.clone(),
         FleetPoolConfig {
             workers,
             queue_capacity: queue_cap,
             artifact_dir,
             batch: parse_batch(args)?,
-            steal: parse_steal(args),
+            steal: parse_steal(args)?,
             telemetry: tel_cli.pool_config(&slo_cli),
         },
     )
     .map_err(|e| e.to_string())?;
+    // The reload watcher bridges on-disk library swaps (`medea fleet swap`)
+    // into the running registry; entries resolve on the next admission.
+    let watcher = watch_s.map(|s| {
+        println!("fleet: watching {} every {s} s for index swaps", dir.display());
+        watch_library(&dir, registry.clone(), std::time::Duration::from_secs_f64(s))
+    });
     let slo_engine = slo_cli.engine(pool.telemetry(), pool.trace())?;
     let _slo_ticker = slo_engine
         .as_ref()
@@ -967,6 +1008,9 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
     }
     slo_cli.finish(&slo_engine);
     tel_cli.dump(pool.telemetry(), pool.trace().map(|r| r.as_ref()))?;
+    if let Some(w) = watcher {
+        w.stop();
+    }
     let metrics = pool.shutdown();
     println!("---\n{}", metrics.summary());
     Ok(())

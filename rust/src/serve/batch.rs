@@ -58,6 +58,11 @@ pub struct BatchConfig {
     /// Marginal per-member cost fraction `a` in `(0, 1]` of the sublinear
     /// makespan model `t₁·(1 + a·(n−1))`.
     pub amortization: f64,
+    /// Autotune the *effective* fill window per worker between `0` and
+    /// [`BatchConfig::window`] from the observed batch fill ratio (see
+    /// [`WindowAutotuner`]): starved batches stretch the wait toward
+    /// `window`, bursts dispatch immediately. `false` uses `window` as-is.
+    pub auto: bool,
 }
 
 impl Default for BatchConfig {
@@ -68,6 +73,7 @@ impl Default for BatchConfig {
             // ~15 % of a solo invocation modeled as fixed wakeup/dispatch/
             // DMA-priming overhead recovered by coalescing.
             amortization: 0.85,
+            auto: false,
         }
     }
 }
@@ -114,6 +120,62 @@ pub fn batch_makespan(unit_time: Time, n: usize, amortization: f64) -> Time {
 pub fn batch_energy_share(unit_energy: Energy, n: usize, amortization: f64) -> Energy {
     let n = n.max(1);
     Energy(unit_energy.raw() * batch_scale(n, amortization) / n as f64)
+}
+
+/// Adapts the effective batch fill window to the observed arrival rate.
+///
+/// One per worker (plain state, no sharing): each dispatch reports its group
+/// size via [`WindowAutotuner::observe`], which folds the fill ratio
+/// `group / max_batch` into an EWMA. The effective window is
+/// `window · (1 − fill)`:
+///
+/// * **starved** (solo dispatches, fill → 0) — stretch the wait toward the
+///   configured `--batch-window-us` ceiling, buying stragglers time to
+///   coalesce;
+/// * **burst** (full batches, fill → 1) — the backlog fills batches by
+///   itself, so dispatch immediately and spend nothing on waiting.
+///
+/// With `auto` off (or a zero ceiling) this is a constant: exactly the
+/// configured window, no state consulted.
+#[derive(Debug, Clone)]
+pub struct WindowAutotuner {
+    max: Duration,
+    target: f64,
+    fill: f64,
+    auto: bool,
+}
+
+/// EWMA gain per dispatch: ~12 dispatches to move 95 % of the way to a new
+/// steady state — fast enough to catch a burst, slow enough not to flap on
+/// one odd group.
+const AUTOTUNE_GAIN: f64 = 0.25;
+
+impl WindowAutotuner {
+    pub fn new(batch: &BatchConfig) -> WindowAutotuner {
+        WindowAutotuner {
+            max: batch.window,
+            target: batch.max_batch.max(1) as f64,
+            fill: 0.0,
+            auto: batch.auto,
+        }
+    }
+
+    /// Fold one dispatched group size into the fill EWMA.
+    pub fn observe(&mut self, group_len: usize) {
+        if !self.auto {
+            return;
+        }
+        let ratio = (group_len as f64 / self.target).clamp(0.0, 1.0);
+        self.fill += AUTOTUNE_GAIN * (ratio - self.fill);
+    }
+
+    /// The fill window the next dispatch episode should wait for.
+    pub fn effective(&self) -> Duration {
+        if !self.auto {
+            return self.max;
+        }
+        self.max.mul_f64((1.0 - self.fill).clamp(0.0, 1.0))
+    }
 }
 
 /// Per-member accounting for one coalesced dispatch, derived from a single
@@ -221,5 +283,60 @@ mod tests {
         .sanitized();
         assert_eq!(c.amortization, 1.0);
         assert_eq!(BatchConfig::solo().max_batch, 1);
+    }
+
+    fn tuned(window_us: u64, auto: bool) -> WindowAutotuner {
+        WindowAutotuner::new(&BatchConfig {
+            window: Duration::from_micros(window_us),
+            auto,
+            ..BatchConfig::default()
+        })
+    }
+
+    #[test]
+    fn autotuner_disabled_is_the_static_window() {
+        let mut t = tuned(500, false);
+        assert_eq!(t.effective(), Duration::from_micros(500));
+        for _ in 0..100 {
+            t.observe(8); // full batches would normally shrink the window
+        }
+        assert_eq!(t.effective(), Duration::from_micros(500));
+    }
+
+    #[test]
+    fn autotuner_starts_stretched_and_stays_there_when_starved() {
+        let mut t = tuned(500, true);
+        // Nothing observed yet ⇒ assume starved, wait the full window.
+        assert_eq!(t.effective(), Duration::from_micros(500));
+        for _ in 0..50 {
+            t.observe(1); // solo dispatches: starved
+        }
+        // Solo against max_batch 8 keeps fill low: ≥ 80 % of the ceiling.
+        assert!(t.effective() >= Duration::from_micros(400), "{:?}", t.effective());
+    }
+
+    #[test]
+    fn autotuner_collapses_under_burst_and_recovers() {
+        let mut t = tuned(500, true);
+        let mut prev = t.effective();
+        for _ in 0..30 {
+            t.observe(8); // full batches: burst
+            let now = t.effective();
+            assert!(now <= prev, "window must shrink monotonically under burst");
+            prev = now;
+        }
+        assert!(prev <= Duration::from_micros(5), "{prev:?}");
+        // Arrival rate drops again: the window stretches back out.
+        for _ in 0..30 {
+            t.observe(1);
+        }
+        assert!(t.effective() >= Duration::from_micros(300), "{:?}", t.effective());
+    }
+
+    #[test]
+    fn autotuner_zero_ceiling_never_waits() {
+        let mut t = tuned(0, true);
+        t.observe(1);
+        assert_eq!(t.effective(), Duration::ZERO);
     }
 }

@@ -11,7 +11,10 @@
 //! dispatch ([`crate::serve::batch`]); dispatch routing itself stays
 //! EDF-aware ([`pick_shard`]), and idle workers steal EDF-contiguous
 //! groups from backlogged sibling shards ([`StealConfig`]) so a worker
-//! stuck mid-dispatch cannot strand urgent queued work. Shutdown is
+//! stuck mid-dispatch cannot strand urgent queued work. The dequeue core
+//! is event-driven: idle workers park on a per-shard gate and are woken by
+//! submits or by a backlogged victim's steal wake ([`StealMesh`]) — the
+//! steal poll survives only as a lazy fallback heartbeat. Shutdown is
 //! graceful: queues drain, then workers exit and their metrics are merged
 //! into a [`ServeMetrics`].
 
@@ -28,7 +31,7 @@ use crate::runtime::client::Runtime;
 use crate::runtime::infer::{Prediction, TsdInference};
 use crate::serve::atlas::{AtlasConfig, ScheduleAtlas};
 use crate::serve::batch::{
-    batch_makespan, batch_share, member_report, stub_predictions, BatchConfig,
+    batch_makespan, batch_share, member_report, stub_predictions, BatchConfig, WindowAutotuner,
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
@@ -41,7 +44,7 @@ use crate::util::lru::LruCache;
 use crate::util::units::Time;
 use std::fmt;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -102,17 +105,26 @@ pub struct StealConfig {
     /// `false` pins every job to the shard it was dispatched to (the
     /// pre-stealing behavior; `serve --no-steal`).
     pub enabled: bool,
-    /// How often an idle worker re-samples sibling depth mirrors while its
-    /// own queue is empty. Only idle workers pay this wakeup; busy workers
-    /// never poll.
+    /// Fallback heartbeat: the longest an idle worker sleeps before
+    /// re-sampling sibling depth mirrors even without a wake. Steal latency
+    /// is bounded by the event-driven wakeup ([`StealMesh`]), not this
+    /// interval — the heartbeat only covers a wake suppressed by dedup or a
+    /// victim that never crossed [`StealConfig::wake_threshold`], so it can
+    /// be lazy. Only idle workers pay it; busy workers never poll.
     pub poll: Duration,
+    /// Victim backlog depth at or above which a submit posts a wake to the
+    /// longest-idle sibling. `1` wakes a thief for every queued job;
+    /// larger values let the victim's own worker absorb small backlogs
+    /// without wakeup traffic.
+    pub wake_threshold: usize,
 }
 
 impl Default for StealConfig {
     fn default() -> Self {
         StealConfig {
             enabled: true,
-            poll: Duration::from_micros(200),
+            poll: Duration::from_millis(5),
+            wake_threshold: 2,
         }
     }
 }
@@ -207,9 +219,21 @@ pub(crate) struct ShardState<J> {
     pub(crate) stopping: bool,
 }
 
+/// One shard: the admission half (`state`, taken by submitters and by the
+/// dequeue predicates) is split from the dispatch half (`gate` + `cv`, the
+/// only things a parked worker holds). Submitters therefore never contend
+/// with a sleeping worker's condvar re-acquisition, and the worker's park
+/// path never holds the queue lock.
 pub(crate) struct Shard<J> {
+    /// Admission half: the EDF queue and the stopping flag. Held only for
+    /// push/pop/peek — never across a wait.
     pub(crate) state: Mutex<ShardState<J>>,
-    pub(crate) cv: Condvar,
+    /// Dispatch half: the wake token. `true` means "something changed since
+    /// you last looked" (new job, stop, or a steal wake); set under this
+    /// mutex *before* notifying, so a wake posted between a worker's queue
+    /// check and its park is never lost.
+    gate: Mutex<bool>,
+    cv: Condvar,
     /// Queue depth mirror, readable without taking the shard lock: the
     /// dispatcher samples every shard's backlog on each submit.
     pub(crate) depth: AtomicUsize,
@@ -222,29 +246,193 @@ impl<J> Shard<J> {
                 queue,
                 stopping: false,
             }),
+            gate: Mutex::new(false),
             cv: Condvar::new(),
             depth: AtomicUsize::new(0),
         }
     }
+
+    /// Park on the dispatch gate until [`Shard::ring`] posts a wake token
+    /// or `timeout` elapses (`None` parks indefinitely). Consumes the
+    /// token; returns whether one was present — `false` is a heartbeat
+    /// expiry (a spurious condvar wake with no token reads the same way).
+    /// Only the shard's owning worker parks here, so there is exactly one
+    /// waiter per gate and `notify_one` cannot miss anyone.
+    pub(crate) fn park(&self, timeout: Option<Duration>) -> bool {
+        // lint: allow(no-unwrap): a poisoned gate means a worker panicked
+        // mid-wake; crashing is the safe option.
+        let mut token = self.gate.lock().expect("gate lock poisoned");
+        if !*token {
+            token = match timeout {
+                Some(d) => {
+                    // lint: allow(no-unwrap): same poisoning rationale.
+                    self.cv.wait_timeout(token, d).expect("gate lock poisoned").0
+                }
+                // lint: allow(no-unwrap): same poisoning rationale.
+                None => self.cv.wait(token).expect("gate lock poisoned"),
+            };
+        }
+        let woke = *token;
+        *token = false;
+        woke
+    }
+
+    /// Post a wake token and wake the parked owner. The token is set under
+    /// the gate mutex *before* the notify, which closes the check-vs-park
+    /// race: a worker between its queue check and [`Shard::park`] finds the
+    /// token instead of sleeping through the wake.
+    pub(crate) fn ring(&self) {
+        // lint: allow(no-unwrap): same poisoning rationale as `park`.
+        let mut token = self.gate.lock().expect("gate lock poisoned");
+        *token = true;
+        drop(token);
+        self.cv.notify_one();
+    }
 }
 
-/// One dequeued dispatch group, tagged with where it came from.
-pub(crate) struct PoppedGroup<J> {
-    pub(crate) jobs: Vec<(Time, J)>,
+/// Event-driven steal notifier: one slot per worker.
+///
+/// A submitter whose shard backlog crosses [`StealConfig::wake_threshold`]
+/// posts a wake to the longest-idle sibling instead of leaving that sibling
+/// to discover the backlog on its fallback-heartbeat poll, so steal latency
+/// is bounded by a wakeup, not by [`StealConfig::poll`]. The wake itself is
+/// delivered through the thief's shard gate ([`Shard::ring`]), which is
+/// lossless; the atomics here are the *targeting* heuristic (who is idle,
+/// since when) and the latency anchor (when the wake was posted).
+pub(crate) struct StealMesh {
+    start: Instant,
+    /// Per-worker idle stamp: `0` while the worker is active, otherwise the
+    /// `idle_seq` ticket taken when it went idle — a smaller ticket means
+    /// idle longer, so victims wake the thief with the smallest stamp.
+    idle_since: Vec<AtomicU64>,
+    /// Per-worker pending wake: `0` when none, otherwise nanoseconds since
+    /// `start` at post time. Doubles as the dedup token (one outstanding
+    /// wake per thief) and the wakeup-latency anchor.
+    wake_ns: Vec<AtomicU64>,
+    idle_seq: AtomicU64,
+    /// Backlog depth at-or-above which a submit wakes a thief; `0` means
+    /// wakes are off entirely (stealing disabled, or nobody to wake).
+    threshold: usize,
+}
+
+impl StealMesh {
+    pub(crate) fn new(workers: usize, steal: &StealConfig) -> StealMesh {
+        let threshold = if steal.enabled && workers > 1 {
+            steal.wake_threshold.max(1)
+        } else {
+            0
+        };
+        StealMesh {
+            start: Instant::now(),
+            idle_since: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            wake_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            idle_seq: AtomicU64::new(0),
+            threshold,
+        }
+    }
+
+    /// Monotonic nanoseconds since mesh construction, clamped away from the
+    /// `0` sentinel so a posted stamp is always distinguishable from "no
+    /// wake pending".
+    fn now_ns(&self) -> u64 {
+        u64::try_from(self.start.elapsed().as_nanos())
+            .unwrap_or(u64::MAX)
+            .max(1)
+    }
+
+    /// Stamp this worker idle (about to park with an empty queue).
+    pub(crate) fn mark_idle(&self, me: usize) {
+        // ordering: the idle stamps are a victim-side targeting heuristic
+        // like the depth mirrors — a stale rank only mis-picks which thief
+        // to wake. The wake handoff itself rides the gate mutex, so no
+        // publication protocol is needed here.
+        let ticket = self.idle_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        self.idle_since[me].store(ticket, Ordering::Relaxed);
+    }
+
+    /// Clear this worker's idle stamp (found work, or gave up parking).
+    pub(crate) fn mark_active(&self, me: usize) {
+        // ordering: relaxed targeting stamp, see `mark_idle`.
+        self.idle_since[me].store(0, Ordering::Relaxed);
+    }
+
+    /// Called by a submitter after pushing onto `victim`'s queue left it
+    /// `depth` deep: if the backlog crossed the wake threshold, post a wake
+    /// to the longest-idle sibling and ring its gate. Deduplicated — a
+    /// thief with a wake already pending is not re-notified, so a burst of
+    /// submits costs one wakeup, not one per job.
+    pub(crate) fn wake_for_backlog<J>(&self, victim: usize, depth: usize, shards: &[Arc<Shard<J>>]) {
+        if self.threshold == 0 || depth < self.threshold {
+            return;
+        }
+        let mut best = u64::MAX;
+        let mut thief = usize::MAX;
+        for (i, slot) in self.idle_since.iter().enumerate() {
+            if i == victim {
+                continue;
+            }
+            // ordering: relaxed targeting scan, see `mark_idle`.
+            let ticket = slot.load(Ordering::Relaxed);
+            if ticket != 0 && ticket < best {
+                best = ticket;
+                thief = i;
+            }
+        }
+        if thief == usize::MAX {
+            return;
+        }
+        let posted = self.now_ns();
+        let claimed = self.wake_ns[thief]
+            // ordering: success Release pairs with the Acquire swap in
+            // `consume_wake` so the thief's latency read sees the stamp
+            // that was actually posted; failure means a wake is already
+            // pending (dedup) and the observed value goes unused.
+            .compare_exchange(0, posted, Ordering::Release, Ordering::Relaxed);
+        if claimed.is_ok() {
+            shards[thief].ring();
+        }
+    }
+
+    /// Consume a pending wake addressed to this worker, returning how long
+    /// it sat between the victim posting it and the thief waking.
+    pub(crate) fn consume_wake(&self, me: usize) -> Option<Duration> {
+        // ordering: Acquire pairs with the posting CAS's Release in
+        // `wake_for_backlog`, see there.
+        let posted = self.wake_ns[me].swap(0, Ordering::Acquire);
+        (posted != 0).then(|| Duration::from_nanos(self.now_ns().saturating_sub(posted)))
+    }
+}
+
+/// One dequeued dispatch group's provenance. The jobs themselves land in
+/// the caller-owned buffer passed to [`pop_group`] — steady-state dispatch
+/// reuses that buffer and allocates nothing.
+pub(crate) struct Popped {
     /// `true` when the group was lifted from a sibling shard's queue.
     pub(crate) stolen: bool,
 }
 
 /// Block until work is available on `shards[me]` — or, when stealing is
-/// enabled and the own queue is empty, on the most-backlogged sibling —
-/// then pop an EDF-contiguous compatible group under `key`/`grow` (see
-/// [`EdfQueue::pop_compatible`]). Honors the batch fill window: when the
-/// backlog cannot fill a batch, the worker keeps waiting — re-waiting
-/// across wakeups, so one early straggler or a spurious wakeup cannot cut
-/// the window short — until the batch can fill or `batch.window` elapses,
-/// *clamped to the head's remaining laxity* (`slack`: a configured window
-/// must never consume the slack the head needs to still dispatch in time).
-/// Returns `None` when the own shard is stopping and drained.
+/// enabled and the own queue is empty, on a backlogged sibling — then pop
+/// an EDF-contiguous compatible group under `key`/`grow` (see
+/// [`EdfQueue::pop_compatible_into`]) into the caller-owned `out` buffer.
+/// The buffer is reused across dispatches, so steady-state group formation
+/// performs no heap allocation.
+///
+/// Honors the batch fill window with one *precise* timed wait: when the
+/// backlog cannot fill a batch, the wait deadline is derived once from the
+/// head's remaining laxity clamped to `fill_window` (`slack`: a configured
+/// window must never consume the slack the head needs to still dispatch in
+/// time) and re-armed only when the head's identity
+/// ([`EdfQueue::head_seq`]) changes — a straggler joining the group or a
+/// spurious wake re-parks to the *same* absolute instant instead of
+/// recomputing (or worse, restarting) the window. Returns `None` when the
+/// own shard is stopping and drained.
+///
+/// Idle workers park on their shard gate and are woken event-driven: by a
+/// submit to their own shard ([`Shard::ring`]) or by a backlogged victim's
+/// steal wake ([`StealMesh::wake_for_backlog`]). `steal.poll` survives only
+/// as the fallback heartbeat bounding how long a suppressed wake can
+/// strand queued work.
 ///
 /// Steals never wait: the victim's queued work is stranded (its worker is
 /// stuck mid-dispatch), so the thief lifts whatever compatible prefix
@@ -253,98 +441,114 @@ pub(crate) struct PoppedGroup<J> {
 /// be deliberately holding it for stragglers — so thieves skip it until it
 /// has aged past the window; the age rule is raceless (derived from the
 /// job itself, not from worker state). Pops — own or stolen — happen under
-/// the owning shard's lock, so no job can be dispatched twice; the thief
-/// never holds two shard locks at once, so stealing cannot deadlock
-/// against submit, shutdown, or a symmetric thief.
+/// the owning shard's admission lock, so no job can be dispatched twice;
+/// the thief never holds two shard locks at once, so stealing cannot
+/// deadlock against submit, shutdown, or a symmetric thief.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn pop_group<J, K: PartialEq>(
     shards: &[Arc<Shard<J>>],
     me: usize,
     batch: &BatchConfig,
+    fill_window: Duration,
     steal: &StealConfig,
+    mesh: &StealMesh,
+    tel: &WorkerShard,
     key: &impl Fn(&J) -> K,
     grow: &impl Fn(&[(Time, J)], Time, &J) -> bool,
     slack: &impl Fn(Time, &J) -> Duration,
     queued_for: &impl Fn(&J) -> Duration,
-) -> Option<PoppedGroup<J>> {
+    out: &mut Vec<(Time, J)>,
+) -> Option<Popped> {
     let shard = &shards[me];
     let can_steal = steal.enabled && shards.len() > 1;
+    // The armed fill wait: `(head_seq, wake_at)`. Re-derived only when the
+    // head changes; an unchanged head re-parks to the same absolute
+    // instant, so wakeups mid-fill cost one peek, not a recomputation.
+    let mut armed: Option<(u64, Instant)> = None;
     loop {
         // lint: allow(no-unwrap): a poisoned shard means a worker panicked
         // with the queue in an unknown state; crashing is the safe option.
         let mut st = shard.state.lock().expect("shard lock poisoned");
         if !st.queue.is_empty() {
-            if batch.max_batch > 1 && !batch.window.is_zero() && !st.stopping {
-                // A queue that can never hold `max_batch` entries must not
-                // make every dispatch burn the whole window waiting for a
-                // fill that cannot happen.
-                let fill_target = batch.max_batch.min(st.queue.capacity().max(1));
-                let until = Instant::now() + batch.window;
-                while st.queue.len() < fill_target && !st.stopping {
-                    // Re-peeked every wakeup: a tighter head may have
-                    // arrived mid-wait, and the head's laxity only shrinks
-                    // as wall time passes.
-                    let head_slack = match st.queue.peek() {
-                        Some((deadline, job)) => slack(deadline, job),
-                        // A sibling stole the whole queue mid-wait.
-                        None => Duration::ZERO,
-                    };
-                    let remaining = until
-                        .saturating_duration_since(Instant::now())
-                        .min(head_slack);
-                    if remaining.is_zero() {
-                        break;
+            // A queue that can never hold `max_batch` entries must not
+            // make every dispatch burn the whole window waiting for a
+            // fill that cannot happen.
+            let fill_target = batch.max_batch.min(st.queue.capacity().max(1));
+            if batch.max_batch > 1
+                && !fill_window.is_zero()
+                && !st.stopping
+                && st.queue.len() < fill_target
+            {
+                let now = Instant::now();
+                let head_seq = st.queue.head_seq();
+                let wake_at = match armed {
+                    Some((seq, at)) if head_seq == Some(seq) => at,
+                    _ => {
+                        // New head (or first sight of this backlog): derive
+                        // its one wait deadline — the fill window clamped
+                        // to the head's remaining laxity.
+                        let head_slack = match st.queue.peek() {
+                            Some((deadline, job)) => slack(deadline, job),
+                            None => Duration::ZERO,
+                        };
+                        let at = now + fill_window.min(head_slack);
+                        armed = Some((head_seq.unwrap_or(0), at));
+                        at
                     }
-                    st = shard
-                        .cv
-                        .wait_timeout(st, remaining)
-                        // lint: allow(no-unwrap): same poisoning rationale
-                        // as the acquisition above.
-                        .expect("shard lock poisoned")
-                        .0;
+                };
+                let remaining = wake_at.saturating_duration_since(now);
+                if !remaining.is_zero() {
+                    drop(st);
+                    // Parked on the gate: a straggler submit rings it, and
+                    // the loop re-checks fill/head either way.
+                    shard.park(Some(remaining));
+                    continue;
                 }
             }
-            let jobs = st.queue.pop_compatible(batch.max_batch, key, grow);
+            armed = None;
+            let popped = st.queue.pop_compatible_into(batch.max_batch, key, grow, out);
             // ordering: the depth mirror is a lock-free steal heuristic;
             // stale values only misrank victims, the steal itself re-reads
             // the queue under the victim's lock.
             shard.depth.store(st.queue.len(), Ordering::Relaxed);
-            return Some(PoppedGroup { jobs, stolen: false });
+            debug_assert!(popped > 0, "non-empty queue must pop at least the head");
+            return Some(Popped { stolen: false });
         }
         if st.stopping {
             return None;
         }
         drop(st);
-        if can_steal {
-            if let Some(jobs) = try_steal(shards, me, batch, key, grow, queued_for) {
-                return Some(PoppedGroup { jobs, stolen: true });
+        armed = None;
+        mesh.mark_idle(me);
+        if can_steal && try_steal(shards, me, batch, key, grow, queued_for, out) {
+            mesh.mark_active(me);
+            if let Some(latency) = mesh.consume_wake(me) {
+                tel.record_wakeup(latency);
             }
+            return Some(Popped { stolen: true });
         }
-        // lint: allow(no-unwrap): same poisoning rationale as above.
-        let st = shard.state.lock().expect("shard lock poisoned");
-        if !st.queue.is_empty() || st.stopping {
-            continue;
-        }
-        if can_steal {
-            // Idle poll: a victim's worker stuck mid-dispatch never
-            // notifies this shard's condvar, so an idle thief re-samples
-            // sibling depth mirrors on a timeout instead of sleeping
-            // indefinitely.
-            // lint: allow(no-unwrap): same poisoning rationale as above.
-            drop(shard.cv.wait_timeout(st, steal.poll).expect("shard lock poisoned"));
+        // Park event-driven; `steal.poll` is only the fallback heartbeat
+        // bounding how long a suppressed steal wake can strand sibling
+        // work. Without stealing there is nothing to heartbeat for.
+        let woke = shard.park(can_steal.then_some(steal.poll));
+        mesh.mark_active(me);
+        if woke {
+            if let Some(latency) = mesh.consume_wake(me) {
+                tel.record_wakeup(latency);
+            }
         } else {
-            // lint: allow(no-unwrap): same poisoning rationale as above.
-            drop(shard.cv.wait(st).expect("shard lock poisoned"));
+            tel.record_spurious_wakeup();
         }
     }
 }
 
 /// Scan sibling depth mirrors (no locks) and lift an EDF-contiguous
-/// compatible group from the head of the most-backlogged victim's queue,
-/// under the victim's lock and the caller's own `key`/`grow` predicates —
-/// a stolen group is admissible exactly when the victim's own worker would
-/// have formed it. Victims are tried in descending-backlog order until one
-/// yields work.
+/// compatible group from the head of the most-backlogged victim's queue
+/// into `out`, under the victim's lock and the caller's own `key`/`grow`
+/// predicates — a stolen group is admissible exactly when the victim's own
+/// worker would have formed it. Victims are tried in descending-backlog
+/// order until one yields work; returns whether anything was lifted.
+#[allow(clippy::too_many_arguments)]
 fn try_steal<J, K: PartialEq>(
     shards: &[Arc<Shard<J>>],
     me: usize,
@@ -352,7 +556,8 @@ fn try_steal<J, K: PartialEq>(
     key: &impl Fn(&J) -> K,
     grow: &impl Fn(&[(Time, J)], Time, &J) -> bool,
     queued_for: &impl Fn(&J) -> Duration,
-) -> Option<Vec<(Time, J)>> {
+    out: &mut Vec<(Time, J)>,
+) -> bool {
     let mut victims: Vec<(usize, usize)> = shards
         .iter()
         .enumerate()
@@ -373,7 +578,10 @@ fn try_steal<J, K: PartialEq>(
         // it early would dispatch a partial batch and silently defeat
         // `--batch-window-us` amortization whenever any sibling idles.
         // Age is a property of the job itself, so this rule has no race
-        // with the victim's worker entering or leaving its fill wait.
+        // with the victim's worker entering or leaving its fill wait. The
+        // *configured* window governs here even when the victim autotunes
+        // its effective window shorter: erring lazy never steals a group
+        // the victim still wants.
         if batch.max_batch > 1 && !batch.window.is_zero() {
             if let Some((_, head)) = st.queue.peek() {
                 if queued_for(head) < batch.window {
@@ -381,15 +589,15 @@ fn try_steal<J, K: PartialEq>(
                 }
             }
         }
-        let jobs = st.queue.pop_compatible(batch.max_batch, key, grow);
+        let popped = st.queue.pop_compatible_into(batch.max_batch, key, grow, out);
         // ordering: relaxed depth mirror refresh, see the victim scan.
         victim.depth.store(st.queue.len(), Ordering::Relaxed);
         drop(st);
-        if !jobs.is_empty() {
-            return Some(jobs);
+        if popped > 0 {
+            return true;
         }
     }
-    None
+    false
 }
 
 /// Remaining wall-clock laxity of a queue head: its deadline minus the
@@ -453,6 +661,10 @@ struct ServeContext {
 /// call [`ServePool::shutdown`] to collect the aggregate instead.
 pub struct ServePool {
     shards: Vec<Arc<Shard<Job>>>,
+    /// Steal-wake notifier shared with the workers: submit posts wakes to
+    /// idle siblings through it when a shard's backlog crosses the
+    /// threshold.
+    mesh: Arc<StealMesh>,
     workers: Vec<JoinHandle<()>>,
     next: AtomicUsize,
     atlas: Arc<ScheduleAtlas>,
@@ -517,12 +729,14 @@ impl ServePool {
                 ))
             })
             .collect();
+        let mesh = Arc::new(StealMesh::new(n, &steal));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let handle = std::thread::Builder::new()
                 .name(format!("medea-serve-{i}"))
                 .spawn({
                     let shards = shards.clone();
+                    let mesh = mesh.clone();
                     let ctx = ctx.clone();
                     let atlas = atlas.clone();
                     let dir = config.artifact_dir.clone();
@@ -541,6 +755,7 @@ impl ServePool {
                             cache,
                             &batch,
                             &steal,
+                            &mesh,
                             &tel,
                             trace.as_deref(),
                         )
@@ -552,6 +767,7 @@ impl ServePool {
 
         Ok(ServePool {
             shards,
+            mesh,
             workers,
             next: AtomicUsize::new(0),
             atlas,
@@ -629,24 +845,28 @@ impl ServePool {
         let capacity = st.queue.capacity();
         match st.queue.push(deadline, job) {
             Admission::Accepted => {
+                let depth = st.queue.len();
                 // ordering: relaxed depth hint, see `submit`.
-                shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                shard.depth.store(depth, Ordering::Relaxed);
                 drop(st);
-                shard.cv.notify_one();
+                shard.ring();
+                self.mesh.wake_for_backlog(idx, depth, &self.shards);
                 if let Some(ring) = &self.trace {
                     ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(deadline));
                 }
                 Ok(Ticket { rx })
             }
             Admission::AcceptedShedding { evicted, .. } => {
+                let depth = st.queue.len();
                 // ordering: relaxed depth hint, see `submit`.
-                shard.depth.store(st.queue.len(), Ordering::Relaxed);
+                shard.depth.store(depth, Ordering::Relaxed);
                 let reason = Rejection::QueueFull { capacity };
                 self.telemetry.record_shed(&reason);
                 self.trace_shed(idx, evicted.id, &reason);
                 let _ = evicted.reply.send(Err(ServeError::Shed(reason)));
                 drop(st);
-                shard.cv.notify_one();
+                shard.ring();
+                self.mesh.wake_for_backlog(idx, depth, &self.shards);
                 if let Some(ring) = &self.trace {
                     ring.record(TraceEventKind::Enqueue, idx as u32, id, deadline_us(deadline));
                 }
@@ -686,7 +906,9 @@ impl ServePool {
             let mut st = shard.state.lock().expect("shard lock poisoned");
             st.stopping = true;
             drop(st);
-            shard.cv.notify_all();
+            // One waiter per gate (the shard's own worker), so a single
+            // token wake reaches everyone affected.
+            shard.ring();
         }
     }
 
@@ -790,6 +1012,7 @@ fn worker_loop(
     cache_capacity: usize,
     batch: &BatchConfig,
     steal: &StealConfig,
+    mesh: &StealMesh,
     tel: &WorkerShard,
     trace: Option<&TraceRing>,
 ) {
@@ -821,13 +1044,33 @@ fn worker_loop(
     let slack = |deadline: Time, job: &Job| head_laxity(deadline, job.unit_time, job.submitted);
     let queued_for = |job: &Job| job.submitted.elapsed();
 
+    // The reusable dispatch-group buffer: sized once for the largest legal
+    // batch, so steady-state group formation allocates nothing.
+    let mut group: Vec<(Time, Job)> = Vec::with_capacity(batch.max_batch.max(1));
+    let mut tuner = WindowAutotuner::new(batch);
     loop {
-        let popped = pop_group(shards, me, batch, steal, &key, &grow, &slack, &queued_for);
+        group.clear();
+        let fill_window = tuner.effective();
+        tel.set_batch_window(fill_window);
+        let popped = pop_group(
+            shards,
+            me,
+            batch,
+            fill_window,
+            steal,
+            mesh,
+            tel,
+            &key,
+            &grow,
+            &slack,
+            &queued_for,
+            &mut group,
+        );
         let Some(popped) = popped else { break };
-        let group = popped.jobs;
         if group.is_empty() {
             continue;
         }
+        tuner.observe(group.len());
         let exec_start = Instant::now();
         let head_id = group[0].1.id;
         let size = group.len() as u64;
@@ -852,10 +1095,9 @@ fn worker_loop(
         }
         if group.len() == 1 {
             // Solo dispatch: the exact legacy path (per-member deadline
-            // stamping + LRU-cached schedules).
-            // lint: allow(no-unwrap): guarded by the len() == 1 check
-            // above.
-            let (_, job) = group.into_iter().next().expect("len checked");
+            // stamping + LRU-cached schedules). `swap_remove` keeps the
+            // buffer's capacity for the next dispatch.
+            let (_, job) = group.swap_remove(0);
             let outcome = process(&job, ctx, atlas, &mut schedules, runtime.as_mut(), &infer);
             let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);
             if let Ok(o) = &outcome {
@@ -873,7 +1115,7 @@ fn worker_loop(
             }
             let _ = job.reply.send(outcome);
         } else {
-            process_batch(group, ctx, atlas, runtime.as_mut(), &infer, batch, me, tel, trace);
+            process_batch(&mut group, ctx, atlas, runtime.as_mut(), &infer, batch, me, tel, trace);
         }
         tel.record_dispatch_time(exec_start.elapsed());
     }
@@ -885,9 +1127,10 @@ fn worker_loop(
 /// shares (sums stay equal to the batch totals), deadlines and sleep judged
 /// against the batch *completion* time — all derived from the one fresh
 /// event-level replay, mirroring how the atlas knots were validated.
+/// Drains the caller's reusable group buffer (capacity is retained).
 #[allow(clippy::too_many_arguments)]
 fn process_batch(
-    group: Vec<(Time, Job)>,
+    group: &mut Vec<(Time, Job)>,
     ctx: &ServeContext,
     atlas: &ScheduleAtlas,
     runtime: Option<&mut Runtime>,
@@ -908,7 +1151,7 @@ fn process_batch(
                 requested: miss.requested,
                 floor: miss.floor,
             };
-            for (_, job) in group {
+            for (_, job) in group.drain(..) {
                 if let Some(ring) = trace {
                     ring.record(TraceEventKind::Shed, me as u32, job.id, reason.code());
                 }
@@ -929,7 +1172,7 @@ fn process_batch(
                 Ok(p) => p,
                 Err(e) => {
                     let msg = e.to_string();
-                    for (_, job) in group {
+                    for (_, job) in group.drain(..) {
                         if let Some(ring) = trace {
                             ring.record(TraceEventKind::Retire, me as u32, job.id, 0);
                         }
@@ -945,7 +1188,7 @@ fn process_batch(
     // Only successful fan-outs count as dispatches (the shed/error paths
     // above return early), keeping batched + solo == recorded requests.
     tel.record_batch(n);
-    for ((deadline, job), prediction) in group.into_iter().zip(predictions) {
+    for ((deadline, job), prediction) in group.drain(..).zip(predictions) {
         // Guaranteed by batch admission; recomputed rather than assumed so
         // the deadline-monotone property tests observe the real outcome.
         let met = share.batch_time.raw() <= deadline.raw();
@@ -1282,8 +1525,9 @@ mod tests {
     fn idle_workers_steal_from_a_backlogged_sibling() {
         // Everything lands on shard 0 while worker 1 idles: exactly the
         // stuck-shard scenario stealing exists for. Worker 0 alone needs
-        // many multi-ms dispatches to drain 64 jobs; worker 1 re-samples
-        // sibling depths every 200 µs, so it must lift at least one group.
+        // many multi-ms dispatches to drain 64 jobs; shard 0's backlog
+        // posts steal wakes to idle worker 1 (with the heartbeat poll as
+        // fallback), so it must lift at least one group.
         let pool = ServePool::start(test_config()).unwrap();
         let floor = pool.floor();
         let mut gen = EegGenerator::new(SynthConfig::default(), 25);
@@ -1369,5 +1613,75 @@ mod tests {
         // With stealing disabled every pinned job is served by its own
         // shard's worker.
         assert_eq!(m.per_worker_requests, vec![16, 0]);
+    }
+
+    fn mesh_shards(n: usize) -> Vec<Arc<Shard<u32>>> {
+        (0..n).map(|_| Arc::new(Shard::new(EdfQueue::new(4)))).collect()
+    }
+
+    #[test]
+    fn gate_park_consumes_a_posted_token() {
+        let shard = Arc::new(Shard::new(EdfQueue::<u32>::new(4)));
+        // A pre-posted token is consumed without sleeping.
+        shard.ring();
+        assert!(shard.park(Some(Duration::ZERO)));
+        // Consumed: the next zero-timeout park is a heartbeat expiry.
+        assert!(!shard.park(Some(Duration::ZERO)));
+        // Ringing twice coalesces into one token.
+        shard.ring();
+        shard.ring();
+        assert!(shard.park(Some(Duration::ZERO)));
+        assert!(!shard.park(Some(Duration::ZERO)));
+    }
+
+    #[test]
+    fn steal_mesh_targets_the_longest_idle_thief() {
+        let shards = mesh_shards(3);
+        let mesh = StealMesh::new(3, &StealConfig::default());
+        mesh.mark_idle(1); // idle first ⇒ longest idle
+        mesh.mark_idle(2);
+        mesh.wake_for_backlog(0, 2, &shards);
+        assert!(mesh.consume_wake(1).is_some(), "longest-idle thief not picked");
+        assert!(mesh.consume_wake(2).is_none());
+        // The wake rang thief 1's gate (and nobody else's).
+        assert!(shards[1].park(Some(Duration::ZERO)));
+        assert!(!shards[2].park(Some(Duration::ZERO)));
+        // Once worker 1 is active again, the wake goes to the next thief.
+        mesh.mark_active(1);
+        mesh.wake_for_backlog(0, 2, &shards);
+        assert!(mesh.consume_wake(2).is_some());
+    }
+
+    #[test]
+    fn steal_mesh_dedups_pending_wakes() {
+        let shards = mesh_shards(2);
+        let mesh = StealMesh::new(2, &StealConfig::default());
+        mesh.mark_idle(1);
+        mesh.wake_for_backlog(0, 2, &shards);
+        mesh.wake_for_backlog(0, 3, &shards);
+        // Two backlogged submits, one outstanding wake and one gate token.
+        assert!(shards[1].park(Some(Duration::ZERO)));
+        assert!(!shards[1].park(Some(Duration::ZERO)));
+        assert!(mesh.consume_wake(1).is_some());
+        assert!(mesh.consume_wake(1).is_none());
+    }
+
+    #[test]
+    fn steal_mesh_honors_threshold_and_disabled() {
+        let shards = mesh_shards(2);
+        // Below the wake threshold: the victim's own worker absorbs it.
+        let mesh = StealMesh::new(2, &StealConfig::default());
+        mesh.mark_idle(1);
+        mesh.wake_for_backlog(0, 1, &shards);
+        assert!(mesh.consume_wake(1).is_none());
+        // Stealing disabled: no wakes no matter the depth.
+        let mesh = StealMesh::new(2, &StealConfig::disabled());
+        mesh.mark_idle(1);
+        mesh.wake_for_backlog(0, 100, &shards);
+        assert!(mesh.consume_wake(1).is_none());
+        // A lone worker has nobody to wake.
+        let mesh = StealMesh::new(1, &StealConfig::default());
+        mesh.wake_for_backlog(0, 100, &shards);
+        assert!(mesh.consume_wake(0).is_none());
     }
 }

@@ -268,35 +268,60 @@ impl<T> EdfQueue<T> {
         key: impl Fn(&T) -> K,
         grow: impl Fn(&[(Time, T)], Time, &T) -> bool,
     ) -> Vec<(Time, T)> {
+        let mut group = Vec::with_capacity(max.max(1).min(self.len()));
+        self.pop_compatible_into(max, key, grow, &mut group);
+        group
+    }
+
+    /// [`EdfQueue::pop_compatible`] into a caller-owned buffer: the group is
+    /// appended to `out` (which the caller clears between dispatches), so a
+    /// worker loop that reuses one pre-sized buffer forms groups without any
+    /// heap allocation in steady state. Returns the number of entries
+    /// appended.
+    pub fn pop_compatible_into<K: PartialEq>(
+        &mut self,
+        max: usize,
+        key: impl Fn(&T) -> K,
+        grow: impl Fn(&[(Time, T)], Time, &T) -> bool,
+        out: &mut Vec<(Time, T)>,
+    ) -> usize {
         let Some(head) = self.pop() else {
-            return Vec::new();
+            return 0;
         };
         let max = max.max(1);
-        let mut group = Vec::with_capacity(max.min(self.len() + 1));
+        let base = out.len();
         // Hoisted: the head is fixed, and `key` may be arbitrarily
         // expensive for some callers. Skipped entirely when no candidate
         // could ever join (max 1 or nothing left queued).
         let head_key = (max > 1 && !self.heap.is_empty()).then(|| key(&head.1));
-        group.push(head);
-        while group.len() < max {
+        out.push(head);
+        while out.len() - base < max {
             let Some(next) = self.heap.peek() else { break };
             if Some(key(&next.item)) != head_key {
                 break;
             }
-            if !grow(&group, next.deadline, &next.item) {
+            if !grow(&out[base..], next.deadline, &next.item) {
                 break;
             }
             // lint: allow(no-unwrap): peek above returned Some and the
             // heap is not touched in between.
             let e = self.heap.pop().expect("peeked entry exists");
-            group.push((e.deadline, e.item));
+            out.push((e.deadline, e.item));
         }
-        group
+        out.len() - base
     }
 
     /// Deadline of the entry that would pop next.
     pub fn peek_deadline(&self) -> Option<Time> {
         self.heap.peek().map(|e| e.deadline)
+    }
+
+    /// Identity of the entry that would pop next: its admission sequence
+    /// number, unique per queue. Dispatch layers use this to re-arm a timed
+    /// fill wait only when the head actually changes (a later admission can
+    /// preempt the head; an unchanged head's wake instant stays fixed).
+    pub fn head_seq(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.seq)
     }
 
     /// The entry that would pop next, without removing it. Lets dispatch
@@ -559,6 +584,64 @@ mod tests {
         let group = pop_group(&mut q, 2, 10.0);
         assert_eq!(group.len(), 2);
         assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn pop_compatible_into_appends_and_reuses_the_buffer() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(8);
+        q.push(ms(300.0), "a3");
+        q.push(ms(100.0), "a1");
+        q.push(ms(200.0), "a2");
+        let mut buf: Vec<(Time, &str)> = Vec::with_capacity(8);
+        let n = q.pop_compatible_into(
+            8,
+            |item| item.as_bytes()[0],
+            |group, d, _| d.raw() <= group[0].0.raw() * 10.0,
+            &mut buf,
+        );
+        assert_eq!(n, 3);
+        assert_eq!(
+            buf,
+            vec![(ms(100.0), "a1"), (ms(200.0), "a2"), (ms(300.0), "a3")]
+        );
+        // Reuse after clear: no entries from the previous group leak in,
+        // and the capacity is retained (steady-state allocation-free).
+        let cap = buf.capacity();
+        buf.clear();
+        q.push(ms(50.0), "b1");
+        let n = q.pop_compatible_into(
+            8,
+            |item| item.as_bytes()[0],
+            |_, _, _| true,
+            &mut buf,
+        );
+        assert_eq!(n, 1);
+        assert_eq!(buf, vec![(ms(50.0), "b1")]);
+        assert_eq!(buf.capacity(), cap);
+        // Empty queue appends nothing.
+        buf.clear();
+        assert_eq!(
+            q.pop_compatible_into(8, |item| item.as_bytes()[0], |_, _, _| true, &mut buf),
+            0
+        );
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn head_seq_tracks_the_popping_entry() {
+        let mut q: EdfQueue<&str> = EdfQueue::new(8);
+        assert_eq!(q.head_seq(), None);
+        q.push(ms(200.0), "slow");
+        let slow = q.head_seq().expect("non-empty");
+        // A tighter admission preempts the head: the identity changes.
+        q.push(ms(50.0), "urgent");
+        let urgent = q.head_seq().expect("non-empty");
+        assert_ne!(slow, urgent);
+        // A slacker admission leaves the head untouched.
+        q.push(ms(500.0), "lax");
+        assert_eq!(q.head_seq(), Some(urgent));
+        q.pop();
+        assert_eq!(q.head_seq(), Some(slow));
     }
 
     #[test]

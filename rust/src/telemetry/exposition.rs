@@ -106,6 +106,23 @@ pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
         &workers,
         |w| w.stolen_requests,
     );
+    counter(
+        &mut out,
+        "medea_spurious_wakeups_total",
+        "Worker parks that ended without a wake token (heartbeat expiry).",
+        &workers,
+        |w| w.spurious_wakeups,
+    );
+
+    family(
+        &mut out,
+        "medea_batch_window_seconds",
+        "gauge",
+        "Effective batch fill window chosen for the latest dispatch.",
+    );
+    for (labels, w) in &workers {
+        series(&mut out, "medea_batch_window_seconds", labels, w.batch_window_ns as f64 / 1e9);
+    }
 
     family(
         &mut out,
@@ -176,6 +193,11 @@ pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
             "medea_dispatch_seconds",
             "Execution time of one dispatch, dequeue to retire.",
             |w: &WorkerSnapshot| &w.dispatch,
+        ),
+        (
+            "medea_wakeup_latency_seconds",
+            "Steal-wake delivery: victim posts the wake to thief waking.",
+            |w: &WorkerSnapshot| &w.wake,
         ),
     ] {
         family(&mut out, name, "histogram", help);
@@ -546,6 +568,9 @@ mod tests {
         ));
         assert!(body.contains("shed_reason=\"queue_full\"} 1"));
         assert!(body.contains("medea_batch_size_bucket{"));
+        assert!(body.contains("# TYPE medea_wakeup_latency_seconds histogram"));
+        assert!(body.contains("# TYPE medea_spurious_wakeups_total counter"));
+        assert!(body.contains("# TYPE medea_batch_window_seconds gauge"));
         // Every non-comment line is `name{labels} value` with a float value.
         for line in body.lines() {
             if line.starts_with('#') {

@@ -58,6 +58,13 @@ pub struct WorkerShard {
     dispatch: AtomicHist,
     /// Per-request simulated energy, nJ.
     energy: AtomicHist,
+    /// Steal-wake latency (victim posts a wake → thief observes it), ns.
+    wake: AtomicHist,
+    /// Parks that ended without a wake token (heartbeat / stray notify).
+    spurious_wakeups: AtomicU64,
+    /// Effective batch fill window chosen for the latest dispatch, ns
+    /// (a gauge: last-write-wins, not a monotone counter).
+    batch_window_ns: AtomicU64,
 }
 
 impl Default for WorkerShard {
@@ -76,6 +83,9 @@ impl Default for WorkerShard {
             laxity: AtomicHist::new(),
             dispatch: AtomicHist::new(),
             energy: AtomicHist::new(),
+            wake: AtomicHist::new(),
+            spurious_wakeups: AtomicU64::new(0),
+            batch_window_ns: AtomicU64::new(0),
         }
     }
 }
@@ -140,6 +150,27 @@ impl WorkerShard {
         self.dispatch.record(dur_ns(took));
     }
 
+    /// Record one steal-wake delivery latency (victim posted the wake →
+    /// this thief consumed it on waking).
+    pub fn record_wakeup(&self, latency: Duration) {
+        self.wake.record(dur_ns(latency));
+    }
+
+    /// Record one park that ended without a wake token (fallback heartbeat
+    /// expiry or a stray notify) — the event-driven path's waste metric.
+    pub fn record_spurious_wakeup(&self) {
+        // ordering: relaxed counter, see `record`.
+        self.spurious_wakeups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the effective batch fill window chosen for the latest
+    /// dispatch (static `--batch-window-us` or the autotuner's pick).
+    pub fn set_batch_window(&self, window: Duration) {
+        // ordering: last-write-wins gauge with no payload protocol; readers
+        // take whatever the most recent dispatch published.
+        self.batch_window_ns.store(dur_ns(window), Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> WorkerSnapshot {
         // ordering: relaxed reads of relaxed counters, see `record` — the
         // snapshot is a statistically consistent view, not a linearizable
@@ -165,6 +196,10 @@ impl WorkerShard {
             laxity: self.laxity.snapshot(),
             dispatch: self.dispatch.snapshot(),
             energy: self.energy.snapshot(),
+            wake: self.wake.snapshot(),
+            // ordering: relaxed snapshot reads, see above.
+            spurious_wakeups: self.spurious_wakeups.load(Ordering::Relaxed),
+            batch_window_ns: self.batch_window_ns.load(Ordering::Relaxed),
         }
     }
 }
@@ -186,6 +221,10 @@ pub struct WorkerSnapshot {
     pub laxity: HistData,
     pub dispatch: HistData,
     pub energy: HistData,
+    pub wake: HistData,
+    pub spurious_wakeups: u64,
+    /// Gauge, not a counter: the latest published effective fill window.
+    pub batch_window_ns: u64,
 }
 
 impl WorkerSnapshot {
@@ -208,6 +247,10 @@ impl WorkerSnapshot {
         self.laxity.merge(&other.laxity);
         self.dispatch.merge(&other.dispatch);
         self.energy.merge(&other.energy);
+        self.wake.merge(&other.wake);
+        self.spurious_wakeups += other.spurious_wakeups;
+        // Merging gauges: keep the widest window any worker is holding open.
+        self.batch_window_ns = self.batch_window_ns.max(other.batch_window_ns);
     }
 
     /// Total dispatches (solo + batched).
@@ -384,6 +427,9 @@ impl RegistrySnapshot {
         o.insert("host_p99_us", t.host.percentile(99.0) as f64 / 1e3);
         o.insert("queue_wait_p99_us", t.queue_wait.percentile(99.0) as f64 / 1e3);
         o.insert("dispatch_p99_us", t.dispatch.percentile(99.0) as f64 / 1e3);
+        o.insert("wakeup_p99_us", t.wake.percentile(99.0) as f64 / 1e3);
+        o.insert("spurious_wakeups", t.spurious_wakeups);
+        o.insert("batch_window_us", t.batch_window_ns as f64 / 1e3);
         Json::Obj(o)
     }
 }
@@ -403,8 +449,14 @@ mod tests {
         shard.record_queue_wait(Duration::from_micros(30));
         shard.record_head_laxity(Duration::from_millis(90));
         shard.record_dispatch_time(Duration::from_millis(3));
+        shard.record_wakeup(Duration::from_micros(12));
+        shard.record_spurious_wakeup();
+        shard.set_batch_window(Duration::from_micros(250));
         let snap = shard.snapshot();
         assert_eq!(snap.requests, 2);
+        assert_eq!(snap.wake.count(), 1);
+        assert_eq!(snap.spurious_wakeups, 1);
+        assert_eq!(snap.batch_window_ns, 250_000);
         assert_eq!(snap.batch_hist, vec![0, 1]);
         assert_eq!(snap.dispatches(), 1);
         let m = snap.to_metrics();
@@ -440,6 +492,8 @@ mod tests {
         reg.record_shed(&Rejection::ShuttingDown);
         reg.worker(0).record(false, true, 1e-6, 0.01, Duration::from_millis(1));
         reg.worker(1).record(false, true, 1e-6, 0.01, Duration::from_millis(3));
+        reg.worker(0).set_batch_window(Duration::from_micros(100));
+        reg.worker(1).set_batch_window(Duration::from_micros(400));
         let snap = reg.snapshot();
         assert_eq!(snap.shed_below_floor, 2);
         assert_eq!(snap.shed_queue_full, 1);
@@ -450,6 +504,8 @@ mod tests {
         assert_eq!(t.requests, 2);
         assert_eq!(t.host.count(), 2);
         assert_eq!(t.host.percentile(100.0), 3_000_000);
+        // The fill-window gauge merges as a max across workers.
+        assert_eq!(t.batch_window_ns, 400_000);
         let j = snap.to_json();
         assert_eq!(j.get("requests").and_then(|v| v.as_u64()), Some(2));
         let shed = j.get("shed").expect("shed key");

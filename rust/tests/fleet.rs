@@ -1,6 +1,7 @@
 //! Fleet-subsystem integration tests: one registry serving multiple
 //! platform/workload entries, live hot-swap under traffic, energy-budget
-//! resolution, and the on-disk library round trip.
+//! resolution, the on-disk library round trip, and the reload watcher
+//! that bridges on-disk swaps into a running registry.
 
 use medea::eeg::synth::{EegGenerator, SynthConfig};
 use medea::fleet::{
@@ -264,6 +265,53 @@ fn library_round_trips_swaps_and_skips_stale_entries() {
     let partial = load_library(&dir).unwrap();
     assert_eq!(partial.len(), 1);
     assert!(partial.resolve(&e2.key).is_none());
+}
+
+#[test]
+fn reload_watcher_republishes_on_disk_swaps_into_a_running_registry() {
+    use medea::fleet::{index_epoch, reload_library_into, watch_library};
+    use std::time::{Duration, Instant};
+
+    let dir = std::env::temp_dir().join("medea_fleet_watch_lib");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let seeded = FleetRegistry::new();
+    seeded.publish(FleetEntry::build("heeptimize", "tsd-small", &fast_cfg()).unwrap());
+    save_library(&dir, &seeded).unwrap();
+
+    let registry = Arc::new(load_library(&dir).unwrap());
+    assert_eq!(registry.len(), 1);
+
+    // A second entry lands on disk behind the running registry's back.
+    let e2 = FleetEntry::build("heeptimize-hp", "tsd-small", &fast_cfg()).unwrap();
+    let key2 = e2.key;
+    let disk_epoch = swap_entry(&dir, &e2).unwrap();
+    assert!(registry.resolve(&key2).is_none(), "nothing reloaded yet");
+    assert_eq!(index_epoch(&dir).unwrap(), disk_epoch);
+
+    // One manual bridge pass publishes exactly the new entry and catches
+    // the registry's epoch up to the on-disk index; a second pass finds
+    // nothing new.
+    assert_eq!(reload_library_into(&dir, &registry).unwrap(), 1);
+    assert!(registry.resolve(&key2).is_some());
+    assert!(registry.epoch() >= disk_epoch);
+    assert_eq!(reload_library_into(&dir, &registry).unwrap(), 0);
+
+    // The background watcher notices a third swap on its own.
+    let watcher = watch_library(&dir, registry.clone(), Duration::from_millis(25));
+    let e3 = FleetEntry::build("heeptimize", "tsd-core", &fast_cfg()).unwrap();
+    let key3 = e3.key;
+    swap_entry(&dir, &e3).unwrap();
+    let give_up = Instant::now() + Duration::from_secs(10);
+    while registry.resolve(&key3).is_none() && Instant::now() < give_up {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    watcher.stop();
+    assert!(
+        registry.resolve(&key3).is_some(),
+        "watcher never republished the on-disk swap"
+    );
+    assert_eq!(registry.len(), 3);
 }
 
 #[test]

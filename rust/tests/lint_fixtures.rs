@@ -2,8 +2,8 @@
 //! `tests/lint_fixtures/` — every rule must catch its seeded violation at
 //! the exact file:line, well-formed suppressions must silence theirs, and
 //! malformed suppressions must themselves be findings (and suppress
-//! nothing). The corpus replicates the source layout (`serve/`, `sim/`,
-//! `telemetry/`, `util/`) so path scoping is exercised too; the engine's
+//! nothing). The corpus replicates the source layout (`serve/`, `fleet/`,
+//! `sim/`, `telemetry/`, `util/`) so path scoping is exercised too; the engine's
 //! directory walker skips `lint_fixtures/` during normal descent, which is
 //! why `cargo test lint_clean` and this file can coexist.
 
@@ -28,6 +28,7 @@ fn fixture_findings() -> Vec<(String, usize, &'static str)> {
 fn every_rule_catches_its_seeded_fixture_at_the_exact_line() {
     let got = fixture_findings();
     let want: Vec<(String, usize, &'static str)> = [
+        ("fleet/pool.rs", 20, "lock-discipline"),
         ("serve/pool.rs", 5, "no-unwrap"),
         ("serve/pool.rs", 6, "sleep-under-lock"),
         ("serve/pool.rs", 7, "lock-discipline"),
@@ -58,6 +59,10 @@ fn well_formed_suppressions_silence_their_rule() {
         ("serve/pool.rs", 17),     // nested lock + unwrap, both allowed
         ("sim/engine.rs", 10),     // Instant::now under allow(no-wall-clock)
         ("telemetry/hist.rs", 26), // SeqCst under allow(ordering-comment)
+        // fleet/pool.rs:8-14 is the *compliant* gate-split sequence (drop
+        // the admission guard, then take the gate to ring): no suppression
+        // needed, and no finding may fire on it.
+        ("fleet/pool.rs", 11),
     ];
     for (file, line) in suppressed {
         assert!(

@@ -1,0 +1,23 @@
+//! Seeded fixture: the gate-split lock protocol in the dispatch pools.
+//! The admission (`state`) guard must be dropped before the dispatch-half
+//! `gate` mutex is taken to ring a sibling — nesting the two would
+//! deadlock against a parked worker acquiring them in the same order.
+//! Never compiled.
+
+fn ring_after_drop(&self) {
+    let mut st = self.shards[0].state.lock();
+    st.queue.push(job);
+    drop(st);
+    let mut token = self.shards[1].gate.lock();
+    *token = true;
+    drop(token);
+    self.shards[1].cv.notify_one();
+}
+
+fn dirty_rings_under_the_admission_lock(&self) {
+    let mut st = self.shards[0].state.lock();
+    st.queue.push(job);
+    let token = self.shards[1].gate.lock();
+    drop(token);
+    drop(st);
+}

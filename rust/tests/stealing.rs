@@ -1,6 +1,6 @@
 //! Cross-shard work-stealing integration tests.
 //!
-//! Two properties pinned here:
+//! Four properties pinned here:
 //!
 //! * **Outcome preservation** — stealing only changes *where* a queued job
 //!   executes, never what it is judged against: every request that met its
@@ -11,6 +11,14 @@
 //!   ticket exactly once: nothing lost, nothing double-dispatched (a
 //!   double dispatch would inflate the request counter past the submitted
 //!   total).
+//! * **Event-driven wakeups** — with the fallback poll heartbeat cranked
+//!   far past the test's runtime, steals still happen and happen fast:
+//!   backlog crossing the wake threshold rings the longest-idle sibling
+//!   directly instead of waiting for a poll tick.
+//! * **Spurious-wakeup bound** — the notifier protocol wakes workers with
+//!   purpose: an idle-then-loaded run with the heartbeat off records at
+//!   most a handful of spurious wakeups (OS-level condvar noise), not a
+//!   poll-driven stream of them.
 
 use medea::eeg::synth::{EegGenerator, SynthConfig};
 use medea::exp::ExpContext;
@@ -105,6 +113,102 @@ fn stealing_preserves_per_request_deadline_outcomes() {
         steal_m.summary()
     );
     assert!(steal_m.stolen_requests() >= steal_m.steals());
+}
+
+#[test]
+fn steal_wakeups_arrive_without_the_poll_heartbeat() {
+    const N: usize = 64;
+    // Heartbeat cranked far past this test's runtime: if a steal happens at
+    // all, an event wake delivered it. The retired design rediscovered
+    // backlog only by polling every 200 us — here polling would mean a
+    // multi-second stall that the elapsed bound below turns into a failure.
+    let heartbeat = Duration::from_secs(30);
+    let pool = pool_with(
+        StealConfig {
+            poll: heartbeat,
+            ..StealConfig::default()
+        },
+        3,
+    );
+    let floor = shared_atlas().floor();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 11);
+    let started = std::time::Instant::now();
+    let tickets: Vec<Ticket> = (0..N)
+        .map(|i| {
+            let deadline = floor * (1.5 + (i % 13) as f64 * 0.45);
+            pool.submit_pinned(0, gen.next_window(), deadline).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let elapsed = started.elapsed();
+    let totals = pool.telemetry().snapshot().totals();
+    let m = pool.shutdown();
+    assert!(
+        m.steals() > 0,
+        "64 jobs pinned to one shard of three never triggered a steal: {}",
+        m.summary()
+    );
+    assert!(
+        elapsed < heartbeat,
+        "burst drained only after the fallback heartbeat fired ({elapsed:?}) — \
+         the event wakeup path is dead"
+    );
+    assert!(
+        totals.wake.count() >= 1,
+        "steals happened but no event wakeup was ever consumed"
+    );
+    // The wake itself is a mutex/condvar handoff (~microseconds); 50 ms is
+    // pure CI headroom for a preempted thief thread, while still orders of
+    // magnitude under the heartbeat that polling would have needed.
+    let p99 = Duration::from_nanos(totals.wake.percentile(99.0));
+    assert!(
+        p99 < Duration::from_millis(50),
+        "steal wakeup p99 {p99:?} is not event-driven-fast"
+    );
+}
+
+#[test]
+fn spurious_wakeups_stay_bounded_with_the_heartbeat_off() {
+    const N: usize = 48;
+    let workers = 3;
+    let pool = pool_with(
+        StealConfig {
+            poll: Duration::from_secs(30),
+            ..StealConfig::default()
+        },
+        workers,
+    );
+    // Idle phase: nothing should wake anyone.
+    std::thread::sleep(Duration::from_millis(100));
+    // Loaded phase: every wake now has a purpose (own-shard ring or steal
+    // wake), so none of them count as spurious either.
+    let floor = shared_atlas().floor();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 23);
+    let tickets: Vec<Ticket> = (0..N)
+        .map(|i| {
+            let deadline = floor * (1.5 + (i % 11) as f64 * 0.5);
+            pool.submit_pinned(0, gen.next_window(), deadline).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let totals = pool.telemetry().snapshot().totals();
+    pool.shutdown();
+    // With the heartbeat effectively off, the only legal spurious wakeups
+    // are OS-level condvar ones — rare, not a stream. The bound is generous
+    // (a few per worker) so scheduler noise cannot flake CI, while a
+    // regression back to poll-driven waking (hundreds over the idle phase)
+    // fails decisively.
+    let bound = workers as u64 * 3;
+    assert!(
+        totals.spurious_wakeups <= bound,
+        "{} spurious wakeups recorded (bound {bound}) — workers are waking \
+         without being notified",
+        totals.spurious_wakeups
+    );
 }
 
 #[test]

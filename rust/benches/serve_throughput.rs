@@ -46,9 +46,12 @@ struct PoolRun {
 }
 
 /// `observed = true` runs the worst-case "someone is watching" configuration:
-/// a 65536-event trace ring, the SLO evaluator on a 250 ms tick with an
-/// armed flight recorder, and a live exposition endpoint with a scraper
-/// thread polling it every 25 ms for the whole burst.
+/// a 65536-event trace ring (which makes every dispatch also emit per-kernel
+/// spans), the SLO evaluator on a 250 ms tick with an armed flight recorder,
+/// and a live exposition endpoint with a scraper thread polling it every
+/// 25 ms for the whole burst. The energy attribution ledger is on in BOTH
+/// configurations — it has no switch — so the dark run is the true always-on
+/// baseline and the 0.97 gate below prices the ring + spans + scrapes only.
 fn run_pool_load(atlas: &ScheduleAtlas, requests: usize, observed: bool) -> PoolRun {
     let floor = atlas.floor().as_ms();
     let pool = ServePool::start_with_atlas(
@@ -241,7 +244,8 @@ fn main() {
     );
 
     // Machine-readable summary, with the observed run's registry snapshot
-    // attached so the artifact carries the same data a live scrape would.
+    // attached so the artifact carries the same data a live scrape would —
+    // ledger included, so `medea energy-report BENCH_serve.json` works.
     let out = json_obj! {
         "atlas_knots" => atlas.len(),
         "atlas_build_ms" => build_ms,

@@ -35,11 +35,12 @@ use crate::serve::batch::{
 };
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::pool::{
-    deadline_us, head_laxity, pick_shard, pop_group, readiness_probe_over, ServeError, Shard,
-    StealConfig, StealMesh,
+    deadline_us, head_laxity, pick_shard, pop_group, readiness_probe_over, trace_kernel_spans,
+    ServeError, Shard, StealConfig, StealMesh,
 };
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
+use crate::telemetry::ledger::{EnergyLedger, LedgerEntrySpec};
 use crate::telemetry::trace::{TraceEventKind, TraceRing};
 use crate::telemetry::{TelemetryConfig, TelemetryRegistry, WorkerShard};
 use crate::util::error::{anyhow, Result};
@@ -199,6 +200,33 @@ impl FleetPool {
         let telemetry = Arc::new(TelemetryRegistry::new("fleet", "multi", n));
         let trace = (config.telemetry.trace_events > 0)
             .then(|| Arc::new(TraceRing::new(config.telemetry.trace_events)));
+        // Energy attribution tables, one entry per registry entry at start
+        // time. The knot table merges the deadline atlas's knot deadlines
+        // with the energy atlas's converged schedule deadlines (the knot
+        // identity an energy-demand dispatch carries), sorted and deduped
+        // bitwise. Entries hot-swapped in later are counted unattributed
+        // rather than resized — the tables stay fixed so the dispatch path
+        // stays allocation-free.
+        let specs: Vec<LedgerEntrySpec> = registry
+            .entries()
+            .iter()
+            .map(|resolved| {
+                let e = &resolved.entry;
+                let mut knots: Vec<Time> =
+                    e.atlas.knots().iter().map(|k| k.deadline).collect();
+                knots.extend(e.energy.knots().iter().map(|k| k.schedule.deadline));
+                knots.sort_by(|a, b| a.raw().total_cmp(&b.raw()));
+                knots.dedup_by(|a, b| a.raw().to_bits() == b.raw().to_bits());
+                let mut spec =
+                    LedgerEntrySpec::new(&e.platform, e.workload_preset.clone(), knots);
+                // Attribution keys on preset names (what dispatch carries),
+                // not the platform's display name.
+                spec.platform = e.platform_preset.clone();
+                spec
+            })
+            .collect();
+        let ledger = EnergyLedger::new(n, &specs);
+        telemetry.install_ledger(ledger.clone());
         // Every shard exists before any worker spawns: workers see the full
         // sibling set, so stealing never races pool construction.
         let shards: Vec<Arc<Shard<Job>>> = (0..n)
@@ -217,8 +245,19 @@ impl FleetPool {
                     let steal = steal.clone();
                     let tel = telemetry.worker(i);
                     let trace = trace.clone();
+                    let ledger = ledger.clone();
                     move || {
-                        worker_loop(&shards, i, &dir, &batch, &steal, &mesh, &tel, trace.as_deref())
+                        worker_loop(
+                            &shards,
+                            i,
+                            &dir,
+                            &batch,
+                            &steal,
+                            &mesh,
+                            &tel,
+                            trace.as_deref(),
+                            &ledger,
+                        )
                     }
                 })
                 .map_err(|e| anyhow!("spawn fleet worker {i}: {e}"))?;
@@ -350,6 +389,7 @@ impl FleetPool {
                 let depth = st.queue.len();
                 // ordering: relaxed depth hint, see the shard pick above.
                 shard.depth.store(depth, Ordering::Relaxed);
+                self.telemetry.worker(idx).set_queue_depth(depth);
                 drop(st);
                 shard.ring();
                 self.mesh.wake_for_backlog(idx, depth, &self.shards);
@@ -362,6 +402,7 @@ impl FleetPool {
                 let depth = st.queue.len();
                 // ordering: relaxed depth hint, see the shard pick above.
                 shard.depth.store(depth, Ordering::Relaxed);
+                self.telemetry.worker(idx).set_queue_depth(depth);
                 let reason = Rejection::QueueFull { capacity };
                 self.shed(idx, evicted.id, &reason);
                 let _ = evicted.reply.send(Err(ServeError::Shed(reason)));
@@ -473,6 +514,7 @@ fn worker_loop(
     mesh: &StealMesh,
     tel: &WorkerShard,
     trace: Option<&TraceRing>,
+    ledger: &EnergyLedger,
 ) {
     // One PJRT runtime handle per worker, created on the worker thread.
     let mut runtime = match Runtime::new(artifact_dir) {
@@ -583,7 +625,8 @@ fn worker_loop(
             // reply channel back alongside the outcome. `swap_remove`
             // keeps the buffer's capacity for the next dispatch.
             let (_, job) = group.swap_remove(0);
-            let (reply, outcome) = process(job, runtime.as_mut(), &infer);
+            let (reply, outcome) =
+                process(job, runtime.as_mut(), &infer, ledger, me, exec_start, trace);
             let met = matches!(&outcome, Ok(o) if o.sim.deadline_met);
             if let Ok(o) = &outcome {
                 tel.record_batch(1);
@@ -600,7 +643,17 @@ fn worker_loop(
             }
             let _ = reply.send(outcome);
         } else {
-            process_batch(&mut group, runtime.as_mut(), &infer, batch, me, tel, trace);
+            process_batch(
+                &mut group,
+                runtime.as_mut(),
+                &infer,
+                batch,
+                me,
+                tel,
+                trace,
+                ledger,
+                exec_start,
+            );
         }
         tel.record_dispatch_time(exec_start.elapsed());
     }
@@ -614,6 +667,7 @@ fn worker_loop(
 /// members get `deadline_met = amortized share ≤ their cap` — each member is
 /// judged against the demand it actually made.
 /// Drains the caller's reusable group buffer (capacity is retained).
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     group: &mut Vec<(Time, Job)>,
     runtime: Option<&mut Runtime>,
@@ -622,6 +676,8 @@ fn process_batch(
     me: usize,
     tel: &WorkerShard,
     trace: Option<&TraceRing>,
+    ledger: &EnergyLedger,
+    exec_start: Instant,
 ) {
     let n = group.len();
     let head = &group[0].1;
@@ -653,6 +709,31 @@ fn process_batch(
     // Only successful fan-outs count as dispatches (the error path above
     // returns early), keeping batched + solo == recorded requests.
     tel.record_batch(n);
+    // Attribute the coalesced dispatch once, under the head's entry (all
+    // members share it by batch key). The drift reference is the same
+    // sim-anchored batch makespan that admitted the group.
+    {
+        let head = &group[0].1;
+        match ledger.find_entry(&head.entry.platform_preset, &head.entry.workload_preset) {
+            Some(idx) => {
+                let expected = batch_makespan(head.unit_time, n, batch.amortization);
+                let realized = exec_start.elapsed();
+                ledger.record_dispatch(
+                    me,
+                    idx,
+                    head.knot_deadline,
+                    &head.schedule.decisions,
+                    n as u64,
+                    realized,
+                    expected,
+                );
+                if let Some(ring) = trace {
+                    trace_kernel_spans(ring, me, head.id, &head.schedule.decisions, realized);
+                }
+            }
+            None => ledger.record_unattributed(),
+        }
+    }
     for ((_, job), prediction) in group.drain(..).zip(predictions) {
         // Each member is judged against the demand it actually made.
         let met = match job.demand {
@@ -700,13 +781,18 @@ fn process_batch(
 
 type Reply = mpsc::Sender<std::result::Result<FleetOutcome, ServeError>>;
 
+#[allow(clippy::too_many_arguments)]
 fn process(
     job: Job,
     runtime: Option<&mut Runtime>,
     infer: &TsdInference,
+    ledger: &EnergyLedger,
+    me: usize,
+    exec_start: Instant,
+    trace: Option<&TraceRing>,
 ) -> (Reply, std::result::Result<FleetOutcome, ServeError>) {
     let Job {
-        id: _,
+        id,
         window,
         schedule,
         entry,
@@ -715,7 +801,7 @@ fn process(
         knot_deadline,
         knot_budget,
         batch_key: _,
-        unit_time: _,
+        unit_time,
         unit_energy: _,
         submitted,
         reply,
@@ -732,6 +818,26 @@ fn process(
             seizure: false,
         },
     };
+    // Attribute the successful dispatch. An entry published after pool
+    // start has no preallocated tables and counts as unattributed instead.
+    match ledger.find_entry(&entry.platform_preset, &entry.workload_preset) {
+        Some(idx) => {
+            let realized = exec_start.elapsed();
+            ledger.record_dispatch(
+                me,
+                idx,
+                knot_deadline,
+                &schedule.decisions,
+                1,
+                realized,
+                unit_time,
+            );
+            if let Some(ring) = trace {
+                trace_kernel_spans(ring, me, id, &schedule.decisions, realized);
+            }
+        }
+        None => ledger.record_unattributed(),
+    }
     let outcome = FleetOutcome {
         window_index: window.index,
         prediction,

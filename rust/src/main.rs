@@ -102,6 +102,7 @@ fn app() -> App {
                 .opt("slo-shed-ceiling", "Shed-rate ceiling in [0,1] (default 0.05)")
                 .opt("slo-dispatch-p99-ms", "p99 dispatch-latency bound in ms (default 250)")
                 .opt("slo-energy-uj", "Mean energy-per-request budget in uJ (default: unbounded)")
+                .opt("slo-drift-ratio", "Atlas drift-ratio bound: worst-knot realized/modeled dispatch time before the atlas_drift objective burns (default: unbounded)")
                 .opt("slo-fast-s", "Fast burn-rate window in seconds (default 5)")
                 .opt("slo-slow-s", "Slow burn-rate window in seconds (default 60)")
                 .opt("slo-warn-burn", "Burn rate at which an objective degrades to Warn (default 1)")
@@ -109,7 +110,8 @@ fn app() -> App {
                 .opt_default("slo-every-s", "SLO evaluation period in seconds", "1")
                 .opt("postmortem-dir", "Arm the flight recorder: write rate-limited post-mortem bundles here on Critical transitions and burn-rate spikes")
                 .opt_default("postmortem-keep", "Oldest bundles beyond this count are pruned", "8")
-                .opt_default("postmortem-min-interval-s", "Minimum seconds between bundles (a storm produces a handful, not thousands)", "30"),
+                .opt_default("postmortem-min-interval-s", "Minimum seconds between bundles (a storm produces a handful, not thousands)", "30")
+                .opt_default("synth-slowdown", "Drift-injection test hook: stretch every dispatch to N x its modeled time (0 = off; single-atlas mode only)", "0"),
         )
         .command(
             CmdSpec::new("scrape", "Fetch one Prometheus exposition from a running `serve --metrics-addr` endpoint")
@@ -121,6 +123,11 @@ fn app() -> App {
             CmdSpec::new("health", "Probe /healthz, /readyz, and /slo on a running `serve --metrics-addr` endpoint")
                 .positional("addr", "host:port of the metrics endpoint")
                 .opt_default("timeout-ms", "Connect + read deadline per request, in ms", "2000"),
+        )
+        .command(
+            CmdSpec::new("energy-report", "Print per-PE utilization/energy-share tables from the energy attribution ledger")
+                .positional("source", "host:port of a live metrics endpoint, or a snapshot JSON path (registry snapshot, postmortem bundle, or bench output)")
+                .opt_default("timeout-ms", "Connect + read deadline for a live scrape, in ms", "5000"),
         )
         .command(
             CmdSpec::new("atlas", "Precompute the schedule atlas and write it to disk")
@@ -233,6 +240,7 @@ fn dispatch(name: &str, args: &Args) -> Result<(), String> {
         "serve" => cmd_serve(args),
         "scrape" => cmd_scrape(args),
         "health" => cmd_health(args),
+        "energy-report" => cmd_energy_report(args),
         "atlas" => cmd_atlas(args),
         "fleet" => cmd_fleet(args),
         "lint" => cmd_lint(args),
@@ -581,6 +589,7 @@ impl SloCli {
         slo_opt(args, "slo-deadline-hit", &mut spec.deadline_hit_target, &mut given)?;
         slo_opt(args, "slo-shed-ceiling", &mut spec.shed_ceiling, &mut given)?;
         slo_opt(args, "slo-energy-uj", &mut spec.energy_per_request_uj, &mut given)?;
+        slo_opt(args, "slo-drift-ratio", &mut spec.drift_ratio_bound, &mut given)?;
         slo_opt(args, "slo-warn-burn", &mut spec.warn_burn, &mut given)?;
         slo_opt(args, "slo-critical-burn", &mut spec.critical_burn, &mut given)?;
         let mut p99_ms = spec.dispatch_p99_bound.as_secs_f64() * 1e3;
@@ -726,6 +735,43 @@ fn cmd_health(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `medea energy-report <source>` — print the energy attribution ledger as
+/// per-PE utilization/energy-share tables. The source is either a live
+/// `serve --metrics-addr` endpoint (the ledger families are re-ingested from
+/// one Prometheus scrape) or a JSON file carrying a ledger snapshot: a
+/// `--metrics-out`-style registry snapshot (`ledger` key), a flight-recorder
+/// postmortem bundle (`registry.ledger`), or a bench output
+/// (`telemetry.ledger`).
+fn cmd_energy_report(args: &Args) -> Result<(), String> {
+    use medea::telemetry::{ledger_from_prometheus, render_energy_report, LedgerSnapshot};
+    let source = args
+        .positional(0)
+        .ok_or("energy-report needs a <source> (host:port or snapshot JSON path)")?;
+    let snap = if Path::new(source).exists() {
+        let text = std::fs::read_to_string(source).map_err(|e| e.to_string())?;
+        let doc = medea::util::json::parse(&text).map_err(|e| e.to_string())?;
+        let ledger = doc
+            .get("ledger")
+            .or_else(|| doc.get("registry").and_then(|r| r.get("ledger")))
+            .or_else(|| doc.get("telemetry").and_then(|t| t.get("ledger")))
+            .ok_or_else(|| {
+                format!(
+                    "{source}: no `ledger` section (expected a registry snapshot, \
+                     postmortem bundle, or bench output)"
+                )
+            })?;
+        LedgerSnapshot::from_json(ledger)?
+    } else {
+        let timeout_ms: u64 = args.req_parse("timeout-ms").map_err(|e| e.to_string())?;
+        let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+        let body =
+            medea::telemetry::scrape_with(source, timeout, 0).map_err(|e| e.to_string())?;
+        ledger_from_prometheus(&body)?
+    };
+    print!("{}", render_energy_report(&snap));
+    Ok(())
+}
+
 fn cmd_lint(args: &Args) -> Result<(), String> {
     use medea::analysis::{findings_to_json, lint_paths, rules};
     if args.flag("rules") {
@@ -776,6 +822,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .map(PathBuf::from)
         .unwrap_or_else(ArtifactManifest::default_dir);
 
+    let synth_slowdown: f64 = args.req_parse("synth-slowdown").map_err(|e| e.to_string())?;
+    if !synth_slowdown.is_finite() || synth_slowdown < 0.0 {
+        return Err(format!("--synth-slowdown must be a finite factor >= 0: got {synth_slowdown}"));
+    }
+    if synth_slowdown > 0.0 {
+        println!("drift injection: stretching every dispatch to {synth_slowdown}x its modeled time");
+    }
+
     let tel_cli = TelemetryCli::parse(args)?;
     let slo_cli = SloCli::parse(args)?;
     let config = PoolConfig {
@@ -785,6 +839,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         batch: parse_batch(args)?,
         steal: parse_steal(args)?,
         telemetry: tel_cli.pool_config(&slo_cli),
+        synth_slowdown,
         ..PoolConfig::default()
     };
     let pool = match args.get("atlas").map(Path::new) {
@@ -928,6 +983,11 @@ fn cmd_serve_fleet(args: &Args) -> Result<(), String> {
         if !s.is_finite() || s <= 0.0 {
             return Err(format!("--fleet-watch-s must be a positive number of seconds: got {s}"));
         }
+    }
+
+    let synth_slowdown: f64 = args.req_parse("synth-slowdown").map_err(|e| e.to_string())?;
+    if synth_slowdown != 0.0 {
+        return Err("--synth-slowdown is a single-atlas serve hook; drop --fleet-dir to use it".into());
     }
 
     let registry = Arc::new(load_library(&dir)?);

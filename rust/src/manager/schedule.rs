@@ -68,16 +68,14 @@ impl Schedule {
             .count()
     }
 
-    /// Distinct (pe, vf) histogram — used by the Fig 6 snapshot.
+    /// Distinct (pe, vf) histogram — used by the Fig 6 snapshot. Built by
+    /// [`fold_assignments`], so it shares one decomposition with the
+    /// telemetry energy ledger and comes out already sorted.
     pub fn assignment_histogram(&self) -> Vec<((PeId, usize), usize)> {
         let mut hist: Vec<((PeId, usize), usize)> = Vec::new();
-        for d in &self.decisions {
-            match hist.iter_mut().find(|(k, _)| *k == (d.pe, d.vf_idx)) {
-                Some((_, n)) => *n += 1,
-                None => hist.push(((d.pe, d.vf_idx), 1)),
-            }
-        }
-        hist.sort_by_key(|((pe, vf), _)| (pe.0, *vf));
+        fold_assignments(&self.decisions, |pe, vf, count, _, _| {
+            hist.push(((pe, vf), count));
+        });
         hist
     }
 
@@ -176,6 +174,51 @@ impl Schedule {
     }
 }
 
+/// Decompose a decision list into per-(PE, V-F) groups without allocating:
+/// `emit` is called exactly once per distinct `(pe, vf_idx)` pair, in
+/// ascending `(pe.0, vf_idx)` order, with the group's kernel count and
+/// summed time/energy. This is the one decomposition primitive shared by
+/// [`Schedule::assignment_histogram`] and the telemetry energy ledger's
+/// per-dispatch attribution — the latter runs on the serving hot path, so
+/// the walk keeps to a repeated min-scan: O(groups × decisions) with the
+/// group count bounded by `pes × vf points`, a small platform constant.
+pub fn fold_assignments(
+    decisions: &[Decision],
+    mut emit: impl FnMut(PeId, usize, usize, Time, Energy),
+) {
+    let mut last: Option<(usize, usize)> = None;
+    loop {
+        // Smallest (pe, vf) key strictly above the last emitted group.
+        let mut next: Option<(usize, usize)> = None;
+        for d in decisions {
+            let key = (d.pe.0, d.vf_idx);
+            if last.is_some_and(|l| key <= l) {
+                continue;
+            }
+            let better = match next {
+                Some(n) => key < n,
+                None => true,
+            };
+            if better {
+                next = Some(key);
+            }
+        }
+        let Some(key) = next else { break };
+        let mut count = 0usize;
+        let mut time = Time(0.0);
+        let mut energy = Energy(0.0);
+        for d in decisions {
+            if (d.pe.0, d.vf_idx) == key {
+                count += 1;
+                time = time + d.time;
+                energy = energy + d.energy;
+            }
+        }
+        emit(PeId(key.0), key.1, count, time, energy);
+        last = Some(key);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,5 +291,44 @@ mod tests {
         assert_eq!(hist.len(), 2);
         assert_eq!(hist[0], ((PeId(0), 2), 1));
         assert_eq!(hist[1], ((PeId(1), 0), 1));
+    }
+
+    #[test]
+    fn fold_assignments_groups_sorted_with_totals() {
+        // Interleaved duplicates across three groups; emission must come
+        // back grouped, sorted by (pe, vf), with exact sums.
+        let d = |kernel, pe, vf, ms, uj| Decision {
+            kernel,
+            pe: PeId(pe),
+            vf_idx: vf,
+            mode: TilingMode::SingleBuffer,
+            time: Time::from_ms(ms),
+            energy: Energy::from_uj(uj),
+        };
+        let decisions = vec![
+            d(0, 1, 2, 10.0, 5.0),
+            d(1, 0, 1, 20.0, 7.0),
+            d(2, 1, 2, 30.0, 11.0),
+            d(3, 0, 1, 40.0, 13.0),
+            d(4, 1, 0, 50.0, 17.0),
+        ];
+        let mut seen = Vec::new();
+        fold_assignments(&decisions, |pe, vf, n, t, e| {
+            seen.push((pe.0, vf, n, t.as_ms(), e.as_uj()));
+        });
+        assert_eq!(seen.len(), 3);
+        assert_eq!((seen[0].0, seen[0].1, seen[0].2), (0, 1, 2));
+        assert!((seen[0].3 - 60.0).abs() < 1e-9 && (seen[0].4 - 20.0).abs() < 1e-9);
+        assert_eq!((seen[1].0, seen[1].1, seen[1].2), (1, 0, 1));
+        assert!((seen[1].3 - 50.0).abs() < 1e-9 && (seen[1].4 - 17.0).abs() < 1e-9);
+        assert_eq!((seen[2].0, seen[2].1, seen[2].2), (1, 2, 2));
+        assert!((seen[2].3 - 40.0).abs() < 1e-9 && (seen[2].4 - 16.0).abs() < 1e-9);
+        // Group counts agree with the histogram built on the same fold.
+        let mut s = sample();
+        s.decisions = decisions;
+        let hist = s.assignment_histogram();
+        assert_eq!(hist, vec![((PeId(0), 1), 2), ((PeId(1), 0), 1), ((PeId(1), 2), 2)]);
+        // Empty input emits nothing.
+        fold_assignments(&[], |_, _, _, _, _| panic!("no groups in an empty list"));
     }
 }

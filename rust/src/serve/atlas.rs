@@ -343,6 +343,12 @@ impl ScheduleAtlas {
     /// `O(log n)` lookup: the highest knot whose deadline is ≤ `deadline` —
     /// i.e. the lowest-energy precomputed schedule that still meets it
     /// (knot energy is non-increasing in knot deadline by construction).
+    ///
+    /// The returned knot's exact `deadline` bit pattern is also the knot's
+    /// identity downstream: the pool stamps it on dispatch groups and the
+    /// energy ledger ([`crate::telemetry::ledger`]) keys its per-knot
+    /// dispatch and drift tables on it, so the atlas must stay frozen for
+    /// the ledger tables sized from it to stay attributable.
     pub fn lookup(&self, deadline: Time) -> Result<&AtlasKnot, BelowFloor> {
         let idx = self
             .knots

@@ -22,7 +22,7 @@ use crate::eeg::synth::EegWindow;
 use crate::ir::tsd::{tsd_core, TsdParams};
 use crate::ir::Workload;
 use crate::manager::medea::Medea;
-use crate::manager::schedule::Schedule;
+use crate::manager::schedule::{Decision, Schedule};
 use crate::platform::heeptimize::heeptimize;
 use crate::platform::Platform;
 use crate::profile::characterize;
@@ -36,6 +36,7 @@ use crate::serve::batch::{
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::queue::{Admission, EdfQueue, Rejection};
 use crate::sim::replay::{simulate, SimReport};
+use crate::telemetry::ledger::{EnergyLedger, LedgerEntrySpec};
 use crate::telemetry::trace::{TraceEventKind, TraceRing};
 use crate::telemetry::{TelemetryConfig, TelemetryRegistry, WorkerShard};
 use crate::timing::cycle_model::CycleModel;
@@ -69,6 +70,12 @@ pub struct PoolConfig {
     /// Telemetry knobs (`trace_events` sizes the dispatch-event ring; the
     /// metrics registry itself is always on — it *is* the metrics path).
     pub telemetry: TelemetryConfig,
+    /// Drift-injection test hook (`serve --synth-slowdown`): when > 0,
+    /// every dispatch is stretched (by sleeping, never under a lock) to
+    /// this multiple of its atlas-modeled time, so the realized-vs-modeled
+    /// drift ratio converges to the factor and the atlas drift detector can
+    /// be exercised without a genuinely slow backend. `0.0` disables.
+    pub synth_slowdown: f64,
 }
 
 impl Default for PoolConfig {
@@ -85,6 +92,7 @@ impl Default for PoolConfig {
             batch: BatchConfig::default(),
             steal: StealConfig::default(),
             telemetry: TelemetryConfig::default(),
+            synth_slowdown: 0.0,
         }
     }
 }
@@ -511,6 +519,7 @@ pub(crate) fn pop_group<J, K: PartialEq>(
             // stale values only misrank victims, the steal itself re-reads
             // the queue under the victim's lock.
             shard.depth.store(st.queue.len(), Ordering::Relaxed);
+            tel.set_queue_depth(st.queue.len());
             debug_assert!(popped > 0, "non-empty queue must pop at least the head");
             return Some(Popped { stolen: false });
         }
@@ -720,6 +729,18 @@ impl ServePool {
         ));
         let trace = (config.telemetry.trace_events > 0)
             .then(|| Arc::new(TraceRing::new(config.telemetry.trace_events)));
+        // The energy attribution ledger is sized once from the atlas (one
+        // entry, one knot row per atlas knot) before any worker spawns, so
+        // the dispatch hot path touches only preallocated atomic tables.
+        let ledger = EnergyLedger::new(
+            n,
+            &[LedgerEntrySpec::new(
+                &ctx.platform,
+                ctx.workload.name.clone(),
+                atlas.knots().iter().map(|k| k.deadline).collect(),
+            )],
+        );
+        telemetry.install_ledger(ledger.clone());
         // Every shard exists before any worker spawns: workers see the full
         // sibling set, so stealing never races pool construction.
         let shards: Vec<Arc<Shard<Job>>> = (0..n)
@@ -745,6 +766,8 @@ impl ServePool {
                     let steal = steal.clone();
                     let tel = telemetry.worker(i);
                     let trace = trace.clone();
+                    let ledger = ledger.clone();
+                    let synth_slowdown = config.synth_slowdown;
                     move || {
                         worker_loop(
                             &shards,
@@ -758,6 +781,8 @@ impl ServePool {
                             &mesh,
                             &tel,
                             trace.as_deref(),
+                            &ledger,
+                            synth_slowdown,
                         )
                     }
                 })
@@ -848,6 +873,7 @@ impl ServePool {
                 let depth = st.queue.len();
                 // ordering: relaxed depth hint, see `submit`.
                 shard.depth.store(depth, Ordering::Relaxed);
+                self.telemetry.worker(idx).set_queue_depth(depth);
                 drop(st);
                 shard.ring();
                 self.mesh.wake_for_backlog(idx, depth, &self.shards);
@@ -860,6 +886,7 @@ impl ServePool {
                 let depth = st.queue.len();
                 // ordering: relaxed depth hint, see `submit`.
                 shard.depth.store(depth, Ordering::Relaxed);
+                self.telemetry.worker(idx).set_queue_depth(depth);
                 let reason = Rejection::QueueFull { capacity };
                 self.telemetry.record_shed(&reason);
                 self.trace_shed(idx, evicted.id, &reason);
@@ -958,6 +985,50 @@ pub(crate) fn deadline_us(deadline: Time) -> u64 {
     (deadline.raw() * 1e6) as u64
 }
 
+/// Drift-injection hook ([`PoolConfig::synth_slowdown`]): sleep off the
+/// remainder until the dispatch has taken `factor ×` its modeled time.
+/// Called strictly after the dispatch work, with no locks held, so it
+/// stretches realized wall time without perturbing queueing or stealing.
+pub(crate) fn stretch_dispatch(exec_start: Instant, factor: f64, expected: Time) {
+    if factor <= 0.0 || !expected.raw().is_finite() || expected.raw() <= 0.0 {
+        return;
+    }
+    // An hour bounds any sane injection; also guards the f64→Duration cast.
+    let target = Duration::from_secs_f64((factor * expected.raw()).min(3600.0));
+    let elapsed = exec_start.elapsed();
+    if elapsed < target {
+        std::thread::sleep(target - elapsed);
+    }
+}
+
+/// Emit one [`TraceEventKind::KernelSpan`] per schedule decision, laying
+/// the kernels out back-to-back over the dispatch's realized wall time:
+/// each kernel's modeled duration is scaled by `realized / Σ modeled`, so
+/// the chrome-trace per-PE Gantt spans exactly the observed dispatch window
+/// while preserving the schedule's relative kernel proportions.
+pub(crate) fn trace_kernel_spans(
+    ring: &TraceRing,
+    worker: usize,
+    req: u64,
+    decisions: &[Decision],
+    realized: Duration,
+) {
+    let total: f64 = decisions.iter().map(|d| d.time.raw()).sum();
+    if !total.is_finite() || total <= 0.0 {
+        return;
+    }
+    let realized_ns = u64::try_from(realized.as_nanos()).unwrap_or(u64::MAX);
+    let scale = realized_ns as f64 / total;
+    let base = ring.now_ns().saturating_sub(realized_ns);
+    let mut cum = 0.0f64;
+    for d in decisions {
+        let start = base.saturating_add((cum * scale) as u64);
+        let dur = (d.time.raw() * scale) as u64;
+        ring.record_kernel_span(worker as u32, req, d.kernel, d.pe.0, d.vf_idx, start, dur);
+        cum += d.time.raw();
+    }
+}
+
 /// Shared `/readyz` arithmetic for both pools: unready when any shard is
 /// stopping or total depth reaches `max(1, 90 % of total capacity)` — the
 /// watermark leaves headroom so a scheduler can stop routing *before* the
@@ -1015,6 +1086,8 @@ fn worker_loop(
     mesh: &StealMesh,
     tel: &WorkerShard,
     trace: Option<&TraceRing>,
+    ledger: &EnergyLedger,
+    synth_slowdown: f64,
 ) {
     // One PJRT runtime handle per worker, created on the worker thread.
     let mut runtime = match Runtime::new(artifact_dir) {
@@ -1109,13 +1182,47 @@ fn worker_loop(
                     o.sim.active_time.raw(),
                     o.host_latency,
                 );
+                stretch_dispatch(exec_start, synth_slowdown, job.unit_time);
+                // The solo cache was populated by `process` on success, so
+                // this lookup is a hit; the knot's solo sim time stamped at
+                // submit (`unit_time`) is the drift reference.
+                if let Some((schedule, knot_deadline)) =
+                    schedules.get(&job.deadline.raw().to_bits())
+                {
+                    let realized = exec_start.elapsed();
+                    ledger.record_dispatch(
+                        me,
+                        0,
+                        *knot_deadline,
+                        &schedule.decisions,
+                        1,
+                        realized,
+                        job.unit_time,
+                    );
+                    if let Some(ring) = trace {
+                        trace_kernel_spans(ring, me, job.id, &schedule.decisions, realized);
+                    }
+                }
             }
             if let Some(ring) = trace {
                 ring.record(TraceEventKind::Retire, me as u32, job.id, u64::from(met));
             }
             let _ = job.reply.send(outcome);
         } else {
-            process_batch(&mut group, ctx, atlas, runtime.as_mut(), &infer, batch, me, tel, trace);
+            process_batch(
+                &mut group,
+                ctx,
+                atlas,
+                runtime.as_mut(),
+                &infer,
+                batch,
+                me,
+                tel,
+                trace,
+                ledger,
+                exec_start,
+                synth_slowdown,
+            );
         }
         tel.record_dispatch_time(exec_start.elapsed());
     }
@@ -1139,6 +1246,9 @@ fn process_batch(
     me: usize,
     tel: &WorkerShard,
     trace: Option<&TraceRing>,
+    ledger: &EnergyLedger,
+    exec_start: Instant,
+    synth_slowdown: f64,
 ) {
     let n = group.len();
     let head_deadline = group[0].0;
@@ -1188,6 +1298,25 @@ fn process_batch(
     // Only successful fan-outs count as dispatches (the shed/error paths
     // above return early), keeping batched + solo == recorded requests.
     tel.record_batch(n);
+    // Attribute the whole coalesced dispatch once: per-kernel cells scale
+    // by the member count, the knot counter and drift EWMA do not. The
+    // drift reference is the same sim-anchored batch makespan admission
+    // used to admit the group.
+    let expected = batch_makespan(knot.sim_time, n, batch.amortization);
+    stretch_dispatch(exec_start, synth_slowdown, expected);
+    let realized = exec_start.elapsed();
+    ledger.record_dispatch(
+        me,
+        0,
+        knot.deadline,
+        &schedule.decisions,
+        n as u64,
+        realized,
+        expected,
+    );
+    if let Some(ring) = trace {
+        trace_kernel_spans(ring, me, group[0].1.id, &schedule.decisions, realized);
+    }
     for ((deadline, job), prediction) in group.drain(..).zip(predictions) {
         // Guaranteed by batch admission; recomputed rather than assumed so
         // the deadline-monotone property tests observe the real outcome.
@@ -1613,6 +1742,62 @@ mod tests {
         // With stealing disabled every pinned job is served by its own
         // shard's worker.
         assert_eq!(m.per_worker_requests, vec![16, 0]);
+    }
+
+    #[test]
+    fn dispatches_feed_the_energy_ledger_and_kernel_spans() {
+        let pool = ServePool::start(PoolConfig {
+            workers: 1,
+            telemetry: TelemetryConfig { trace_events: 1024 },
+            ..test_config()
+        })
+        .unwrap();
+        let deadline = Time::from_ms(400.0);
+        let kernels = pool.atlas().lookup(deadline).unwrap().schedule.decisions.len();
+        assert!(kernels > 0);
+        let mut gen = EegGenerator::new(SynthConfig::default(), 31);
+        for _ in 0..4 {
+            assert!(pool.infer(gen.next_window(), deadline).is_ok());
+        }
+        let snap = pool.telemetry().snapshot();
+        let ledger = snap.ledger.as_ref().expect("serve pool installs a ledger");
+        assert_eq!(ledger.unattributed, 0);
+        let e = &ledger.entries[0];
+        assert_eq!(e.knot_dispatches.iter().sum::<u64>(), 4);
+        assert!(e.pe_busy_ns.iter().sum::<u64>() > 0);
+        assert!(e.pe_energy_nj.iter().sum::<u64>() > 0);
+        // Every dispatch emitted one span per schedule decision.
+        let spans = pool
+            .trace()
+            .expect("trace ring enabled")
+            .events()
+            .iter()
+            .filter(|e| e.kind == TraceEventKind::KernelSpan)
+            .count();
+        assert_eq!(spans, 4 * kernels);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn synth_slowdown_inflates_the_drift_ratio() {
+        // Stretch every dispatch to 2× its modeled time: the realized/
+        // modeled EWMA must sit at ≥ 2× (the sleep guarantees the realized
+        // wall time, so the ratio is bounded below, not just approximate).
+        let pool = ServePool::start(PoolConfig {
+            workers: 1,
+            synth_slowdown: 2.0,
+            ..test_config()
+        })
+        .unwrap();
+        let deadline = pool.floor() * 1.05;
+        let mut gen = EegGenerator::new(SynthConfig::default(), 32);
+        for _ in 0..2 {
+            assert!(pool.infer(gen.next_window(), deadline).is_ok());
+        }
+        let snap = pool.telemetry().snapshot();
+        let drift = snap.drift_ratio();
+        assert!(drift >= 2.0, "stretched dispatches must read ≥ 2×, got {drift}");
+        pool.shutdown();
     }
 
     fn mesh_shards(n: usize) -> Vec<Arc<Shard<u32>>> {

@@ -25,6 +25,7 @@
 //! seconds, energy in microjoules, batch sizes over linear bounds.
 
 use crate::telemetry::hist::{bucket_upper, HistData};
+use crate::telemetry::ledger::{LedgerEntrySnapshot, LedgerSnapshot};
 use crate::telemetry::registry::{RegistrySnapshot, WorkerSnapshot};
 use crate::telemetry::slo::SloEngine;
 use crate::telemetry::TelemetryRegistry;
@@ -223,7 +224,92 @@ pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
         );
     }
 
+    family(
+        &mut out,
+        "medea_queue_depth",
+        "gauge",
+        "Admission queue depth of the worker's shard when snapped.",
+    );
+    for (labels, w) in &workers {
+        series(&mut out, "medea_queue_depth", labels, w.queue_depth as f64);
+    }
+
+    if let Some(ledger) = &snap.ledger {
+        render_ledger(&mut out, &base, ledger);
+    }
+
     out
+}
+
+/// Emit the energy attribution ledger families (see
+/// [`crate::telemetry::ledger`]). The label sets are fixed at pool start —
+/// the tables are sized from the atlas — so the series count is bounded;
+/// zero cells are emitted too, which keeps the counters `rate()`-able and
+/// the exposition layout stable.
+fn render_ledger(out: &mut String, base: &str, ledger: &LedgerSnapshot) {
+    for (name, help, pick) in [
+        (
+            "medea_pe_energy_joules_total",
+            "Attributed simulated energy per (entry, PE, V-F point).",
+            (|e: &LedgerEntrySnapshot, cell: usize| e.pe_energy_nj[cell] as f64 / 1e9)
+                as fn(&LedgerEntrySnapshot, usize) -> f64,
+        ),
+        (
+            "medea_pe_busy_seconds_total",
+            "Attributed simulated busy time per (entry, PE, V-F point).",
+            |e: &LedgerEntrySnapshot, cell: usize| e.pe_busy_ns[cell] as f64 / 1e9,
+        ),
+    ] {
+        family(out, name, "counter", help);
+        for e in &ledger.entries {
+            let vfs = e.vf_labels.len();
+            for (p, pe) in e.pe_labels.iter().enumerate() {
+                for (v, vf) in e.vf_labels.iter().enumerate() {
+                    let labels = format!(
+                        "{base},entry=\"{}\",pe=\"{}\",vf=\"{}\"",
+                        escape_label(&e.label),
+                        escape_label(pe),
+                        escape_label(vf)
+                    );
+                    series(out, name, &labels, pick(e, p * vfs + v));
+                }
+            }
+        }
+    }
+    for (name, kind, help, pick) in [
+        (
+            "medea_knot_dispatches_total",
+            "counter",
+            "Dispatches resolved against this atlas knot.",
+            (|e: &LedgerEntrySnapshot, k: usize| e.knot_dispatches[k] as f64)
+                as fn(&LedgerEntrySnapshot, usize) -> f64,
+        ),
+        (
+            "medea_atlas_drift_ratio",
+            "gauge",
+            "EWMA of realized vs. modeled dispatch time per knot (worst worker; 0 = no samples).",
+            |e: &LedgerEntrySnapshot, k: usize| e.knot_drift[k],
+        ),
+    ] {
+        family(out, name, kind, help);
+        for e in &ledger.entries {
+            for (k, knot) in e.knot_labels.iter().enumerate() {
+                let labels = format!(
+                    "{base},entry=\"{}\",knot=\"{}\"",
+                    escape_label(&e.label),
+                    escape_label(knot)
+                );
+                series(out, name, &labels, pick(e, k));
+            }
+        }
+    }
+    family(
+        out,
+        "medea_unattributed_dispatches_total",
+        "counter",
+        "Dispatches whose entry or knot was absent from the ledger tables.",
+    );
+    series(out, "medea_unattributed_dispatches_total", base, ledger.unattributed as f64);
 }
 
 fn family(out: &mut String, name: &str, kind: &str, help: &str) {
@@ -586,6 +672,74 @@ mod tests {
             .filter(|l| l.contains("medea_host_latency_seconds_bucket") && l.contains("+Inf"))
             .count();
         assert_eq!(inf, 2, "one +Inf bucket per worker");
+    }
+
+    #[test]
+    fn ledger_families_render_byte_stable() {
+        use crate::manager::schedule::Decision;
+        use crate::platform::PeId;
+        use crate::telemetry::ledger::{ledger_from_prometheus, EnergyLedger, LedgerEntrySpec};
+        use crate::tiling::modes::TilingMode;
+        use crate::util::units::{Energy, Time};
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 1);
+        reg.worker(0).set_queue_depth(3);
+        let ledger = EnergyLedger::new(1, &[LedgerEntrySpec {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            pe_labels: vec!["cpu".into()],
+            vf_labels: vec!["0.80V@170MHz".into(), "0.90V@250MHz".into()],
+            knot_deadlines: vec![Time::from_ms(50.0)],
+        }]);
+        let decisions = [Decision {
+            kernel: 0,
+            pe: PeId(0),
+            vf_idx: 1,
+            mode: TilingMode::SingleBuffer,
+            time: Time::from_us(100.0),
+            energy: Energy::from_uj(2.0),
+        }];
+        // Powers of two throughout so the drift ratio is exactly 2.0.
+        ledger.record_dispatch(
+            0,
+            0,
+            Time::from_ms(50.0),
+            &decisions,
+            1,
+            Duration::from_micros(15_625),
+            Time(0.0078125),
+        );
+        reg.install_ledger(ledger);
+        let body = render_prometheus(&reg.snapshot());
+        let start = body.find("# HELP medea_queue_depth").expect("queue depth family");
+        let labels = "platform=\"heeptimize\",workload=\"tsd-core\"";
+        let entry = "entry=\"heeptimize/tsd-core\"";
+        let expected = format!(
+            "# HELP medea_queue_depth Admission queue depth of the worker's shard when snapped.\n\
+             # TYPE medea_queue_depth gauge\n\
+             medea_queue_depth{{{labels},worker=\"0\"}} 3\n\
+             # HELP medea_pe_energy_joules_total Attributed simulated energy per (entry, PE, V-F point).\n\
+             # TYPE medea_pe_energy_joules_total counter\n\
+             medea_pe_energy_joules_total{{{labels},{entry},pe=\"cpu\",vf=\"0.80V@170MHz\"}} 0\n\
+             medea_pe_energy_joules_total{{{labels},{entry},pe=\"cpu\",vf=\"0.90V@250MHz\"}} 0.000002\n\
+             # HELP medea_pe_busy_seconds_total Attributed simulated busy time per (entry, PE, V-F point).\n\
+             # TYPE medea_pe_busy_seconds_total counter\n\
+             medea_pe_busy_seconds_total{{{labels},{entry},pe=\"cpu\",vf=\"0.80V@170MHz\"}} 0\n\
+             medea_pe_busy_seconds_total{{{labels},{entry},pe=\"cpu\",vf=\"0.90V@250MHz\"}} 0.0001\n\
+             # HELP medea_knot_dispatches_total Dispatches resolved against this atlas knot.\n\
+             # TYPE medea_knot_dispatches_total counter\n\
+             medea_knot_dispatches_total{{{labels},{entry},knot=\"50.000ms\"}} 1\n\
+             # HELP medea_atlas_drift_ratio EWMA of realized vs. modeled dispatch time per knot (worst worker; 0 = no samples).\n\
+             # TYPE medea_atlas_drift_ratio gauge\n\
+             medea_atlas_drift_ratio{{{labels},{entry},knot=\"50.000ms\"}} 2\n\
+             # HELP medea_unattributed_dispatches_total Dispatches whose entry or knot was absent from the ledger tables.\n\
+             # TYPE medea_unattributed_dispatches_total counter\n\
+             medea_unattributed_dispatches_total{{{labels}}} 0\n"
+        );
+        assert_eq!(&body[start..], expected, "ledger family golden drifted");
+        // And the scrape re-ingests into the same snapshot the pool holds.
+        let parsed = ledger_from_prometheus(&body).expect("re-ingest");
+        let held = reg.snapshot().ledger.expect("ledger snapshot");
+        assert_eq!(parsed, held);
     }
 
     #[test]

@@ -175,6 +175,10 @@ impl FlightRecorder {
         o.insert("wall_unix_ms", wall_ms);
         o.insert("uptime_s", snap.uptime.as_secs_f64());
         o.insert("slo", slo);
+        // `RegistrySnapshot::to_json` embeds the energy ledger (per-PE
+        // energy/busy tables and per-knot drift EWMAs) when one is
+        // installed, so a drift-triggered bundle carries the attribution
+        // evidence with it.
         o.insert("registry", snap.to_json());
         o.insert("trace_events_skipped", skipped);
         o.insert("trace", Json::Arr(events));
@@ -266,6 +270,42 @@ mod tests {
         assert_eq!(trace.len(), 2);
         assert_eq!(trace[0].get("name").and_then(|v| v.as_str()), Some("enqueue"));
         assert_eq!(trace[0].get("arg").and_then(|v| v.as_u64()), Some(42));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bundle_registry_carries_the_ledger() {
+        use crate::telemetry::ledger::{EnergyLedger, LedgerEntrySpec};
+        use crate::util::units::Time;
+        let dir = temp_dir("ledger");
+        let rec = FlightRecorder::new(FlightConfig {
+            dir: dir.clone(),
+            min_interval: Duration::ZERO,
+            ..FlightConfig::default()
+        })
+        .expect("recorder");
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 1);
+        reg.install_ledger(EnergyLedger::new(1, &[LedgerEntrySpec {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            pe_labels: vec!["cpu".into()],
+            vf_labels: vec!["0.90V@250MHz".into()],
+            knot_deadlines: vec![Time::from_ms(50.0)],
+        }]));
+        let path = rec
+            .record("atlas_drift critical", Json::from("x"), &reg.snapshot(), &[])
+            .expect("bundle");
+        let doc = parse(&std::fs::read_to_string(&path).expect("read")).expect("json");
+        let ledger = doc
+            .get("registry")
+            .and_then(|r| r.get("ledger"))
+            .expect("postmortem bundle must embed the ledger snapshot");
+        let entries = ledger.get("entries").and_then(|v| v.as_arr()).expect("entries");
+        assert_eq!(entries.len(), 1);
+        assert_eq!(
+            entries[0].get("platform").and_then(|v| v.as_str()),
+            Some("heeptimize")
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

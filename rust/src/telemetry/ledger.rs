@@ -1,0 +1,938 @@
+//! The kernel-level energy attribution ledger and atlas drift detector.
+//!
+//! MEDEA's savings claim is *kernel-level*: per-kernel DVFS + PE assignment.
+//! The registry's `sim_energy_nj` total says how many joules a pool spent,
+//! but not *where* — which PE, at which V-F point, serving which atlas knot.
+//! The [`EnergyLedger`] closes that gap on the serving hot path: every
+//! dispatch decomposes its resolved `Schedule.decisions` (through the same
+//! [`fold_assignments`] primitive the Fig 6 histogram uses) into
+//!
+//! * per-(PE, V-F) energy and busy-time accumulators, and
+//! * per-(platform, workload, knot) dispatch counters,
+//!
+//! all fixed-size atomic tables sized from the atlas at pool start — one
+//! shard per worker, no locks, no per-dispatch allocation.
+//!
+//! On top of the knot tables sits the **atlas drift detector**: a per-knot
+//! EWMA of `realized host dispatch time / modeled time` (the knot's
+//! sim-validated `sim_time` for solo dispatches, the batch-makespan model
+//! for groups). The atlas is a design-time artifact; if the backend slows
+//! down — thermal throttling, a degraded accelerator, a stale calibration —
+//! the realized/modeled ratio climbs and the `medea_atlas_drift_ratio`
+//! gauge crosses the SLO engine's optional `atlas_drift` objective, which
+//! in turn arms the flight recorder. Snapshots ride inside
+//! [`crate::telemetry::RegistrySnapshot`], so postmortem bundles and bench
+//! artifacts carry the ledger for free.
+
+use crate::manager::schedule::{fold_assignments, Decision};
+use crate::platform::Platform;
+use crate::util::json::{Json, JsonObj};
+use crate::util::units::Time;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// EWMA smoothing factor for the per-knot drift ratio: converges to within
+/// ~10 % of a step change in 8 dispatches while absorbing one-off hiccups.
+pub const DRIFT_ALPHA: f64 = 0.25;
+
+/// Static description of one servable (platform, workload) entry, built at
+/// pool start from the platform preset and its schedule atlas.
+#[derive(Debug, Clone)]
+pub struct LedgerEntrySpec {
+    pub platform: String,
+    pub workload: String,
+    /// PE display names, indexed by `PeId`.
+    pub pe_labels: Vec<String>,
+    /// V-F point labels, indexed by `vf_idx`.
+    pub vf_labels: Vec<String>,
+    /// Atlas knot deadlines in ascending order (the knot key is the exact
+    /// deadline bit pattern the pool stamps on dispatch groups).
+    pub knot_deadlines: Vec<Time>,
+}
+
+impl LedgerEntrySpec {
+    /// Derive labels from a platform preset; `knot_deadlines` come from the
+    /// entry's schedule atlas (ascending by construction).
+    pub fn new(
+        platform: &Platform,
+        workload: impl Into<String>,
+        knot_deadlines: Vec<Time>,
+    ) -> LedgerEntrySpec {
+        LedgerEntrySpec {
+            platform: platform.name.clone(),
+            workload: workload.into(),
+            pe_labels: platform.pes.iter().map(|p| p.name.clone()).collect(),
+            vf_labels: (0..platform.vf.len()).map(|i| platform.vf.get(i).label()).collect(),
+            knot_deadlines,
+        }
+    }
+}
+
+/// Resolved per-entry geometry: label strings plus offsets into the flat
+/// per-shard tables.
+#[derive(Debug)]
+struct EntryMeta {
+    platform: String,
+    workload: String,
+    /// `platform/workload`, the `entry` label value on every ledger series.
+    label: String,
+    pe_labels: Vec<String>,
+    vf_labels: Vec<String>,
+    knot_labels: Vec<String>,
+    /// Ascending raw-bit patterns of the knot deadlines (positive f64 bits
+    /// order like the values, so an exact-match binary search works).
+    knot_bits: Vec<u64>,
+    cell_base: usize,
+    knot_base: usize,
+}
+
+impl EntryMeta {
+    fn cells(&self) -> usize {
+        self.pe_labels.len() * self.vf_labels.len()
+    }
+}
+
+/// One worker's private accumulator tables. Only that worker writes them
+/// (snapshot readers merge across shards), so every update is a plain
+/// relaxed atomic op on a thread-local cacheline.
+#[derive(Debug)]
+struct LedgerShard {
+    /// Row-major `[entry][pe][vf]` energy, nanojoules.
+    pe_energy_nj: Box<[AtomicU64]>,
+    /// Row-major `[entry][pe][vf]` modeled busy time, nanoseconds.
+    pe_busy_ns: Box<[AtomicU64]>,
+    /// `[entry][knot]` dispatch counts (groups, not members).
+    knot_dispatches: Box<[AtomicU64]>,
+    /// `[entry][knot]` EWMA of realized/modeled dispatch time, stored as
+    /// f64 bits; 0 means "no sample yet" (a real ratio is always > 0).
+    knot_drift_bits: Box<[AtomicU64]>,
+}
+
+fn atomic_table(n: usize) -> Box<[AtomicU64]> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
+}
+
+/// The pool-wide attribution ledger: entry metadata plus one
+/// [`LedgerShard`] per worker.
+#[derive(Debug)]
+pub struct EnergyLedger {
+    entries: Vec<EntryMeta>,
+    shards: Vec<LedgerShard>,
+    /// Dispatches whose entry or knot was not in the tables (an entry
+    /// hot-swapped in after pool start) — counted, never silently dropped.
+    unattributed: AtomicU64,
+}
+
+impl EnergyLedger {
+    /// Build the fixed tables for `workers` shards over `specs` entries.
+    pub fn new(workers: usize, specs: &[LedgerEntrySpec]) -> Arc<EnergyLedger> {
+        let mut entries = Vec::with_capacity(specs.len());
+        let mut cell_base = 0usize;
+        let mut knot_base = 0usize;
+        for spec in specs {
+            let mut knot_labels: Vec<String> = spec
+                .knot_deadlines
+                .iter()
+                .map(|d| format!("{:.3}ms", d.as_ms()))
+                .collect();
+            // Distinct knots may round to one millisecond label (e.g. a
+            // deadline-atlas and an energy-atlas knot nanoseconds apart in
+            // a merged fleet table); suffix repeats so every knot keeps a
+            // unique Prometheus label set.
+            for i in 1..knot_labels.len() {
+                if knot_labels[..i].contains(&knot_labels[i]) {
+                    let unique = format!("{}#{i}", knot_labels[i]);
+                    knot_labels[i] = unique;
+                }
+            }
+            let meta = EntryMeta {
+                label: format!("{}/{}", spec.platform, spec.workload),
+                platform: spec.platform.clone(),
+                workload: spec.workload.clone(),
+                pe_labels: spec.pe_labels.clone(),
+                vf_labels: spec.vf_labels.clone(),
+                knot_labels,
+                knot_bits: spec.knot_deadlines.iter().map(|d| d.raw().to_bits()).collect(),
+                cell_base,
+                knot_base,
+            };
+            cell_base += meta.cells();
+            knot_base += meta.knot_bits.len();
+            entries.push(meta);
+        }
+        let shards = (0..workers.max(1))
+            .map(|_| LedgerShard {
+                pe_energy_nj: atomic_table(cell_base),
+                pe_busy_ns: atomic_table(cell_base),
+                knot_dispatches: atomic_table(knot_base),
+                knot_drift_bits: atomic_table(knot_base),
+            })
+            .collect();
+        Arc::new(EnergyLedger {
+            entries,
+            shards,
+            unattributed: AtomicU64::new(0),
+        })
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Resolve an entry index by preset names. A linear scan over a
+    /// fleet-sized list (a few dozen at most) of `&str` compares —
+    /// allocation-free, so dispatch paths may call it per group.
+    pub fn find_entry(&self, platform: &str, workload: &str) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.platform == platform && e.workload == workload)
+    }
+
+    /// Count one dispatch whose entry or knot is not in the tables.
+    pub fn record_unattributed(&self) {
+        // ordering: relaxed monotone counter, same contract as the registry
+        // shards — readers take a statistical snapshot, not a linearizable
+        // one.
+        self.unattributed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Attribute one dispatch (solo or batch) executed by `worker`.
+    ///
+    /// * `knot_deadline` — the resolved knot's deadline (exact bit match
+    ///   against the tables built from the atlas).
+    /// * `members` — windows served by the dispatch (≥ 1); per-kernel
+    ///   energy/time scale by it, the knot dispatch counter does not.
+    /// * `realized` — host wall time of the dispatch.
+    /// * `expected` — the modeled time: the knot's `sim_time` for a solo
+    ///   dispatch, the batch-makespan model for a group.
+    ///
+    /// Allocation-free: one [`fold_assignments`] walk plus a binary search.
+    pub fn record_dispatch(
+        &self,
+        worker: usize,
+        entry: usize,
+        knot_deadline: Time,
+        decisions: &[Decision],
+        members: u64,
+        realized: Duration,
+        expected: Time,
+    ) {
+        let (Some(meta), Some(shard)) = (self.entries.get(entry), self.shards.get(worker)) else {
+            self.record_unattributed();
+            return;
+        };
+        let pes = meta.pe_labels.len();
+        let vfs = meta.vf_labels.len();
+        let m = members.max(1);
+        fold_assignments(decisions, |pe, vf, _count, time, energy| {
+            if pe.0 >= pes || vf >= vfs {
+                return;
+            }
+            let cell = meta.cell_base + pe.0 * vfs + vf;
+            let nj = (energy.raw().max(0.0) * 1e9).round() as u64;
+            let ns = (time.raw().max(0.0) * 1e9).round() as u64;
+            // ordering: relaxed monotone counters on this worker's private
+            // shard; snapshot readers tolerate cross-cell skew by design.
+            shard.pe_energy_nj[cell].fetch_add(nj.saturating_mul(m), Ordering::Relaxed);
+            // ordering: relaxed monotone counter, see above.
+            shard.pe_busy_ns[cell].fetch_add(ns.saturating_mul(m), Ordering::Relaxed);
+        });
+        let Ok(k) = meta.knot_bits.binary_search(&knot_deadline.raw().to_bits()) else {
+            self.record_unattributed();
+            return;
+        };
+        let kidx = meta.knot_base + k;
+        // ordering: relaxed monotone counter, see above.
+        shard.knot_dispatches[kidx].fetch_add(1, Ordering::Relaxed);
+        if expected.raw() > 0.0 {
+            let ratio = realized.as_secs_f64() / expected.raw();
+            // ordering: this shard's drift slot has a single writer (its
+            // worker), so the relaxed load/store pair is a private
+            // read-modify-write; concurrent snapshot readers may observe a
+            // stale EWMA, which the gauge semantics allow.
+            let prev = f64::from_bits(shard.knot_drift_bits[kidx].load(Ordering::Relaxed));
+            let next = if prev > 0.0 { prev + DRIFT_ALPHA * (ratio - prev) } else { ratio };
+            // ordering: single-writer gauge publish, see above.
+            shard.knot_drift_bits[kidx].store(next.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Merge every shard into a plain-data snapshot. Counter cells sum;
+    /// drift gauges take the worst (max) worker EWMA — both commutative and
+    /// associative, so the result is independent of shard order.
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        let entries = self
+            .entries
+            .iter()
+            .map(|meta| {
+                let cells = meta.cells();
+                let knots = meta.knot_bits.len();
+                let mut e = LedgerEntrySnapshot {
+                    platform: meta.platform.clone(),
+                    workload: meta.workload.clone(),
+                    label: meta.label.clone(),
+                    pe_labels: meta.pe_labels.clone(),
+                    vf_labels: meta.vf_labels.clone(),
+                    knot_labels: meta.knot_labels.clone(),
+                    pe_energy_nj: vec![0; cells],
+                    pe_busy_ns: vec![0; cells],
+                    knot_dispatches: vec![0; knots],
+                    knot_drift: vec![0.0; knots],
+                };
+                for shard in &self.shards {
+                    for c in 0..cells {
+                        // ordering: relaxed statistical snapshot reads,
+                        // same contract as WorkerShard::snapshot.
+                        e.pe_energy_nj[c] +=
+                            shard.pe_energy_nj[meta.cell_base + c].load(Ordering::Relaxed);
+                        // ordering: relaxed snapshot read, see above.
+                        e.pe_busy_ns[c] +=
+                            shard.pe_busy_ns[meta.cell_base + c].load(Ordering::Relaxed);
+                    }
+                    for k in 0..knots {
+                        // ordering: relaxed snapshot read, see above.
+                        e.knot_dispatches[k] +=
+                            shard.knot_dispatches[meta.knot_base + k].load(Ordering::Relaxed);
+                        // ordering: relaxed snapshot read, see above.
+                        let bits = shard.knot_drift_bits[meta.knot_base + k].load(Ordering::Relaxed);
+                        let drift = f64::from_bits(bits);
+                        if drift > e.knot_drift[k] {
+                            e.knot_drift[k] = drift;
+                        }
+                    }
+                }
+                e
+            })
+            .collect();
+        LedgerSnapshot {
+            entries,
+            // ordering: relaxed snapshot read, see above.
+            unattributed: self.unattributed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of one entry's merged tables.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LedgerEntrySnapshot {
+    pub platform: String,
+    pub workload: String,
+    /// `platform/workload` — the `entry` label value.
+    pub label: String,
+    pub pe_labels: Vec<String>,
+    pub vf_labels: Vec<String>,
+    pub knot_labels: Vec<String>,
+    /// Row-major `[pe][vf]`, nanojoules.
+    pub pe_energy_nj: Vec<u64>,
+    /// Row-major `[pe][vf]`, nanoseconds of modeled busy time.
+    pub pe_busy_ns: Vec<u64>,
+    pub knot_dispatches: Vec<u64>,
+    /// Per-knot worst-worker EWMA of realized/modeled time; 0 = no sample.
+    pub knot_drift: Vec<f64>,
+}
+
+impl LedgerEntrySnapshot {
+    fn vfs(&self) -> usize {
+        self.vf_labels.len()
+    }
+
+    /// Total busy nanoseconds attributed to `pe` (summed over V-F points).
+    pub fn pe_busy_total_ns(&self, pe: usize) -> u64 {
+        let vfs = self.vfs();
+        self.pe_busy_ns[pe * vfs..(pe + 1) * vfs].iter().sum()
+    }
+
+    /// Total nanojoules attributed to `pe` (summed over V-F points).
+    pub fn pe_energy_total_nj(&self, pe: usize) -> u64 {
+        let vfs = self.vfs();
+        self.pe_energy_nj[pe * vfs..(pe + 1) * vfs].iter().sum()
+    }
+
+    /// Worst per-knot drift ratio in this entry (0 when nothing sampled).
+    pub fn max_drift(&self) -> f64 {
+        self.knot_drift.iter().fold(0.0, |a, &b| a.max(b))
+    }
+}
+
+/// Plain-data copy of the whole ledger at one instant.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LedgerSnapshot {
+    pub entries: Vec<LedgerEntrySnapshot>,
+    pub unattributed: u64,
+}
+
+impl LedgerSnapshot {
+    /// Worst drift ratio across every entry and knot — the scalar the SLO
+    /// engine's `atlas_drift` objective judges.
+    pub fn max_drift(&self) -> f64 {
+        self.entries.iter().fold(0.0, |a, e| a.max(e.max_drift()))
+    }
+
+    /// Busiest PE by busy-time delta since `prev`: `(entry/pe label, share
+    /// of the summed busy delta)`. The periodic reporter's "top PE" readout.
+    pub fn top_pe_since(&self, prev: &LedgerSnapshot) -> Option<(String, f64)> {
+        let mut total: u64 = 0;
+        let mut best: Option<(String, u64)> = None;
+        for e in &self.entries {
+            let earlier = prev.entries.iter().find(|p| p.label == e.label);
+            for (pe, pe_label) in e.pe_labels.iter().enumerate() {
+                let now = e.pe_busy_total_ns(pe);
+                let before = earlier
+                    .filter(|p| p.pe_labels.len() == e.pe_labels.len())
+                    .map(|p| p.pe_busy_total_ns(pe))
+                    .unwrap_or(0);
+                let delta = now.saturating_sub(before);
+                total += delta;
+                let leads = match &best {
+                    Some((_, b)) => delta > *b,
+                    None => delta > 0,
+                };
+                if leads {
+                    best = Some((format!("{}:{}", e.label, pe_label), delta));
+                }
+            }
+        }
+        let (label, busiest) = best?;
+        Some((label, busiest as f64 / total.max(1) as f64))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let strings = |v: &[String]| Json::Arr(v.iter().map(|s| Json::from(s.as_str())).collect());
+        let counts = |v: &[u64]| Json::Arr(v.iter().map(|&n| Json::from(n)).collect());
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = JsonObj::new();
+                o.insert("platform", e.platform.as_str());
+                o.insert("workload", e.workload.as_str());
+                o.insert("pe", strings(&e.pe_labels));
+                o.insert("vf", strings(&e.vf_labels));
+                o.insert("knots", strings(&e.knot_labels));
+                o.insert("pe_energy_nj", counts(&e.pe_energy_nj));
+                o.insert("pe_busy_ns", counts(&e.pe_busy_ns));
+                o.insert("knot_dispatches", counts(&e.knot_dispatches));
+                o.insert(
+                    "knot_drift",
+                    Json::Arr(e.knot_drift.iter().map(|&d| Json::from(d)).collect()),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = JsonObj::new();
+        o.insert("unattributed", self.unattributed);
+        o.insert("entries", Json::Arr(entries));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<LedgerSnapshot, String> {
+        let strings = |v: &Json, key: &str| -> Result<Vec<String>, String> {
+            v.req(key)?
+                .as_arr()
+                .ok_or(format!("{key} is not an array"))?
+                .iter()
+                .map(|s| s.as_str().map(String::from).ok_or(format!("{key} element")))
+                .collect()
+        };
+        let counts = |v: &Json, key: &str| -> Result<Vec<u64>, String> {
+            v.req(key)?
+                .as_arr()
+                .ok_or(format!("{key} is not an array"))?
+                .iter()
+                .map(|n| n.as_u64().ok_or(format!("{key} element")))
+                .collect()
+        };
+        let mut entries = Vec::new();
+        for ev in v.req("entries")?.as_arr().ok_or("entries is not an array")? {
+            let platform = ev.req("platform")?.as_str().ok_or("platform")?.to_string();
+            let workload = ev.req("workload")?.as_str().ok_or("workload")?.to_string();
+            let knot_drift: Vec<f64> = ev
+                .req("knot_drift")?
+                .as_arr()
+                .ok_or("knot_drift is not an array")?
+                .iter()
+                .map(|d| d.as_f64().ok_or("knot_drift element".to_string()))
+                .collect::<Result<_, _>>()?;
+            entries.push(LedgerEntrySnapshot {
+                label: format!("{platform}/{workload}"),
+                platform,
+                workload,
+                pe_labels: strings(ev, "pe")?,
+                vf_labels: strings(ev, "vf")?,
+                knot_labels: strings(ev, "knots")?,
+                pe_energy_nj: counts(ev, "pe_energy_nj")?,
+                pe_busy_ns: counts(ev, "pe_busy_ns")?,
+                knot_dispatches: counts(ev, "knot_dispatches")?,
+                knot_drift,
+            });
+        }
+        Ok(LedgerSnapshot {
+            entries,
+            unattributed: v.get("unattributed").and_then(|n| n.as_u64()).unwrap_or(0),
+        })
+    }
+}
+
+// ---- Prometheus re-ingestion + the energy-report tables -------------------
+
+/// Parse one exposition series line: `name{k="v",…} value`.
+fn parse_series(line: &str) -> Option<(&str, Vec<(String, String)>, f64)> {
+    let open = line.find('{')?;
+    let close = line.rfind('}')?;
+    let name = &line[..open];
+    let value: f64 = line[close + 1..].trim().parse().ok()?;
+    let mut labels = Vec::new();
+    let body = &line[open + 1..close];
+    let mut rest = body;
+    while !rest.is_empty() {
+        let eq = rest.find("=\"")?;
+        let key = rest[..eq].trim_start_matches(',').to_string();
+        let mut val = String::new();
+        let mut chars = rest[eq + 2..].char_indices();
+        let mut consumed = None;
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => val.push('\n'),
+                    Some((_, other)) => val.push(other),
+                    None => return None,
+                },
+                '"' => {
+                    consumed = Some(eq + 2 + i + 1);
+                    break;
+                }
+                other => val.push(other),
+            }
+        }
+        rest = &rest[consumed?..];
+        labels.push((key, val));
+    }
+    Some((name, labels, value))
+}
+
+fn label<'a>(labels: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// Index of `label` in `labels`, appending it when new.
+fn intern(labels: &mut Vec<String>, label: &str) -> usize {
+    match labels.iter().position(|l| l == label) {
+        Some(i) => i,
+        None => {
+            labels.push(label.to_string());
+            labels.len() - 1
+        }
+    }
+}
+
+/// Rebuild a [`LedgerSnapshot`] from Prometheus exposition text — the
+/// inverse of the exposition's ledger families, used by
+/// `medea energy-report <addr>` against a live scrape. Cell/knot label sets
+/// are discovered in order of appearance, and (pe, vf) matrices are grown
+/// as new label pairs show up, so the result is label-order independent.
+pub fn ledger_from_prometheus(text: &str) -> Result<LedgerSnapshot, String> {
+    let mut snap = LedgerSnapshot::default();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, labels, value)) = parse_series(line) else { continue };
+        if name == "medea_unattributed_dispatches_total" {
+            snap.unattributed = value.max(0.0) as u64;
+            continue;
+        }
+        let is_cell =
+            matches!(name, "medea_pe_energy_joules_total" | "medea_pe_busy_seconds_total");
+        let is_knot = matches!(name, "medea_knot_dispatches_total" | "medea_atlas_drift_ratio");
+        if !is_cell && !is_knot {
+            continue;
+        }
+        let entry_label = label(&labels, "entry").ok_or_else(|| format!("{name}: no entry label"))?;
+        let eidx = match snap.entries.iter().position(|e| e.label == entry_label) {
+            Some(i) => i,
+            None => {
+                let (platform, workload) =
+                    entry_label.split_once('/').unwrap_or((entry_label, ""));
+                snap.entries.push(LedgerEntrySnapshot {
+                    platform: platform.to_string(),
+                    workload: workload.to_string(),
+                    label: entry_label.to_string(),
+                    ..LedgerEntrySnapshot::default()
+                });
+                snap.entries.len() - 1
+            }
+        };
+        let e = &mut snap.entries[eidx];
+        if is_cell {
+            let pe = label(&labels, "pe").ok_or_else(|| format!("{name}: no pe label"))?;
+            let vf = label(&labels, "vf").ok_or_else(|| format!("{name}: no vf label"))?;
+            let (old_pes, old_vfs) = (e.pe_labels.len(), e.vf_labels.len());
+            let p = intern(&mut e.pe_labels, pe);
+            let v = intern(&mut e.vf_labels, vf);
+            let (pes, vfs) = (e.pe_labels.len(), e.vf_labels.len());
+            if (pes, vfs) != (old_pes, old_vfs) {
+                // Re-layout the row-major matrices for the grown label sets.
+                for table in [&mut e.pe_energy_nj, &mut e.pe_busy_ns] {
+                    let mut grown = vec![0u64; pes * vfs];
+                    for op in 0..old_pes {
+                        for ov in 0..old_vfs {
+                            grown[op * vfs + ov] = table[op * old_vfs + ov];
+                        }
+                    }
+                    *table = grown;
+                }
+            }
+            let cell = p * vfs + v;
+            match name {
+                "medea_pe_energy_joules_total" => {
+                    e.pe_energy_nj[cell] = (value.max(0.0) * 1e9).round() as u64;
+                }
+                _ => e.pe_busy_ns[cell] = (value.max(0.0) * 1e9).round() as u64,
+            }
+        } else {
+            let knot = label(&labels, "knot").ok_or_else(|| format!("{name}: no knot label"))?;
+            let k = intern(&mut e.knot_labels, knot);
+            if e.knot_dispatches.len() < e.knot_labels.len() {
+                e.knot_dispatches.resize(e.knot_labels.len(), 0);
+                e.knot_drift.resize(e.knot_labels.len(), 0.0);
+            }
+            match name {
+                "medea_knot_dispatches_total" => e.knot_dispatches[k] = value.max(0.0) as u64,
+                _ => e.knot_drift[k] = value.max(0.0),
+            }
+        }
+    }
+    if snap.entries.is_empty() {
+        return Err("no ledger families (medea_pe_*/medea_knot_*/medea_atlas_*) in input".into());
+    }
+    Ok(snap)
+}
+
+/// Render the `medea energy-report` tables: per-PE utilization and energy
+/// share, per-(PE, V-F) energy split, and the per-knot dispatch/drift view.
+pub fn render_energy_report(snap: &LedgerSnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for e in &snap.entries {
+        let _ = writeln!(out, "entry {}", e.label);
+        let busy_total: u64 = e.pe_busy_ns.iter().sum();
+        let energy_total: u64 = e.pe_energy_nj.iter().sum();
+        let _ = writeln!(
+            out,
+            "  {:<14} {:>12} {:>7} {:>14} {:>8}",
+            "pe", "busy_s", "busy%", "energy_uj", "energy%"
+        );
+        for (p, pe) in e.pe_labels.iter().enumerate() {
+            let busy = e.pe_busy_total_ns(p);
+            let energy = e.pe_energy_total_nj(p);
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>12.4} {:>6.1}% {:>14.1} {:>7.1}%",
+                pe,
+                busy as f64 / 1e9,
+                100.0 * busy as f64 / busy_total.max(1) as f64,
+                energy as f64 / 1e3,
+                100.0 * energy as f64 / energy_total.max(1) as f64,
+            );
+        }
+        let vfs = e.vfs();
+        let _ = writeln!(out, "  {:<14} {:<14} {:>14} {:>8}", "pe", "vf", "energy_uj", "share");
+        for (p, pe) in e.pe_labels.iter().enumerate() {
+            for (v, vf) in e.vf_labels.iter().enumerate() {
+                let nj = e.pe_energy_nj[p * vfs + v];
+                if nj == 0 {
+                    continue;
+                }
+                let _ = writeln!(
+                    out,
+                    "  {:<14} {:<14} {:>14.1} {:>7.1}%",
+                    pe,
+                    vf,
+                    nj as f64 / 1e3,
+                    100.0 * nj as f64 / energy_total.max(1) as f64,
+                );
+            }
+        }
+        let _ = writeln!(out, "  {:<14} {:>12} {:>12}", "knot", "dispatches", "drift");
+        for (k, knot) in e.knot_labels.iter().enumerate() {
+            if e.knot_dispatches[k] == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>12} {:>12.3}",
+                knot, e.knot_dispatches[k], e.knot_drift[k]
+            );
+        }
+    }
+    if snap.unattributed > 0 {
+        let _ = writeln!(out, "unattributed dispatches: {}", snap.unattributed);
+    }
+    let _ = writeln!(out, "worst atlas drift ratio: {:.3}", snap.max_drift());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PeId;
+    use crate::tiling::modes::TilingMode;
+    use crate::util::units::Energy;
+
+    fn spec() -> LedgerEntrySpec {
+        LedgerEntrySpec {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            pe_labels: vec!["cpu".into(), "cgra".into()],
+            vf_labels: vec!["0.80V@170MHz".into(), "0.90V@250MHz".into()],
+            knot_deadlines: vec![Time::from_ms(50.0), Time::from_ms(200.0)],
+        }
+    }
+
+    fn d(kernel: usize, pe: usize, vf: usize, us: f64, uj: f64) -> Decision {
+        Decision {
+            kernel,
+            pe: PeId(pe),
+            vf_idx: vf,
+            mode: TilingMode::SingleBuffer,
+            time: Time::from_us(us),
+            energy: Energy::from_uj(uj),
+        }
+    }
+
+    #[test]
+    fn attributes_cells_knots_and_drift() {
+        let ledger = EnergyLedger::new(2, &[spec()]);
+        assert_eq!(ledger.entry_count(), 1);
+        assert_eq!(ledger.find_entry("heeptimize", "tsd-core"), Some(0));
+        assert_eq!(ledger.find_entry("heeptimize", "nope"), None);
+        let decisions = [d(0, 0, 1, 100.0, 2.0), d(1, 1, 0, 300.0, 5.0), d(2, 0, 1, 100.0, 3.0)];
+        // Two solo dispatches on worker 0, realized exactly 2x the model.
+        for _ in 0..2 {
+            ledger.record_dispatch(
+                0,
+                0,
+                Time::from_ms(50.0),
+                &decisions,
+                1,
+                Duration::from_millis(20),
+                Time::from_ms(10.0),
+            );
+        }
+        // One batch of 4 on worker 1 against the laxer knot, on-model.
+        ledger.record_dispatch(
+            1,
+            0,
+            Time::from_ms(200.0),
+            &decisions,
+            4,
+            Duration::from_millis(10),
+            Time::from_ms(10.0),
+        );
+        let snap = ledger.snapshot();
+        let e = &snap.entries[0];
+        // (cpu, vf1): (2 + 3) uJ x (2 solos + 4 members) = 30 uJ.
+        assert_eq!(e.pe_energy_nj[1], 30_000_000);
+        // (cgra, vf0): 5 uJ x 6 = 30 uJ; busy 300 us x 6 = 1.8 ms.
+        assert_eq!(e.pe_energy_nj[2], 30_000_000);
+        assert_eq!(e.pe_busy_ns[2], 1_800_000);
+        assert_eq!(e.pe_busy_total_ns(0), 1_200_000);
+        assert_eq!(e.knot_dispatches, vec![2, 1]);
+        // Knot 0 saw ratio 2.0 twice (EWMA of a constant is the constant);
+        // knot 1 sat on-model at 1.0.
+        assert!((e.knot_drift[0] - 2.0).abs() < 1e-12);
+        assert!((e.knot_drift[1] - 1.0).abs() < 1e-12);
+        assert!((snap.max_drift() - 2.0).abs() < 1e-12);
+        assert_eq!(snap.unattributed, 0);
+    }
+
+    #[test]
+    fn unknown_entry_or_knot_counts_unattributed() {
+        let ledger = EnergyLedger::new(1, &[spec()]);
+        let decisions = [d(0, 0, 0, 10.0, 1.0)];
+        ledger.record_dispatch(
+            0,
+            7, // no such entry
+            Time::from_ms(50.0),
+            &decisions,
+            1,
+            Duration::from_millis(1),
+            Time::from_ms(1.0),
+        );
+        ledger.record_dispatch(
+            0,
+            0,
+            Time::from_ms(51.0), // not a knot deadline
+            &decisions,
+            1,
+            Duration::from_millis(1),
+            Time::from_ms(1.0),
+        );
+        let snap = ledger.snapshot();
+        assert_eq!(snap.unattributed, 2);
+        // The off-knot dispatch still attributed its cells.
+        assert_eq!(snap.entries[0].pe_energy_nj[0], 1_000);
+        assert_eq!(snap.entries[0].knot_dispatches, vec![0, 0]);
+    }
+
+    #[test]
+    fn drift_ewma_converges_toward_step_change() {
+        let ledger = EnergyLedger::new(1, &[spec()]);
+        let decisions = [d(0, 0, 0, 10.0, 1.0)];
+        let record = |ms: u64| {
+            ledger.record_dispatch(
+                0,
+                0,
+                Time::from_ms(50.0),
+                &decisions,
+                1,
+                Duration::from_millis(ms),
+                Time::from_ms(10.0),
+            )
+        };
+        record(10); // seeds at 1.0
+        assert!((ledger.snapshot().entries[0].knot_drift[0] - 1.0).abs() < 1e-12);
+        for _ in 0..16 {
+            record(30); // step to 3x
+        }
+        let drift = ledger.snapshot().entries[0].knot_drift[0];
+        assert!(drift > 2.9 && drift < 3.0 + 1e-12, "EWMA at {drift}, want ~3");
+    }
+
+    /// The satellite invariant: the merged snapshot must not depend on
+    /// which worker recorded what, or in what interleaving — sums and max
+    /// are commutative/associative across shards.
+    #[test]
+    fn snapshot_is_merge_order_invariant() {
+        let calls: Vec<(usize, f64, u64, u64)> = vec![
+            // (knot idx as deadline selector, deadline_ms, members, realized_ms)
+            (0, 50.0, 1, 20),
+            (1, 200.0, 3, 10),
+            (0, 50.0, 2, 20),
+            (1, 200.0, 1, 10),
+            (0, 50.0, 1, 20),
+            (1, 200.0, 2, 10),
+        ];
+        let decisions = [d(0, 0, 1, 100.0, 2.0), d(1, 1, 0, 300.0, 5.0)];
+        // Assign call i to worker i % n, then replay in three different
+        // global interleavings (forward, reverse, odd-then-even).
+        let run = |order: &[usize]| {
+            let ledger = EnergyLedger::new(3, &[spec()]);
+            for &i in order {
+                let (_, dl, members, ms) = calls[i];
+                ledger.record_dispatch(
+                    i % 3,
+                    0,
+                    Time::from_ms(dl),
+                    &decisions,
+                    members,
+                    Duration::from_millis(ms),
+                    Time::from_ms(10.0),
+                );
+            }
+            ledger.snapshot()
+        };
+        let forward = run(&[0, 1, 2, 3, 4, 5]);
+        let reverse = run(&[5, 4, 3, 2, 1, 0]);
+        let shuffled = run(&[1, 3, 5, 0, 2, 4]);
+        assert_eq!(forward, reverse);
+        assert_eq!(forward, shuffled);
+        assert_eq!(forward.entries[0].knot_dispatches, vec![3, 3]);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let ledger = EnergyLedger::new(2, &[spec()]);
+        let decisions = [d(0, 0, 1, 100.0, 2.0), d(1, 1, 0, 300.0, 5.0)];
+        ledger.record_dispatch(
+            0,
+            0,
+            Time::from_ms(50.0),
+            &decisions,
+            2,
+            Duration::from_millis(30),
+            Time::from_ms(10.0),
+        );
+        ledger.record_unattributed();
+        let snap = ledger.snapshot();
+        let text = snap.to_json().to_pretty();
+        let back = LedgerSnapshot::from_json(
+            &crate::util::json::parse(&text).expect("ledger json parses"),
+        )
+        .expect("ledger json decodes");
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn prometheus_round_trip_and_report() {
+        let mut text = String::new();
+        for (name, series) in [
+            ("medea_pe_energy_joules_total", "pe=\"cpu\",vf=\"0.80V@170MHz\"} 0.002"),
+            ("medea_pe_energy_joules_total", "pe=\"cgra\",vf=\"0.90V@250MHz\"} 0.006"),
+            ("medea_pe_busy_seconds_total", "pe=\"cpu\",vf=\"0.80V@170MHz\"} 0.5"),
+            ("medea_pe_busy_seconds_total", "pe=\"cgra\",vf=\"0.90V@250MHz\"} 1.5"),
+            ("medea_knot_dispatches_total", "knot=\"50.000ms\"} 7"),
+            ("medea_atlas_drift_ratio", "knot=\"50.000ms\"} 2.5"),
+        ] {
+            text.push_str(name);
+            text.push_str("{platform=\"heeptimize\",workload=\"tsd-core\",entry=\"heeptimize/tsd-core\",");
+            text.push_str(series);
+            text.push('\n');
+        }
+        let snap = ledger_from_prometheus(&text).expect("scrape parses");
+        assert_eq!(snap.entries.len(), 1);
+        let e = &snap.entries[0];
+        assert_eq!(e.platform, "heeptimize");
+        assert_eq!(e.pe_labels, vec!["cpu", "cgra"]);
+        assert_eq!(e.pe_energy_total_nj(1), 6_000_000);
+        assert_eq!(e.pe_busy_total_ns(0), 500_000_000);
+        assert_eq!(e.knot_dispatches, vec![7]);
+        assert!((snap.max_drift() - 2.5).abs() < 1e-12);
+        let report = render_energy_report(&snap);
+        assert!(report.contains("entry heeptimize/tsd-core"));
+        assert!(report.contains("cgra"));
+        assert!(report.contains("75.0%"), "cgra holds 3/4 of the energy:\n{report}");
+        assert!(report.contains("worst atlas drift ratio: 2.500"));
+        // Junk input fails loudly instead of returning an empty report.
+        assert!(ledger_from_prometheus("medea_requests_total 4\n").is_err());
+    }
+
+    #[test]
+    fn top_pe_tracks_the_busy_delta() {
+        let ledger = EnergyLedger::new(1, &[spec()]);
+        let cpu_heavy = [d(0, 0, 0, 900.0, 1.0)];
+        let cgra_heavy = [d(0, 1, 1, 900.0, 1.0)];
+        ledger.record_dispatch(
+            0,
+            0,
+            Time::from_ms(50.0),
+            &cpu_heavy,
+            1,
+            Duration::from_millis(1),
+            Time::from_ms(1.0),
+        );
+        let prev = ledger.snapshot();
+        for _ in 0..3 {
+            ledger.record_dispatch(
+                0,
+                0,
+                Time::from_ms(50.0),
+                &cgra_heavy,
+                1,
+                Duration::from_millis(1),
+                Time::from_ms(1.0),
+            );
+        }
+        let now = ledger.snapshot();
+        let (label, share) = now.top_pe_since(&prev).expect("busy delta exists");
+        assert_eq!(label, "heeptimize/tsd-core:cgra");
+        assert!((share - 1.0).abs() < 1e-12, "all new busy time is cgra's: {share}");
+        // Against an empty baseline the totals themselves decide.
+        let (label, _) = now.top_pe_since(&LedgerSnapshot::default()).expect("totals");
+        assert_eq!(label, "heeptimize/tsd-core:cgra");
+        // No delta at all -> None.
+        assert!(prev.top_pe_since(&prev).is_none());
+    }
+}

@@ -34,6 +34,12 @@
 //!   transition or burn-rate spike, one rate-limited post-mortem bundle
 //!   (registry snapshot + trace tail + the firing evaluation) lands in a
 //!   bounded `--postmortem-dir`.
+//! * [`ledger`] — the kernel-level energy attribution ledger: per-dispatch
+//!   decomposition of the resolved schedule into per-(PE, V-F) energy and
+//!   busy-time tables plus per-knot dispatch counters, with a per-knot
+//!   EWMA **atlas drift detector** (realized vs. modeled dispatch time)
+//!   feeding the SLO engine's `atlas_drift` objective and the
+//!   `medea energy-report` tables.
 //!
 //! Everything is `std`-only and allocation-free on the hot path: counters
 //! are relaxed atomics, histograms are fixed tables, the trace ring is
@@ -47,6 +53,7 @@
 pub mod exposition;
 pub mod flight;
 pub mod hist;
+pub mod ledger;
 pub mod registry;
 pub mod report;
 pub mod slo;
@@ -57,6 +64,10 @@ pub use exposition::{
 };
 pub use flight::{FlightConfig, FlightRecorder};
 pub use hist::HistData;
+pub use ledger::{
+    ledger_from_prometheus, render_energy_report, EnergyLedger, LedgerEntrySnapshot,
+    LedgerEntrySpec, LedgerSnapshot,
+};
 pub use registry::{RegistrySnapshot, TelemetryRegistry, WorkerShard, WorkerSnapshot};
 pub use report::{report_line, Reporter};
 pub use slo::{slo_line, SloEngine, SloSpec, SloState, SloStatus, SloTicker};

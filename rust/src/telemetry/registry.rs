@@ -14,9 +14,10 @@
 use crate::coordinator::Metrics;
 use crate::serve::queue::Rejection;
 use crate::telemetry::hist::{AtomicHist, HistData};
+use crate::telemetry::ledger::{EnergyLedger, LedgerSnapshot};
 use crate::util::json::{Json, JsonObj};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Linear batch-size slots: sizes `1..=BATCH_SLOTS` (larger clamps to last).
@@ -65,6 +66,9 @@ pub struct WorkerShard {
     /// Effective batch fill window chosen for the latest dispatch, ns
     /// (a gauge: last-write-wins, not a monotone counter).
     batch_window_ns: AtomicU64,
+    /// Admission queue depth of this worker's shard (a gauge mirroring the
+    /// lock-free depth counter the stealing heuristics already keep).
+    queue_depth: AtomicU64,
 }
 
 impl Default for WorkerShard {
@@ -86,6 +90,7 @@ impl Default for WorkerShard {
             wake: AtomicHist::new(),
             spurious_wakeups: AtomicU64::new(0),
             batch_window_ns: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
         }
     }
 }
@@ -163,6 +168,14 @@ impl WorkerShard {
         self.spurious_wakeups.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Publish this worker's current admission queue depth (called where
+    /// the shard's lock-free depth mirror is already maintained).
+    pub fn set_queue_depth(&self, depth: usize) {
+        // ordering: last-write-wins gauge with no payload protocol; readers
+        // take whatever the most recent admission/dispatch published.
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
     /// Publish the effective batch fill window chosen for the latest
     /// dispatch (static `--batch-window-us` or the autotuner's pick).
     pub fn set_batch_window(&self, window: Duration) {
@@ -200,6 +213,7 @@ impl WorkerShard {
             // ordering: relaxed snapshot reads, see above.
             spurious_wakeups: self.spurious_wakeups.load(Ordering::Relaxed),
             batch_window_ns: self.batch_window_ns.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -225,6 +239,8 @@ pub struct WorkerSnapshot {
     pub spurious_wakeups: u64,
     /// Gauge, not a counter: the latest published effective fill window.
     pub batch_window_ns: u64,
+    /// Gauge: this worker's admission queue depth when snapped.
+    pub queue_depth: u64,
 }
 
 impl WorkerSnapshot {
@@ -251,6 +267,8 @@ impl WorkerSnapshot {
         self.spurious_wakeups += other.spurious_wakeups;
         // Merging gauges: keep the widest window any worker is holding open.
         self.batch_window_ns = self.batch_window_ns.max(other.batch_window_ns);
+        // Depth gauges sum: the merged value is the pool's total backlog.
+        self.queue_depth += other.queue_depth;
     }
 
     /// Total dispatches (solo + batched).
@@ -288,6 +306,9 @@ pub struct TelemetryRegistry {
     shed_unknown_entry: AtomicU64,
     shed_shutting_down: AtomicU64,
     workers: Vec<Arc<WorkerShard>>,
+    /// The pool's energy attribution ledger, installed once at pool start
+    /// (after the atlas is built, which sizes the ledger's tables).
+    ledger: OnceLock<Arc<EnergyLedger>>,
 }
 
 impl TelemetryRegistry {
@@ -306,7 +327,20 @@ impl TelemetryRegistry {
             shed_unknown_entry: AtomicU64::new(0),
             shed_shutting_down: AtomicU64::new(0),
             workers: (0..workers).map(|_| Arc::new(WorkerShard::default())).collect(),
+            ledger: OnceLock::new(),
         }
+    }
+
+    /// Install the pool's energy attribution ledger. Pools call this once
+    /// at startup, after the atlas has sized the ledger's tables; a second
+    /// install is ignored (the first tables keep accumulating).
+    pub fn install_ledger(&self, ledger: Arc<EnergyLedger>) {
+        let _ = self.ledger.set(ledger);
+    }
+
+    /// The installed ledger, if the pool attached one.
+    pub fn ledger(&self) -> Option<&Arc<EnergyLedger>> {
+        self.ledger.get()
     }
 
     pub fn platform(&self) -> &str {
@@ -365,6 +399,7 @@ impl TelemetryRegistry {
             shed_unknown_entry: self.shed_unknown_entry.load(Ordering::Relaxed),
             shed_shutting_down: self.shed_shutting_down.load(Ordering::Relaxed),
             workers: self.workers.iter().map(|w| w.snapshot()).collect(),
+            ledger: self.ledger.get().map(|l| l.snapshot()),
         }
     }
 }
@@ -380,6 +415,8 @@ pub struct RegistrySnapshot {
     pub shed_unknown_entry: u64,
     pub shed_shutting_down: u64,
     pub workers: Vec<WorkerSnapshot>,
+    /// The energy attribution ledger, when the pool installed one.
+    pub ledger: Option<LedgerSnapshot>,
 }
 
 impl RegistrySnapshot {
@@ -397,6 +434,16 @@ impl RegistrySnapshot {
             + self.shed_queue_full
             + self.shed_unknown_entry
             + self.shed_shutting_down
+    }
+
+    /// Worst atlas drift ratio across every entry and knot (0 when no
+    /// ledger is installed or nothing has been sampled yet) — the scalar
+    /// the SLO engine's `atlas_drift` objective judges.
+    pub fn drift_ratio(&self) -> f64 {
+        match &self.ledger {
+            Some(l) => l.max_drift(),
+            None => 0.0,
+        }
     }
 
     /// Compact JSON summary (attached to bench artifacts).
@@ -430,6 +477,11 @@ impl RegistrySnapshot {
         o.insert("wakeup_p99_us", t.wake.percentile(99.0) as f64 / 1e3);
         o.insert("spurious_wakeups", t.spurious_wakeups);
         o.insert("batch_window_us", t.batch_window_ns as f64 / 1e3);
+        o.insert("queue_depth", t.queue_depth);
+        o.insert("atlas_drift_ratio", self.drift_ratio());
+        if let Some(ledger) = &self.ledger {
+            o.insert("ledger", ledger.to_json());
+        }
         Json::Obj(o)
     }
 }
@@ -510,6 +562,37 @@ mod tests {
         assert_eq!(j.get("requests").and_then(|v| v.as_u64()), Some(2));
         let shed = j.get("shed").expect("shed key");
         assert_eq!(shed.get("below_floor").and_then(|v| v.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn queue_depth_gauge_sums_and_ledger_installs_once() {
+        use crate::telemetry::ledger::{EnergyLedger, LedgerEntrySpec};
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 2);
+        reg.worker(0).set_queue_depth(3);
+        reg.worker(1).set_queue_depth(5);
+        reg.worker(1).set_queue_depth(4); // last write wins per worker
+        assert!(reg.ledger().is_none());
+        assert_eq!(reg.snapshot().drift_ratio(), 0.0);
+        let spec = LedgerEntrySpec {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            pe_labels: vec!["cpu".into()],
+            vf_labels: vec!["0.80V@170MHz".into()],
+            knot_deadlines: vec![Time::from_ms(50.0)],
+        };
+        reg.install_ledger(EnergyLedger::new(2, std::slice::from_ref(&spec)));
+        // A second install is ignored: the first tables keep accumulating.
+        reg.install_ledger(EnergyLedger::new(2, &[spec.clone(), spec]));
+        let installed = reg.ledger().expect("ledger installed");
+        assert_eq!(installed.entry_count(), 1);
+        let snap = reg.snapshot();
+        assert_eq!(snap.totals().queue_depth, 7);
+        let ledger = snap.ledger.as_ref().expect("snapshot carries the ledger");
+        assert_eq!(ledger.entries.len(), 1);
+        let j = snap.to_json();
+        assert_eq!(j.get("queue_depth").and_then(|v| v.as_u64()), Some(7));
+        assert!(j.get("ledger").is_some(), "ledger rides in to_json");
+        assert_eq!(j.get("atlas_drift_ratio").and_then(|v| v.as_f64()), Some(0.0));
     }
 
     #[test]

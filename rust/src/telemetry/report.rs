@@ -3,11 +3,15 @@
 //! Every interval, snapshot the registry, diff against the previous
 //! snapshot, and log one INFO line through [`crate::util::log`]: request
 //! rate, cumulative p50/p99 host latency, shed and steal rates, mean batch
-//! size, and mean energy per request over the interval. Enable with
-//! `MEDEA_LOG=info` (see [`crate::util::log::init_from_env`]).
+//! size, and mean energy per request over the interval — plus, when the
+//! pool carries an energy ledger, the interval's busiest PE and the worst
+//! atlas drift ratio. Enable with `MEDEA_LOG=info` (see
+//! [`crate::util::log::init_from_env`]).
 
+use crate::telemetry::ledger::LedgerSnapshot;
 use crate::telemetry::registry::{RegistrySnapshot, TelemetryRegistry};
 use crate::telemetry::slo::{slo_line, SloEngine};
+use std::fmt::Write as _;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -106,7 +110,7 @@ pub fn report_line(prev: &RegistrySnapshot, now: &RegistrySnapshot, dt: Duration
     let d_energy_nj = t.sim_energy_nj.saturating_sub(p.sim_energy_nj);
     let mean_batch = if d_disp > 0 { d_req as f64 / d_disp as f64 } else { 0.0 };
     let uj_per_req = if d_req > 0 { d_energy_nj as f64 / 1e3 / d_req as f64 } else { 0.0 };
-    format!(
+    let mut line = format!(
         "telemetry[{}/{}]: {:.1} req/s p50={:?} p99={:?} shed/s={:.1} steal/s={:.2} \
          mean_batch={:.2} energy/req={:.1} uJ",
         now.platform,
@@ -118,7 +122,19 @@ pub fn report_line(prev: &RegistrySnapshot, now: &RegistrySnapshot, dt: Duration
         d_steal as f64 / dt_s,
         mean_batch,
         uj_per_req,
-    )
+    );
+    if let Some(ledger) = &now.ledger {
+        let fresh = LedgerSnapshot::default();
+        let baseline = prev.ledger.as_ref().unwrap_or(&fresh);
+        if let Some((pe, share)) = ledger.top_pe_since(baseline) {
+            let _ = write!(line, " top_pe={pe}({:.0}%)", share * 100.0);
+        }
+        let drift = ledger.max_drift();
+        if drift > 0.0 {
+            let _ = write!(line, " drift={drift:.2}x");
+        }
+    }
+    line
 }
 
 #[cfg(test)]
@@ -144,6 +160,51 @@ mod tests {
         assert!(line.contains("mean_batch=5.00"), "{line}");
         assert!(line.contains("energy/req=100.0 uJ"), "{line}");
         assert!(line.contains("telemetry[heeptimize/tsd-core]"), "{line}");
+    }
+
+    #[test]
+    fn report_line_appends_top_pe_and_drift_from_the_ledger() {
+        use crate::manager::schedule::Decision;
+        use crate::platform::PeId;
+        use crate::telemetry::ledger::{EnergyLedger, LedgerEntrySpec};
+        use crate::tiling::modes::TilingMode;
+        use crate::util::units::{Energy, Time};
+        let reg = TelemetryRegistry::new("heeptimize", "tsd-core", 1);
+        reg.install_ledger(EnergyLedger::new(1, &[LedgerEntrySpec {
+            platform: "heeptimize".into(),
+            workload: "tsd-core".into(),
+            pe_labels: vec!["cpu".into(), "cgra".into()],
+            vf_labels: vec!["0.90V@250MHz".into()],
+            knot_deadlines: vec![Time::from_ms(50.0)],
+        }]));
+        let before = reg.snapshot();
+        let decisions = [Decision {
+            kernel: 0,
+            pe: PeId(1),
+            vf_idx: 0,
+            mode: TilingMode::SingleBuffer,
+            time: Time::from_us(300.0),
+            energy: Energy::from_uj(4.0),
+        }];
+        reg.ledger().expect("ledger installed").record_dispatch(
+            0,
+            0,
+            Time::from_ms(50.0),
+            &decisions,
+            1,
+            Duration::from_millis(25),
+            Time::from_ms(10.0),
+        );
+        reg.worker(0).record(false, true, 4e-6, 3e-4, Duration::from_millis(1));
+        let after = reg.snapshot();
+        let line = report_line(&before, &after, Duration::from_secs(1));
+        assert!(line.contains("top_pe=heeptimize/tsd-core:cgra(100%)"), "{line}");
+        assert!(line.contains("drift=2.50x"), "{line}");
+        // Without a ledger the line keeps its original shape.
+        let bare = TelemetryRegistry::new("heeptimize", "tsd-core", 1);
+        let line = report_line(&bare.snapshot(), &bare.snapshot(), Duration::from_secs(1));
+        assert!(!line.contains("top_pe"), "{line}");
+        assert!(!line.contains("drift="), "{line}");
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! A [`SloSpec`] declares the serving objectives MEDEA's paper claims —
 //! deadlines met, admission sheds bounded, dispatch p99 bounded, energy per
-//! request budgeted — and the [`SloEngine`] judges the live
+//! request budgeted, and the design-time atlas still predicting reality
+//! (the ledger's drift ratio bounded) — and the [`SloEngine`] judges the live
 //! [`RegistrySnapshot`] stream against them. Each objective is scored as a
 //! *burn rate*: the fraction of the error budget consumed per unit budget
 //! over a rolling window, so `1.0` means "exactly on target" and `2.0`
@@ -85,6 +86,13 @@ pub struct SloSpec {
     /// Mean simulated energy per served request budget, in µJ
     /// (non-finite disables the objective).
     pub energy_per_request_uj: f64,
+    /// Worst-knot atlas drift ratio (realized / modeled dispatch time,
+    /// EWMA) the pool may reach before the `atlas_drift` objective burns at
+    /// 1.0 (non-finite disables the objective). The ratio is a gauge, not a
+    /// budget: both windows see the same instantaneous value, so `Warn`
+    /// starts at `warn_burn ×` this bound and `Critical` at
+    /// `critical_burn ×` it.
+    pub drift_ratio_bound: f64,
     /// Fast burn-rate window (catches bursts).
     pub fast_window: Duration,
     /// Slow burn-rate window (confirms the burst is sustained).
@@ -104,6 +112,7 @@ impl Default for SloSpec {
             shed_ceiling: 0.05,
             dispatch_p99_bound: Duration::from_millis(250),
             energy_per_request_uj: f64::INFINITY,
+            drift_ratio_bound: f64::INFINITY,
             fast_window: Duration::from_secs(5),
             slow_window: Duration::from_secs(60),
             warn_burn: 1.0,
@@ -118,6 +127,9 @@ struct Sample {
     at: Duration,
     totals: WorkerSnapshot,
     shed: u64,
+    /// Worst-knot atlas drift ratio at this snapshot (a gauge, not a
+    /// counter — see [`crate::telemetry::registry::RegistrySnapshot::drift_ratio`]).
+    drift: f64,
 }
 
 /// Counter deltas between a window-start sample and the newest one.
@@ -127,6 +139,8 @@ struct WindowDelta {
     shed: u64,
     dispatch: HistData,
     energy_nj: u64,
+    /// The later sample's drift gauge (already an EWMA — no differencing).
+    drift: f64,
 }
 
 impl WindowDelta {
@@ -143,6 +157,7 @@ impl WindowDelta {
                 .totals
                 .sim_energy_nj
                 .saturating_sub(earlier.totals.sim_energy_nj),
+            drift: later.drift,
         }
     }
 }
@@ -150,7 +165,8 @@ impl WindowDelta {
 /// One objective's burn rates and derived state at one evaluation.
 #[derive(Debug, Clone)]
 pub struct ObjectiveStatus {
-    /// Stable objective key: `deadline`, `shed`, `dispatch_p99`, `energy`.
+    /// Stable objective key: `deadline`, `shed`, `dispatch_p99`, `energy`,
+    /// `atlas_drift`.
     pub objective: &'static str,
     pub state: SloState,
     pub burn_fast: f64,
@@ -264,19 +280,24 @@ struct SloEvaluator {
     spec: SloSpec,
     samples: VecDeque<Sample>,
     /// Last observed state per objective, in [`OBJECTIVES`] order.
-    last: [SloState; 4],
+    last: [SloState; 5],
 }
 
-const OBJECTIVES: [&str; 4] = ["deadline", "shed", "dispatch_p99", "energy"];
+const OBJECTIVES: [&str; 5] = ["deadline", "shed", "dispatch_p99", "energy", "atlas_drift"];
 
 impl SloEvaluator {
     fn new(spec: SloSpec) -> SloEvaluator {
-        SloEvaluator { spec, samples: VecDeque::new(), last: [SloState::Ok; 4] }
+        SloEvaluator { spec, samples: VecDeque::new(), last: [SloState::Ok; 5] }
     }
 
     /// Fold one snapshot in and judge every objective against both windows.
     fn observe(&mut self, snap: &RegistrySnapshot) -> SloStatus {
-        let now = Sample { at: snap.uptime, totals: snap.totals(), shed: snap.total_shed() };
+        let now = Sample {
+            at: snap.uptime,
+            totals: snap.totals(),
+            shed: snap.total_shed(),
+            drift: snap.drift_ratio(),
+        };
 
         // Retain one sample at-or-before the slow-window start so the slow
         // baseline stays resolvable; prune everything older than that.
@@ -389,6 +410,16 @@ impl SloEvaluator {
                 } else {
                     let mean_uj = d.energy_nj as f64 / 1e3 / d.requests as f64;
                     mean_uj / spec.energy_per_request_uj.max(1e-9)
+                }
+            }
+            "atlas_drift" => {
+                // The drift ratio is already an EWMA gauge (0 until the
+                // ledger has samples), so no min-events guard and no window
+                // differencing: both windows judge the same value.
+                if !spec.drift_ratio_bound.is_finite() {
+                    0.0
+                } else {
+                    d.drift / spec.drift_ratio_bound.max(1e-9)
                 }
             }
             _ => 0.0,
@@ -678,7 +709,7 @@ mod tests {
         let j = status.to_json();
         assert_eq!(j.get("state").and_then(|v| v.as_str()), Some("critical"));
         let objectives = j.get("objectives").and_then(|v| v.as_arr()).expect("objectives");
-        assert_eq!(objectives.len(), 4);
+        assert_eq!(objectives.len(), 5);
         assert_eq!(
             objectives[0].get("objective").and_then(|v| v.as_str()),
             Some("deadline")
@@ -687,6 +718,50 @@ mod tests {
         assert!(line.starts_with("slo[heeptimize/tsd-core]: critical"), "{line}");
         assert!(line.contains("deadline=critical("), "{line}");
         assert!(status.trigger().contains("deadline"), "{}", status.trigger());
+    }
+
+    #[test]
+    fn atlas_drift_objective_fires_only_when_bounded() {
+        use crate::telemetry::ledger::{LedgerEntrySnapshot, LedgerSnapshot};
+        let with_drift = |at_s: f64, requests: u64, drift: f64| {
+            let mut s = snap(at_s, requests, 0, 0);
+            s.ledger = Some(LedgerSnapshot {
+                entries: vec![LedgerEntrySnapshot {
+                    knot_drift: vec![drift, drift / 2.0],
+                    ..LedgerEntrySnapshot::default()
+                }],
+                unattributed: 0,
+            });
+            s
+        };
+        // Unbounded (default spec): even wild drift never burns.
+        let mut ev = SloEvaluator::new(SloSpec::default());
+        let status = ev.observe(&with_drift(1.0, 100, 4.0));
+        let drift = status
+            .objectives
+            .iter()
+            .find(|o| o.objective == "atlas_drift")
+            .expect("atlas_drift objective present");
+        assert_eq!((drift.state, drift.burn_fast), (SloState::Ok, 0.0));
+        // Bounded: a healthy ratio stays Ok, a drifting one goes Critical
+        // (same gauge in both windows, so the transition is immediate).
+        let spec = SloSpec { drift_ratio_bound: 1.5, ..SloSpec::default() };
+        let mut ev = SloEvaluator::new(spec);
+        let status = ev.observe(&with_drift(1.0, 100, 0.4));
+        let drift = status.objectives.last().expect("objectives populated");
+        assert_eq!(drift.objective, "atlas_drift");
+        assert_eq!(drift.state, SloState::Ok);
+        let status = ev.observe(&with_drift(2.0, 200, 3.3));
+        let drift = status.objectives.last().expect("objectives populated");
+        assert_eq!(drift.state, SloState::Critical);
+        assert!((drift.burn_fast - 2.2).abs() < 1e-9, "burn {}", drift.burn_fast);
+        assert_eq!(drift.burn_fast, drift.burn_slow);
+        assert_eq!(status.transitions, vec!["atlas_drift"]);
+        assert!(status.should_record());
+        assert!(status.trigger().contains("atlas_drift"), "{}", status.trigger());
+        // A snapshot with no ledger reads as zero drift and recovers.
+        let status = ev.observe(&snap(3.0, 300, 0, 0));
+        assert_eq!(status.objectives.last().expect("objectives").state, SloState::Ok);
     }
 
     #[test]

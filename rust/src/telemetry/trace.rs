@@ -40,6 +40,11 @@ pub enum TraceEventKind {
     Dispatch = 4,
     /// Request finished and its reply was readied (`arg` = deadline met).
     Retire = 5,
+    /// One kernel's execution slice within a dispatch (`arg` = duration in
+    /// ns; kernel index, PE and V-F point ride in [`TraceEvent::extra`]).
+    /// Rendered as a real duration slice on a per-PE track — the
+    /// paper-style Gantt view of live traffic.
+    KernelSpan = 6,
 }
 
 impl TraceEventKind {
@@ -51,6 +56,7 @@ impl TraceEventKind {
             TraceEventKind::BatchForm => "batch_form",
             TraceEventKind::Dispatch => "dispatch",
             TraceEventKind::Retire => "retire",
+            TraceEventKind::KernelSpan => "kernel",
         }
     }
 
@@ -62,9 +68,18 @@ impl TraceEventKind {
             3 => Some(TraceEventKind::BatchForm),
             4 => Some(TraceEventKind::Dispatch),
             5 => Some(TraceEventKind::Retire),
+            6 => Some(TraceEventKind::KernelSpan),
             _ => None,
         }
     }
+}
+
+/// Pack a kernel span's coordinates into the meta word's free high bits
+/// (bits 40..64): kernel index (10 bits), PE (6), V-F point (8). Larger
+/// values clamp — a >1023-kernel workload still traces, with the overflow
+/// kernels labeled `k1023`.
+fn pack_span(kernel: usize, pe: usize, vf: usize) -> u64 {
+    (kernel.min(0x3ff) as u64) | (pe.min(0x3f) as u64) << 10 | (vf.min(0xff) as u64) << 16
 }
 
 /// Rejection code carried in a [`TraceEventKind::Shed`] event's `arg`
@@ -95,6 +110,26 @@ pub struct TraceEvent {
     pub req: u64,
     /// Kind-specific payload (see [`TraceEventKind`] docs).
     pub arg: u64,
+    /// High meta bits — zero except for [`TraceEventKind::KernelSpan`],
+    /// which packs (kernel, pe, vf) here (see the `span_*` accessors).
+    pub extra: u32,
+}
+
+impl TraceEvent {
+    /// Kernel index of a [`TraceEventKind::KernelSpan`] event.
+    pub fn span_kernel(&self) -> usize {
+        (self.extra & 0x3ff) as usize
+    }
+
+    /// PE index (the Gantt track) of a kernel span event.
+    pub fn span_pe(&self) -> usize {
+        ((self.extra >> 10) & 0x3f) as usize
+    }
+
+    /// V-F point index of a kernel span event.
+    pub fn span_vf(&self) -> usize {
+        ((self.extra >> 16) & 0xff) as usize
+    }
 }
 
 #[derive(Default)]
@@ -135,12 +170,42 @@ impl TraceRing {
         self.cursor.load(Ordering::Relaxed)
     }
 
+    /// Nanoseconds since this ring's epoch — the timebase every event's
+    /// `ts_ns` is expressed in. Callers recording spans with explicit start
+    /// times ([`TraceRing::record_kernel_span`]) anchor against this.
+    pub fn now_ns(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
     pub fn record(&self, kind: TraceEventKind, worker: u32, req: u64, arg: u64) {
+        self.write_slot(kind as u64 | (u64::from(worker) << 8), self.now_ns(), req, arg);
+    }
+
+    /// Record one per-kernel execution span within a dispatch: `start_ns`
+    /// in this ring's timebase ([`TraceRing::now_ns`]), `dur_ns` the span
+    /// length (also the event `arg`), with (kernel, pe, vf) packed into the
+    /// meta word so the chrome dump can place the slice on a per-PE track.
+    pub fn record_kernel_span(
+        &self,
+        worker: u32,
+        req: u64,
+        kernel: usize,
+        pe: usize,
+        vf: usize,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        let meta = TraceEventKind::KernelSpan as u64
+            | (u64::from(worker) << 8)
+            | (pack_span(kernel, pe, vf) << 40);
+        self.write_slot(meta, start_ns, req, dur_ns);
+    }
+
+    fn write_slot(&self, meta: u64, ts: u64, req: u64, arg: u64) {
         // ordering: the cursor is only a ticket dispenser; slot publication
         // below carries all reader-visible ordering.
         let n = self.cursor.fetch_add(1, Ordering::Relaxed);
         let slot = &self.slots[(n % self.slots.len() as u64) as usize];
-        let ts = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
         // Invalidate, write payload, publish: see the module docs.
         //
         // ordering: seqlock write side. The zero-store needs no ordering of
@@ -157,7 +222,7 @@ impl TraceRing {
         // acquires it also observes the complete payload.
         slot.seq.store(0, Ordering::Relaxed);
         slot.ts_ns.store(ts, Ordering::Release);
-        slot.meta.store(kind as u64 | (u64::from(worker) << 8), Ordering::Release);
+        slot.meta.store(meta, Ordering::Release);
         slot.req.store(req, Ordering::Release);
         slot.arg.store(arg, Ordering::Release);
         slot.seq.store(n + 1, Ordering::Release);
@@ -199,30 +264,58 @@ impl TraceRing {
                 ts_ns,
                 req,
                 arg,
+                extra: (meta >> 40) as u32,
             });
         }
         out.sort_by_key(|e| (e.ts_ns, e.seq));
         out
     }
 
-    /// Render as a chrome://tracing JSON document (instant events, one
-    /// `tid` track per worker, timestamps in µs).
+    /// Render as a chrome://tracing JSON document. Dispatch-path events are
+    /// instants on per-worker tracks (`pid` 1); kernel spans are duration
+    /// slices on per-PE tracks (`pid` 2) — the paper-style Gantt view.
+    /// Timestamps and durations are in µs.
     pub fn to_chrome_json(&self) -> String {
-        let events: Vec<Json> = self
-            .events()
-            .into_iter()
-            .map(|e| {
-                let mut args = JsonObj::new();
-                args.insert("req", e.req);
+        let decoded = self.events();
+        let has_spans = decoded.iter().any(|e| e.kind == TraceEventKind::KernelSpan);
+        let mut events: Vec<Json> = Vec::with_capacity(decoded.len() + 1);
+        if has_spans {
+            // Label the span process so the per-PE Gantt reads as "PEs".
+            let mut args = JsonObj::new();
+            args.insert("name", "PEs");
+            let mut m = JsonObj::new();
+            m.insert("name", "process_name");
+            m.insert("ph", "M");
+            m.insert("pid", 2u64);
+            m.insert("args", args);
+            events.push(Json::Obj(m));
+        }
+        for e in decoded {
+            let mut args = JsonObj::new();
+            args.insert("req", e.req);
+            let mut o = JsonObj::new();
+            if e.kind == TraceEventKind::KernelSpan {
+                args.insert("kernel", e.span_kernel() as u64);
+                args.insert("vf", e.span_vf() as u64);
+                args.insert("worker", u64::from(e.worker));
+                let name = format!("k{}", e.span_kernel());
+                o.insert("name", name.as_str());
+                o.insert("cat", "medea");
+                o.insert("ph", "X");
+                o.insert("pid", 2u64);
+                o.insert("tid", e.span_pe() as u64);
+                o.insert("ts", e.ts_ns as f64 / 1e3);
+                o.insert("dur", e.arg as f64 / 1e3);
+            } else {
                 match e.kind {
                     TraceEventKind::Enqueue => args.insert("deadline_us", e.arg),
                     TraceEventKind::Shed => args.insert("reason", shed_reason_name(e.arg)),
                     TraceEventKind::Retire => args.insert("met", e.arg == 1),
                     TraceEventKind::Steal
                     | TraceEventKind::BatchForm
-                    | TraceEventKind::Dispatch => args.insert("size", e.arg),
+                    | TraceEventKind::Dispatch
+                    | TraceEventKind::KernelSpan => args.insert("size", e.arg),
                 }
-                let mut o = JsonObj::new();
                 o.insert("name", e.kind.name());
                 o.insert("cat", "medea");
                 o.insert("ph", "i");
@@ -230,10 +323,10 @@ impl TraceRing {
                 o.insert("pid", 1u64);
                 o.insert("tid", u64::from(e.worker));
                 o.insert("ts", e.ts_ns as f64 / 1e3);
-                o.insert("args", args);
-                Json::Obj(o)
-            })
-            .collect();
+            }
+            o.insert("args", args);
+            events.push(Json::Obj(o));
+        }
         let mut root = JsonObj::new();
         root.insert("traceEvents", Json::Arr(events));
         root.insert("displayTimeUnit", "ms");
@@ -294,6 +387,66 @@ mod tests {
             .expect("shed event");
         let reason = shed.get("args").and_then(|a| a.get("reason")).and_then(|r| r.as_str());
         assert_eq!(reason, Some("queue_full"));
+    }
+
+    #[test]
+    fn kernel_spans_decode_and_render_as_slices() {
+        let ring = TraceRing::new(32);
+        let t0 = ring.now_ns();
+        ring.record(TraceEventKind::Dispatch, 1, 7, 2);
+        ring.record_kernel_span(1, 7, 0, 2, 5, t0, 1_000);
+        ring.record_kernel_span(1, 7, 1, 0, 3, t0 + 1_000, 2_000);
+        let spans: Vec<TraceEvent> = ring
+            .events()
+            .into_iter()
+            .filter(|e| e.kind == TraceEventKind::KernelSpan)
+            .collect();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].span_kernel(), 0);
+        assert_eq!(spans[0].span_pe(), 2);
+        assert_eq!(spans[0].span_vf(), 5);
+        assert_eq!(spans[0].worker, 1);
+        assert_eq!(spans[0].arg, 1_000);
+        assert_eq!(spans[1].span_kernel(), 1);
+        assert_eq!(spans[1].ts_ns, t0 + 1_000);
+        // Oversized coordinates clamp instead of bleeding across fields.
+        ring.record_kernel_span(1, 8, 5_000, 99, 300, t0, 10);
+        let clamped = ring
+            .events()
+            .into_iter()
+            .find(|e| e.req == 8)
+            .expect("clamped span recorded");
+        assert_eq!(clamped.span_kernel(), 0x3ff);
+        assert_eq!(clamped.span_pe(), 0x3f);
+        assert_eq!(clamped.span_vf(), 0xff);
+        let doc = ring.to_chrome_json();
+        let v = crate::util::json::parse(&doc).expect("dump parses");
+        let evs = v.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        let slices: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        assert_eq!(slices.len(), 3);
+        let first = slices
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("k0"))
+            .expect("k0 slice");
+        assert_eq!(first.get("pid").and_then(|p| p.as_u64()), Some(2));
+        assert_eq!(first.get("tid").and_then(|t| t.as_u64()), Some(2));
+        assert_eq!(first.get("dur").and_then(|d| d.as_f64()), Some(1.0));
+        assert_eq!(
+            first.get("args").and_then(|a| a.get("vf")).and_then(|x| x.as_u64()),
+            Some(5)
+        );
+        // The span process carries its metadata label.
+        assert!(evs
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str()) == Some("process_name")));
+        // Dispatch-path instants are untouched by the span track.
+        assert!(evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+            .all(|e| e.get("pid").and_then(|p| p.as_u64()) == Some(1)));
     }
 
     #[test]

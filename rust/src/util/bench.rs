@@ -134,7 +134,9 @@ impl Bencher {
 /// Write a machine-readable bench report to `path`, attaching an optional
 /// telemetry registry snapshot (see `telemetry::RegistrySnapshot::to_json`)
 /// under a top-level `"telemetry"` key so bench artifacts carry the same
-/// counters and histograms a live scrape would.
+/// counters and histograms a live scrape would — including the energy
+/// attribution ledger (`telemetry.ledger`), which makes the artifact a valid
+/// input to `medea energy-report`.
 pub fn write_bench_json(
     path: &str,
     mut result: Json,

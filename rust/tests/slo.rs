@@ -1,6 +1,6 @@
 //! SLO engine + flight recorder integration tests.
 //!
-//! Two scenarios pinned here:
+//! Three scenarios pinned here:
 //!
 //! * **Synthetic deadline storm** — a deterministic snapshot timeline flips
 //!   the deadline objective to `Critical`, emits exactly one rate-limited
@@ -10,6 +10,10 @@
 //!   the ceiling on a live `ServePool`; the engine sees it through real
 //!   registry snapshots, the recorder captures it, and the pool's readiness
 //!   probe still answers once the burst drains.
+//! * **Synthetic atlas drift** — a pool whose dispatches are stretched past
+//!   the knots' modeled times (`synth_slowdown`) pushes the drift EWMA over
+//!   the configured bound; the `atlas_drift` objective flips `Critical` and
+//!   the one rate-limited bundle carries the energy ledger snapshot.
 
 use medea::eeg::synth::{EegGenerator, SynthConfig};
 use medea::exp::ExpContext;
@@ -256,5 +260,80 @@ fn real_overload_sheds_past_the_ceiling_and_records() {
     );
     let (code, body) = http_get(&addr, "/readyz", Duration::from_secs(2)).expect("GET /readyz");
     assert_eq!(code, 200, "drained pool must be ready again: {body}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn synthetic_atlas_drift_flips_critical_and_bundles_the_ledger() {
+    let dir = temp_dir("drift");
+    // Every dispatch is stretched to 3x its knot's modeled time, so each
+    // realized/modeled sample — and hence the per-knot EWMA — is >= 3.0.
+    let pool = ServePool::start_with_atlas(
+        PoolConfig {
+            workers: 1,
+            queue_capacity: 16,
+            artifact_dir: PathBuf::from("/nonexistent-artifacts"),
+            telemetry: TelemetryConfig { trace_events: 256 },
+            synth_slowdown: 3.0,
+            ..PoolConfig::default()
+        },
+        shared_atlas().clone(),
+    )
+    .unwrap();
+    let flight = Arc::new(
+        FlightRecorder::new(FlightConfig { dir: dir.clone(), ..FlightConfig::default() })
+            .expect("recorder"),
+    );
+    // Bound 1.2 puts the burn at >= 3.0 / 1.2 = 2.5 in both windows — past
+    // the default critical burn of 2.
+    let engine = SloEngine::new(
+        SloSpec { drift_ratio_bound: 1.2, ..SloSpec::default() },
+        Arc::clone(pool.telemetry()),
+        pool.trace().map(Arc::clone),
+        Some(flight.clone()),
+    );
+    assert_eq!(engine.evaluate_now().worst(), SloState::Ok, "fresh pool has no drift");
+
+    let floor = shared_atlas().floor();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 23);
+    for _ in 0..3 {
+        pool.submit(gen.next_window(), floor * 1.05).unwrap().wait().unwrap();
+    }
+
+    let status = engine.evaluate_now();
+    let drift_obj = status
+        .objectives
+        .iter()
+        .find(|o| o.objective == "atlas_drift")
+        .expect("atlas_drift objective evaluated");
+    assert_eq!(drift_obj.state, SloState::Critical, "{status:?}");
+    assert!(status.transitions.contains(&"atlas_drift"), "{status:?}");
+    assert_eq!(flight.bundles_written(), 1, "the drift transition must write a bundle");
+
+    // Still drifting on the next evaluation: the rate limiter holds the
+    // recorder to the one bundle it already wrote.
+    pool.submit(gen.next_window(), floor * 1.05).unwrap().wait().unwrap();
+    assert_eq!(engine.evaluate_now().worst(), SloState::Critical);
+    let bundles = bundle_paths(&dir);
+    assert_eq!(bundles.len(), 1, "exactly one bundle on disk: {bundles:?}");
+
+    // The bundle's registry snapshot carries the energy ledger, so the
+    // postmortem is self-contained: per-PE attribution plus the drifting
+    // knots, without a second scrape of the (possibly gone) process.
+    let doc = medea::util::json::parse(&std::fs::read_to_string(&bundles[0]).expect("read"))
+        .expect("bundle json");
+    assert!(
+        doc.get("trigger").and_then(|v| v.as_str()).expect("trigger").contains("atlas_drift"),
+        "{doc:?}"
+    );
+    let ledger = doc
+        .get("registry")
+        .and_then(|r| r.get("ledger"))
+        .expect("ledger snapshot embedded in the bundle");
+    let snap = medea::telemetry::LedgerSnapshot::from_json(ledger).expect("ledger parses");
+    assert!(snap.max_drift() >= 2.4, "drift {} must clear the critical line", snap.max_drift());
+    assert!(snap.entries[0].knot_dispatches.iter().sum::<u64>() >= 3);
+    assert_eq!(snap.unattributed, 0);
+    pool.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

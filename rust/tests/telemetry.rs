@@ -1,6 +1,6 @@
 //! Telemetry integration tests.
 //!
-//! Three properties pinned here:
+//! Four properties pinned here:
 //!
 //! * **Liveness** — the Prometheus endpoint answers while a burst is still
 //!   draining (no quiesce, no lock on the serving path), and once every
@@ -12,6 +12,10 @@
 //!   document that parses with the crate's own JSON codec and retires every
 //!   admitted request exactly once; the fleet pool publishes under its own
 //!   `platform="fleet"` labels with typed shed reasons.
+//! * **Attribution** — every dispatch lands in the energy ledger (the new
+//!   `medea_pe_*`/`medea_knot_*` families), the exposition round-trips into
+//!   the `medea energy-report` snapshot, and the trace ring carries exactly
+//!   one kernel span per scheduled decision per dispatch.
 
 use medea::eeg::synth::{EegGenerator, SynthConfig};
 use medea::exp::ExpContext;
@@ -128,6 +132,63 @@ fn live_scrape_answers_under_load_and_matches_shutdown() {
     assert_eq!(count("enqueue"), N);
     assert_eq!(count("retire"), N);
     assert!(count("dispatch") >= 1, "no dispatch events recorded");
+}
+
+#[test]
+fn ledger_families_and_kernel_spans_cover_every_dispatch() {
+    use medea::telemetry::{ledger_from_prometheus, TraceEventKind};
+    const N: usize = 8;
+    let pool = observed_pool(1);
+    let floor = shared_atlas().floor();
+    let deadline = floor * 1.05;
+    let kernels = pool.atlas().lookup(deadline).unwrap().schedule.decisions.len();
+    let mut gen = EegGenerator::new(SynthConfig::default(), 11);
+    for _ in 0..N {
+        // Sequential submit/wait keeps every dispatch solo, so the span
+        // arithmetic below is exact.
+        pool.submit(gen.next_window(), deadline).unwrap().wait().unwrap();
+    }
+
+    let body = render_prometheus(&pool.telemetry().snapshot());
+    for family in [
+        "medea_queue_depth{",
+        "medea_pe_energy_joules_total{",
+        "medea_pe_busy_seconds_total{",
+        "medea_knot_dispatches_total{",
+        "medea_atlas_drift_ratio{",
+        "medea_unattributed_dispatches_total{",
+    ] {
+        assert!(body.contains(family), "{family} missing from exposition:\n{body}");
+    }
+    assert_eq!(family_sum(&body, "medea_knot_dispatches_total"), N as f64);
+    assert_eq!(family_sum(&body, "medea_unattributed_dispatches_total"), 0.0);
+    assert!(family_sum(&body, "medea_pe_busy_seconds_total") > 0.0);
+    assert!(family_sum(&body, "medea_pe_energy_joules_total") > 0.0);
+
+    // The exposition round-trips into the `medea energy-report` snapshot.
+    let snap = ledger_from_prometheus(&body).unwrap();
+    assert_eq!(snap.entries.len(), 1);
+    assert_eq!(snap.entries[0].knot_dispatches.iter().sum::<u64>(), N as u64);
+
+    // Every dispatch left one kernel span per scheduled decision, and the
+    // chrome dump carries them as complete ("X") slices on the PE tracks.
+    let ring = Arc::clone(pool.trace().expect("trace ring was enabled"));
+    let typed = ring
+        .events()
+        .iter()
+        .filter(|e| e.kind == TraceEventKind::KernelSpan)
+        .count();
+    assert_eq!(typed, N * kernels);
+    let doc = medea::util::json::parse(&ring.to_chrome_json()).unwrap();
+    let slices = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .count();
+    assert_eq!(slices, N * kernels);
+    pool.shutdown();
 }
 
 /// Coarse sweeps keep the entry build affordable; label correctness does
